@@ -1,0 +1,54 @@
+//! Domain study: where does the ADC-less design win?
+//!
+//! Sweeps (a) baseline ADC precision, (b) ternary sparsity, (c) crossbar
+//! geometry, printing the energy / latency×area landscape around the
+//! paper's two operating points (configs A & B).
+//!
+//!   cargo run --release --example adc_sweep
+
+use hcim::config::hardware::{BaselineKind, CrossbarDims, HcimConfig};
+use hcim::experiments;
+use hcim::model::zoo;
+use hcim::sim::simulator::{Arch, Simulator};
+use hcim::sim::tech::TechNode;
+use hcim::util::table::{fnum, Table};
+
+fn main() -> hcim::Result<()> {
+    let sim = Simulator::new(TechNode::N32);
+    let g = zoo::resnet20();
+
+    // (a) ADC precision sweep (the ablation table)
+    experiments::ablation_adc_precision_sweep(&sim).print();
+
+    // (b) sparsity sweep — Fig 5(a)
+    experiments::fig5a().print();
+
+    // (c) crossbar geometry sweep: 32..256 on both HCiM and the 4-bit
+    // flash baseline (extends the paper's A/B comparison to a curve)
+    let mut t = Table::new(
+        "Crossbar-size sweep — ResNet-20 energy (µJ) and latency×area",
+        &["xbar", "HCiM E", "Flash4 E", "E ratio", "HCiM L·A", "Flash4 L·A", "L·A ratio"],
+    );
+    for size in [32usize, 64, 128, 256] {
+        let mut cfg = HcimConfig::config_a();
+        // >128 columns → multiple DCiM arrays per crossbar; the model
+        // clamps one array at 128, so keep cols ≤ 128 and scale rows
+        cfg.xbar = CrossbarDims { rows: size, cols: size.min(128) };
+        let h = sim.run(&g, &Arch::Hcim(cfg.clone()));
+        let f = sim.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcFlash4));
+        t.row(&[
+            format!("{}x{}", cfg.xbar.rows, cfg.xbar.cols),
+            fnum(h.energy_pj() / 1e6),
+            fnum(f.energy_pj() / 1e6),
+            format!("{:.2}x", f.energy_pj() / h.energy_pj()),
+            fnum(h.latency_area() / 1e9),
+            fnum(f.latency_area() / 1e9),
+            format!("{:.2}x", h.latency_area() / f.latency_area()),
+        ]);
+    }
+    t.print();
+
+    // peripheral-sharing ablation
+    experiments::ablation_phase_sharing().print();
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Numeric cross-check: execute the AOT artifacts on the canonical
+//! linspace input and compare against the python-side golden logits
+//! embedded in the manifest (the guard that caught the HLO-text
+//! constant-elision bug).
+//!
+//!   cargo run --release --example golden_check -- [artifacts-dir]
+
+fn main() -> hcim::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
+    let engine = hcim::runtime::Engine::load(std::path::Path::new(dir))?;
+    let m = &engine.manifest;
+    anyhow::ensure!(
+        !m.golden_logits.is_empty(),
+        "manifest has no golden logits — re-run `make artifacts`"
+    );
+    let n = m.input_elems();
+    let img: Vec<f32> = (0..n).map(|i| i as f32 / (n - 1) as f32).collect();
+    let logits = engine.infer(&img, 1)?;
+    let mut worst = 0f64;
+    for (got, want) in logits[0].iter().zip(&m.golden_logits) {
+        worst = worst.max((*got as f64 - want).abs());
+    }
+    println!("rust logits:   {:?}", &logits[0][..logits[0].len().min(5)]);
+    println!(
+        "python golden: {:?}",
+        &m.golden_logits[..m.golden_logits.len().min(5)]
+    );
+    println!("max |Δ| = {worst:.3e}");
+    anyhow::ensure!(worst < 1e-3, "numeric mismatch across the AOT boundary");
+    println!("golden check OK — L1/L2 python == L3 rust PJRT");
+    Ok(())
+}

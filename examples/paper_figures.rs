@@ -1,0 +1,56 @@
+//! Regenerate every table and figure of the paper's evaluation (§5).
+//!
+//!   cargo run --release --example paper_figures -- [artifacts-dir]
+//!
+//! Accuracy artifacts (Table 2 / Fig 2(b,d)) appear once `make accuracy`
+//! has produced `artifacts/accuracy.json`; the performance tables are
+//! fully self-contained.
+
+use std::path::Path;
+
+use hcim::config::hardware::HcimConfig;
+use hcim::experiments;
+
+fn main() -> hcim::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = Path::new(args.get(1).map(|s| s.as_str()).unwrap_or("artifacts"));
+    let sim = experiments::system_simulator(dir);
+
+    experiments::table1().print();
+    match experiments::table2(dir) {
+        Some(t) => t.print(),
+        None => println!(
+            "(Table 2 pending — run `make accuracy` to train the sweep and \
+             produce artifacts/accuracy.json)\n"
+        ),
+    }
+    if let Some(t) = experiments::fig2d(dir) {
+        t.print();
+    }
+    experiments::table3().print();
+    experiments::fig1(&sim).table.print();
+    experiments::fig2c(&sim).print();
+    experiments::fig5a().print();
+    experiments::fig5b(&sim).1.print();
+    experiments::fig67_table(&sim, &HcimConfig::config_a(), "Fig 6 (config A)").print();
+    experiments::fig67_table(&sim, &HcimConfig::config_b(), "Fig 7 (config B)").print();
+    experiments::ablation_phase_sharing().print();
+    experiments::ablation_adc_precision_sweep(&sim).print();
+
+    // headline claims digest (EXPERIMENTS.md source of truth)
+    let reports = experiments::headline_reports(&sim);
+    let (tern, bin, sar7, flash4) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+    println!("== headline digest (ResNet-20, config A) ==");
+    println!(
+        "energy:   vs 7b SAR {:.1}×   vs 4b Flash {:.1}×   ternary saves {:.0}% over binary",
+        sar7.energy_pj() / tern.energy_pj(),
+        flash4.energy_pj() / tern.energy_pj(),
+        100.0 * (1.0 - tern.energy_pj() / bin.energy_pj()),
+    );
+    println!(
+        "lat×area: vs 7b SAR {:.1}×   vs 4b Flash {:.2}× (paper: HCiM slightly worse than flash)",
+        sar7.latency_area() / tern.latency_area(),
+        tern.latency_area() / flash4.latency_area(),
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: program one HCiM tile (analog crossbar + comparators +
+//! gate-level DCiM scale-factor array), run a bit-exact PSQ MVM, and show
+//! the energy/latency breakdown next to the ADC baseline.
+//!
+//! No artifacts needed:  `cargo run --release --example quickstart`
+
+use hcim::config::hardware::HcimConfig;
+use hcim::quant::bits::Mat;
+use hcim::quant::psq::{psq_mvm, PsqLayerParams, PsqMode};
+use hcim::sim::energy::CostLedger;
+use hcim::sim::params::{CalibParams, ADC_SAR7};
+use hcim::sim::tile::{baseline_mvm_cost, hcim_mvm_cost, HcimTile, MvmStats};
+use hcim::util::rng::Rng;
+
+fn main() -> hcim::Result<()> {
+    println!("== HCiM quickstart: one crossbar tile, bit-exact ==\n");
+
+    // a 32×8 logical weight matrix of 4-bit codes (→ 32 physical columns)
+    let mut rng = Rng::new(7);
+    let cfg = {
+        let mut c = HcimConfig::config_a();
+        c.xbar.rows = 32;
+        c.xbar.cols = 32;
+        c
+    };
+    let w = Mat::from_fn(32, 8, |r, c| ((r * 5 + c * 11) as i64 % 15) - 7);
+    let mut psq = PsqLayerParams::calibrated(
+        &w,
+        PsqMode::Ternary { alpha: 2.0 },
+        cfg.w_bits,
+        cfg.x_bits,
+        cfg.ps_bits,
+        &mut rng,
+    );
+    psq.theta = 8.0;
+
+    // program the tile: weights into the crossbar (bit-sliced), scale
+    // factors into the DCiM array (pre-loaded, like the silicon)
+    let mut tile = HcimTile::program(&cfg, &w, &psq);
+    let params = CalibParams::at_65nm();
+
+    // run one MVM through crossbar → comparators → DCiM pipeline
+    let x: Vec<i64> = (0..32).map(|i| (i * 7) % 16).collect();
+    let mut ledger = CostLedger::new();
+    let ps = tile.mvm(&x, &params, &mut ledger);
+
+    // the integer PSQ reference must agree bit-for-bit
+    let reference = psq_mvm(&w, &x, &psq);
+    assert_eq!(ps, reference.ps, "gate-level DCiM == integer PSQ reference");
+    println!("partial sums (first 8 physical columns): {:?}", &ps[..8]);
+    println!("measured ternary sparsity: {:.1}%\n", tile.sparsity() * 100.0);
+    println!("tile cost ledger:\n{ledger}");
+
+    // headline comparison at full config-A scale
+    println!("== config A, per crossbar-MVM: HCiM vs 7-bit SAR baseline ==\n");
+    let full = HcimConfig::config_a();
+    let stats = MvmStats { sparsity: tile.sparsity(), ..Default::default() };
+    let h = hcim_mvm_cost(&full, &params, &stats);
+    let b = baseline_mvm_cost(&full, &ADC_SAR7, &params, &stats);
+    println!(
+        "HCiM:     {:>8.1} pJ  {:>8.1} ns",
+        h.total_energy_pj(),
+        h.latency_ns
+    );
+    println!(
+        "ADC-7b:   {:>8.1} pJ  {:>8.1} ns",
+        b.total_energy_pj(),
+        b.latency_ns
+    );
+    println!(
+        "→ {:.1}× lower energy, {:.1}× lower latency",
+        b.total_energy_pj() / h.total_energy_pj(),
+        b.latency_ns / h.latency_ns
+    );
+    Ok(())
+}

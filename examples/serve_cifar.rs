@@ -1,0 +1,96 @@
+//! End-to-end serving driver (the repo's E2E validation workload):
+//! loads the AOT-compiled PSQ model (trained by the python build path,
+//! lowered through the Pallas kernel), serves batched classification
+//! requests through the rust coordinator on the PJRT CPU client, and
+//! reports latency/throughput plus the co-simulated HCiM hardware cost.
+//!
+//!   make artifacts            # build + train + lower (one-time)
+//!   cargo run --release --example serve_cifar -- [artifacts-dir] [requests]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hcim::coordinator::{Server, ServerConfig};
+use hcim::runtime::Engine;
+use hcim::util::rng::Rng;
+
+/// Synthetic test images mirroring `python/compile/data.py`'s value range.
+fn synth_images(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..elems).map(|_| rng.f64() as f32).collect())
+        .collect()
+}
+
+fn main() -> hcim::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
+    let requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    let engine = Arc::new(Engine::load(std::path::Path::new(dir))?);
+    let m = engine.manifest.clone();
+    println!(
+        "model={} mode={} input={}x{}x3 classes={} exported-acc={:.3} batches={:?}",
+        m.model,
+        m.mode,
+        m.image,
+        m.image,
+        m.classes,
+        m.test_acc,
+        engine.batch_sizes()
+    );
+
+    // ---- phase 1: offline burst (throughput) ----
+    println!("\n== burst: {requests} requests, dynamic batching ==");
+    let mut server = Server::start(
+        Arc::clone(&engine),
+        ServerConfig {
+            max_batch: m.max_batch(),
+            batch_window: Duration::from_millis(1),
+            workers: 2,
+        },
+    );
+    if let Some(hw) = &server.hw_estimate {
+        println!(
+            "co-sim: {} on {} → {:.2} µJ / {:.1} µs per inference",
+            hw.model,
+            hw.arch,
+            hw.energy_pj() / 1e6,
+            hw.latency_ns() / 1e3
+        );
+    }
+    let images = synth_images(requests, m.input_elems(), 1);
+    for img in &images {
+        server.submit(img.clone());
+    }
+    let responses = server.collect(requests);
+    let metrics = server.shutdown();
+    let mut class_hist = vec![0usize; m.classes];
+    for r in &responses {
+        class_hist[r.class] += 1;
+    }
+    println!("class histogram: {class_hist:?}");
+    println!("{}", metrics.snapshot());
+
+    // ---- phase 2: paced arrivals (latency under load) ----
+    println!("\n== paced: {requests} requests at ~500 req/s ==");
+    let mut server = Server::start(
+        engine,
+        ServerConfig {
+            max_batch: m.max_batch(),
+            batch_window: Duration::from_millis(2),
+            workers: 2,
+        },
+    );
+    let mut rng = Rng::new(2);
+    for img in synth_images(requests, m.input_elems(), 3) {
+        server.submit(img);
+        // exponential inter-arrival, mean 2 ms
+        let gap = -2000.0 * (1.0 - rng.f64()).ln();
+        std::thread::sleep(Duration::from_micros(gap as u64));
+    }
+    let _ = server.collect(requests);
+    let metrics = server.shutdown();
+    println!("{}", metrics.snapshot());
+    Ok(())
+}

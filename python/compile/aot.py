@@ -1,0 +1,268 @@
+"""AOT compilation: trained PSQ model → HLO text artifacts for the rust
+runtime (Layer 2 → Layer 3 hand-off).
+
+The inference graph is rebuilt around the *Pallas kernel*
+(`kernels.psq_mvm.psq_mvm_pallas`, interpret=True) so the lowered HLO
+contains the L1 kernel's structure; BN/ReLU/pooling are plain jnp around
+it. Lowering goes through **HLO text** — NOT `.serialize()` — because the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction-id
+protos (see /opt/xla-example/README.md); the text parser reassigns ids.
+
+Outputs under `artifacts/`:
+  model_b{B}.hlo.txt   one executable per exported batch size
+  manifest.json        input/output shapes, quant spec, accuracy, files
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--checkpoint ckpt.pkl]
+                        [--batches 1,8] [--quick]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.psq_mvm import psq_mvm_pallas
+from .model import ModelCfg, batchnorm, im2col, model_presets, model_structure
+from .psq.quant import lsq_codes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big weight tensors as "...", which the consuming HLO text parser
+    # silently turns into zeros/garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# inference graph around the pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _freeze_mvm(p, spec):
+    """Pre-compute the static (numpy) view of one MVM layer: integer codes,
+    bit-planes, per-group comparator constants. Done OUTSIDE the trace so
+    the lowered HLO embeds them as constants."""
+    x_step = float(np.exp(p["x_step_log"]))
+    w_step = float(np.exp(p["w_step_log"]))
+    wc = np.asarray(lsq_codes(p["w"], w_step, spec.w_bits, signed=True))
+    frozen = {
+        "x_step": x_step,
+        "w_step": w_step,
+        "out_step": float(p["out_step"]),
+        "wc": wc,
+    }
+    if not spec.is_psq:
+        return frozen
+    r, c = wc.shape
+    g = spec.xbar_rows
+    groups = max(1, -(-r // g))
+    sf_step = float(np.exp(p["sf_step_log"]))
+    frozen.update(sf_step=sf_step, groups=[], bias=np.asarray(p["bias"]))
+    for gi in range(groups):
+        sl = slice(gi * g, min((gi + 1) * g, r))
+        wg = wc[sl] & ((1 << spec.w_bits) - 1)
+        phys = np.stack(
+            [(wg >> i) & 1 for i in range(spec.w_bits)], axis=-1
+        ).reshape(wg.shape[0], c * spec.w_bits).astype(np.int32)
+        s = np.asarray(p["scales"][gi])
+        if spec.sf_share > 1:
+            s = np.repeat(s, spec.sf_share, axis=1)[:, : c * spec.w_bits]
+        s_codes = np.asarray(lsq_codes(jnp.asarray(s), sf_step, spec.sf_bits,
+                                       signed=True))
+        frozen["groups"].append(
+            {
+                "slice": (sl.start, sl.stop),
+                "phys": phys,
+                "s_codes": s_codes,
+                "theta": tuple(float(t) for t in np.asarray(p["theta"][gi])),
+                "alpha": float(p["alpha"][gi]),
+            }
+        )
+    return frozen
+
+
+def _mvm_infer(frozen, x2d, spec):
+    """Inference-time MVM: integer codes through the L1 kernel."""
+    xc_ = jnp.clip(
+        jnp.round(jnp.maximum(x2d, 0.0) / frozen["x_step"]), 0, 2**spec.x_bits - 1
+    ).astype(jnp.int32)
+    scale = frozen["x_step"] * frozen["w_step"] * frozen["out_step"]
+
+    if not spec.is_psq:
+        out = xc_.astype(jnp.float32) @ frozen["wc"].astype(np.float32)
+        return out * scale
+
+    c = frozen["wc"].shape[1]
+    ternary = spec.mode == "ternary"
+    acc = jnp.zeros((x2d.shape[0], c * spec.w_bits), jnp.float32)
+    for grp in frozen["groups"]:
+        lo, hi = grp["slice"]
+        ps = psq_mvm_pallas(
+            xc_[:, lo:hi],
+            jnp.asarray(grp["phys"]),
+            jnp.asarray(grp["s_codes"]),
+            x_bits=spec.x_bits,
+            theta=grp["theta"],
+            alpha=grp["alpha"],
+            ternary=ternary,
+        )
+        acc = acc + ps.astype(jnp.float32) * frozen["sf_step"]
+    out = acc.reshape(x2d.shape[0], c, spec.w_bits).sum(axis=2) + frozen["bias"][None, :]
+    return out * scale
+
+
+def build_infer_fn(params, cfg: ModelCfg):
+    """The full inference function x[B,H,W,3] → logits[B,classes]."""
+    spec = cfg.quant
+    plan, _ = model_structure(cfg)
+
+    # freeze every MVM layer's static view up front
+    frozen_layers = []
+    for entry, lp in zip(plan, params["layers"]):
+        if entry["kind"] == "conv":
+            frozen_layers.append({"mvm": _freeze_mvm(lp["mvm"], spec), "bn": lp["bn"]})
+        else:
+            frozen_layers.append(
+                {
+                    "conv1": {"mvm": _freeze_mvm(lp["conv1"]["mvm"], spec),
+                              "bn": lp["conv1"]["bn"]},
+                    "conv2": {"mvm": _freeze_mvm(lp["conv2"]["mvm"], spec),
+                              "bn": lp["conv2"]["bn"]},
+                }
+            )
+    frozen_fc = _freeze_mvm(params["fc"], spec)
+
+    def infer(x):
+        cur = x
+        for entry, lp in zip(plan, frozen_layers):
+            if entry["kind"] == "conv":
+                k = entry["k"]
+                patches, (oh, ow) = im2col(cur, k, entry["stride"], k // 2)
+                b, np_, r = patches.shape
+                y = _mvm_infer(lp["mvm"], patches.reshape(b * np_, r), spec)
+                y = y.reshape(b, oh, ow, -1)
+                y, _ = batchnorm(lp["bn"], y, train=False)
+                cur = jax.nn.relu(y)
+                if entry["pool"]:
+                    cur = cur[:, ::2, ::2, :]
+            else:
+                skip = cur
+                patches, (oh, ow) = im2col(cur, 3, entry["stride"], 1)
+                b, np_, r = patches.shape
+                y = _mvm_infer(lp["conv1"]["mvm"], patches.reshape(b * np_, r), spec)
+                y = y.reshape(b, oh, ow, -1)
+                y, _ = batchnorm(lp["conv1"]["bn"], y, train=False)
+                y = jax.nn.relu(y)
+                patches, (oh2, ow2) = im2col(y, 3, 1, 1)
+                b, np_, r = patches.shape
+                y = _mvm_infer(lp["conv2"]["mvm"], patches.reshape(b * np_, r), spec)
+                y = y.reshape(b, oh2, ow2, -1)
+                y, _ = batchnorm(lp["conv2"]["bn"], y, train=False)
+                if entry["residual"]:
+                    y = y + skip
+                cur = jax.nn.relu(y)
+        feat = cur.mean(axis=(1, 2))
+        return (_mvm_infer(frozen_fc, feat, spec),)
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+
+def export(checkpoint=None, out_dir="../artifacts", batches=(1, 8), quick=False):
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if checkpoint and pathlib.Path(checkpoint).exists():
+        with open(checkpoint, "rb") as f:
+            ck = pickle.load(f)
+        cfg, params, acc = ck["cfg"], ck["params"], ck.get("test_acc", float("nan"))
+        print(f"loaded checkpoint {checkpoint} (acc {acc:.3f})")
+    else:
+        # no checkpoint: train a small model on the spot (quick QAT)
+        from .train import train, transfer_params
+        from .model import calibrate_model
+        from . import data as data_mod
+
+        preset = "tiny" if quick else "resnet20-slim"
+        base = model_presets()[preset]
+        steps = 40 if quick else 250
+        fp_cfg = dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, mode="fp")
+        )
+        fp = train(fp_cfg, steps=steps, verbose=False)
+        cfg = dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, mode="ternary")
+        )
+        p0 = transfer_params(fp.params, cfg)
+        (cx, _), _ = data_mod.train_test_split(64, 1, image=cfg.image)
+        p0 = calibrate_model(p0, jnp.asarray(cx), cfg)
+        r = train(cfg, steps=max(steps // 2, 20), lr=5e-4, verbose=False,
+                  init_params=p0)
+        params, acc = r.params, r.test_acc
+        print(f"trained {cfg.name}/ternary on the fly (acc {acc:.3f})")
+
+    infer = build_infer_fn(params, cfg)
+    files = {}
+    for b in batches:
+        spec_in = jax.ShapeDtypeStruct((b, cfg.image, cfg.image, 3), jnp.float32)
+        lowered = jax.jit(infer).lower(spec_in)
+        text = to_hlo_text(lowered)
+        name = f"model_b{b}.hlo.txt"
+        (out_dir / name).write_text(text)
+        files[str(b)] = name
+        print(f"wrote {out_dir / name} ({len(text)} chars)")
+
+    # golden cross-check: logits for a deterministic linspace input, so the
+    # rust runtime can verify end-to-end numerics after loading the HLO
+    import numpy as _np
+    n_in = cfg.image * cfg.image * 3
+    gx = _np.linspace(0.0, 1.0, n_in, dtype=_np.float32).reshape(1, cfg.image, cfg.image, 3)
+    (glogits,) = jax.jit(infer)(jnp.asarray(gx))
+    manifest = {
+        "golden_logits": [float(v) for v in _np.asarray(glogits)[0]],
+        "model": cfg.name,
+        "mode": cfg.quant.mode,
+        "image": cfg.image,
+        "classes": cfg.classes,
+        "w_bits": cfg.quant.w_bits,
+        "x_bits": cfg.quant.x_bits,
+        "sf_bits": cfg.quant.sf_bits,
+        "ps_bits": cfg.quant.ps_bits,
+        "xbar_rows": cfg.quant.xbar_rows,
+        "test_acc": float(acc),
+        "batches": files,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default="1,8")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    batches = tuple(int(b) for b in args.batches.split(","))
+    export(args.checkpoint, args.out_dir, batches, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Measure comparator-code (p) distributions of a trained ternary model and
+export them for the rust simulator (Fig. 2(c) → `artifacts/sparsity.json`).
+
+The rust `SparsityTable` consumes `{"<model>": {"layers": [f0, f1, ...]}}`
+with one zero-fraction per MVM layer, in mapping order. The slim trained
+model's per-layer fractions are exported under both its own name and the
+corresponding full-size zoo names (the fractions are statistics of the
+PSQ quantizer, which transfer across width — DESIGN.md substitution #5).
+
+Usage:
+  python -m compile.export_sparsity [--checkpoint ckpt.pkl]
+                                    [--out ../artifacts/sparsity.json]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import pickle
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .kernels.ref import psq_mvm_ref
+from .model import ModelCfg, batchnorm, im2col, model_structure, model_presets
+from .psq.quant import lsq_codes
+
+
+def _layer_sparsity(p, x2d, spec):
+    """Zero fraction of the comparator codes of one MVM layer."""
+    x_step = float(np.exp(p["x_step_log"]))
+    w_step = float(np.exp(p["w_step_log"]))
+    xc = np.clip(np.round(np.maximum(np.asarray(x2d), 0.0) / x_step), 0,
+                 2**spec.x_bits - 1).astype(np.int64)
+    wc = np.asarray(lsq_codes(p["w"], w_step, spec.w_bits, signed=True))
+    sf_step = float(np.exp(p["sf_step_log"]))
+    r, c = wc.shape
+    g = spec.xbar_rows
+    groups = max(1, -(-r // g))
+    zeros, total = 0, 0
+    for gi in range(groups):
+        sl = slice(gi * g, min((gi + 1) * g, r))
+        s = np.asarray(p["scales"][gi])
+        if spec.sf_share > 1:
+            s = np.repeat(s, spec.sf_share, axis=1)[:, : c * spec.w_bits]
+        s_codes = np.asarray(lsq_codes(jnp.asarray(s), sf_step, spec.sf_bits,
+                                       signed=True))
+        _, codes = psq_mvm_ref(
+            xc[:, sl], wc[sl], jnp.asarray(s_codes),
+            theta=tuple(float(t) for t in np.asarray(p["theta"][gi])),
+            alpha=float(p["alpha"][gi]),
+            w_bits=spec.w_bits, x_bits=spec.x_bits,
+            ternary=spec.mode == "ternary",
+        )
+        codes = np.asarray(codes)
+        zeros += int((codes == 0).sum())
+        total += codes.size
+    return zeros / max(total, 1)
+
+
+def measure(params, cfg: ModelCfg, n=32, seed=0):
+    """Per-MVM-layer zero fractions on a held-out batch."""
+    spec = cfg.quant
+    (x, _), _ = data_mod.train_test_split(n, 1, image=cfg.image,
+                                          classes=cfg.classes, seed=seed + 77)
+    x = jnp.asarray(x)
+    plan, _ = model_structure(cfg)
+    import jax
+
+    fractions = []
+    cur = x
+    for entry, lp in zip(plan, params["layers"]):
+        if entry["kind"] == "conv":
+            k = entry["k"]
+            patches, (oh, ow) = im2col(cur, k, entry["stride"], k // 2)
+            b, np_, r = patches.shape
+            fractions.append(_layer_sparsity(lp["mvm"], patches.reshape(b * np_, r), spec))
+            # advance functionally (float path is fine for statistics)
+            from .model import conv_apply
+            y = conv_apply(lp["mvm"], cur, spec, k, entry["stride"], k // 2, False)
+            y, _ = batchnorm(lp["bn"], y, False)
+            cur = jax.nn.relu(y)
+            if entry["pool"]:
+                cur = cur[:, ::2, ::2, :]
+        else:
+            from .model import conv_apply
+            patches, _ = im2col(cur, 3, entry["stride"], 1)
+            b, np_, r = patches.shape
+            fractions.append(
+                _layer_sparsity(lp["conv1"]["mvm"], patches.reshape(b * np_, r), spec)
+            )
+            skip = cur
+            y = conv_apply(lp["conv1"]["mvm"], cur, spec, 3, entry["stride"], 1, False)
+            y, _ = batchnorm(lp["conv1"]["bn"], y, False)
+            y = jax.nn.relu(y)
+            patches2, _ = im2col(y, 3, 1, 1)
+            b2, np2, r2 = patches2.shape
+            fractions.append(
+                _layer_sparsity(lp["conv2"]["mvm"], patches2.reshape(b2 * np2, r2), spec)
+            )
+            y = conv_apply(lp["conv2"]["mvm"], y, spec, 3, 1, 1, False)
+            y, _ = batchnorm(lp["conv2"]["bn"], y, False)
+            if entry["residual"]:
+                y = y + skip
+            cur = jax.nn.relu(y)
+    feat = cur.mean(axis=(1, 2))
+    fractions.append(_layer_sparsity(params["fc"], feat, spec))
+    return fractions
+
+
+# full-size zoo models the slim fractions stand in for
+ZOO_ALIASES = {
+    "resnet20-slim": ["resnet20", "resnet32", "resnet44"],
+    "wide-resnet20-slim": ["wide_resnet20"],
+    "vgg9-slim": ["vgg9", "vgg11"],
+    "tiny": ["resnet20"],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--out", default="../artifacts/sparsity.json")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    if args.checkpoint and pathlib.Path(args.checkpoint).exists():
+        with open(args.checkpoint, "rb") as f:
+            ck = pickle.load(f)
+        cfg, params = ck["cfg"], ck["params"]
+    else:
+        from .train import train, transfer_params
+        from .model import calibrate_model
+
+        preset = "tiny" if args.quick else "resnet20-slim"
+        base = model_presets()[preset]
+        steps = 40 if args.quick else 250
+        fp = train(dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, mode="fp")),
+            steps=steps, verbose=False)
+        cfg = dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, mode="ternary"))
+        p0 = transfer_params(fp.params, cfg)
+        (cx, _), _ = data_mod.train_test_split(64, 1, image=cfg.image)
+        p0 = calibrate_model(p0, jnp.asarray(cx), cfg)
+        r = train(cfg, steps=max(steps // 2, 20), lr=5e-4, verbose=False,
+                  init_params=p0)
+        params = r.params
+
+    fractions = measure(params, cfg)
+    print(f"{cfg.name}: per-layer zero fractions "
+          f"min={min(fractions):.2f} mean={sum(fractions)/len(fractions):.2f} "
+          f"max={max(fractions):.2f}")
+
+    out = {}
+    names = [cfg.name] + ZOO_ALIASES.get(cfg.name, [])
+    for name in names:
+        out[name] = {"layers": [round(f, 4) for f in fractions]}
+    path = pathlib.Path(args.out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

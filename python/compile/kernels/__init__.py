@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO)."""
+
+from .psq_mvm import psq_mvm_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: the PSQ crossbar MVM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's 65 nm
+mixed-signal macro becomes a TPU-style tiled kernel — each grid step owns
+one *crossbar tile* of the weight bit-plane matrix resident in VMEM
+(BlockSpec), and streams the activation bit-planes through it, mirroring
+the weight-stationary schedule of the silicon. The popcount column sums,
+comparator, and scale-factor accumulation all happen in-tile, so the HLO
+the AOT path emits keeps the same locality structure the accelerator has.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is checked against ``ref.psq_mvm_ref`` by the
+pytest/hypothesis suite, and TPU-perf structure (VMEM footprint, tile
+shapes) is analysed statically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Crossbar geometry of HCiM config A: 128 wordlines × 128 bitlines.
+TILE_ROWS = 128
+TILE_COLS = 128
+
+
+def _psq_kernel(x_ref, w_ref, s_ref, o_ref, *, x_bits, theta, alpha, ternary):
+    """One grid step: a [B, R_tile] × [R_tile, C_tile] PSQ tile-MVM.
+
+    x_ref: [B, R_tile] int32 activation codes (unsigned values).
+    w_ref: [R_tile, C_tile] int32 weight *bits* (0/1 — pre-sliced planes).
+    s_ref: [x_bits, C_tile] int32 scale-factor codes.
+    o_ref: [B, C_tile] int32 partial-sum accumulator for this tile.
+    """
+    x = x_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    thetas = theta if isinstance(theta, (tuple, list)) else (theta,) * x_bits
+    for j in range(x_bits):  # static unroll: one analog bit-stream per step
+        xb = ((x >> j) & 1).astype(jnp.float32)
+        # idealised analog column: popcount dot of the bit-planes.
+        raw = jnp.dot(xb, w)  # [B, C_tile]
+        centered = raw - thetas[j]
+        if ternary:
+            p = jnp.where(
+                centered >= alpha,
+                1,
+                jnp.where(centered <= -alpha, -1, 0),
+            ).astype(jnp.int32)
+        else:
+            p = jnp.where(centered >= 0, 1, -1).astype(jnp.int32)
+        acc = acc + p * s_ref[j][None, :]
+    o_ref[...] = acc
+
+
+def psq_mvm_pallas(x, w_bits_planes, scales, *, x_bits, theta, alpha,
+                   ternary=True, interpret=True):
+    """PSQ MVM over pre-bit-sliced weights, tiled like the crossbar array.
+
+    Args:
+      x: ``[B, R]`` int32 unsigned activation codes.
+      w_bits_planes: ``[R, P]`` int32 0/1 weight bits (P physical columns,
+        logical col c at columns ``c*w_bits .. (c+1)*w_bits``).
+      scales: ``[x_bits, P]`` int32 scale-factor codes.
+      theta: comparator reference — a scalar, or a tuple of ``x_bits``
+        per-stream references (the comparator DAC can step per cycle).
+
+    Returns ``[B, P]`` int32 partial sums (Σ_j p·s, shifts merged in s).
+
+    The grid walks (row tiles × column tiles); row tiles accumulate —
+    matching how multiple crossbars' partial sums combine digitally in the
+    chip (the inter-crossbar accumulation of §5.3's config-B discussion).
+    """
+    b, r = x.shape
+    r2, p = w_bits_planes.shape
+    assert r == r2, f"row mismatch {r} vs {r2}"
+    assert scales.shape == (x_bits, p), f"scales shape {scales.shape}"
+
+    row_tiles = -(-r // TILE_ROWS)
+    col_tiles = -(-p // TILE_COLS)
+
+    # pad to tile multiples (idle wordlines/bitlines in the silicon)
+    rp = row_tiles * TILE_ROWS
+    cp = col_tiles * TILE_COLS
+    x_pad = jnp.pad(x, ((0, 0), (0, rp - r)))
+    w_pad = jnp.pad(w_bits_planes, ((0, rp - r), (0, cp - p)))
+    s_pad = jnp.pad(scales, ((0, 0), (0, cp - p)))
+
+    kernel = functools.partial(
+        _psq_kernel, x_bits=x_bits, theta=theta, alpha=alpha, ternary=ternary
+    )
+
+    out = jnp.zeros((b, cp), jnp.int32)
+    # one pallas_call per row tile; partial sums accumulate across tiles
+    for rt in range(row_tiles):
+        tile_out = pl.pallas_call(
+            kernel,
+            grid=(col_tiles,),
+            in_specs=[
+                pl.BlockSpec((b, TILE_ROWS), lambda c: (0, 0)),
+                pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda c: (0, c)),
+                pl.BlockSpec((x_bits, TILE_COLS), lambda c: (0, c)),
+            ],
+            out_specs=pl.BlockSpec((b, TILE_COLS), lambda c: (0, c)),
+            out_shape=jax.ShapeDtypeStruct((b, cp), jnp.int32),
+            interpret=interpret,
+        )(
+            x_pad[:, rt * TILE_ROWS : (rt + 1) * TILE_ROWS],
+            w_pad[rt * TILE_ROWS : (rt + 1) * TILE_ROWS],
+            s_pad,
+        )
+        out = out + tile_out
+    return out[:, :p]

@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the PSQ crossbar MVM.
+
+This is the bit-exact reference the Pallas kernel (and, transitively, the
+rust gate-level DCiM model) must match. Semantics — one crossbar tile,
+weight-stationary, bit-slice = bit-stream = 1:
+
+for each input bit-plane j (x_bits) and weight bit-slice column group:
+    raw[c]  = popcount-dot of (weight bits, input bits)      # analog column
+    p[c]    = binary/ternary comparator vs (theta, alpha)     # Eq. 1
+    PS[c]  += p[c] * scales[j, c]                             # DCiM word-op
+
+The 2^j input shift is merged into the trained ``scales`` (paper §4.2);
+the w_bits physical columns of one logical output are combined by a plain
+adder downstream (``combine_slices``).
+"""
+
+import jax.numpy as jnp
+
+
+def weight_bitplanes(w_codes, w_bits):
+    """Two's-complement bit-planes of signed weight codes.
+
+    Returns uint arrays ``[w_bits, R, C]`` with plane i = bit i.
+    """
+    pattern = jnp.asarray(w_codes, jnp.int32) & ((1 << w_bits) - 1)
+    return jnp.stack([(pattern >> i) & 1 for i in range(w_bits)], axis=0)
+
+
+def input_bitplanes(x_codes, x_bits):
+    """Bit-planes of unsigned activation codes: ``[x_bits, ..., R]``."""
+    x = jnp.asarray(x_codes, jnp.int32)
+    return jnp.stack([(x >> j) & 1 for j in range(x_bits)], axis=0)
+
+
+def comparator(raw, theta, alpha, ternary):
+    """Eq. 1: the comparator bank (no gradients — inference reference)."""
+    centered = raw - theta
+    if ternary:
+        return jnp.where(
+            centered >= alpha, 1, jnp.where(centered <= -alpha, -1, 0)
+        ).astype(jnp.int32)
+    return jnp.where(centered >= 0, 1, -1).astype(jnp.int32)
+
+
+def psq_mvm_ref(x, w_codes, scales, theta, alpha, *, w_bits, x_bits, ternary=True,
+                ps_bits=None):
+    """Reference PSQ MVM over one crossbar tile.
+
+    Args:
+      x: ``[B, R]`` unsigned activation codes (int).
+      w_codes: ``[R, C]`` signed weight codes.
+      scales: ``[x_bits, C * w_bits]`` integer scale-factor codes.
+      theta: comparator reference (scalar).
+      alpha: ternary threshold (scalar; ignored for binary).
+      w_bits / x_bits: precisions (bit-slice = bit-stream = 1).
+      ternary: PSQ mode.
+      ps_bits: if set, wrap the accumulator to this two's-complement width
+        (matching the DCiM partial-sum register).
+
+    Returns:
+      ``ps``: ``[B, C * w_bits]`` accumulated partial sums,
+      ``p``: ``[x_bits, B, C * w_bits]`` comparator codes (for sparsity).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w_planes = weight_bitplanes(w_codes, w_bits)       # [w_bits, R, C]
+    # physical columns: logical col c expands to w_bits adjacent columns
+    r, c = w_codes.shape
+    phys = jnp.transpose(w_planes, (1, 2, 0)).reshape(r, c * w_bits)
+    xp = input_bitplanes(x, x_bits)                    # [x_bits, B, R]
+
+    thetas = theta if hasattr(theta, "__len__") else [theta] * x_bits
+    ps = jnp.zeros((x.shape[0], c * w_bits), jnp.int32)
+    p_all = []
+    for j in range(x_bits):
+        raw = xp[j].astype(jnp.int32) @ phys.astype(jnp.int32)   # [B, phys]
+        p = comparator(raw, thetas[j], alpha, ternary)
+        p_all.append(p)
+        ps = ps + p * scales[j][None, :].astype(jnp.int32)
+    if ps_bits is not None:
+        m = 1 << ps_bits
+        ps = ((ps % m) + m) % m
+        ps = jnp.where(ps >= m // 2, ps - m, ps)
+    return ps, jnp.stack(p_all, axis=0)
+
+
+def combine_slices(ps, w_bits):
+    """Fold the w_bits physical columns of each logical output (plain add;
+    shifts/signs live in the trained scale factors)."""
+    b, phys = ps.shape
+    return ps.reshape(b, phys // w_bits, w_bits).sum(axis=2)
+
+
+def dense_int_mvm(x, w_codes):
+    """Exact integer MVM ground truth (no PSQ)."""
+    return jnp.asarray(x, jnp.int32) @ jnp.asarray(w_codes, jnp.int32)

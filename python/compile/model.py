@@ -1,0 +1,539 @@
+"""Layer-2 JAX models with PSQ quantization-aware training.
+
+Pure-JAX (no flax/optax in this offline image): parameters are nested
+dicts, layers are functions. Every MVM layer (conv / linear) runs the
+*crossbar-faithful* PSQ datapath:
+
+  im2col → LSQ-quantize activations (unsigned, x_bits) and weights
+  (signed, w_bits) → split input rows into crossbar groups (xbar_rows) →
+  per group and per input bit-plane: popcount column sums over the weight
+  bit-planes → comparator (binary/ternary, Eq. 1, trainable θ and α) →
+  multiply by trainable quantized scale factors (sf_bits; the 2^j shift is
+  merged in, §4.2) → accumulate → combine the w_bits slice columns.
+
+This is the same arithmetic as `kernels/psq_mvm.py` (which the AOT path
+lowers) and the rust gate-level DCiM model — the three are tested against
+each other.
+
+Quantization modes (``QuantSpec.mode``):
+  * ``fp``      — float baseline (no PSQ),
+  * ``adc{n}``  — n-bit ADC on group partial sums (Table 2 baselines),
+  * ``binary``  — 1-bit PSQ with scale factors,
+  * ``ternary`` — 1.5-bit PSQ with scale factors,
+  * ``2bit``    — 2-bit partial sums *without* per-column scale factors
+                  (the Fig. 2(b) strawman).
+
+``sf_share`` > 1 shares one scale factor across that many columns
+(the Fig. 2(d) accuracy-vs-#SF sweep).
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .psq.quant import (
+    adc_quantize,
+    lsq_init_step,
+    lsq_quantize,
+    psq_binary,
+    psq_ternary,
+    round_ste,
+)
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantSpec:
+    """Precision configuration (paper §5.1: CIFAR preset)."""
+
+    mode: str = "ternary"      # fp | adc{n} | binary | ternary | 2bit
+    w_bits: int = 4
+    x_bits: int = 4
+    sf_bits: int = 4
+    ps_bits: int = 8
+    xbar_rows: int = 128
+    sf_share: int = 1          # Fig 2(d): share one SF across k columns
+
+    @property
+    def is_psq(self):
+        return self.mode in ("binary", "ternary", "2bit")
+
+    @property
+    def adc_bits(self):
+        return int(self.mode[3:]) if self.mode.startswith("adc") else None
+
+
+@dataclasses.dataclass
+class ModelCfg:
+    """A slim CIFAR-style CNN (scaled-down ResNet/VGG — DESIGN.md
+    substitution #3)."""
+
+    name: str = "resnet20-slim"
+    arch: str = "resnet"       # resnet | vgg
+    widths: tuple = (8, 16, 32)
+    blocks: int = 1            # residual blocks per stage
+    image: int = 16            # input resolution
+    classes: int = 10
+    quant: QuantSpec = dataclasses.field(default_factory=QuantSpec)
+
+
+# ---------------------------------------------------------------------------
+# im2col + the PSQ MVM datapath
+# ---------------------------------------------------------------------------
+
+
+def im2col(x, k, stride, pad):
+    """[B,H,W,C] → patches [B, OH*OW, k*k*C]."""
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(
+                x[:, di : di + oh * stride : stride, dj : dj + ow * stride : stride, :]
+            )
+    patches = jnp.stack(cols, axis=3)  # [B, OH, OW, k*k, C]
+    return patches.reshape(b, oh * ow, k * k * c), (oh, ow)
+
+
+def psq_matmul(xq, wq, p, spec: QuantSpec, train: bool):
+    """The crossbar-faithful MVM on *quantized codes*.
+
+    xq: [N, R] unsigned codes in [0, 2^x_bits); values are STE-carrying
+        floats during training.
+    wq: [R, C] signed codes.
+    p:  layer params dict (scale factors, theta, alpha, out_step).
+    Returns float outputs [N, C] (scaled by out_step).
+
+    Gradient routing (the PSQ-QAT recipe of [25]/§4.1):
+    * the *forward* value is the bit-exact PSQ datapath (popcounts →
+      comparator → Σ p·s_q),
+    * weights/activations receive gradients through a layer-level STE
+      residual against the ideal integer matmul (bit extraction itself
+      has no useful gradient),
+    * scale factors get exact gradients (`∂out/∂s = p`), θ and α get the
+      comparator's soft gradients.
+    """
+    n, r = xq.shape
+    c = wq.shape[1]
+    g = spec.xbar_rows
+    groups = max(1, math.ceil(r / g))
+
+    if spec.mode == "fp":
+        return xq @ wq * p["out_step"]
+
+    # the differentiable "ideal" code-domain matmul (also the value PSQ
+    # training regresses onto)
+    ideal = xq @ wq
+
+    if spec.adc_bits is not None:
+        # N-bit ADC on each crossbar group's partial sum (PSQ-less baseline)
+        out = jnp.zeros((n, c))
+        for gi in range(groups):
+            sl = slice(gi * g, min((gi + 1) * g, r))
+            z = xq[:, sl] @ wq[sl]
+            fs = jax.lax.stop_gradient(jnp.abs(z).max()) + 1e-6
+            out = out + adc_quantize(z, spec.adc_bits, fs)
+        return out * p["out_step"]
+
+    # ---- full bit-plane PSQ path (binary / ternary / 2bit) ----
+    # integer views for exact bit extraction (no gradient)
+    xc = jax.lax.stop_gradient(jnp.round(xq)).astype(jnp.int32)
+    wc = jax.lax.stop_gradient(jnp.round(wq)).astype(jnp.int32)
+    theta = p["theta"]
+    alpha = p["alpha"]
+    out = jnp.zeros((n, c * spec.w_bits))
+    for gi in range(groups):
+        sl = slice(gi * g, min((gi + 1) * g, r))
+        xg = xc[:, sl]
+        wg = wc[sl]
+        # two's complement weight bit-planes → physical column layout
+        wpat = wg & ((1 << spec.w_bits) - 1)
+        planes = [(wpat >> i) & 1 for i in range(spec.w_bits)]
+        phys = jnp.stack(planes, axis=-1).reshape(wg.shape[0], c * spec.w_bits)
+        phys_f = phys.astype(jnp.float32)
+        for j in range(spec.x_bits):
+            xbit = ((xg >> j) & 1).astype(jnp.float32)
+            raw = xbit @ phys_f  # [N, c*w_bits] popcount partial sums
+            centered = raw - theta[gi, j]
+            if spec.mode == "binary":
+                q = psq_binary(centered)
+                s = p["scales"][gi, j]
+            elif spec.mode == "ternary":
+                q = psq_ternary(centered, alpha[gi])
+                s = p["scales"][gi, j]
+            else:  # 2bit: 2-bit symmetric partial sums, NO trainable SFs —
+                # the shift-add applies the fixed 2^j · slice-weight pattern
+                fs = jax.lax.stop_gradient(jnp.abs(centered).max()) + 1e-6
+                q = adc_quantize(centered, 2, fs)
+                sw = jnp.asarray(
+                    [
+                        -(2 ** (spec.w_bits - 1)) if i == spec.w_bits - 1 else 2**i
+                        for i in range(spec.w_bits)
+                    ],
+                    jnp.float32,
+                )
+                out = out + q * (jnp.tile(sw, c) * 2.0**j)[None, :]
+                continue
+            if spec.sf_share > 1:
+                s = jnp.repeat(s, spec.sf_share)[: c * spec.w_bits]
+            # quantize the scale factors themselves (§4.1)
+            s_q = lsq_quantize(s, jnp.exp(p["sf_step_log"]), spec.sf_bits, signed=True)
+            out = out + q * s_q[None, :]
+    # combine the w_bits physical columns of each logical output, plus the
+    # θ-offset reconstruction bias (Σ_j 2^j·sw_i·θ_gj, learned)
+    out = out.reshape(n, c, spec.w_bits).sum(axis=2) + p["bias"][None, :]
+    # layer-level STE residual: forward unchanged, weight/activation
+    # gradients flow as if the layer were the ideal integer matmul
+    out = out + ideal - jax.lax.stop_gradient(ideal)
+    return out * p["out_step"]
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def _init_scales(spec: QuantSpec, c, groups, rows_per_group):
+    """Structured scale-factor init: s[g, j, col] = κ_g · 2^j · sw(col%w_bits)
+    with sw the signed two's-complement slice weight."""
+    n_sf = max(-(-(c * spec.w_bits) // max(spec.sf_share, 1)), 1)  # ceil
+    sw = np.array(
+        [
+            -(2 ** (spec.w_bits - 1)) if i == spec.w_bits - 1 else 2**i
+            for i in range(spec.w_bits)
+        ],
+        dtype=np.float32,
+    )
+    cols = np.tile(sw, c)[: n_sf * max(spec.sf_share, 1)][:: max(spec.sf_share, 1)]
+    cols = cols[:n_sf]
+    out = np.zeros((groups, spec.x_bits, n_sf), np.float32)
+    for g, rg in enumerate(rows_per_group):
+        kappa = max(np.sqrt(rg) * 0.4, 0.5)
+        for j in range(spec.x_bits):
+            out[g, j] = kappa * (2.0**j) * cols
+    return jnp.asarray(out)
+
+
+def init_mvm_params(rng, r, c, spec: QuantSpec, fan_in):
+    """Parameters for one MVM layer (He-init weights + quantizer state)."""
+    k1, _ = jax.random.split(rng)
+    w = jax.random.normal(k1, (r, c)) * np.sqrt(2.0 / fan_in)
+    groups = max(1, math.ceil(r / spec.xbar_rows))
+    n_sf = max(-(-(c * spec.w_bits) // max(spec.sf_share, 1)), 1)  # ceil
+    # comparator reference ≈ E[popcount] of the group's column
+    # (rows · E[x_bit]·E[w_bit] ≈ rows/6 for LSQ-initialised nets); the
+    # ternary dead-zone α starts at ~½σ of the popcount
+    rows_per_group = [
+        min(spec.xbar_rows, r - gi * spec.xbar_rows) for gi in range(groups)
+    ]
+    theta0 = jnp.asarray(
+        [[rg / 6.0] * spec.x_bits for rg in rows_per_group]
+    )  # [groups, x_bits]: the comparator reference can step per bit-stream
+    alpha0 = jnp.asarray([max(np.sqrt(rg) * 0.4, 0.5) for rg in rows_per_group])
+    params = {
+        "w": w,
+        # step sizes live in LOG domain: Adam's fixed-size steps would
+        # otherwise drive these small positive scalars through zero
+        "w_step_log": jnp.log(lsq_init_step(w, spec.w_bits, signed=True)),
+        "x_step_log": jnp.asarray(np.log(0.125)),
+        "out_step": jnp.asarray(1.0),
+        "theta": theta0,
+        "alpha": alpha0,
+        # scale factors [groups, x_bits, n_sf]: physical column c·w_bits+i
+        # carries the merged input shift 2^j AND the two's-complement
+        # slice weight sw_i (−2^(w_bits−1) for the MSB slice) times the
+        # expected comparator magnitude κ ≈ E|ps−θ| of the group — so the
+        # PSQ forward approximates the ideal matmul from step 0 (§4.2:
+        # "the shift operation is merged with the scale factor values").
+        "scales": _init_scales(spec, c, groups, rows_per_group),
+        # per-layer SF quantizer step sized to the largest |s| (§4.1)
+        "sf_step_log": jnp.log(
+            _init_scales(spec, c, groups, rows_per_group).max()
+            / (2 ** (spec.sf_bits - 1) - 1)
+            + 1e-9
+        ),
+        # θ-offset reconstruction bias (digital, folded into BN on silicon)
+        "bias": jnp.zeros((c,)),
+    }
+    return params
+
+
+def mvm_forward(params, x2d, spec: QuantSpec, train: bool):
+    """Quantize activations + weights, then the PSQ matmul."""
+    if spec.mode == "fp":
+        return x2d @ params["w"] * params["out_step"]
+    # unsigned activation codes (post-ReLU inputs)
+    x_step = jnp.exp(params["x_step_log"])
+    w_step = jnp.exp(params["w_step_log"])
+    xq = lsq_quantize(jnp.maximum(x2d, 0.0), x_step, spec.x_bits, signed=False)
+    x_codes = xq / x_step
+    # signed weight codes
+    wq = lsq_quantize(params["w"], w_step, spec.w_bits, signed=True)
+    w_codes = wq / w_step
+    out = psq_matmul(x_codes, w_codes, params, spec, train)
+    # fold the quantizer steps back in (absorbed by BN in silicon)
+    return out * x_step * w_step
+
+
+def batchnorm_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(params, x, train: bool, momentum=0.9):
+    """BN over the channel (last) axis. Returns (y, updated_params)."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = x.mean(axis=axes)
+        var = x.var(axis=axes) + 1e-5
+        new = {
+            **params,
+            "mean": momentum * params["mean"] + (1 - momentum) * mean,
+            "var": momentum * params["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var, new = params["mean"], params["var"] + 1e-5, params
+    y = (x - mean) / jnp.sqrt(var) * params["gamma"] + params["beta"]
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# model assembly
+# ---------------------------------------------------------------------------
+
+
+def conv_apply(params, x, spec, k, stride, pad, train):
+    patches, (oh, ow) = im2col(x, k, stride, pad)
+    b, np_, r = patches.shape
+    out = mvm_forward(params, patches.reshape(b * np_, r), spec, train)
+    return out.reshape(b, oh, ow, -1)
+
+
+def model_structure(cfg: ModelCfg):
+    """Static layer plan (kept OUT of the parameter pytree so jax never
+    traces strings/ints). Each entry: dict of static attributes."""
+    plan = []
+    if cfg.arch == "resnet":
+        w0, w1, w2 = cfg.widths
+        plan.append({"kind": "conv", "cin": 3, "cout": w0, "k": 3, "stride": 1,
+                     "pool": False})
+        chans = [(w0, w0, 1)] * cfg.blocks + [(w0, w1, 2)] + [(w1, w1, 1)] * (
+            cfg.blocks - 1
+        ) + [(w1, w2, 2)] + [(w2, w2, 1)] * (cfg.blocks - 1)
+        for cin, cout, stride in chans:
+            plan.append({"kind": "block", "cin": cin, "cout": cout,
+                         "stride": stride, "residual": stride == 1 and cin == cout})
+        feat = w2
+    else:  # vgg
+        cin = 3
+        for w in cfg.widths:
+            plan.append({"kind": "conv", "cin": cin, "cout": w, "k": 3,
+                         "stride": 1, "pool": True})
+            cin = w
+        feat = cfg.widths[-1]
+    return plan, feat
+
+
+def init_model(rng, cfg: ModelCfg):
+    """Initialise the parameter pytree (arrays only) for `cfg`."""
+    plan, feat = model_structure(cfg)
+    keys = jax.random.split(rng, 2 * len(plan) + 2)
+    ki = iter(keys)
+    spec = cfg.quant
+
+    def conv_p(cin, cout, k=3):
+        return {
+            "mvm": init_mvm_params(next(ki), k * k * cin, cout, spec, k * k * cin),
+            "bn": batchnorm_init(cout),
+        }
+
+    layers = []
+    for entry in plan:
+        if entry["kind"] == "conv":
+            layers.append(conv_p(entry["cin"], entry["cout"], entry["k"]))
+        else:
+            layers.append(
+                {
+                    "conv1": conv_p(entry["cin"], entry["cout"]),
+                    "conv2": conv_p(entry["cout"], entry["cout"]),
+                }
+            )
+    fc = init_mvm_params(next(ki), feat, cfg.classes, spec, feat)
+    return {"layers": layers, "fc": fc}
+
+
+def apply_model(params, x, cfg: ModelCfg, train: bool):
+    """Forward pass. Returns (logits, updated_params-with-BN-state)."""
+    spec = cfg.quant
+    plan, _ = model_structure(cfg)
+    new_layers = []
+    for entry, lp in zip(plan, params["layers"]):
+        if entry["kind"] == "conv":
+            k = entry["k"]
+            y = conv_apply(lp["mvm"], x, spec, k, entry["stride"], k // 2, train)
+            y, bn = batchnorm(lp["bn"], y, train)
+            x = jax.nn.relu(y)
+            if entry["pool"]:
+                x = x[:, ::2, ::2, :]  # stride-2 subsample (cheap pool stand-in)
+            new_layers.append({**lp, "bn": bn})
+        else:  # residual block
+            skip = x
+            y = conv_apply(lp["conv1"]["mvm"], x, spec, 3, entry["stride"], 1, train)
+            y, bn1 = batchnorm(lp["conv1"]["bn"], y, train)
+            y = jax.nn.relu(y)
+            y = conv_apply(lp["conv2"]["mvm"], y, spec, 3, 1, 1, train)
+            y, bn2 = batchnorm(lp["conv2"]["bn"], y, train)
+            if entry["residual"]:
+                y = y + skip
+            x = jax.nn.relu(y)
+            new_layers.append(
+                {"conv1": {**lp["conv1"], "bn": bn1}, "conv2": {**lp["conv2"], "bn": bn2}}
+            )
+    x = x.mean(axis=(1, 2))  # global average pool
+    logits = mvm_forward(params["fc"], x, spec, train)
+    return logits, {**params, "layers": new_layers}
+
+
+def model_presets():
+    """The scaled-down stand-ins for the paper's workloads."""
+    return {
+        # widths kept modest so the PSQ fine-tune converges within the
+        # offline step budget (DESIGN.md substitution #3)
+        "resnet20-slim": ModelCfg(name="resnet20-slim", widths=(8, 16, 16)),
+        "wide-resnet20-slim": ModelCfg(name="wide-resnet20-slim", widths=(16, 32, 32)),
+        "vgg9-slim": ModelCfg(name="vgg9-slim", arch="vgg", widths=(16, 32, 64)),
+        "tiny": ModelCfg(name="tiny", widths=(4, 8, 8), image=8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# PSQ calibration (run once before fine-tuning, on one batch)
+# ---------------------------------------------------------------------------
+
+
+def _calibrate_mvm(p, x2d, spec: QuantSpec):
+    """Set θ (per group & bit-stream), α, and the scale-factor magnitudes
+    from the actual popcount statistics of a calibration batch — the
+    quantization-aware-training warm start of §4.1."""
+    import numpy as onp
+
+    x_step = jnp.exp(p["x_step_log"])
+    w_step = jnp.exp(p["w_step_log"])
+    xq = lsq_quantize(jnp.maximum(x2d, 0.0), x_step, spec.x_bits, signed=False) / x_step
+    wq = lsq_quantize(p["w"], w_step, spec.w_bits, signed=True) / w_step
+    xc = onp.asarray(jnp.round(xq), onp.int64)
+    wc = onp.asarray(jnp.round(wq), onp.int64)
+    r, c = wc.shape
+    g = spec.xbar_rows
+    groups = max(1, -(-r // g))
+
+    theta = onp.zeros((groups, spec.x_bits), onp.float32)
+    alpha = onp.zeros((groups,), onp.float32)
+    scales = onp.asarray(p["scales"], onp.float32).copy()
+    sw = onp.array(
+        [-(2 ** (spec.w_bits - 1)) if i == spec.w_bits - 1 else 2**i
+         for i in range(spec.w_bits)],
+        dtype=onp.float32,
+    )
+    n_sf = scales.shape[2]
+    share = max(spec.sf_share, 1)
+    sw_cols = onp.tile(sw, c)[: n_sf * share][::share][:n_sf]
+
+    shift_sw = onp.tile(sw, c)  # per physical column: ±2^i
+    bias = onp.zeros((c,), onp.float32)
+    # two passes: first θ and α from the raw statistics, then per-column
+    # least-squares scales against the comparator codes.
+    for gi in range(groups):
+        sl = slice(gi * g, min((gi + 1) * g, r))
+        wg = wc[sl] & ((1 << spec.w_bits) - 1)
+        phys = onp.stack(
+            [(wg >> i) & 1 for i in range(spec.w_bits)], axis=-1
+        ).reshape(wg.shape[0], c * spec.w_bits).astype(onp.float32)
+        raws = []
+        sds = []
+        for j in range(spec.x_bits):
+            xbit = ((xc[:, sl] >> j) & 1).astype(onp.float32)
+            raw = xbit @ phys
+            raws.append(raw)
+            theta[gi, j] = raw.mean()
+            sds.append(raw.std() + 1e-6)
+        alpha[gi] = 0.6 * float(onp.mean(sds))
+        for j in range(spec.x_bits):
+            centered = raws[j] - theta[gi, j]
+            if spec.mode == "ternary":
+                pc = onp.where(centered >= alpha[gi], 1.0,
+                               onp.where(centered <= -alpha[gi], -1.0, 0.0))
+            else:
+                pc = onp.where(centered >= 0, 1.0, -1.0)
+            num = (centered * pc).sum(0)
+            den = (pc * pc).sum(0) + 1e-6
+            s_reg = onp.maximum(num / den, 0.0)          # per physical column
+            full = (2.0**j) * shift_sw * s_reg           # merge shift + slice sign
+            scales[gi, j] = full[::share][:n_sf]
+            # θ-offset contribution of this (group, j): same for every
+            # logical column scaled by Σ_i sw_i
+            bias += (2.0**j) * float(sw.sum()) * theta[gi, j]
+
+    out = dict(p)
+    out["theta"] = jnp.asarray(theta)
+    out["alpha"] = jnp.asarray(alpha)
+    out["scales"] = jnp.asarray(scales)
+    out["bias"] = jnp.asarray(bias)
+    out["sf_step_log"] = jnp.log(jnp.abs(out["scales"]).max() /
+                                 (2 ** (spec.sf_bits - 1) - 1) + 1e-9)
+    return out
+
+
+def calibrate_model(params, x, cfg: ModelCfg):
+    """Walk the network on batch `x`, calibrating every MVM layer's PSQ
+    parameters to the statistics its actual inputs produce."""
+    spec = cfg.quant
+    if not spec.is_psq:
+        return params
+    plan, _ = model_structure(cfg)
+    new_layers = []
+    for entry, lp in zip(plan, params["layers"]):
+        if entry["kind"] == "conv":
+            k = entry["k"]
+            patches, _ = im2col(x, k, entry["stride"], k // 2)
+            b, np_, r = patches.shape
+            mvm = _calibrate_mvm(lp["mvm"], patches.reshape(b * np_, r), spec)
+            lp = {**lp, "mvm": mvm}
+            y = conv_apply(mvm, x, spec, k, entry["stride"], k // 2, False)
+            y, _ = batchnorm(lp["bn"], y, False)
+            x = jax.nn.relu(y)
+            if entry["pool"]:
+                x = x[:, ::2, ::2, :]
+        else:
+            skip = x
+            patches, _ = im2col(x, 3, entry["stride"], 1)
+            b, np_, r = patches.shape
+            mvm1 = _calibrate_mvm(lp["conv1"]["mvm"], patches.reshape(b * np_, r), spec)
+            y = conv_apply(mvm1, x, spec, 3, entry["stride"], 1, False)
+            y, _ = batchnorm(lp["conv1"]["bn"], y, False)
+            y = jax.nn.relu(y)
+            patches2, _ = im2col(y, 3, 1, 1)
+            b2, np2, r2 = patches2.shape
+            mvm2 = _calibrate_mvm(lp["conv2"]["mvm"], patches2.reshape(b2 * np2, r2), spec)
+            y = conv_apply(mvm2, y, spec, 3, 1, 1, False)
+            y, _ = batchnorm(lp["conv2"]["bn"], y, False)
+            if entry["residual"]:
+                y = y + skip
+            x = jax.nn.relu(y)
+            lp = {"conv1": {**lp["conv1"], "mvm": mvm1},
+                  "conv2": {**lp["conv2"], "mvm": mvm2}}
+        new_layers.append(lp)
+    feat = x.mean(axis=(1, 2))
+    fc = _calibrate_mvm(params["fc"], feat, spec)
+    return {"layers": new_layers, "fc": fc}

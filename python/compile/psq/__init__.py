@@ -1,0 +1,15 @@
+"""Partial-Sum Quantization (PSQ) training primitives.
+
+Layer 2 of the stack: LSQ-style learned quantizers for weights,
+activations, partial sums and — HCiM's addition (§4.1) — the scale
+factors themselves.
+"""
+
+from .quant import (  # noqa: F401
+    lsq_quantize,
+    lsq_init_step,
+    psq_binary,
+    psq_ternary,
+    adc_quantize,
+    round_ste,
+)

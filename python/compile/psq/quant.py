@@ -1,0 +1,92 @@
+"""Quantizers for PSQ quantization-aware training.
+
+All quantizers are straight-through: forward computes the discrete value,
+backward passes gradients as if the op were (scaled) identity, with LSQ's
+gradient w.r.t. the step size (Esser et al., ICLR'20 — the paper's [14]).
+
+Conventions
+-----------
+* ``lsq_quantize`` returns the *dequantized* (fake-quant) tensor, as used
+  inside the training graph; integer codes for the AOT path are recovered
+  by dividing by the step.
+* ``psq_binary`` / ``psq_ternary`` quantize *partial sums* to p ∈ {−1,+1}
+  / {−1,0,+1} (Eq. 1 of the paper) with a trainable threshold ``alpha``
+  (per layer, §4.1) and straight-through gradients.
+* ``adc_quantize`` emulates an N-bit ADC on partial sums (the baseline
+  rows of Table 2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x):
+    """Round with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _grad_scale(x, scale):
+    """LSQ gradient scaling: forward identity, backward × scale."""
+    return x * scale + jax.lax.stop_gradient(x - x * scale)
+
+
+def lsq_init_step(x, bits, signed=True):
+    """LSQ step initialisation: 2·mean|x| / sqrt(qmax)."""
+    qmax = float(2 ** (bits - 1) - 1) if signed else float(2**bits - 1)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(qmax) + 1e-9
+
+
+def lsq_quantize(x, step, bits, signed=True):
+    """Learned-step fake quantization (returns dequantized values).
+
+    ``step`` is a trainable scalar (or broadcastable array). The gradient
+    w.r.t. ``step`` follows LSQ; w.r.t. ``x`` it is the clipped STE.
+    """
+    if signed:
+        qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        qmin, qmax = 0, 2**bits - 1
+    # LSQ grad scale: 1/sqrt(numel·qmax)
+    g = 1.0 / jnp.sqrt(jnp.maximum(x.size * qmax, 1.0))
+    step = _grad_scale(step, g)
+    step = jnp.maximum(step, 1e-9)
+    q = jnp.clip(x / step, qmin, qmax)
+    return round_ste(q) * step
+
+
+def lsq_codes(x, step, bits, signed=True):
+    """Integer codes for the AOT/export path (no gradient tricks)."""
+    if signed:
+        qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        qmin, qmax = 0, 2**bits - 1
+    return jnp.clip(jnp.round(x / step), qmin, qmax).astype(jnp.int32)
+
+
+def psq_binary(ps):
+    """Binary PSQ code: p = +1 if ps ≥ 0 else −1, straight-through."""
+    p = jnp.where(ps >= 0, 1.0, -1.0)
+    return ps + jax.lax.stop_gradient(p - ps)
+
+
+def psq_ternary(ps, alpha):
+    """Ternary PSQ code with trainable threshold α (Eq. 1).
+
+    Gradient w.r.t. ``ps`` is straight-through inside ±(α + margin);
+    gradient w.r.t. ``alpha`` follows the boundary indicator (as in
+    learned-threshold ternary networks).
+    """
+    alpha = jnp.maximum(alpha, 1e-6)
+    p = jnp.where(ps >= alpha, 1.0, jnp.where(ps <= -alpha, -1.0, 0.0))
+    # straight-through for ps; alpha gets a soft gradient via the gap
+    soft = jnp.clip(ps / alpha, -1.0, 1.0)
+    return soft + jax.lax.stop_gradient(p - soft)
+
+
+def adc_quantize(ps, bits, full_scale):
+    """Uniform N-bit 'ADC' on partial sums over [−fs, fs], STE."""
+    levels = 2**bits - 1
+    step = (2.0 * full_scale) / levels
+    q = jnp.clip(jnp.round((ps + full_scale) / step), 0, levels)
+    deq = q * step - full_scale
+    return ps + jax.lax.stop_gradient(deq - ps)

@@ -1,0 +1,304 @@
+"""PSQ quantization-aware training driver (Layer 2).
+
+Hand-rolled Adam (optax is unavailable offline). Used by:
+
+* ``make train``      — trains the serving model and writes checkpoints
+  for ``aot.py``,
+* ``make accuracy``   — the Table 2 / Fig 2(b,d) sweeps → writes
+  ``artifacts/accuracy.json``,
+* ``make sparsity``   — measures comparator-code distributions →
+  ``artifacts/sparsity.json`` (via export_sparsity.py).
+
+Usage:
+  python -m compile.train --preset tiny --mode ternary --steps 60
+  python -m compile.train --accuracy-sweep --out ../artifacts/accuracy.json
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import (ModelCfg, QuantSpec, apply_model, calibrate_model, init_model,
+                    model_presets)
+
+
+# ---------------------------------------------------------------------------
+# optimizer (Adam)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_f = 1.0 / (1 - b1**t)
+    vhat_f = 1.0 / (1 - b2**t)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_f) / (jnp.sqrt(v_ * vhat_f) + eps),
+        params,
+        m,
+        v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# training loop
+# ---------------------------------------------------------------------------
+
+_TRAINABLE_EXCLUDE = ("mean", "var")  # BN running stats are not trained
+
+
+def _split_trainable(params):
+    """Mask out BN running statistics from the gradient path."""
+
+    def mask(path, _):
+        return not any(p in _TRAINABLE_EXCLUDE for p in path)
+
+    return mask
+
+
+def loss_fn(params, x, y, cfg, train=True):
+    logits, new_params = apply_model(params, x, cfg, train=train)
+    onehot = jax.nn.one_hot(y, cfg.classes)
+    ce = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    return ce, (logits, new_params)
+
+
+def accuracy(params, x, y, cfg, batch=256):
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits, _ = apply_model(params, x[i : i + batch], cfg, train=False)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / len(x)
+
+
+def transfer_params(src_params, cfg: ModelCfg, seed=0):
+    """Port weights/BN from a checkpoint into a freshly-initialised pytree
+    for `cfg` (quantizer-structural arrays — scale factors, θ, α — are
+    re-initialised to match the new quant spec's shapes)."""
+    fresh = init_model(jax.random.PRNGKey(seed), cfg)
+
+    def copy_mvm(dst, src):
+        out = dict(dst)
+        for k in ("w", "w_step_log", "x_step_log", "out_step"):
+            if k in src:
+                out[k] = src[k]
+        return out
+
+    layers = []
+    for f, s in zip(fresh["layers"], src_params["layers"]):
+        if "mvm" in f:
+            layers.append({"mvm": copy_mvm(f["mvm"], s["mvm"]), "bn": s["bn"]})
+        else:
+            layers.append(
+                {
+                    "conv1": {"mvm": copy_mvm(f["conv1"]["mvm"], s["conv1"]["mvm"]),
+                              "bn": s["conv1"]["bn"]},
+                    "conv2": {"mvm": copy_mvm(f["conv2"]["mvm"], s["conv2"]["mvm"]),
+                              "bn": s["conv2"]["bn"]},
+                }
+            )
+    return {"layers": layers, "fc": copy_mvm(fresh["fc"], src_params["fc"])}
+
+
+@dataclasses.dataclass
+class TrainResult:
+    cfg: ModelCfg
+    params: dict
+    train_acc: float
+    test_acc: float
+    losses: list
+    seconds: float
+
+
+def train(cfg: ModelCfg, steps=200, batch=32, lr=2e-3, n_train=2048, n_test=512,
+          seed=0, log_every=25, verbose=True, init_params=None):
+    (xtr, ytr), (xte, yte) = data_mod.train_test_split(
+        n_train, n_test, image=cfg.image, classes=cfg.classes, seed=seed
+    )
+    params = init_params if init_params is not None else init_model(
+        jax.random.PRNGKey(seed), cfg
+    )
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, x, y):
+        (loss, (_, new_params)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y, cfg
+        )
+        # zero out grads of BN running stats; carry their updated values
+        def scrub(path, g):
+            return jnp.zeros_like(g) if any(k in str(path) for k in _TRAINABLE_EXCLUDE) else g
+
+        grads = jax.tree_util.tree_map_with_path(
+            lambda p, g: scrub(p, g), grads
+        )
+        new_train, new_opt = adam_update(params, grads, opt, lr)
+        # splice the BN running stats from the forward pass
+        def take_bn(path, trained, forward):
+            return forward if any(k in str(path) for k in _TRAINABLE_EXCLUDE) else trained
+
+        merged = jax.tree_util.tree_map_with_path(
+            lambda p, a, b: take_bn(p, a, b), new_train, new_params
+        )
+        return merged, new_opt, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+        losses.append(float(loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"  step {step:4d}  loss {float(loss):.4f}", flush=True)
+    seconds = time.time() - t0
+    tr_acc = accuracy(params, jnp.asarray(xtr[:512]), ytr[:512], cfg)
+    te_acc = accuracy(params, jnp.asarray(xte), yte, cfg)
+    if verbose:
+        print(f"  [{cfg.name}/{cfg.quant.mode}] train {tr_acc:.3f} test {te_acc:.3f} "
+              f"({seconds:.1f}s)", flush=True)
+    return TrainResult(cfg, params, tr_acc, te_acc, losses, seconds)
+
+
+# ---------------------------------------------------------------------------
+# sweeps (Table 2, Fig 2(b), Fig 2(d))
+# ---------------------------------------------------------------------------
+
+
+def accuracy_sweep(preset="resnet20-slim", steps=250, out=None, seed=0,
+                   xbar_sizes=(128, 64), quick=False):
+    """Reproduce the *shape* of Table 2 + Fig 2(b,d) on the synthetic set.
+
+    Like the paper (and the PSQ work it builds on), quantized variants are
+    *fine-tuned from a full-precision checkpoint* rather than trained from
+    scratch — pretrain once per crossbar size, then fine-tune each
+    precision from it.
+    """
+    base = model_presets()[preset]
+    if quick:
+        steps = 40
+    ft_steps = max(int(steps * 1.5), 30)
+    results = {"preset": preset, "steps": steps, "rows": []}
+
+    modes = ["adc7", "adc6", "adc4", "2bit", "ternary", "binary"]
+    pretrained = {}
+    for xbar in xbar_sizes:
+        fp_cfg = dataclasses.replace(
+            base, quant=dataclasses.replace(base.quant, mode="fp", xbar_rows=xbar)
+        )
+        fp = train(fp_cfg, steps=steps, seed=seed, verbose=False)
+        pretrained[xbar] = fp
+        results["rows"].append(
+            {"model": preset, "xbar": xbar, "adc_bits": "fp", "mode": "fp",
+             "test_acc": fp.test_acc}
+        )
+        print(f"  xbar={xbar} fp pretrain: acc={fp.test_acc:.3f}", flush=True)
+        for mode in modes:
+            if mode == "adc7" and xbar == 64:
+                continue  # the paper's Table 2 leaves 7-bit blank at 64×64
+            cfg = dataclasses.replace(
+                base,
+                quant=dataclasses.replace(base.quant, mode=mode, xbar_rows=xbar),
+            )
+            p0 = transfer_params(fp.params, cfg, seed)
+            if cfg.quant.is_psq:
+                (cx, _), _ = data_mod.train_test_split(
+                    64, 1, image=cfg.image, classes=cfg.classes, seed=seed)
+                p0 = calibrate_model(p0, jnp.asarray(cx), cfg)
+            r = train(cfg, steps=ft_steps, seed=seed, verbose=False,
+                      init_params=p0, lr=5e-4)
+            label = {"adc7": "7", "adc6": "6", "adc4": "4",
+                     "2bit": "2 (no SF)", "ternary": "1.5", "binary": "1"}[mode]
+            results["rows"].append(
+                {"model": preset, "xbar": xbar, "adc_bits": label,
+                 "mode": mode, "test_acc": r.test_acc}
+            )
+            print(f"  xbar={xbar} mode={mode}: acc={r.test_acc:.3f}", flush=True)
+            if out:  # incremental write: a crash never loses finished rows
+                pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
+                pathlib.Path(out).write_text(json.dumps(results, indent=1))
+
+    # Fig 2(d): scale-factor sharing sweep (ternary, 128×128)
+    for share in (1, 4, 16, 64):
+        cfg = dataclasses.replace(
+            base,
+            quant=dataclasses.replace(base.quant, mode="ternary", sf_share=share),
+        )
+        p0 = transfer_params(pretrained[xbar_sizes[0]].params, cfg, seed)
+        (cx, _), _ = data_mod.train_test_split(
+            64, 1, image=cfg.image, classes=cfg.classes, seed=seed)
+        p0 = calibrate_model(p0, jnp.asarray(cx), cfg)
+        r = train(cfg, steps=ft_steps, seed=seed, verbose=False,
+                  init_params=p0, lr=5e-4)
+        results["rows"].append(
+            {"model": preset, "xbar": 128, "adc_bits": "1.5",
+             "mode": f"ternary/sf_share={share}", "sf_share": share,
+             "test_acc": r.test_acc}
+        )
+        print(f"  sf_share={share}: acc={r.test_acc:.3f}", flush=True)
+        if out:
+            pathlib.Path(out).write_text(json.dumps(results, indent=1))
+
+    if out:
+        pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(out).write_text(json.dumps(results, indent=1))
+        print(f"wrote {out}")
+    return results
+
+
+def save_checkpoint(result: TrainResult, path):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump({"cfg": result.cfg, "params": result.params,
+                     "test_acc": result.test_acc}, f)
+    print(f"wrote {path} (test acc {result.test_acc:.3f})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--mode", default="ternary")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--accuracy-sweep", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.accuracy_sweep:
+        accuracy_sweep(
+            preset=args.preset if args.preset != "tiny" else "resnet20-slim",
+            steps=args.steps,
+            out=args.out,
+            seed=args.seed,
+            quick=args.quick,
+        )
+        return
+
+    cfg = model_presets()[args.preset]
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, mode=args.mode))
+    r = train(cfg, steps=args.steps, batch=args.batch, seed=args.seed)
+    if args.checkpoint:
+        save_checkpoint(r, args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""L2 model tests: shapes, modes, calibration, and a training smoke test."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+from compile.model import (
+    ModelCfg,
+    QuantSpec,
+    apply_model,
+    calibrate_model,
+    im2col,
+    init_model,
+    model_presets,
+    model_structure,
+    mvm_forward,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return model_presets()["tiny"]
+
+
+@pytest.fixture(scope="module")
+def batch(tiny_cfg):
+    (x, y), _ = data_mod.train_test_split(16, 4, image=tiny_cfg.image)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_im2col_shapes():
+    x = jnp.zeros((2, 8, 8, 3))
+    patches, (oh, ow) = im2col(x, 3, 1, 1)
+    assert patches.shape == (2, 64, 27)
+    assert (oh, ow) == (8, 8)
+    patches, (oh, ow) = im2col(x, 3, 2, 1)
+    assert (oh, ow) == (4, 4)
+
+
+@pytest.mark.parametrize("mode", ["fp", "adc7", "adc4", "binary", "ternary", "2bit"])
+def test_forward_shapes_all_modes(tiny_cfg, batch, mode):
+    cfg = dataclasses.replace(
+        tiny_cfg, quant=dataclasses.replace(tiny_cfg.quant, mode=mode)
+    )
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    x, _ = batch
+    logits, new_params = apply_model(params, x, cfg, train=True)
+    assert logits.shape == (x.shape[0], cfg.classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_structure_matches_params(tiny_cfg):
+    plan, feat = model_structure(tiny_cfg)
+    params = init_model(jax.random.PRNGKey(0), tiny_cfg)
+    assert len(plan) == len(params["layers"])
+    assert params["fc"]["w"].shape == (feat, tiny_cfg.classes)
+
+
+def test_eq2_scale_factor_shapes(tiny_cfg):
+    """#SF per layer = groups × x_bits × (cols·w_bits / share) — Eq. 2."""
+    spec = tiny_cfg.quant
+    params = init_model(jax.random.PRNGKey(0), tiny_cfg)
+    mvm = params["layers"][0]["mvm"]
+    r, c = mvm["w"].shape
+    groups = max(1, -(-r // spec.xbar_rows))
+    assert mvm["scales"].shape == (groups, spec.x_bits, c * spec.w_bits)
+
+
+def test_sf_share_reduces_scale_count(tiny_cfg):
+    spec = dataclasses.replace(tiny_cfg.quant, sf_share=4)
+    cfg = dataclasses.replace(tiny_cfg, quant=spec)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    mvm = params["layers"][0]["mvm"]
+    c = mvm["w"].shape[1]
+    assert mvm["scales"].shape[2] == (c * spec.w_bits) // 4
+    # forward still works
+    (x, _), _ = data_mod.train_test_split(4, 1, image=cfg.image)
+    logits, _ = apply_model(params, jnp.asarray(x), cfg, train=False)
+    assert logits.shape[1] == cfg.classes
+
+
+def test_calibration_improves_psq_correlation(tiny_cfg, batch):
+    cfg = dataclasses.replace(
+        tiny_cfg, quant=dataclasses.replace(tiny_cfg.quant, mode="ternary")
+    )
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    x, _ = batch
+    patches, _ = im2col(x, 3, 1, 1)
+    b, np_, r = patches.shape
+    x2d = patches.reshape(b * np_, r)
+
+    def corr(p):
+        mvm = p["layers"][0]["mvm"]
+        psq = np.asarray(mvm_forward(mvm, x2d, cfg.quant, False)).ravel()
+        fp = np.asarray(
+            mvm_forward(mvm, x2d, dataclasses.replace(cfg.quant, mode="fp"), False)
+        ).ravel()
+        return np.corrcoef(psq, fp)[0, 1]
+
+    calibrated = calibrate_model(params, x, cfg)
+    assert corr(calibrated) > 0.3, "calibrated PSQ must track the ideal matmul"
+
+
+def test_train_smoke_improves_over_random():
+    from compile.train import train
+
+    cfg = model_presets()["tiny"]
+    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant, mode="fp"))
+    r = train(cfg, steps=150, batch=16, lr=1e-2, n_train=256, n_test=128,
+              verbose=False)
+    assert r.test_acc > 0.2, f"fp training should beat chance, got {r.test_acc}"
+
+
+def test_transfer_params_reshapes_quant_state():
+    from compile.train import transfer_params
+
+    base = model_presets()["tiny"]
+    fp_cfg = dataclasses.replace(base, quant=dataclasses.replace(base.quant, mode="fp"))
+    src = init_model(jax.random.PRNGKey(0), fp_cfg)
+    tern_cfg = dataclasses.replace(
+        base, quant=dataclasses.replace(base.quant, mode="ternary", sf_share=4)
+    )
+    dst = transfer_params(src, tern_cfg)
+    # weights copied, scales re-shaped for the new share factor
+    np.testing.assert_array_equal(
+        np.asarray(dst["fc"]["w"]), np.asarray(src["fc"]["w"])
+    )
+    c = dst["layers"][0]["mvm"]["w"].shape[1]
+    assert dst["layers"][0]["mvm"]["scales"].shape[2] == c * 4 // 4
+
+
+def test_dataset_determinism_and_balance():
+    x1, y1 = data_mod.make_dataset(128, image=8, seed=3)
+    x2, y2 = data_mod.make_dataset(128, image=8, seed=3)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+    assert len(np.unique(y1)) == 10

@@ -1,0 +1,105 @@
+"""Quantizer unit/property tests (L2 building blocks)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.psq.quant import (
+    adc_quantize,
+    lsq_codes,
+    lsq_init_step,
+    lsq_quantize,
+    psq_binary,
+    psq_ternary,
+    round_ste,
+)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.floats(-100, 100))
+def test_round_ste_forward(x):
+    assert float(round_ste(jnp.asarray(x))) == float(np.round(x))
+
+
+def test_round_ste_gradient_is_identity():
+    g = jax.grad(lambda x: round_ste(x) * 3.0)(1.234)
+    assert abs(float(g) - 3.0) < 1e-6
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    step=st.floats(0.01, 2.0),
+    x=st.floats(-20, 20),
+    signed=st.booleans(),
+)
+def test_lsq_quantize_error_bound(bits, step, x, signed):
+    q = float(lsq_quantize(jnp.asarray(x), jnp.asarray(step), bits, signed=signed))
+    qmin = -(2 ** (bits - 1)) if signed else 0
+    qmax = (2 ** (bits - 1) - 1) if signed else (2**bits - 1)
+    lo, hi = qmin * step, qmax * step
+    tol = 1e-5 * max(1.0, abs(lo), abs(hi))  # f32 forward vs f64 oracle
+    if lo + step / 2 <= x <= hi - step / 2:
+        assert abs(q - x) <= step / 2 + tol
+    assert lo - tol <= q <= hi + tol
+
+
+def test_lsq_codes_integer_range():
+    x = jnp.linspace(-5, 5, 101)
+    codes = lsq_codes(x, 0.5, 4, signed=True)
+    assert int(codes.min()) >= -8 and int(codes.max()) <= 7
+    assert codes.dtype == jnp.int32
+
+
+def test_lsq_step_gets_gradient():
+    def f(step):
+        return jnp.sum(lsq_quantize(jnp.asarray([0.3, -1.2, 2.0]), step, 4))
+
+    g = float(jax.grad(f)(jnp.asarray(0.25)))
+    assert g != 0.0
+
+
+def test_psq_binary_values_and_grad():
+    z = jnp.asarray([-3.0, -0.0, 0.0, 5.0])
+    p = psq_binary(z)
+    np.testing.assert_array_equal(np.asarray(p), [-1.0, 1.0, 1.0, 1.0])
+    g = jax.grad(lambda v: jnp.sum(psq_binary(v) * 2.0))(z)
+    assert np.all(np.asarray(g) == 2.0)  # straight-through
+
+
+def test_psq_ternary_eq1():
+    a = 2.0
+    z = jnp.asarray([-5.0, -2.0, -1.9, 0.0, 1.9, 2.0, 5.0])
+    p = np.asarray(psq_ternary(z, a))
+    np.testing.assert_array_equal(p, [-1, -1, 0, 0, 0, 1, 1])
+
+
+def test_psq_ternary_alpha_gradient_exists():
+    g = jax.grad(lambda a: jnp.sum(psq_ternary(jnp.asarray([0.5, 3.0, -1.0]), a)))(2.0)
+    assert np.isfinite(float(g))
+
+
+@settings(deadline=None, max_examples=30)
+@given(bits=st.sampled_from([2, 4, 7]), fs=st.floats(1.0, 100.0),
+       x=st.floats(-150.0, 150.0))
+def test_adc_quantize_bounds(bits, fs, x):
+    q = float(adc_quantize(jnp.asarray(x), bits, fs))
+    assert -fs - 1e-4 <= q <= fs + 1e-4
+    if -fs <= x <= fs:
+        step = 2 * fs / (2**bits - 1)
+        assert abs(q - x) <= step / 2 + 1e-4
+
+
+def test_adc_more_bits_less_error():
+    xs = jnp.linspace(-10, 10, 201)
+    errs = []
+    for bits in (2, 4, 7):
+        q = adc_quantize(xs, bits, 10.0)
+        errs.append(float(jnp.abs(q - xs).max()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_lsq_init_step_positive():
+    assert float(lsq_init_step(jnp.asarray([0.1, -0.5]), 4)) > 0
+    assert float(lsq_init_step(jnp.zeros(4), 8)) > 0

@@ -1,0 +1,109 @@
+//! Hot-path microbenchmarks (the §Perf targets of EXPERIMENTS.md):
+//! gate-level DCiM word-ops, crossbar evaluation, full-model simulation,
+//! batcher throughput, and the infra substrates.
+//!
+//! `HCIM_BENCH_FAST=1 cargo bench --bench hotpath` for a quick pass.
+
+use hcim::config::hardware::HcimConfig;
+use hcim::model::zoo;
+use hcim::quant::encode::encode_all;
+use hcim::sim::dcim::array::DcimArray;
+use hcim::sim::energy::CostLedger;
+use hcim::sim::params::CalibParams;
+use hcim::sim::simulator::{Arch, Simulator};
+use hcim::sim::tech::TechNode;
+use hcim::sim::tile::dcim_geometry;
+use hcim::util::bench::{black_box, Bencher};
+use hcim::util::json::Json;
+use hcim::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let params = CalibParams::at_65nm();
+
+    // ---- L3 core: gate-level DCiM word-op (128 columns) ----
+    let cfg = HcimConfig::config_a();
+    let mut arr = DcimArray::new(dcim_geometry(&cfg));
+    let mut rng = Rng::new(1);
+    for j in 0..4 {
+        let scales: Vec<i64> = (0..128).map(|_| rng.range_i64(-8, 7)).collect();
+        arr.load_scales(j, &scales);
+    }
+    arr.clear_ps();
+    let codes: Vec<Vec<_>> = (0..16)
+        .map(|_| {
+            encode_all(
+                &(0..128)
+                    .map(|_| *rng.choose(&[-1i8, 0, 1]))
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let mut ledger = CostLedger::new();
+    let mut i = 0;
+    b.bench("dcim word-op (128 cols, gate-level)", || {
+        arr.accumulate(i % 4, &codes[i % 16], &params, &mut ledger);
+        i += 1;
+    });
+
+    // ---- L3 crossbar functional eval ----
+    let w = hcim::quant::bits::Mat::from_fn(128, 32, |r, c| ((r + c) as i64 % 15) - 7);
+    let xbar = hcim::sim::components::crossbar::Crossbar::program(&w, 4);
+    let x: Vec<i64> = (0..128).map(|i| i % 16).collect();
+    b.bench("crossbar stream eval (128x128)", || {
+        black_box(xbar.evaluate_stream_pure(&x, 2));
+    });
+
+    // ---- full-model cycle-accurate simulation ----
+    let sim = Simulator::new(TechNode::N32);
+    let g = zoo::resnet20();
+    b.bench("simulate resnet20 (HCiM, config A)", || {
+        black_box(sim.run(&g, &Arch::Hcim(cfg.clone())));
+    });
+    let g18 = zoo::resnet18();
+    b.bench("simulate resnet18 (HCiM, imagenet cfg)", || {
+        black_box(sim.run(&g18, &Arch::Hcim(HcimConfig::imagenet())));
+    });
+
+    // ---- coordinator: batcher throughput ----
+    b.bench("batcher submit+drain (64 reqs)", || {
+        let batcher = hcim::coordinator::batcher::Batcher::new(
+            8,
+            std::time::Duration::from_micros(1),
+        );
+        for i in 0..64 {
+            batcher.submit(hcim::coordinator::batcher::Request {
+                id: i,
+                image: vec![0.0; 16],
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        batcher.close();
+        while let Some(batch) = batcher.next_batch() {
+            black_box(batch.len());
+        }
+    });
+
+    // ---- infra substrates ----
+    let json_src = r#"{"resnet20": {"layers": [0.5, 0.6, 0.55, 0.4, 0.62]}}"#;
+    b.bench("json parse (sparsity table)", || {
+        black_box(Json::parse(json_src).unwrap());
+    });
+    let mut prng = Rng::new(2);
+    b.bench("prng next_u64", || {
+        black_box(prng.next_u64());
+    });
+
+    println!("{}", b.report());
+
+    // derived §Perf metric: simulated DCiM column-ops per second
+    let dcim = b
+        .results()
+        .iter()
+        .find(|r| r.name.starts_with("dcim"))
+        .unwrap();
+    println!(
+        "derived: {:.1} M simulated DCiM column-ops/s",
+        dcim.throughput_per_s * 128.0 / 1e6
+    );
+}

@@ -1,0 +1,55 @@
+//! `cargo bench` target regenerating every paper table/figure (DESIGN.md
+//! experiment index T1–F7) with wall-clock timing per experiment.
+//!
+//! Not absolute-number matching (our substrate is a calibrated simulator,
+//! not the authors' 65 nm testbed) — the *shape* assertions live in the
+//! unit/integration tests; this harness produces the artifacts for
+//! EXPERIMENTS.md.
+
+use std::path::Path;
+use std::time::Instant;
+
+use hcim::config::hardware::HcimConfig;
+use hcim::experiments;
+
+fn timed<F: FnOnce() -> String>(label: &str, f: F) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("{out}");
+    println!("[bench] {label}: {:.1} ms\n", dt.as_secs_f64() * 1e3);
+}
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let sim = experiments::system_simulator(dir);
+
+    timed("table1", || experiments::table1().render());
+    timed("table2", || {
+        experiments::table2(dir)
+            .map(|t| t.render())
+            .unwrap_or_else(|| "(table2: run `make accuracy` first)".into())
+    });
+    timed("fig2d", || {
+        experiments::fig2d(dir)
+            .map(|t| t.render())
+            .unwrap_or_else(|| "(fig2d: run `make accuracy` first)".into())
+    });
+    timed("table3", || experiments::table3().render());
+    timed("fig1", || experiments::fig1(&sim).table.render());
+    timed("fig2c", || experiments::fig2c(&sim).render());
+    timed("fig5a", || experiments::fig5a().render());
+    timed("fig5b", || experiments::fig5b(&sim).1.render());
+    timed("fig6 (config A)", || {
+        experiments::fig67_table(&sim, &HcimConfig::config_a(), "Fig 6 (config A)").render()
+    });
+    timed("fig7 (config B)", || {
+        experiments::fig67_table(&sim, &HcimConfig::config_b(), "Fig 7 (config B)").render()
+    });
+    timed("ablation: peripheral sharing", || {
+        experiments::ablation_phase_sharing().render()
+    });
+    timed("ablation: ADC precision sweep", || {
+        experiments::ablation_adc_precision_sweep(&sim).render()
+    });
+}

@@ -1,0 +1,101 @@
+//! BitSplitNet baseline (Kim et al., DAC'20).
+//!
+//! BitSplitNet trains each input/weight bit as an *independent* binary
+//! network path with minimal periphery (a 1-bit sense amplifier per
+//! column, no ADC) and merges the paths digitally at the end. It avoids
+//! trainable fine-grained scale factors — which costs accuracy (paper:
+//! HCiM is +4.2 % on ResNet-18) — and its multi-bit cost scales linearly
+//! with bit width: "energy and area for ResNet-18 with 4-bit inputs and
+//! weights are obtained by scaling 1-bit energy and area by 4" (§5.3).
+
+use crate::config::hardware::HcimConfig;
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+use crate::sim::tile::MvmStats;
+
+/// Cost of ONE logical crossbar MVM on BitSplitNet: `w_bits` independent
+/// 1-bit paths, each a crossbar pass + sense-amp bank + digital merge.
+pub fn bitsplit_mvm_cost(cfg: &HcimConfig, params: &CalibParams, stats: &MvmStats) -> CostLedger {
+    let mut l = CostLedger::new();
+    let cols = cfg.xbar.cols as f64;
+    let rows = cfg.xbar.rows as f64 * stats.row_utilization;
+    let paths = cfg.w_bits as f64; // the paper's ×4 scaling rule
+    let streams = cfg.x_bits as f64;
+
+    // each path streams the input bits over its own crossbar
+    l.add_energy_n(
+        Component::InputDriver,
+        params.driver_row_pj * rows * stats.input_density * streams * paths,
+        (rows * stats.input_density * streams * paths) as u64,
+    );
+    l.add_energy_n(
+        Component::Crossbar,
+        params.xbar_col_pj * cols * streams * paths,
+        (cols * streams * paths) as u64,
+    );
+
+    // 1-bit sense amp per column (electrically a latch comparator)
+    let sa = cols * streams * paths;
+    l.add_energy_n(Component::Comparator, params.comparator_pj * sa, sa as u64);
+
+    // digital path merge (adds across bits and streams)
+    l.add_energy_n(Component::ShiftAdd, params.shiftadd_pj * sa, sa as u64);
+    l.add_energy_n(Component::Register, params.register_pj * cols * paths, (cols * paths) as u64);
+
+    // paths run in parallel; within a path streams pipeline at the
+    // crossbar cadence (sense amps are fast)
+    l.add_latency(streams * params.xbar_cycle_ns + params.comparator_ns);
+    l
+}
+
+/// Tile area: `w_bits` replicated 1-bit paths.
+pub fn bitsplit_tile_area(cfg: &HcimConfig, params: &CalibParams) -> f64 {
+    let xbar = cfg.xbar.cells() as f64 * params.xbar_cell_area_mm2;
+    let sa = cfg.xbar.cols as f64 * params.comparator_area_mm2;
+    cfg.w_bits as f64 * (xbar + params.driver_area_mm2 + sa + params.shiftadd_area_mm2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tile::{hcim_mvm_cost, hcim_tile_area};
+
+    #[test]
+    fn cost_scales_linearly_with_bits() {
+        let params = CalibParams::at_65nm();
+        let stats = MvmStats::default();
+        let mut c1 = HcimConfig::imagenet();
+        c1.w_bits = 1;
+        let mut c4 = HcimConfig::imagenet();
+        c4.w_bits = 4;
+        let e1 = bitsplit_mvm_cost(&c1, &params, &stats).total_energy_pj();
+        let e4 = bitsplit_mvm_cost(&c4, &params, &stats).total_energy_pj();
+        assert!((e4 / e1 - 4.0).abs() < 0.01, "paper's ×4 rule, got {}", e4 / e1);
+        assert!(
+            (bitsplit_tile_area(&c4, &params) / bitsplit_tile_area(&c1, &params) - 4.0).abs()
+                < 0.01
+        );
+    }
+
+    #[test]
+    fn bitsplit_is_fast_but_area_hungry() {
+        let cfg = HcimConfig::imagenet();
+        let params = CalibParams::at_65nm();
+        let stats = MvmStats::default();
+        let b = bitsplit_mvm_cost(&cfg, &params, &stats);
+        let h = hcim_mvm_cost(&cfg, &params, &stats);
+        // parallel sense amps → lower raw latency than HCiM
+        assert!(b.latency_ns < h.latency_ns);
+        // but replicated paths blow up area (EDAP loses: Fig 5(b) 4.2×)
+        assert!(bitsplit_tile_area(&cfg, &params) > hcim_tile_area(&cfg, &params));
+    }
+
+    #[test]
+    fn no_adc_energy() {
+        let cfg = HcimConfig::imagenet();
+        let params = CalibParams::at_65nm();
+        let b = bitsplit_mvm_cost(&cfg, &params, &MvmStats::default());
+        assert_eq!(b.energy(Component::Adc), 0.0);
+        assert!(b.energy(Component::Comparator) > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline accelerators (S12): the comparison points of §5.3.
+//!
+//! * [`adc`] — conventional analog CiM with an N-bit ADC per crossbar
+//!   (assembled from `sim::tile::baseline_mvm_cost`),
+//! * [`quarry`] — Quarry (Azamat et al., ICCAD'21): low-precision ADC plus
+//!   *digital multipliers* for the scale-factor path (the paper estimates
+//!   its 1-bit ADC as 1/16 of the 4-bit flash and takes multiplier energy
+//!   from PUMA),
+//! * [`bitsplit`] — BitSplitNet (Kim et al., DAC'20): fully independent
+//!   per-bit paths with 1-bit sense-amp periphery; multi-bit cost scales
+//!   linearly in the bit width (the paper's own scaling rule).
+
+pub mod quarry;
+pub mod bitsplit;
+
+pub use quarry::{quarry_mvm_cost, quarry_tile_area};
+pub use bitsplit::{bitsplit_mvm_cost, bitsplit_tile_area};

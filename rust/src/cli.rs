@@ -1,0 +1,127 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `hcim <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> crate::Result<Args> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "empty flag name");
+                // `--key=value` or `--key value` or boolean switch
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> crate::Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+hcim — ADC-Less Hybrid Analog-Digital CiM accelerator (paper reproduction)
+
+USAGE:
+  hcim <command> [options]
+
+COMMANDS:
+  simulate    run the cycle-accurate simulator on a model
+                --model resnet20|resnet32|resnet44|wrn20|vgg9|vgg11|resnet18
+                --config A|B   --arch hcim|binary|adc7|adc6|adc4|quarry1|quarry4|bitsplit
+                --node 65nm|32nm   [--sparsity artifacts/sparsity.json]
+  serve       batched inference over the AOT artifacts
+                --artifacts DIR  --requests N  --max-batch N  --workers N
+  tables      print every paper table/figure reproduction
+                --artifacts DIR
+  info        show a model's crossbar mapping (Eq. 2 bookkeeping)
+                --model NAME --config A|B
+  help        this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(&["simulate", "--model", "resnet20", "--quiet", "--config=B", "extra"]);
+        assert_eq!(a.subcommand, "simulate");
+        assert_eq!(a.flag("model"), Some("resnet20"));
+        assert_eq!(a.flag("config"), Some("B"));
+        assert!(a.has("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors_with_defaults() {
+        let a = parse(&["serve", "--requests", "64", "--rate", "1.5"]);
+        assert_eq!(a.usize_or("requests", 1), 64);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!((a.f64_or("rate", 0.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_subcommand_ok() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, "");
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Typed accelerator configurations.
+//!
+//! [`HcimConfig`] describes one HCiM macro (analog crossbar + comparators +
+//! DCiM array) — Table 1's configurations A and B are constructors.
+//! [`BaselineKind`] enumerates the comparison points of §5.3.
+
+use crate::quant::psq::PsqMode;
+use crate::sim::params::{scaled_adc, AdcSpec, ADC_FLASH4, ADC_SAR6, ADC_SAR7};
+use crate::sim::tech::TechNode;
+
+use super::parser::Config;
+
+/// Analog crossbar geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrossbarDims {
+    /// Wordlines (input rows).
+    pub rows: usize,
+    /// Bitlines (physical bit-slice columns).
+    pub cols: usize,
+}
+
+impl CrossbarDims {
+    pub fn cells(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// One HCiM macro configuration (paper Table 1).
+#[derive(Clone, Debug)]
+pub struct HcimConfig {
+    /// Human label ("A", "B", …).
+    pub name: String,
+    pub xbar: CrossbarDims,
+    /// PSQ mode (binary or ternary; ternary enables sparsity gating).
+    pub mode: PsqMode,
+    /// Weight precision (bit-slice = 1 ⇒ physical columns per logical).
+    pub w_bits: u32,
+    /// Activation precision (bit-stream = 1 ⇒ streams per MVM; Eq. 2).
+    pub x_bits: u32,
+    /// Scale-factor precision after QAT (§4.1).
+    pub sf_bits: u32,
+    /// Partial-sum register width.
+    pub ps_bits: u32,
+    /// Technology node the system is evaluated at (32 nm, like PUMA).
+    pub node: TechNode,
+}
+
+impl HcimConfig {
+    /// Table 1 configuration A: 128×128 crossbar, 4-bit w/a (CIFAR).
+    pub fn config_a() -> HcimConfig {
+        HcimConfig {
+            name: "A".into(),
+            xbar: CrossbarDims { rows: 128, cols: 128 },
+            mode: PsqMode::Ternary { alpha: 4.0 },
+            w_bits: 4,
+            x_bits: 4,
+            sf_bits: 4,
+            ps_bits: 8,
+            node: TechNode::N32,
+        }
+    }
+
+    /// Table 1 configuration B: 64×64 crossbar, 4-bit w/a (CIFAR).
+    pub fn config_b() -> HcimConfig {
+        HcimConfig {
+            xbar: CrossbarDims { rows: 64, cols: 64 },
+            name: "B".into(),
+            ..HcimConfig::config_a()
+        }
+    }
+
+    /// ImageNet variant (§5.1): 3-bit w/a, 8-bit SFs, 16-bit PS.
+    pub fn imagenet() -> HcimConfig {
+        HcimConfig {
+            name: "ImageNet".into(),
+            w_bits: 3,
+            x_bits: 3,
+            sf_bits: 8,
+            ps_bits: 16,
+            ..HcimConfig::config_a()
+        }
+    }
+
+    /// Binary-PSQ variant of this config.
+    pub fn binary(mut self) -> HcimConfig {
+        self.mode = PsqMode::Binary;
+        self
+    }
+
+    /// Ternary-PSQ variant.
+    pub fn ternary(mut self, alpha: f64) -> HcimConfig {
+        self.mode = PsqMode::Ternary { alpha };
+        self
+    }
+
+    /// #scale factors per crossbar (Eq. 2, bit-stream = 1).
+    pub fn scale_factors_per_xbar(&self) -> usize {
+        self.x_bits as usize * self.xbar.cols
+    }
+
+    /// #partial sums per crossbar.
+    pub fn partial_sums_per_xbar(&self) -> usize {
+        self.xbar.cols
+    }
+
+    /// DCiM array rows: SF words (x_bits × sf_bits) stacked over the PS
+    /// word (ps_bits), bits vertical — Table 1: 24 for both configs.
+    pub fn dcim_rows(&self) -> usize {
+        (self.x_bits * self.sf_bits + self.ps_bits) as usize
+    }
+
+    /// DCiM array columns (one per crossbar column).
+    pub fn dcim_cols(&self) -> usize {
+        self.xbar.cols
+    }
+
+    /// Comparators per crossbar (1 per column binary, 2 ternary).
+    pub fn comparators_per_xbar(&self) -> usize {
+        self.mode.comparators() * self.xbar.cols
+    }
+
+    /// Parse overrides from a TOML config (falling back to config A).
+    pub fn from_config(cfg: &Config) -> crate::Result<HcimConfig> {
+        let base = match cfg.str_or("hardware.config", "A") {
+            "A" | "a" => HcimConfig::config_a(),
+            "B" | "b" => HcimConfig::config_b(),
+            "imagenet" => HcimConfig::imagenet(),
+            other => anyhow::bail!("unknown hardware.config `{other}`"),
+        };
+        let rows = cfg.i64_or("hardware.rows", base.xbar.rows as i64) as usize;
+        let cols = cfg.i64_or("hardware.cols", base.xbar.cols as i64) as usize;
+        let mode = match cfg.str_or("hardware.psq", "ternary") {
+            "binary" => PsqMode::Binary,
+            "ternary" => PsqMode::Ternary {
+                alpha: cfg.f64_or("hardware.alpha", 4.0),
+            },
+            other => anyhow::bail!("unknown hardware.psq `{other}`"),
+        };
+        let node = TechNode::by_name(cfg.str_or("hardware.node", "32nm"))
+            .ok_or_else(|| anyhow::anyhow!("unknown hardware.node"))?;
+        Ok(HcimConfig {
+            xbar: CrossbarDims { rows, cols },
+            mode,
+            w_bits: cfg.i64_or("hardware.w_bits", base.w_bits as i64) as u32,
+            x_bits: cfg.i64_or("hardware.x_bits", base.x_bits as i64) as u32,
+            sf_bits: cfg.i64_or("hardware.sf_bits", base.sf_bits as i64) as u32,
+            ps_bits: cfg.i64_or("hardware.ps_bits", base.ps_bits as i64) as u32,
+            node,
+            ..base
+        })
+    }
+}
+
+/// Baseline accelerators compared against in §5.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Analog CiM + 7-bit area-optimised SAR (1 ADC per crossbar).
+    AdcSar7,
+    /// Analog CiM + 6-bit energy-efficient SAR.
+    AdcSar6,
+    /// Analog CiM + 4-bit latency-efficient Flash.
+    AdcFlash4,
+    /// Quarry (ICCAD'21) with a 1-bit ADC + digital multipliers.
+    Quarry1,
+    /// Quarry with a 4-bit ADC + digital multipliers.
+    Quarry4,
+    /// BitSplitNet (DAC'20): independent per-bit paths, 1-bit periphery.
+    BitSplitNet,
+}
+
+impl BaselineKind {
+    pub const ADC_BASELINES: [BaselineKind; 3] =
+        [BaselineKind::AdcSar7, BaselineKind::AdcSar6, BaselineKind::AdcFlash4];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BaselineKind::AdcSar7 => "ADC-7b (SAR)",
+            BaselineKind::AdcSar6 => "ADC-6b (SAR)",
+            BaselineKind::AdcFlash4 => "ADC-4b (Flash)",
+            BaselineKind::Quarry1 => "Quarry (1-bit)",
+            BaselineKind::Quarry4 => "Quarry (4-bit)",
+            BaselineKind::BitSplitNet => "BitSplitNet",
+        }
+    }
+
+    /// The ADC spec (65 nm) used by this baseline.
+    pub fn adc(self) -> AdcSpec {
+        match self {
+            BaselineKind::AdcSar7 => ADC_SAR7,
+            BaselineKind::AdcSar6 => ADC_SAR6,
+            BaselineKind::AdcFlash4 => ADC_FLASH4,
+            // Paper §5.3: Quarry's 1-bit ADC estimated as 1/16 of 4-bit flash.
+            BaselineKind::Quarry1 => scaled_adc(ADC_FLASH4, 1),
+            BaselineKind::Quarry4 => ADC_FLASH4,
+            BaselineKind::BitSplitNet => scaled_adc(ADC_FLASH4, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_config_a() {
+        let a = HcimConfig::config_a();
+        assert_eq!(a.xbar.rows, 128);
+        assert_eq!(a.scale_factors_per_xbar(), 4 * 128);
+        assert_eq!(a.partial_sums_per_xbar(), 128);
+        assert_eq!(a.dcim_rows(), 24);
+        assert_eq!(a.dcim_cols(), 128);
+    }
+
+    #[test]
+    fn table1_config_b() {
+        let b = HcimConfig::config_b();
+        assert_eq!(b.xbar.cols, 64);
+        assert_eq!(b.scale_factors_per_xbar(), 4 * 64);
+        assert_eq!(b.dcim_rows(), 24);
+        assert_eq!(b.dcim_cols(), 64);
+    }
+
+    #[test]
+    fn imagenet_dcim_rows() {
+        // 3 SF words × 8 bits + 16-bit PS = 40 rows
+        let c = HcimConfig::imagenet();
+        assert_eq!(c.dcim_rows(), 40);
+    }
+
+    #[test]
+    fn comparator_counts_by_mode() {
+        let a = HcimConfig::config_a();
+        assert_eq!(a.comparators_per_xbar(), 2 * 128); // ternary default
+        assert_eq!(a.binary().comparators_per_xbar(), 128);
+    }
+
+    #[test]
+    fn from_config_overrides() {
+        let cfg = Config::parse(
+            "[hardware]\nconfig = \"B\"\npsq = \"binary\"\nw_bits = 3\nnode = \"65nm\"",
+        )
+        .unwrap();
+        let h = HcimConfig::from_config(&cfg).unwrap();
+        assert_eq!(h.xbar.cols, 64);
+        assert_eq!(h.mode, PsqMode::Binary);
+        assert_eq!(h.w_bits, 3);
+        assert_eq!(h.node, TechNode::N65);
+    }
+
+    #[test]
+    fn from_config_rejects_unknown() {
+        let cfg = Config::parse("[hardware]\nconfig = \"Z\"").unwrap();
+        assert!(HcimConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn quarry_adc_rule() {
+        // ≈1/16 of the 4-bit flash (1/15 by comparator count; paper rounds)
+        let q = BaselineKind::Quarry1.adc();
+        assert_eq!(q.bits, 1);
+        let paper = ADC_FLASH4.energy_pj / 16.0;
+        assert!((q.energy_pj - paper).abs() / paper < 0.10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system (S15).
+//!
+//! * [`parser`] — a minimal TOML-subset parser (tables, strings, numbers,
+//!   booleans, flat arrays) sufficient for the launcher's config files,
+//! * [`hardware`] — typed HCiM / baseline accelerator configurations
+//!   (Table 1 configs A & B live here),
+//! * [`workload`] — serving / sweep workload descriptions.
+
+pub mod parser;
+pub mod hardware;
+pub mod workload;

@@ -1,0 +1,268 @@
+//! Minimal TOML-subset parser for the launcher's config files.
+//!
+//! Supported grammar (sufficient for `configs/*.toml` in this repo):
+//! * `[table]` and `[table.subtable]` headers,
+//! * `key = value` with string (`"…"`), integer, float, boolean values,
+//! * flat arrays of those scalars (`[1, 2, 3]`),
+//! * `#` comments, blank lines.
+//!
+//! Keys are flattened to dotted paths (`table.sub.key`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: dotted path → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+/// Parse error with line number.
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ParseError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                prefix = name.to_string();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                let path = if prefix.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{prefix}.{key}")
+                };
+                map.insert(path, val);
+            } else {
+                return Err(err("expected `key = value` or `[table]`"));
+            }
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Config> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Config::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All keys under a dotted prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let pfx = format!("{prefix}.");
+        self.map
+            .keys()
+            .filter(|k| k.starts_with(&pfx))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_tables() {
+        let cfg = Config::parse(
+            r#"
+            name = "hcim"      # a comment
+            threads = 8
+            [hardware]
+            crossbar = 128
+            node = "32nm"
+            ternary = true
+            alpha = 1.5
+            [hardware.dcim]
+            rows = 24
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("name", ""), "hcim");
+        assert_eq!(cfg.i64_or("threads", 0), 8);
+        assert_eq!(cfg.i64_or("hardware.crossbar", 0), 128);
+        assert_eq!(cfg.str_or("hardware.node", ""), "32nm");
+        assert!(cfg.bool_or("hardware.ternary", false));
+        assert!((cfg.f64_or("hardware.alpha", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.i64_or("hardware.dcim.rows", 0), 24);
+    }
+
+    #[test]
+    fn arrays() {
+        let cfg = Config::parse("sizes = [64, 128]\nnames = [\"a\", \"b\"]").unwrap();
+        match cfg.get("sizes").unwrap() {
+            Value::Arr(v) => assert_eq!(v, &[Value::Int(64), Value::Int(128)]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.i64_or("missing", 42), 42);
+        assert_eq!(cfg.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Config::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let cfg = Config::parse("s = \"a#b\" # real comment").unwrap();
+        assert_eq!(cfg.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let cfg = Config::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys = cfg.keys_under("a");
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Serving / sweep workload descriptions.
+
+use super::parser::Config;
+
+/// Arrival process for the serving driver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate` requests/s.
+    Poisson { rate: f64 },
+    /// All requests available at t=0 (offline throughput test).
+    Burst,
+}
+
+/// A serving workload.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// Model name from the zoo (e.g. "resnet20").
+    pub model: String,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Max dynamic batch size.
+    pub max_batch: usize,
+    /// Batching window in microseconds.
+    pub batch_window_us: u64,
+    pub arrival: Arrival,
+    /// RNG seed for arrival jitter / synthetic inputs.
+    pub seed: u64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            model: "resnet20".into(),
+            requests: 256,
+            max_batch: 16,
+            batch_window_us: 2000,
+            arrival: Arrival::Burst,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Workload {
+    pub fn from_config(cfg: &Config) -> crate::Result<Workload> {
+        let d = Workload::default();
+        let arrival = match cfg.str_or("workload.arrival", "burst") {
+            "burst" => Arrival::Burst,
+            "poisson" => Arrival::Poisson {
+                rate: cfg.f64_or("workload.rate", 100.0),
+            },
+            other => anyhow::bail!("unknown workload.arrival `{other}`"),
+        };
+        Ok(Workload {
+            model: cfg.str_or("workload.model", &d.model).to_string(),
+            requests: cfg.i64_or("workload.requests", d.requests as i64) as usize,
+            max_batch: cfg.i64_or("workload.max_batch", d.max_batch as i64) as usize,
+            batch_window_us: cfg.i64_or("workload.batch_window_us", d.batch_window_us as i64)
+                as u64,
+            arrival,
+            seed: cfg.i64_or("workload.seed", d.seed as i64) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let w = Workload::default();
+        assert!(w.requests > 0 && w.max_batch > 0);
+    }
+
+    #[test]
+    fn parse_poisson() {
+        let cfg = Config::parse(
+            "[workload]\nmodel = \"vgg9\"\narrival = \"poisson\"\nrate = 500.0\nrequests = 32",
+        )
+        .unwrap();
+        let w = Workload::from_config(&cfg).unwrap();
+        assert_eq!(w.model, "vgg9");
+        assert_eq!(w.requests, 32);
+        assert_eq!(w.arrival, Arrival::Poisson { rate: 500.0 });
+    }
+
+    #[test]
+    fn bad_arrival_rejected() {
+        let cfg = Config::parse("[workload]\narrival = \"fractal\"").unwrap();
+        assert!(Workload::from_config(&cfg).is_err());
+    }
+}

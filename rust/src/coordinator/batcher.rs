@@ -1,0 +1,172 @@
+//! Dynamic batcher: collects requests into batches bounded by size and a
+//! time window (the vLLM-style continuous-batching loop, simplified to
+//! single-shot classification requests).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Flattened image (image²·3 floats).
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Thread-safe request queue with batch draining.
+pub struct Batcher {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+            max_batch,
+            window,
+        }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "batcher already closed");
+        g.queue.push_back(req);
+        self.notify.notify_one();
+    }
+
+    /// Close the queue: workers drain what's left, then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    /// Current depth (for backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Block until a batch is available. Returns a full batch as soon as
+    /// `max_batch` requests are queued, a partial batch once `window`
+    /// elapses from the first waiting request, or `None` when closed and
+    /// drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.max_batch {
+                return Some(self.drain(&mut g));
+            }
+            if !g.queue.is_empty() {
+                // wait out the rest of the window of the OLDEST request
+                let oldest = g.queue.front().unwrap().enqueued;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.window {
+                    return Some(self.drain(&mut g));
+                }
+                let (g2, timeout) = self
+                    .notify
+                    .wait_timeout(g, self.window - elapsed)
+                    .unwrap();
+                g = g2;
+                if timeout.timed_out() && !g.queue.is_empty() {
+                    return Some(self.drain(&mut g));
+                }
+                continue;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    fn drain(&self, g: &mut Inner) -> Vec<Request> {
+        let n = g.queue.len().min(self.max_batch);
+        g.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request { id, image: vec![0.0; 4], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn full_batch_returned_immediately() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.submit(req(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn window_flushes_partial_batch() {
+        let b = Batcher::new(64, Duration::from_millis(30));
+        b.submit(req(1));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(4, Duration::from_millis(5));
+        b.submit(req(1));
+        b.submit(req(2));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumer() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(10)));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    b.submit(req(t * 100 + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 8);
+            total += batch.len();
+        }
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn depth_reports_queue() {
+        let b = Batcher::new(4, Duration::from_secs(1));
+        assert_eq!(b.depth(), 0);
+        b.submit(req(1));
+        assert_eq!(b.depth(), 1);
+    }
+}

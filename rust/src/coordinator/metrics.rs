@@ -1,0 +1,140 @@
+//! Serving metrics: request latencies, batch occupancy, throughput, and
+//! the co-simulated hardware cost per inference.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Aggregated serving metrics (thread-safe).
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    requests: u64,
+    batches: u64,
+    sim_energy_pj: f64,
+    sim_latency_ns: f64,
+}
+
+/// Snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency_us: Summary,
+    pub mean_batch: f64,
+    /// Co-simulated HCiM energy per inference (µJ).
+    pub sim_energy_uj_per_inf: f64,
+    /// Co-simulated HCiM latency per inference (µs).
+    pub sim_latency_us_per_inf: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one completed batch.
+    pub fn record_batch(&self, latencies: &[Duration], sim_energy_pj: f64, sim_latency_ns: f64) {
+        let mut g = self.inner.lock().unwrap();
+        for l in latencies {
+            g.latencies_us.push(l.as_secs_f64() * 1e6);
+        }
+        g.batch_sizes.push(latencies.len() as f64);
+        g.requests += latencies.len() as u64;
+        g.batches += 1;
+        g.sim_energy_pj += sim_energy_pj;
+        g.sim_latency_ns += sim_latency_ns;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let wall = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            wall_s: wall,
+            throughput_rps: g.requests as f64 / wall.max(1e-9),
+            latency_us: Summary::of(&g.latencies_us),
+            mean_batch: if g.batches > 0 {
+                g.requests as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            sim_energy_uj_per_inf: if g.requests > 0 {
+                g.sim_energy_pj / g.requests as f64 / 1e6
+            } else {
+                0.0
+            },
+            sim_latency_us_per_inf: if g.requests > 0 {
+                g.sim_latency_ns / g.requests as f64 / 1e3
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests={} batches={} (mean batch {:.1}) wall={:.2}s throughput={:.1} req/s",
+            self.requests, self.batches, self.mean_batch, self.wall_s, self.throughput_rps
+        )?;
+        writeln!(
+            f,
+            "latency p50={:.0}µs p90={:.0}µs p99={:.0}µs max={:.0}µs",
+            self.latency_us.p50, self.latency_us.p90, self.latency_us.p99, self.latency_us.max
+        )?;
+        write!(
+            f,
+            "co-sim per inference: {:.3} µJ, {:.2} µs on HCiM",
+            self.sim_energy_uj_per_inf, self.sim_latency_us_per_inf
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(
+            &[Duration::from_micros(100), Duration::from_micros(200)],
+            2_000_000.0,
+            4_000.0,
+        );
+        m.record_batch(&[Duration::from_micros(300)], 1_000_000.0, 2_000.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 1.5).abs() < 1e-9);
+        assert!((s.sim_energy_uj_per_inf - 1.0).abs() < 1e-9);
+        assert!(s.latency_us.p50 >= 100.0 && s.latency_us.p50 <= 300.0);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.sim_energy_uj_per_inf, 0.0);
+        let _ = s.to_string();
+    }
+}

@@ -1,0 +1,14 @@
+//! Serving coordinator (S13) — the L3 request path.
+//!
+//! Thread-based (tokio is unavailable offline): clients submit requests to
+//! the [`batcher::Batcher`]; worker threads drain dynamic batches, execute
+//! them on the PJRT [`crate::runtime::Engine`], attach the cycle-accurate
+//! HCiM cost estimate from the simulator (functional result from XLA,
+//! energy/latency from the architecture model — the co-simulation split),
+//! and record [`metrics::Metrics`].
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,213 @@
+//! The serving loop: batcher → PJRT execution → co-simulated cost →
+//! metrics. Leader/worker: the leader owns the queues, worker threads own
+//! executions.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::zoo;
+use crate::runtime::Engine;
+use crate::sim::simulator::{Arch, SimReport, Simulator};
+use crate::sim::tech::TechNode;
+use crate::config::hardware::HcimConfig;
+
+use super::batcher::{Batcher, Request};
+use super::metrics::Metrics;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_window: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            workers: 2,
+        }
+    }
+}
+
+/// One completed inference.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Batched inference server over the AOT artifacts.
+pub struct Server {
+    batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    resp_rx: Receiver<Response>,
+    next_id: u64,
+    /// Per-inference co-simulation estimate for the served model.
+    pub hw_estimate: Option<SimReport>,
+}
+
+impl Server {
+    /// Start workers over a loaded engine. If the manifest's model has a
+    /// full-size counterpart in the zoo, a cycle-accurate HCiM estimate is
+    /// attached to every batch (co-simulation).
+    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
+        let batcher = Arc::new(Batcher::new(
+            cfg.max_batch.min(engine.manifest.max_batch()),
+            cfg.batch_window,
+        ));
+        let metrics = Arc::new(Metrics::new());
+        let (resp_tx, resp_rx): (Sender<Response>, Receiver<Response>) = channel();
+
+        // co-simulation: price one inference of the nearest zoo model
+        let hw_estimate = zoo_name_for(&engine.manifest.model)
+            .and_then(zoo::by_name)
+            .map(|graph| {
+                let sim = Simulator::new(TechNode::N32).with_sparsity(
+                    crate::sim::simulator::SparsityTable::load_or_default(
+                        &engine.manifest.dir.join("sparsity.json"),
+                    ),
+                );
+                let mode = if engine.manifest.mode == "binary" {
+                    HcimConfig::config_a().binary()
+                } else {
+                    HcimConfig::config_a()
+                };
+                sim.run(&graph, &Arch::Hcim(mode))
+            });
+        let per_inf = hw_estimate
+            .as_ref()
+            .map(|r| (r.energy_pj(), r.latency_ns()))
+            .unwrap_or((0.0, 0.0));
+
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let engine = Arc::clone(&engine);
+            let resp_tx = resp_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hcim-serve-{wid}"))
+                    .spawn(move || {
+                        while let Some(batch) = batcher.next_batch() {
+                            let n = batch.len();
+                            let elems = engine.manifest.input_elems();
+                            let mut flat = Vec::with_capacity(n * elems);
+                            for r in &batch {
+                                debug_assert_eq!(r.image.len(), elems);
+                                flat.extend_from_slice(&r.image);
+                            }
+                            match engine.infer(&flat, n) {
+                                Ok(all_logits) => {
+                                    let done = Instant::now();
+                                    let mut lats = Vec::with_capacity(n);
+                                    for (req, logits) in batch.iter().zip(all_logits) {
+                                        let class = argmax(&logits);
+                                        let latency = done - req.enqueued;
+                                        lats.push(latency);
+                                        let _ = resp_tx.send(Response {
+                                            id: req.id,
+                                            class,
+                                            logits,
+                                            latency,
+                                        });
+                                    }
+                                    metrics.record_batch(
+                                        &lats,
+                                        per_inf.0 * n as f64,
+                                        per_inf.1 * n as f64,
+                                    );
+                                }
+                                Err(e) => {
+                                    crate::log_error!("batch of {n} failed: {e}");
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Server {
+            batcher,
+            metrics,
+            workers,
+            resp_rx,
+            next_id: 0,
+            hw_estimate,
+        }
+    }
+
+    /// Submit one image; returns its request id.
+    pub fn submit(&mut self, image: Vec<f32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.submit(Request { id, image, enqueued: Instant::now() });
+        id
+    }
+
+    /// Collect exactly `n` responses (blocking).
+    pub fn collect(&self, n: usize) -> Vec<Response> {
+        (0..n)
+            .map(|_| self.resp_rx.recv().expect("workers died"))
+            .collect()
+    }
+
+    /// Queue depth (backpressure signal).
+    pub fn depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Stop accepting work, drain, and join workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Map the slim trained model names to zoo entries for co-simulation.
+fn zoo_name_for(name: &str) -> Option<&'static str> {
+    match name {
+        n if n.starts_with("resnet20") => Some("resnet20"),
+        n if n.starts_with("wide-resnet20") => Some("wide_resnet20"),
+        n if n.starts_with("vgg9") => Some("vgg9"),
+        n if n.starts_with("vgg11") => Some("vgg11"),
+        "tiny" => Some("resnet20"),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn zoo_mapping() {
+        assert_eq!(zoo_name_for("resnet20-slim"), Some("resnet20"));
+        assert_eq!(zoo_name_for("tiny"), Some("resnet20"));
+        assert_eq!(zoo_name_for("unknown-model"), None);
+    }
+}

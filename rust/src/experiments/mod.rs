@@ -1,0 +1,566 @@
+//! Experiment registry: one runner per table/figure of the paper's
+//! evaluation (§5). Shared by `cargo bench` (`rust/benches/paper_tables.rs`)
+//! and `examples/paper_figures.rs`; EXPERIMENTS.md records paper-vs-measured.
+
+use std::path::Path;
+
+use crate::config::hardware::{BaselineKind, HcimConfig};
+use crate::model::zoo;
+use crate::sim::energy::Component;
+use crate::sim::params::{CalibParams, ADCS};
+use crate::sim::simulator::{Arch, SimReport, Simulator, SparsityTable};
+use crate::sim::tech::TechNode;
+use crate::sim::tile::{hcim_mvm_cost, MvmStats};
+use crate::util::table::{fnum, Table};
+
+/// Build the simulator used by all system-level experiments (32 nm, like
+/// the paper's PUMA setup), with measured sparsity if artifacts exist.
+pub fn system_simulator(artifact_dir: &Path) -> Simulator {
+    Simulator::new(TechNode::N32)
+        .with_sparsity(SparsityTable::load_or_default(&artifact_dir.join("sparsity.json")))
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — HCiM configurations
+// ---------------------------------------------------------------------------
+
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — HCiM configurations (4-bit weights/activations)",
+        &["Config", "Crossbar", "#ScaleFactors", "#PartialSums", "DCiM array"],
+    );
+    for cfg in [HcimConfig::config_a(), HcimConfig::config_b()] {
+        t.row(&[
+            cfg.name.clone(),
+            format!("{}x{}", cfg.xbar.rows, cfg.xbar.cols),
+            format!("{}*{}", cfg.x_bits, cfg.xbar.cols),
+            format!("1*{}", cfg.xbar.cols),
+            format!("{}x{}", cfg.dcim_rows(), cfg.dcim_cols()),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — accuracy vs ADC precision (needs python artifacts)
+// ---------------------------------------------------------------------------
+
+/// Render `artifacts/accuracy.json` (written by `make accuracy`) in the
+/// paper's Table-2 layout. Returns `None` when the artifact is missing.
+pub fn table2(artifact_dir: &Path) -> Option<Table> {
+    let src = std::fs::read_to_string(artifact_dir.join("accuracy.json")).ok()?;
+    let j = crate::util::json::Json::parse(&src).ok()?;
+    let rows = j.get("rows")?.as_arr()?;
+    let mut t = Table::new(
+        "Table 2 — accuracy vs ADC precision (synthetic-set reproduction)",
+        &["Model (xbar)", "ADC bits", "mode", "test acc"],
+    );
+    for r in rows {
+        if r.get("sf_share").is_some() && r.num_field("sf_share").unwrap_or(1.0) > 1.0 {
+            continue; // fig 2(d) rows rendered separately
+        }
+        t.row(&[
+            format!(
+                "{} ({})",
+                r.str_field("model").unwrap_or("?"),
+                r.num_field("xbar").unwrap_or(0.0) as i64
+            ),
+            r.str_field("adc_bits").unwrap_or("?").to_string(),
+            r.str_field("mode").unwrap_or("?").to_string(),
+            format!("{:.3}", r.num_field("test_acc").unwrap_or(f64::NAN)),
+        ]);
+    }
+    Some(t)
+}
+
+/// Fig 2(d) companion: accuracy vs #scale-factor reduction.
+pub fn fig2d(artifact_dir: &Path) -> Option<Table> {
+    let src = std::fs::read_to_string(artifact_dir.join("accuracy.json")).ok()?;
+    let j = crate::util::json::Json::parse(&src).ok()?;
+    let rows = j.get("rows")?.as_arr()?;
+    let mut t = Table::new(
+        "Fig 2(d) — accuracy vs scale-factor sharing (ternary)",
+        &["SF reduction", "test acc"],
+    );
+    for r in rows {
+        if let Some(share) = r.get("sf_share").and_then(|s| s.as_f64()) {
+            if share >= 1.0 {
+                t.row(&[
+                    format!("{}x fewer", share as i64),
+                    format!("{:.3}", r.num_field("test_acc").unwrap_or(f64::NAN)),
+                ]);
+            }
+        }
+    }
+    Some(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — DCiM array vs ADCs (column periphery comparison)
+// ---------------------------------------------------------------------------
+
+pub struct Table3Row {
+    pub name: String,
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    pub area_mm2: f64,
+}
+
+pub fn table3_rows() -> Vec<Table3Row> {
+    let params = CalibParams::at_65nm();
+    let mut rows: Vec<Table3Row> = ADCS
+        .iter()
+        .map(|a| Table3Row {
+            name: format!("{} ({}b)", a.name, a.bits),
+            latency_ns: a.latency_ns,
+            energy_pj: a.energy_pj,
+            area_mm2: a.area_mm2,
+        })
+        .collect();
+    // DCiM rows derived from the pipeline + energy model (not pasted):
+    // one word-op = 2 slots + 2 drain cycles, amortised over the columns
+    // served in parallel.
+    for cfg in [HcimConfig::config_a(), HcimConfig::config_b()] {
+        let geom = crate::sim::tile::dcim_geometry(&cfg);
+        let arr = crate::sim::dcim::array::DcimArray::new(geom);
+        let cycles = {
+            let mut s = crate::sim::dcim::pipeline::PipelineSchedule::default();
+            s.issue(arr.pipe.phase_factor);
+            s.cycles(&arr.pipe)
+        };
+        rows.push(Table3Row {
+            name: format!("DCiM Array ({})", cfg.name),
+            latency_ns: cycles as f64 * arr.pipe.cycle_ns / cfg.xbar.cols as f64,
+            energy_pj: params.dcim_col_op_pj(),
+            area_mm2: arr.area_mm2(&params),
+        });
+    }
+    rows
+}
+
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table 3 — column periphery: DCiM array vs ADCs (65 nm)",
+        &["Periphery", "Latency (ns)", "Energy (pJ)", "Area (mm²)"],
+    );
+    for r in table3_rows() {
+        t.row(&[
+            r.name,
+            format!("{:.2}", r.latency_ns),
+            format!("{:.2}", r.energy_pj),
+            format!("{:.4}", r.area_mm2),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — standard CiM vs PSQ + HCiM headline
+// ---------------------------------------------------------------------------
+
+pub struct Fig1Result {
+    pub energy_ratio: f64,
+    pub latency_area_ratio: f64,
+    pub table: Table,
+}
+
+pub fn fig1(sim: &Simulator) -> Fig1Result {
+    let g = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    let baseline = sim.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcSar7));
+    let hcim = sim.run(&g, &Arch::Hcim(cfg));
+    let energy_ratio = baseline.energy_pj() / hcim.energy_pj();
+    let la_ratio = baseline.latency_area() / hcim.latency_area();
+    let mut t = Table::new(
+        "Fig 1 — ResNet-20: standard CiM (7b ADC) vs PSQ-trained on HCiM",
+        &["System", "Energy (µJ)", "Latency×Area (norm)", "vs HCiM"],
+    );
+    t.row(&[
+        "Standard CiM (7b ADC)".into(),
+        fnum(baseline.energy_pj() / 1e6),
+        fnum(baseline.latency_area() / hcim.latency_area()),
+        format!("{:.1}× energy, {:.1}× lat·area", energy_ratio, la_ratio),
+    ]);
+    t.row(&[
+        "HCiM (ternary PSQ)".into(),
+        fnum(hcim.energy_pj() / 1e6),
+        "1.00".into(),
+        "1×".into(),
+    ]);
+    Fig1Result { energy_ratio, latency_area_ratio: la_ratio, table: t }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2(c) — scale-factor access energy share
+// ---------------------------------------------------------------------------
+
+/// Compare on-chip DCiM scale-factor processing against the strawman that
+/// streams scale factors from off-chip per MVM (the data-movement problem
+/// the paper motivates with Fig 2(c)).
+pub fn fig2c(sim: &Simulator) -> Table {
+    let g = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    let mapping = crate::sim::mapping::ModelMapping::build(&g, &cfg);
+    let hcim = sim.run(&g, &Arch::Hcim(cfg.clone()));
+
+    // strawman: every invocation re-fetches its crossbars' scale factors
+    // from DRAM (sf_bits each)
+    let mut offchip_pj = 0.0;
+    for lm in &mapping.layers {
+        let sf_bytes =
+            lm.scale_factors(&cfg) * (cfg.sf_bits as usize).div_ceil(8).max(1);
+        offchip_pj +=
+            sf_bytes as f64 * sim.params.offchip_byte_pj * lm.mvm.invocations as f64;
+    }
+    let dcim_pj = hcim.ledger.dcim_energy_pj();
+    let total = hcim.energy_pj();
+    let mut t = Table::new(
+        "Fig 2(c) — scale-factor processing energy (ResNet-20, config A)",
+        &["Scheme", "SF energy (µJ)", "share of total run"],
+    );
+    t.row(&[
+        "off-chip SF streaming (strawman)".into(),
+        fnum(offchip_pj / 1e6),
+        format!("{:.0}% of baseline total", 100.0 * offchip_pj / (total - dcim_pj + offchip_pj)),
+    ]);
+    t.row(&[
+        "HCiM in-memory DCiM (pre-loaded)".into(),
+        fnum(dcim_pj / 1e6),
+        format!("{:.0}% of HCiM total", 100.0 * dcim_pj / total),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5(a) — DCiM energy vs ternary sparsity
+// ---------------------------------------------------------------------------
+
+pub struct Fig5aPoint {
+    pub sparsity: f64,
+    pub energy_norm: f64,
+    pub latency_norm: f64,
+}
+
+pub fn fig5a_points() -> Vec<Fig5aPoint> {
+    let cfg = HcimConfig::config_a();
+    let params = CalibParams::at_65nm();
+    let dense = hcim_mvm_cost(&cfg, &params, &MvmStats { sparsity: 0.0, ..Default::default() });
+    let e0 = dense.dcim_energy_pj() + dense.energy(Component::Comparator);
+    (0..=15)
+        .map(|i| {
+            let s = i as f64 * 0.05;
+            let c = hcim_mvm_cost(&cfg, &params, &MvmStats { sparsity: s, ..Default::default() });
+            Fig5aPoint {
+                sparsity: s,
+                energy_norm: (c.dcim_energy_pj() + c.energy(Component::Comparator)) / e0,
+                latency_norm: c.latency_ns / dense.latency_ns,
+            }
+        })
+        .collect()
+}
+
+pub fn fig5a() -> Table {
+    let mut t = Table::new(
+        "Fig 5(a) — column-periphery energy vs ternary sparsity (config A)",
+        &["sparsity", "energy (norm)", "latency (norm)"],
+    );
+    for p in fig5a_points() {
+        t.row(&[
+            format!("{:.0}%", p.sparsity * 100.0),
+            format!("{:.3}", p.energy_norm),
+            format!("{:.3}", p.latency_norm),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5(b) — accuracy vs EDAP against Quarry / BitSplitNet (ImageNet cfg)
+// ---------------------------------------------------------------------------
+
+pub struct Fig5bRow {
+    pub name: String,
+    pub accuracy: f64,
+    pub edap_norm: f64,
+}
+
+/// Accuracies: paper-reported deltas vs HCiM (ResNet-18; our training
+/// substitution cannot reach ImageNet scale, so the paper's accuracy axis
+/// is reproduced from its reported numbers while EDAP is simulated).
+pub fn fig5b(sim: &Simulator) -> (Vec<Fig5bRow>, Table) {
+    let g = zoo::resnet18();
+    let cfg = HcimConfig::imagenet();
+    let hcim = sim.run(&g, &Arch::Hcim(cfg.clone()));
+    let q1 = sim.run(&g, &Arch::Quarry(cfg.clone(), 1));
+    let q4 = sim.run(&g, &Arch::Quarry(cfg.clone(), 4));
+    let bs = sim.run(&g, &Arch::BitSplitNet(cfg.clone()));
+    let hcim_acc = 68.9; // paper's HCiM ResNet-18 operating point
+    let rows = vec![
+        Fig5bRow { name: "HCiM (ternary)".into(), accuracy: hcim_acc, edap_norm: 1.0 },
+        Fig5bRow {
+            name: "Quarry (1-bit)".into(),
+            accuracy: hcim_acc - 2.5,
+            edap_norm: q1.edap() / hcim.edap(),
+        },
+        Fig5bRow {
+            name: "Quarry (4-bit)".into(),
+            accuracy: hcim_acc + 2.3,
+            edap_norm: q4.edap() / hcim.edap(),
+        },
+        Fig5bRow {
+            name: "BitSplitNet".into(),
+            accuracy: hcim_acc - 4.2,
+            edap_norm: bs.edap() / hcim.edap(),
+        },
+    ];
+    let mut t = Table::new(
+        "Fig 5(b) — accuracy vs EDAP, ResNet-18 (ImageNet config)",
+        &["System", "accuracy (%)", "EDAP (norm. to HCiM)"],
+    );
+    for r in &rows {
+        t.row(&[r.name.clone(), format!("{:.1}", r.accuracy), fnum(r.edap_norm)]);
+    }
+    (rows, t)
+}
+
+// ---------------------------------------------------------------------------
+// Figs 6 & 7 — system-level energy and latency×area across workloads
+// ---------------------------------------------------------------------------
+
+pub struct SystemRow {
+    pub model: String,
+    pub arch: String,
+    pub energy_norm: f64,
+    pub latency_area_norm: f64,
+}
+
+/// Run the full workload suite on one crossbar config; everything is
+/// normalised to HCiM (Ternary), as in the paper's figures.
+pub fn system_comparison(sim: &Simulator, cfg: &HcimConfig) -> Vec<SystemRow> {
+    let mut rows = Vec::new();
+    for g in zoo::cifar_suite() {
+        let tern = sim.run(&g, &Arch::Hcim(cfg.clone()));
+        let archs: Vec<Arch> = vec![
+            Arch::Hcim(cfg.clone()),
+            Arch::Hcim(cfg.clone().binary()),
+            Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcSar7),
+            Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcSar6),
+            Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcFlash4),
+        ];
+        for arch in archs {
+            if cfg.xbar.rows < 128 && matches!(&arch, Arch::AdcBaseline(_, BaselineKind::AdcSar7)) {
+                continue; // 64×64 needs only 6 bits (paper omits 7b at cfg B)
+            }
+            let r = sim.run(&g, &arch);
+            rows.push(SystemRow {
+                model: g.name.clone(),
+                arch: r.arch.clone(),
+                energy_norm: r.energy_pj() / tern.energy_pj(),
+                latency_area_norm: r.latency_area() / tern.latency_area(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn fig67_table(sim: &Simulator, cfg: &HcimConfig, label: &str) -> Table {
+    let mut t = Table::new(
+        &format!("{label} — energy & latency×area (normalised to HCiM Ternary)"),
+        &["Model", "System", "Energy", "Latency×Area"],
+    );
+    for r in system_comparison(sim, cfg) {
+        t.row(&[r.model, r.arch, fnum(r.energy_norm), fnum(r.latency_area_norm)]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// ablations beyond the paper (DESIGN.md extension hooks)
+// ---------------------------------------------------------------------------
+
+/// Ablation: private vs shared (odd/even) column peripherals.
+pub fn ablation_phase_sharing() -> Table {
+    let params = CalibParams::at_65nm();
+    let mut t = Table::new(
+        "Ablation — DCiM peripheral sharing (one word-op, config A)",
+        &["Peripheral layout", "cycles", "latency/col (ns)"],
+    );
+    for (label, phases) in [("shared odd/even (paper)", 2usize), ("private per column", 1)] {
+        let mut arr = crate::sim::dcim::array::DcimArray::new(
+            crate::sim::tile::dcim_geometry(&HcimConfig::config_a()),
+        );
+        arr.pipe.phase_factor = phases;
+        let mut sched = crate::sim::dcim::pipeline::PipelineSchedule::default();
+        sched.issue(phases);
+        let cycles = sched.cycles(&arr.pipe);
+        t.row(&[
+            label.into(),
+            cycles.to_string(),
+            format!("{:.4}", cycles as f64 * params.dcim_cycle_ns / 128.0),
+        ]);
+    }
+    t
+}
+
+/// Ablation: ADC-baseline energy as a function of ADC precision, showing
+/// where HCiM's column periphery sits.
+pub fn ablation_adc_precision_sweep(sim: &Simulator) -> Table {
+    let g = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    let hcim = sim.run(&g, &Arch::Hcim(cfg.clone()));
+    let mut t = Table::new(
+        "Ablation — energy vs baseline ADC precision (ResNet-20)",
+        &["System", "Energy (µJ)", "vs HCiM ternary"],
+    );
+    for kind in BaselineKind::ADC_BASELINES {
+        let r = sim.run(&g, &Arch::AdcBaseline(cfg.clone(), kind));
+        t.row(&[
+            kind.name().into(),
+            fnum(r.energy_pj() / 1e6),
+            format!("{:.1}×", r.energy_pj() / hcim.energy_pj()),
+        ]);
+    }
+    t.row(&[
+        "HCiM (Ternary)".into(),
+        fnum(hcim.energy_pj() / 1e6),
+        "1.0×".into(),
+    ]);
+    t
+}
+
+/// Reports used by EXPERIMENTS.md: run everything and also return the raw
+/// SimReports for the headline claims.
+pub fn headline_reports(sim: &Simulator) -> Vec<SimReport> {
+    let g = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    vec![
+        sim.run(&g, &Arch::Hcim(cfg.clone())),
+        sim.run(&g, &Arch::Hcim(cfg.clone().binary())),
+        sim.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcSar7)),
+        sim.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcFlash4)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> Simulator {
+        Simulator::new(TechNode::N32)
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1().render();
+        assert!(t.contains("128x128"));
+        assert!(t.contains("24x128"));
+        assert!(t.contains("24x64"));
+        assert!(t.contains("4*128"));
+    }
+
+    #[test]
+    fn table3_has_all_rows_and_dcim_wins_energy() {
+        let rows = table3_rows();
+        assert_eq!(rows.len(), 5);
+        let dcim_a = rows.iter().find(|r| r.name.contains("(A)")).unwrap();
+        // Table 3: 0.22 pJ, ~0.06 ns/col, ~0.009 mm²
+        assert!((dcim_a.energy_pj - 0.22).abs() < 1e-9);
+        assert!(dcim_a.latency_ns < 0.1, "{}", dcim_a.latency_ns);
+        assert!((dcim_a.area_mm2 - 0.009).abs() < 1e-3);
+        for adc in &rows[..3] {
+            assert!(adc.energy_pj > dcim_a.energy_pj);
+        }
+    }
+
+    #[test]
+    fn fig1_headline_ratios() {
+        // Paper Fig 1: ~15× lower energy, ~11× lower area-normalised
+        // latency; our simulator must land in the same regime (≳5×).
+        let r = fig1(&sim());
+        assert!(r.energy_ratio > 5.0, "energy ratio {:.1}", r.energy_ratio);
+        assert!(
+            r.latency_area_ratio > 3.0,
+            "lat×area ratio {:.1}",
+            r.latency_area_ratio
+        );
+    }
+
+    #[test]
+    fn fig5a_shape() {
+        let pts = fig5a_points();
+        // 0 → 50 % sparsity ⇒ ~24 % DCiM+comparator energy cut, flat latency
+        let at50 = pts.iter().find(|p| (p.sparsity - 0.5).abs() < 1e-9).unwrap();
+        assert!((1.0 - at50.energy_norm) > 0.15 && (1.0 - at50.energy_norm) < 0.30,
+                "saving {:.3}", 1.0 - at50.energy_norm);
+        assert!(pts.iter().all(|p| (p.latency_norm - 1.0).abs() < 1e-9));
+        // monotone decreasing
+        for w in pts.windows(2) {
+            assert!(w[1].energy_norm <= w[0].energy_norm + 1e-12);
+        }
+    }
+
+    #[test]
+    fn fig5b_shape() {
+        let (rows, _) = fig5b(&sim());
+        let get = |n: &str| rows.iter().find(|r| r.name.contains(n)).unwrap();
+        assert!((get("HCiM").edap_norm - 1.0).abs() < 1e-9);
+        assert!(get("Quarry (1-bit)").edap_norm > 1.5, "q1 {:.2}", get("Quarry (1-bit)").edap_norm);
+        assert!(get("Quarry (4-bit)").edap_norm > get("Quarry (1-bit)").edap_norm);
+        assert!(get("BitSplitNet").edap_norm > 1.5);
+        assert!(get("HCiM").accuracy > get("Quarry (1-bit)").accuracy);
+    }
+
+    #[test]
+    fn fig6_shape_all_models() {
+        // Fig 6(a): every ADC baseline ≥2× the ternary energy; binary
+        // HCiM ≥10 % above ternary.
+        let s = sim();
+        let rows = system_comparison(&s, &HcimConfig::config_a());
+        for r in &rows {
+            if r.arch.contains("ADC") {
+                assert!(r.energy_norm > 2.0, "{} on {}: {:.2}", r.arch, r.model, r.energy_norm);
+            }
+            if r.arch.contains("Binary") {
+                assert!(r.energy_norm > 1.08, "{} binary premium {:.3}", r.model, r.energy_norm);
+            }
+        }
+        // Fig 6(b): SAR baselines ≥2× latency×area; flash close to HCiM
+        for r in &rows {
+            if r.arch.contains("SAR") && r.arch.contains("7") {
+                assert!(r.latency_area_norm > 2.0);
+            }
+            if r.arch.contains("Flash") {
+                assert!(r.latency_area_norm > 0.4 && r.latency_area_norm < 1.5,
+                        "{}: flash norm {:.2}", r.model, r.latency_area_norm);
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_keeps_energy_win() {
+        let s = sim();
+        let rows = system_comparison(&s, &HcimConfig::config_b());
+        for r in &rows {
+            if r.arch.contains("ADC") {
+                assert!(r.energy_norm > 1.5, "{} on {}: {:.2}", r.arch, r.model, r.energy_norm);
+            }
+        }
+        // no 7-bit rows at config B (paper's Table-2/figure convention)
+        assert!(!rows.iter().any(|r| r.arch.contains("7b")));
+    }
+
+    #[test]
+    fn ablations_render() {
+        let t = ablation_phase_sharing().render();
+        assert!(t.contains("shared odd/even"));
+        let t2 = ablation_adc_precision_sweep(&sim()).render();
+        assert!(t2.contains("HCiM"));
+    }
+
+    #[test]
+    fn fig2c_offchip_dominates() {
+        let t = fig2c(&sim()).render();
+        assert!(t.contains("off-chip"));
+        assert!(t.contains("DCiM"));
+    }
+}

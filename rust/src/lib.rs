@@ -1,0 +1,40 @@
+//! # HCiM — ADC-Less Hybrid Analog-Digital Compute-in-Memory Accelerator
+//!
+//! Reproduction of *HCiM: ADC-Less Hybrid Analog-Digital Compute in Memory
+//! Accelerator for Deep Learning Workloads* (Negi et al., 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2** (build time, `python/`): Pallas PSQ-MVM kernel + JAX model
+//!   zoo with quantization-aware training, AOT-lowered to HLO text under
+//!   `artifacts/`.
+//! * **L3** (this crate): the paper's architecture contribution — a
+//!   cycle-accurate simulator of the HCiM macro (analog crossbar +
+//!   comparators + the novel digital-CiM scale-factor array) inside a
+//!   PUMA-style chip hierarchy, plus an inference serving coordinator that
+//!   executes the AOT artifacts through PJRT while the simulator produces
+//!   energy/latency/area estimates.
+//!
+//! Entry points:
+//! * [`sim::simulator::Simulator`] — run a [`model::graph::Graph`] on a
+//!   hardware configuration and collect a [`sim::energy::CostLedger`].
+//! * [`coordinator::server::Server`] — batched inference serving over the
+//!   compiled artifacts.
+//! * [`experiments`] — one runner per paper table/figure (shared by
+//!   `cargo bench` and `examples/paper_figures.rs`).
+
+pub mod util;
+pub mod config;
+pub mod quant;
+pub mod model;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+pub mod cli;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Semantic result alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,196 @@
+//! `hcim` — launcher for the HCiM reproduction.
+//!
+//! Subcommands: `simulate` (cycle-accurate run), `serve` (batched PJRT
+//! inference over the AOT artifacts), `tables` (regenerate every paper
+//! table/figure), `info` (mapping bookkeeping). See `cli::USAGE`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use hcim::cli::{Args, USAGE};
+use hcim::config::hardware::{BaselineKind, HcimConfig};
+use hcim::coordinator::{Server, ServerConfig};
+use hcim::experiments;
+use hcim::model::zoo;
+use hcim::runtime::Engine;
+use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
+use hcim::sim::tech::TechNode;
+use hcim::util::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "tables" => cmd_tables(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> HcimConfig {
+    // `--config-file configs/hcim_a.toml` takes precedence over `--config A`
+    if let Some(path) = args.flag("config-file") {
+        match hcim::config::parser::Config::load(Path::new(path))
+            .and_then(|c| HcimConfig::from_config(&c))
+        {
+            Ok(hw) => return hw,
+            Err(e) => {
+                eprintln!("warning: ignoring {path}: {e}");
+            }
+        }
+    }
+    match args.flag_or("config", "A") {
+        "B" | "b" => HcimConfig::config_b(),
+        "imagenet" => HcimConfig::imagenet(),
+        _ => HcimConfig::config_a(),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> hcim::Result<()> {
+    let model = args.flag_or("model", "resnet20");
+    let graph = zoo::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}` (see `hcim help`)"))?;
+    let cfg = config_from(args);
+    let node = TechNode::by_name(args.flag_or("node", "32nm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let mut sim = Simulator::new(node);
+    if let Some(path) = args.flag("sparsity") {
+        sim = sim.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
+    }
+    let arch = match args.flag_or("arch", "hcim") {
+        "hcim" | "ternary" => Arch::Hcim(cfg),
+        "binary" => Arch::Hcim(cfg.binary()),
+        "adc7" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar7),
+        "adc6" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar6),
+        "adc4" => Arch::AdcBaseline(cfg, BaselineKind::AdcFlash4),
+        "quarry1" => Arch::Quarry(cfg, 1),
+        "quarry4" => Arch::Quarry(cfg, 4),
+        "bitsplit" => Arch::BitSplitNet(cfg),
+        other => anyhow::bail!("unknown arch `{other}`"),
+    };
+    let report = sim.run(&graph, &arch);
+    println!("model={} arch={}", report.model, report.arch);
+    println!("{}", report.ledger);
+    println!("per-layer:");
+    for l in &report.layers {
+        println!(
+            "  layer {:>3}: {:>4} xbars × {:>5} invocations  {:>12.1} pJ  {:>10.1} ns  sparsity {:.2}",
+            l.layer_index, l.crossbars, l.invocations, l.energy_pj, l.latency_ns, l.sparsity
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> hcim::Result<()> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    let engine = Arc::new(Engine::load(Path::new(dir))?);
+    let m = engine.manifest.clone();
+    println!(
+        "serving {} ({}, {}x{}x3, {} classes, exported acc {:.3})",
+        m.model, m.mode, m.image, m.image, m.classes, m.test_acc
+    );
+    let requests = args.usize_or("requests", 64);
+    let scfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000) as u64),
+        workers: args.usize_or("workers", 2),
+    };
+    let mut server = Server::start(engine, scfg);
+    if let Some(hw) = &server.hw_estimate {
+        println!(
+            "co-sim model: {} on {} → {:.2} µJ, {:.1} µs per inference",
+            hw.model,
+            hw.arch,
+            hw.energy_pj() / 1e6,
+            hw.latency_ns() / 1e3
+        );
+    }
+    let mut rng = Rng::new(42);
+    let elems = m.input_elems();
+    for _ in 0..requests {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
+        server.submit(img);
+    }
+    let responses = server.collect(requests);
+    let metrics = server.shutdown();
+    println!("first classes: {:?}", &responses.iter().map(|r| r.class).take(8).collect::<Vec<_>>());
+    println!("{}", metrics.snapshot());
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> hcim::Result<()> {
+    let dir = Path::new(args.flag_or("artifacts", "artifacts"));
+    let sim = experiments::system_simulator(dir);
+    experiments::table1().print();
+    match experiments::table2(dir) {
+        Some(t) => t.print(),
+        None => println!("(Table 2 skipped: run `make accuracy` to produce artifacts/accuracy.json)\n"),
+    }
+    if let Some(t) = experiments::fig2d(dir) {
+        t.print();
+    }
+    experiments::table3().print();
+    experiments::fig1(&sim).table.print();
+    experiments::fig2c(&sim).print();
+    experiments::fig5a().print();
+    experiments::fig5b(&sim).1.print();
+    experiments::fig67_table(&sim, &HcimConfig::config_a(), "Fig 6 (config A)").print();
+    experiments::fig67_table(&sim, &HcimConfig::config_b(), "Fig 7 (config B)").print();
+    experiments::ablation_phase_sharing().print();
+    experiments::ablation_adc_precision_sweep(&sim).print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> hcim::Result<()> {
+    let model = args.flag_or("model", "resnet20");
+    let graph = zoo::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+    let cfg = config_from(args);
+    let mapping = hcim::sim::mapping::ModelMapping::build(&graph, &cfg);
+    println!(
+        "{}: {} params, {} MACs/inference, {} MVM layers",
+        graph.name,
+        graph.params(),
+        graph.macs(),
+        graph.mvm_layers()
+    );
+    println!(
+        "config {}: {} crossbars, {} scale factors (Eq. 2), {} invocations",
+        cfg.name,
+        mapping.total_crossbars(),
+        mapping.total_scale_factors(&cfg),
+        mapping.total_invocations()
+    );
+    for lm in &mapping.layers {
+        println!(
+            "  layer {:>3}: {}×{} → {:>2}×{:>2} tiles ({} xbars), util r={:.2} c={:.2}",
+            lm.layer_index,
+            lm.mvm.rows,
+            lm.mvm.cols,
+            lm.row_tiles,
+            lm.col_tiles,
+            lm.crossbars(),
+            lm.row_utilization(&cfg),
+            lm.col_utilization(&cfg),
+        );
+    }
+    Ok(())
+}

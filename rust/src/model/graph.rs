@@ -1,0 +1,135 @@
+//! The model graph: an ordered layer list with explicit residual edges,
+//! plus shape inference and workload statistics.
+
+use super::layer::{Chw, Layer, MvmShape};
+
+/// A DNN ready for mapping onto the accelerator.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input: Chw,
+    pub layers: Vec<Layer>,
+    /// Number of output classes (for the serving driver's result decode).
+    pub classes: usize,
+}
+
+/// Shape-annotated layer, produced by [`Graph::annotate`].
+#[derive(Clone, Debug)]
+pub struct Annotated {
+    pub index: usize,
+    pub layer: Layer,
+    pub in_shape: Chw,
+    pub out_shape: Chw,
+    /// MVM view if this layer occupies crossbars.
+    pub mvm: Option<MvmShape>,
+}
+
+impl Graph {
+    /// Run shape inference over the layer list, validating residual edges.
+    pub fn annotate(&self) -> Vec<Annotated> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut shape = self.input;
+        let mut shapes: Vec<Chw> = Vec::with_capacity(self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::ResidualAdd { from } = layer {
+                assert!(*from < i, "residual edge must reference an earlier layer");
+                let src = shapes[*from];
+                assert_eq!(
+                    src, shape,
+                    "residual shape mismatch at layer {i}: {src:?} vs {shape:?}"
+                );
+            }
+            let next = layer.out_shape(shape);
+            out.push(Annotated {
+                index: i,
+                layer: layer.clone(),
+                in_shape: shape,
+                out_shape: next,
+                mvm: layer.mvm_shape(shape),
+            });
+            shapes.push(next);
+            shape = next;
+        }
+        out
+    }
+
+    /// Final output shape.
+    pub fn out_shape(&self) -> Chw {
+        self.annotate().last().map(|a| a.out_shape).unwrap_or(self.input)
+    }
+
+    /// Total weight parameters.
+    pub fn params(&self) -> usize {
+        self.annotate()
+            .iter()
+            .map(|a| a.layer.params(a.in_shape))
+            .sum()
+    }
+
+    /// Total MACs per inference.
+    pub fn macs(&self) -> usize {
+        self.annotate().iter().map(|a| a.layer.macs(a.in_shape)).sum()
+    }
+
+    /// Number of MVM-bearing layers.
+    pub fn mvm_layers(&self) -> usize {
+        self.annotate().iter().filter(|a| a.mvm.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        Graph {
+            name: "tiny".into(),
+            input: Chw { c: 3, h: 8, w: 8 },
+            classes: 10,
+            layers: vec![
+                Layer::Conv2d { in_ch: 3, out_ch: 4, k: 3, stride: 1, pad: 1 },
+                Layer::BatchNorm,
+                Layer::ReLU,
+                Layer::Conv2d { in_ch: 4, out_ch: 4, k: 3, stride: 1, pad: 1 },
+                Layer::ResidualAdd { from: 2 },
+                Layer::GlobalAvgPool,
+                Layer::Flatten,
+                Layer::Linear { in_features: 4, out_features: 10 },
+            ],
+        }
+    }
+
+    #[test]
+    fn annotate_propagates_shapes() {
+        let g = tiny();
+        let ann = g.annotate();
+        assert_eq!(ann.len(), 8);
+        assert_eq!(ann[0].out_shape, Chw { c: 4, h: 8, w: 8 });
+        assert_eq!(g.out_shape(), Chw { c: 10, h: 1, w: 1 });
+    }
+
+    #[test]
+    fn counts() {
+        let g = tiny();
+        assert_eq!(g.mvm_layers(), 3);
+        assert_eq!(g.params(), 3 * 9 * 4 + 4 * 9 * 4 + 4 * 10);
+        assert!(g.macs() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "residual shape mismatch")]
+    fn residual_shape_checked() {
+        let g = Graph {
+            name: "bad".into(),
+            input: Chw { c: 3, h: 8, w: 8 },
+            classes: 2,
+            layers: vec![
+                Layer::Conv2d { in_ch: 3, out_ch: 4, k: 3, stride: 1, pad: 1 },
+                // downsamples to 4×4, so adding layer-0's 8×8 output must fail
+                Layer::Conv2d { in_ch: 4, out_ch: 4, k: 3, stride: 2, pad: 1 },
+                Layer::ResidualAdd { from: 0 },
+            ],
+        };
+        g.annotate();
+    }
+}

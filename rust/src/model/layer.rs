@@ -1,0 +1,184 @@
+//! Layer descriptors.
+
+/// Spatial tensor shape: channels × height × width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chw {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Chw {
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// One layer of the IR. Only MVM-bearing layers (Conv2d, Linear) occupy
+/// crossbars; the rest shape the data flow and digital-unit traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    Linear {
+        in_features: usize,
+        out_features: usize,
+    },
+    BatchNorm,
+    ReLU,
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    AvgPool {
+        k: usize,
+        stride: usize,
+    },
+    /// Global average pool to 1×1.
+    GlobalAvgPool,
+    /// Residual add with the output of layer `from` (index into the graph).
+    ResidualAdd {
+        from: usize,
+    },
+    Flatten,
+}
+
+impl Layer {
+    /// Output shape given the input shape.
+    pub fn out_shape(&self, input: Chw) -> Chw {
+        match *self {
+            Layer::Conv2d { in_ch, out_ch, k, stride, pad } => {
+                assert_eq!(input.c, in_ch, "conv input channel mismatch");
+                let h = (input.h + 2 * pad - k) / stride + 1;
+                let w = (input.w + 2 * pad - k) / stride + 1;
+                Chw { c: out_ch, h, w }
+            }
+            Layer::Linear { in_features, out_features } => {
+                assert_eq!(input.numel(), in_features, "linear input size mismatch");
+                Chw { c: out_features, h: 1, w: 1 }
+            }
+            Layer::BatchNorm | Layer::ReLU | Layer::ResidualAdd { .. } => input,
+            Layer::MaxPool { k, stride } | Layer::AvgPool { k, stride } => Chw {
+                c: input.c,
+                h: (input.h - k) / stride + 1,
+                w: (input.w - k) / stride + 1,
+            },
+            Layer::GlobalAvgPool => Chw { c: input.c, h: 1, w: 1 },
+            Layer::Flatten => Chw { c: input.numel(), h: 1, w: 1 },
+        }
+    }
+
+    /// For MVM layers: the (rows, cols) of the equivalent weight matrix
+    /// (im2col for convolutions) and the number of MVM invocations per
+    /// input sample. `None` for non-MVM layers.
+    pub fn mvm_shape(&self, input: Chw) -> Option<MvmShape> {
+        match *self {
+            Layer::Conv2d { in_ch, out_ch, k, .. } => {
+                let out = self.out_shape(input);
+                Some(MvmShape {
+                    rows: in_ch * k * k,
+                    cols: out_ch,
+                    invocations: out.h * out.w,
+                })
+            }
+            Layer::Linear { in_features, out_features } => Some(MvmShape {
+                rows: in_features,
+                cols: out_features,
+                invocations: 1,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Number of weight parameters (0 for weightless layers).
+    pub fn params(&self, input: Chw) -> usize {
+        self.mvm_shape(input).map(|m| m.rows * m.cols).unwrap_or(0)
+    }
+
+    /// MACs per input sample.
+    pub fn macs(&self, input: Chw) -> usize {
+        self.mvm_shape(input)
+            .map(|m| m.rows * m.cols * m.invocations)
+            .unwrap_or(0)
+    }
+}
+
+/// The weight-matrix view of an MVM layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MvmShape {
+    /// Input dimension (crossbar wordlines before tiling).
+    pub rows: usize,
+    /// Output dimension (logical columns before bit-slicing).
+    pub cols: usize,
+    /// MVMs per inference (spatial positions for convs).
+    pub invocations: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const IN32: Chw = Chw { c: 3, h: 32, w: 32 };
+
+    #[test]
+    fn conv_shapes() {
+        let conv = Layer::Conv2d { in_ch: 3, out_ch: 16, k: 3, stride: 1, pad: 1 };
+        let out = conv.out_shape(IN32);
+        assert_eq!(out, Chw { c: 16, h: 32, w: 32 });
+        let m = conv.mvm_shape(IN32).unwrap();
+        assert_eq!(m.rows, 27);
+        assert_eq!(m.cols, 16);
+        assert_eq!(m.invocations, 1024);
+    }
+
+    #[test]
+    fn strided_conv_halves() {
+        let conv = Layer::Conv2d { in_ch: 16, out_ch: 32, k: 3, stride: 2, pad: 1 };
+        let out = conv.out_shape(Chw { c: 16, h: 32, w: 32 });
+        assert_eq!(out, Chw { c: 32, h: 16, w: 16 });
+    }
+
+    #[test]
+    fn linear_and_flatten() {
+        let flat = Layer::Flatten.out_shape(Chw { c: 64, h: 1, w: 1 });
+        assert_eq!(flat.numel(), 64);
+        let fc = Layer::Linear { in_features: 64, out_features: 10 };
+        let out = fc.out_shape(flat);
+        assert_eq!(out.c, 10);
+        assert_eq!(fc.macs(flat), 640);
+    }
+
+    #[test]
+    fn pools() {
+        let mp = Layer::MaxPool { k: 2, stride: 2 };
+        assert_eq!(
+            mp.out_shape(Chw { c: 8, h: 16, w: 16 }),
+            Chw { c: 8, h: 8, w: 8 }
+        );
+        let gap = Layer::GlobalAvgPool;
+        assert_eq!(
+            gap.out_shape(Chw { c: 8, h: 7, w: 7 }),
+            Chw { c: 8, h: 1, w: 1 }
+        );
+    }
+
+    #[test]
+    fn weightless_layers_have_no_macs() {
+        for l in [Layer::BatchNorm, Layer::ReLU, Layer::Flatten] {
+            assert_eq!(l.macs(IN32), 0);
+            assert_eq!(l.params(IN32), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn conv_checks_channels() {
+        let conv = Layer::Conv2d { in_ch: 4, out_ch: 8, k: 3, stride: 1, pad: 1 };
+        conv.out_shape(IN32);
+    }
+}

@@ -1,0 +1,10 @@
+//! DNN graph IR + model zoo (S9).
+//!
+//! The simulator does not need trained weights to produce the paper's
+//! performance results — only layer *shapes* (to map onto crossbars, Eq. 2)
+//! and activation traffic. The IR here carries exactly that; functional
+//! execution uses the AOT-compiled XLA artifacts instead.
+
+pub mod layer;
+pub mod graph;
+pub mod zoo;

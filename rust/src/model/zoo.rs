@@ -1,0 +1,211 @@
+//! Model zoo — the paper's evaluation workloads (§5.1):
+//! ResNet-20/32/44, Wide-ResNet-20, VGG-9/11 on CIFAR-10, and ResNet-18 on
+//! ImageNet. Architectures follow He et al. (CVPR'16) for the CIFAR
+//! ResNets, Saxena et al. (ISLPED'23) for Wide-ResNet-20, and the standard
+//! CIFAR VGG variants.
+
+use super::graph::Graph;
+use super::layer::{Chw, Layer};
+
+const CIFAR_IN: Chw = Chw { c: 3, h: 32, w: 32 };
+const IMAGENET_IN: Chw = Chw { c: 3, h: 224, w: 224 };
+
+fn conv_bn_relu(layers: &mut Vec<Layer>, in_ch: usize, out_ch: usize, k: usize, stride: usize) {
+    layers.push(Layer::Conv2d { in_ch, out_ch, k, stride, pad: k / 2 });
+    layers.push(Layer::BatchNorm);
+    layers.push(Layer::ReLU);
+}
+
+/// One CIFAR ResNet basic block (two 3×3 convs + identity/projection skip).
+fn basic_block(layers: &mut Vec<Layer>, in_ch: usize, out_ch: usize, stride: usize) {
+    let block_in = layers.len(); // index of the layer whose OUTPUT is the skip
+    layers.push(Layer::Conv2d { in_ch, out_ch, k: 3, stride, pad: 1 });
+    layers.push(Layer::BatchNorm);
+    layers.push(Layer::ReLU);
+    layers.push(Layer::Conv2d { in_ch: out_ch, out_ch, k: 3, stride: 1, pad: 1 });
+    layers.push(Layer::BatchNorm);
+    if stride == 1 && in_ch == out_ch {
+        // identity skip: add the output of the layer just before the block
+        layers.push(Layer::ResidualAdd {
+            from: block_in.wrapping_sub(1),
+        });
+    }
+    // (projection shortcuts are modelled as plain pass-through — their 1×1
+    // conv MACs are <2 % of a block and the paper's mapper ignores them too)
+    layers.push(Layer::ReLU);
+}
+
+/// CIFAR ResNet-{20,32,44}: 6n+2 layers with n blocks per stage.
+fn cifar_resnet(name: &str, n: usize, width: usize) -> Graph {
+    let mut layers = Vec::new();
+    let w = [width, 2 * width, 4 * width];
+    conv_bn_relu(&mut layers, 3, w[0], 3, 1);
+    for (stage, &ch) in w.iter().enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let in_ch = if b == 0 {
+                if stage == 0 { w[0] } else { w[stage - 1] }
+            } else {
+                ch
+            };
+            basic_block(&mut layers, in_ch, ch, stride);
+        }
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Flatten);
+    layers.push(Layer::Linear { in_features: w[2], out_features: 10 });
+    Graph { name: name.into(), input: CIFAR_IN, layers, classes: 10 }
+}
+
+/// ResNet-20 (n=3, 16/32/64 channels).
+pub fn resnet20() -> Graph {
+    cifar_resnet("resnet20", 3, 16)
+}
+
+/// ResNet-32 (n=5).
+pub fn resnet32() -> Graph {
+    cifar_resnet("resnet32", 5, 16)
+}
+
+/// ResNet-44 (n=7).
+pub fn resnet44() -> Graph {
+    cifar_resnet("resnet44", 7, 16)
+}
+
+/// Wide-ResNet-20 (4× width, as in the PSQ paper's WRN-20).
+pub fn wide_resnet20() -> Graph {
+    cifar_resnet("wide_resnet20", 3, 64)
+}
+
+/// CIFAR VGG builder from a channel plan ('M' = maxpool).
+fn vgg(name: &str, plan: &[i32]) -> Graph {
+    let mut layers = Vec::new();
+    let mut in_ch = 3;
+    for &p in plan {
+        if p < 0 {
+            layers.push(Layer::MaxPool { k: 2, stride: 2 });
+        } else {
+            conv_bn_relu(&mut layers, in_ch, p as usize, 3, 1);
+            in_ch = p as usize;
+        }
+    }
+    layers.push(Layer::Flatten);
+    layers.push(Layer::Linear { in_features: in_ch, out_features: 512 });
+    layers.push(Layer::ReLU);
+    layers.push(Layer::Linear { in_features: 512, out_features: 10 });
+    Graph { name: name.into(), input: CIFAR_IN, layers, classes: 10 }
+}
+
+/// VGG-9 (CIFAR): 6 conv + 2 FC (d_psgd repo variant the paper cites).
+pub fn vgg9() -> Graph {
+    vgg("vgg9", &[64, 64, -1, 128, 128, -1, 256, 256, -1, -1, -1])
+}
+
+/// VGG-11 (CIFAR).
+pub fn vgg11() -> Graph {
+    vgg(
+        "vgg11",
+        &[64, -1, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1],
+    )
+}
+
+/// ImageNet ResNet-18 (for the Fig. 5(b) comparison).
+pub fn resnet18() -> Graph {
+    let mut layers = Vec::new();
+    conv_bn_relu(&mut layers, 3, 64, 7, 2); // 7×7/2 stem
+    layers.push(Layer::MaxPool { k: 2, stride: 2 });
+    let stages: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+    let mut in_ch = 64;
+    for &(ch, first_stride) in &stages {
+        for b in 0..2 {
+            let stride = if b == 0 { first_stride } else { 1 };
+            basic_block(&mut layers, in_ch, ch, stride);
+            in_ch = ch;
+        }
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Flatten);
+    layers.push(Layer::Linear { in_features: 512, out_features: 1000 });
+    Graph {
+        name: "resnet18".into(),
+        input: IMAGENET_IN,
+        layers,
+        classes: 1000,
+    }
+}
+
+/// Look up a model by name. The paper's full benchmark set.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "resnet20" => Some(resnet20()),
+        "resnet32" => Some(resnet32()),
+        "resnet44" => Some(resnet44()),
+        "wide_resnet20" | "wrn20" => Some(wide_resnet20()),
+        "vgg9" => Some(vgg9()),
+        "vgg11" => Some(vgg11()),
+        "resnet18" => Some(resnet18()),
+        _ => None,
+    }
+}
+
+/// The CIFAR benchmark suite of Figs. 6–7.
+pub fn cifar_suite() -> Vec<Graph> {
+    vec![
+        resnet20(),
+        resnet32(),
+        resnet44(),
+        wide_resnet20(),
+        vgg9(),
+        vgg11(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_shape_check() {
+        for g in cifar_suite() {
+            let out = g.out_shape();
+            assert_eq!(out.c, 10, "{}", g.name);
+            assert!(g.macs() > 0);
+        }
+        assert_eq!(resnet18().out_shape().c, 1000);
+    }
+
+    #[test]
+    fn resnet20_param_count_ballpark() {
+        // Canonical ResNet-20 ≈ 0.27 M params (we skip projection 1×1s,
+        // so expect slightly below).
+        let p = resnet20().params();
+        assert!(p > 200_000 && p < 300_000, "params = {p}");
+    }
+
+    #[test]
+    fn resnet_depth_ordering() {
+        assert!(resnet32().macs() > resnet20().macs());
+        assert!(resnet44().macs() > resnet32().macs());
+        assert!(wide_resnet20().macs() > resnet44().macs());
+    }
+
+    #[test]
+    fn resnet18_macs_ballpark() {
+        // Canonical ResNet-18 ≈ 1.8 GMACs.
+        let m = resnet18().macs() as f64;
+        assert!(m > 1.0e9 && m < 2.5e9, "macs = {m}");
+    }
+
+    #[test]
+    fn vgg_structures() {
+        assert_eq!(vgg9().mvm_layers(), 6 + 2);
+        assert_eq!(vgg11().mvm_layers(), 8 + 2);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("resnet20").is_some());
+        assert!(by_name("wrn20").is_some());
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,222 @@
+//! Weight bit-slicing and input bit-streaming.
+//!
+//! In the paper's evaluation both `bit_slice` and `bit_stream` are 1: each
+//! 8T-SRAM cell stores one weight bit and the DAC streams one input bit per
+//! cycle. A logical weight column therefore expands into `w_bits` physical
+//! crossbar columns, and an activation is delivered over `x_bits` cycles.
+//!
+//! Signed weights use two's complement: bit `w_bits-1` (the MSB slice)
+//! carries weight `-2^{w_bits-1}`; all other slices carry `+2^i`. During
+//! PSQ training the per-column scale factor absorbs the slice weight and
+//! sign (the paper merges the `2^j` input shift into the scale factor too),
+//! but the *unquantized* reference MVM below keeps them explicit so tests
+//! can verify exact integer equivalence.
+
+/// Extract bit-plane `j` (0 = LSB) of a vector of unsigned activation codes.
+pub fn input_bitplane(x: &[i64], j: u32) -> Vec<u8> {
+    x.iter()
+        .map(|&v| {
+            debug_assert!(v >= 0, "activations must be unsigned codes (got {v})");
+            ((v >> j) & 1) as u8
+        })
+        .collect()
+}
+
+/// Extract bit-slice `i` of signed weight codes (two's complement over
+/// `w_bits`). Returns 0/1 per element.
+pub fn weight_bitslice(w: &[i64], i: u32, w_bits: u32) -> Vec<u8> {
+    assert!(i < w_bits);
+    w.iter()
+        .map(|&v| {
+            let lo = -(1i64 << (w_bits - 1));
+            let hi = (1i64 << (w_bits - 1)) - 1;
+            debug_assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
+            // two's complement bit pattern over w_bits
+            let pattern = (v as u64) & ((1u64 << w_bits) - 1);
+            ((pattern >> i) & 1) as u8
+        })
+        .collect()
+}
+
+/// Signed positional weight of bit-slice `i` in two's complement.
+#[inline]
+pub fn slice_weight(i: u32, w_bits: u32) -> i64 {
+    if i == w_bits - 1 {
+        -(1i64 << i)
+    } else {
+        1i64 << i
+    }
+}
+
+/// Popcount dot product of two bit vectors — the idealised analog column
+/// current for one (bit-slice, bit-stream) pair. Range `[0, len]`; for a
+/// 128-row crossbar this is the 7-bit value the paper says "ideally
+/// requires a 7-bit ADC".
+pub fn bit_dot(wbits: &[u8], xbits: &[u8]) -> i64 {
+    assert_eq!(wbits.len(), xbits.len());
+    wbits
+        .iter()
+        .zip(xbits)
+        .map(|(&w, &x)| (w & x) as i64)
+        .sum()
+}
+
+/// Exact integer MVM reconstructed from bit-slices and bit-streams:
+///
+/// `y[c] = Σ_i Σ_j slice_weight(i) · 2^j · bit_dot(W_slice_i[·,c], x_plane_j)`
+///
+/// Must equal the direct `Σ_k W[k,c]·x[k]`. This is the ground truth the
+/// PSQ path approximates and the equivalence every other implementation is
+/// tested against.
+pub fn bitwise_mvm(w: &Mat, x: &[i64], w_bits: u32, x_bits: u32) -> Vec<i64> {
+    assert_eq!(w.rows, x.len());
+    let mut y = vec![0i64; w.cols];
+    for j in 0..x_bits {
+        let xp = input_bitplane(x, j);
+        for i in 0..w_bits {
+            let sw = slice_weight(i, w_bits) * (1i64 << j);
+            for c in 0..w.cols {
+                let col = w.col(c);
+                let wb = weight_bitslice(&col, i, w_bits);
+                y[c] += sw * bit_dot(&wb, &xp);
+            }
+        }
+    }
+    y
+}
+
+/// Direct integer MVM: `y[c] = Σ_k W[k,c] · x[k]`.
+pub fn direct_mvm(w: &Mat, x: &[i64]) -> Vec<i64> {
+    assert_eq!(w.rows, x.len());
+    let mut y = vec![0i64; w.cols];
+    for k in 0..w.rows {
+        let xk = x[k];
+        if xk == 0 {
+            continue;
+        }
+        for c in 0..w.cols {
+            y[c] += w.at(k, c) * xk;
+        }
+    }
+    y
+}
+
+/// Dense row-major integer matrix (rows = crossbar wordlines,
+/// cols = crossbar bitlines).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> i64>(rows: usize, cols: usize, mut f: F) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<i64> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn bitplane_extracts_bits() {
+        let x = vec![0b1010, 0b0111];
+        assert_eq!(input_bitplane(&x, 0), vec![0, 1]);
+        assert_eq!(input_bitplane(&x, 1), vec![1, 1]);
+        assert_eq!(input_bitplane(&x, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn twos_complement_slices() {
+        // -3 in 4-bit two's complement = 1101
+        let w = vec![-3];
+        assert_eq!(weight_bitslice(&w, 0, 4), vec![1]);
+        assert_eq!(weight_bitslice(&w, 1, 4), vec![0]);
+        assert_eq!(weight_bitslice(&w, 2, 4), vec![1]);
+        assert_eq!(weight_bitslice(&w, 3, 4), vec![1]);
+    }
+
+    #[test]
+    fn slice_weight_signs() {
+        assert_eq!(slice_weight(0, 4), 1);
+        assert_eq!(slice_weight(2, 4), 4);
+        assert_eq!(slice_weight(3, 4), -8);
+    }
+
+    #[test]
+    fn reconstruct_single_weight() {
+        // value = Σ slice_weight(i)·bit_i must invert two's complement
+        for v in -8i64..=7 {
+            let w = vec![v];
+            let mut acc = 0;
+            for i in 0..4 {
+                acc += slice_weight(i, 4) * weight_bitslice(&w, i, 4)[0] as i64;
+            }
+            assert_eq!(acc, v, "failed for {v}");
+        }
+    }
+
+    #[test]
+    fn bitwise_mvm_equals_direct_mvm() {
+        check("bit-sliced MVM == direct MVM", 150, |g: &mut Gen| {
+            let rows = g.len(24);
+            let cols = g.len(12);
+            let w_bits = g.usize(2, 6) as u32;
+            let x_bits = g.usize(1, 6) as u32;
+            let lo = -(1i64 << (w_bits - 1));
+            let hi = (1i64 << (w_bits - 1)) - 1;
+            let w = {
+                let data = g.vec_i64(rows * cols, lo, hi);
+                Mat { rows, cols, data }
+            };
+            let x = g.vec_i64(rows, 0, (1i64 << x_bits) - 1);
+            assert_eq!(bitwise_mvm(&w, &x, w_bits, x_bits), direct_mvm(&w, &x));
+        });
+    }
+
+    #[test]
+    fn bit_dot_range() {
+        check("bit_dot in [0, rows]", 100, |g: &mut Gen| {
+            let n = g.len(64);
+            let a: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let d = bit_dot(&a, &b);
+            assert!(d >= 0 && d <= n as i64);
+        });
+    }
+
+    #[test]
+    fn mat_accessors() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as i64);
+        assert_eq!(m.at(1, 2), 12);
+        assert_eq!(m.col(1), vec![1, 11]);
+    }
+}

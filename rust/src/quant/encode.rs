@@ -1,0 +1,124 @@
+//! The 2-bit ternary encoding on the comparator → DCiM interface.
+//!
+//! Paper §4.2: "Given that p can take a negative value, we represent it
+//! using 2-bit numbers: `00` for 0, `01` for 1, and `11` for −1." The low
+//! bit enables the transmission gates TG₂,₃ (operate at all), the high bit
+//! selects subtraction (read the scale factor through TG₁ and use the
+//! borrow path).
+
+/// Encoded comparator output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PCode(pub u8);
+
+impl PCode {
+    pub const ZERO: PCode = PCode(0b00);
+    pub const PLUS: PCode = PCode(0b01);
+    pub const MINUS: PCode = PCode(0b11);
+
+    /// Encode a ternary value.
+    pub fn encode(p: i8) -> PCode {
+        match p {
+            0 => PCode::ZERO,
+            1 => PCode::PLUS,
+            -1 => PCode::MINUS,
+            _ => panic!("invalid ternary value {p}"),
+        }
+    }
+
+    /// Decode back to −1/0/+1.
+    pub fn decode(self) -> i8 {
+        match self.0 {
+            0b00 => 0,
+            0b01 => 1,
+            0b11 => -1,
+            other => panic!("invalid PCode bits {other:#04b}"),
+        }
+    }
+
+    /// Low bit: column participates in the DCiM op (TG₂,₃ on).
+    #[inline]
+    pub fn enable(self) -> bool {
+        self.0 & 0b01 != 0
+    }
+
+    /// High bit: operation is a subtraction (TG₁ on, borrow path).
+    #[inline]
+    pub fn subtract(self) -> bool {
+        self.0 & 0b10 != 0
+    }
+
+    pub fn is_valid(self) -> bool {
+        matches!(self.0, 0b00 | 0b01 | 0b11)
+    }
+}
+
+/// Encode a slice of ternary codes.
+pub fn encode_all(ps: &[i8]) -> Vec<PCode> {
+    ps.iter().map(|&p| PCode::encode(p)).collect()
+}
+
+/// Pack PCodes two-bits-each into bytes (wire format used when the
+/// coordinator ships comparator traces between tiles / to trace files).
+pub fn pack(codes: &[PCode]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    for (i, c) in codes.iter().enumerate() {
+        out[i / 4] |= (c.0 & 0b11) << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Unpack `n` PCodes from the packed wire format.
+pub fn unpack(bytes: &[u8], n: usize) -> Vec<PCode> {
+    assert!(bytes.len() * 4 >= n, "packed buffer too short");
+    (0..n)
+        .map(|i| PCode((bytes[i / 4] >> ((i % 4) * 2)) & 0b11))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn paper_encoding_values() {
+        assert_eq!(PCode::encode(0).0, 0b00);
+        assert_eq!(PCode::encode(1).0, 0b01);
+        assert_eq!(PCode::encode(-1).0, 0b11);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for p in [-1i8, 0, 1] {
+            assert_eq!(PCode::encode(p).decode(), p);
+        }
+    }
+
+    #[test]
+    fn control_bits_match_semantics() {
+        assert!(!PCode::ZERO.enable());
+        assert!(PCode::PLUS.enable());
+        assert!(PCode::MINUS.enable());
+        assert!(!PCode::PLUS.subtract());
+        assert!(PCode::MINUS.subtract());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ternary value")]
+    fn rejects_out_of_range() {
+        PCode::encode(2);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        check("pack/unpack roundtrip", 200, |g: &mut Gen| {
+            let n = g.len(257);
+            let ps: Vec<i8> = (0..n).map(|_| *g.choose(&[-1i8, 0, 1])).collect();
+            let codes = encode_all(&ps);
+            let packed = pack(&codes);
+            assert_eq!(packed.len(), n.div_ceil(4));
+            let back = unpack(&packed, n);
+            assert_eq!(back, codes);
+        });
+    }
+}

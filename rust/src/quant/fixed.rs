@@ -1,0 +1,162 @@
+//! Fixed-point quantization primitives.
+//!
+//! HCiM quantizes four tensor classes (paper §4.1): weights, activations,
+//! partial sums, and — the paper's addition over [25] — the *scale factors*
+//! themselves. All use symmetric uniform quantization with a single
+//! floating-point step size per tensor (per layer), which is what the
+//! LSQ-style trainer on the python side learns.
+
+/// Symmetric uniform quantizer: `q = clamp(round(x / step), qmin, qmax)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    /// Bit width (including sign bit when `signed`).
+    pub bits: u32,
+    /// Step size (learned in training; > 0).
+    pub step: f64,
+    /// Signed (two's-complement range) or unsigned.
+    pub signed: bool,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, step: f64, signed: bool) -> Quantizer {
+        assert!(bits >= 1 && bits <= 32, "unsupported bit width {bits}");
+        assert!(step > 0.0, "quantizer step must be positive");
+        Quantizer { bits, step, signed }
+    }
+
+    /// Smallest representable code.
+    pub fn qmin(&self) -> i64 {
+        if self.signed {
+            -(1i64 << (self.bits - 1))
+        } else {
+            0
+        }
+    }
+
+    /// Largest representable code.
+    pub fn qmax(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) - 1
+        }
+    }
+
+    /// Quantize one value to its integer code.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let q = (x / self.step).round() as i64;
+        q.clamp(self.qmin(), self.qmax())
+    }
+
+    /// Dequantize a code back to real value.
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * self.step
+    }
+
+    /// Round-trip (the "fake quantization" used during QAT).
+    pub fn fake_quant(&self, x: f64) -> f64 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Quantize a slice to codes.
+    pub fn quantize_all(&self, xs: &[f64]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// A reasonable initial step from data (LSQ init: `2·mean|x| / sqrt(qmax)`).
+    pub fn init_step(xs: &[f64], bits: u32, signed: bool) -> f64 {
+        let qmax = if signed {
+            ((1i64 << (bits - 1)) - 1) as f64
+        } else {
+            ((1i64 << bits) - 1) as f64
+        };
+        let mean_abs = if xs.is_empty() {
+            1.0
+        } else {
+            xs.iter().map(|x| x.abs()).sum::<f64>() / xs.len() as f64
+        };
+        (2.0 * mean_abs / qmax.sqrt()).max(1e-9)
+    }
+}
+
+/// Saturating accumulate into an `bits`-wide signed register — models the
+/// finite-width partial-sum memory row in the DCiM array (8-bit for the
+/// CIFAR configs, 16-bit for ImageNet).
+#[inline]
+pub fn sat_add(acc: i64, delta: i64, bits: u32) -> i64 {
+    let hi = (1i64 << (bits - 1)) - 1;
+    let lo = -(1i64 << (bits - 1));
+    (acc + delta).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn ranges_signed_unsigned() {
+        let q = Quantizer::new(4, 1.0, true);
+        assert_eq!((q.qmin(), q.qmax()), (-8, 7));
+        let u = Quantizer::new(4, 1.0, false);
+        assert_eq!((u.qmin(), u.qmax()), (0, 15));
+    }
+
+    #[test]
+    fn quantize_rounds_and_clamps() {
+        let q = Quantizer::new(4, 0.5, true);
+        assert_eq!(q.quantize(1.24), 2); // 2.48 → 2
+        assert_eq!(q.quantize(100.0), 7);
+        assert_eq!(q.quantize(-100.0), -8);
+    }
+
+    #[test]
+    fn fake_quant_error_bounded_by_half_step() {
+        check("fake quant error ≤ step/2 inside range", 300, |g: &mut Gen| {
+            let bits = g.usize(2, 8) as u32;
+            let step = g.f64(0.01, 2.0);
+            let q = Quantizer::new(bits, step, true);
+            // stay strictly inside the representable range
+            let lim = step * (q.qmax() as f64 - 0.5);
+            let x = g.f64(-lim, lim);
+            let err = (q.fake_quant(x) - x).abs();
+            assert!(err <= step / 2.0 + 1e-12, "err={err} step={step}");
+        });
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        check("fake quant idempotent", 200, |g: &mut Gen| {
+            let q = Quantizer::new(g.usize(2, 8) as u32, g.f64(0.01, 2.0), g.bool(0.5));
+            let x = g.f64(-10.0, 10.0);
+            let once = q.fake_quant(x);
+            assert!((q.fake_quant(once) - once).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn init_step_positive() {
+        assert!(Quantizer::init_step(&[], 4, true) > 0.0);
+        assert!(Quantizer::init_step(&[0.5, -1.0, 2.0], 8, true) > 0.0);
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        assert_eq!(sat_add(120, 10, 8), 127);
+        assert_eq!(sat_add(-120, -10, 8), -128);
+        assert_eq!(sat_add(5, 3, 8), 8);
+    }
+
+    #[test]
+    fn sat_add_never_leaves_range() {
+        check("sat_add stays in range", 300, |g: &mut Gen| {
+            let bits = g.usize(4, 16) as u32;
+            let hi = (1i64 << (bits - 1)) - 1;
+            let lo = -(1i64 << (bits - 1));
+            let acc = g.i64(lo, hi);
+            let delta = g.i64(-1000, 1000);
+            let r = sat_add(acc, delta, bits);
+            assert!(r >= lo && r <= hi);
+        });
+    }
+}

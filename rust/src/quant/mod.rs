@@ -1,0 +1,21 @@
+//! Fixed-point / PSQ arithmetic substrate (system S1 in DESIGN.md).
+//!
+//! This module defines the *functional semantics* of HCiM's datapath, in
+//! plain integer arithmetic:
+//!
+//! * [`fixed`] — fixed-point quantization of floating-point tensors,
+//! * [`bits`] — weight bit-slicing and input bit-streaming (bit-slice = 1,
+//!   bit-stream = 1, as in the paper's evaluation),
+//! * [`psq`] — binary / ternary partial-sum quantization with trainable
+//!   scale factors (the algorithm of Fig. 2(a)) and the reference PSQ-MVM,
+//! * [`encode`] — the 2-bit ternary encoding (`00`→0, `01`→+1, `11`→−1)
+//!   used on the comparator→DCiM interface.
+//!
+//! Everything downstream (the gate-level DCiM model in [`crate::sim::dcim`],
+//! the Pallas kernel in `python/compile/kernels/psq_mvm.py`) must agree with
+//! these semantics; the test suites check that agreement.
+
+pub mod fixed;
+pub mod bits;
+pub mod psq;
+pub mod encode;

@@ -1,0 +1,395 @@
+//! Partial-Sum Quantization (PSQ) — the algorithm of Fig. 2(a).
+//!
+//! For every physical crossbar column `c` (one weight bit-slice) and every
+//! input bit-stream `j`, the analog column output
+//! `ps = Σ_k w_bit[k,c] · x_bit[k,j]` is compared against a threshold and
+//! collapsed to a binary (`±1`) or ternary (`0, ±1`) code `p`. The code is
+//! multiplied by a trainable, *quantized* scale factor `s[c,j]` (the `2^j`
+//! input shift is merged into `s` during training, paper §4.2) and
+//! accumulated into the column's partial-sum register:
+//!
+//! `PS[c] = Σ_j p[c,j] · s[c,j]`      (saturating, `ps_bits` wide)
+//!
+//! The per-layer floating-point step sizes (for weights, activations and
+//! scale factors) are folded into batch-norm on the python side; the rust
+//! reference here works purely on integer codes plus one `f64` output step.
+
+use super::bits::{bit_dot, input_bitplane, weight_bitslice, Mat};
+use super::fixed::sat_add;
+use crate::util::rng::Rng;
+
+/// Partial-sum quantization mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PsqMode {
+    /// 1-bit: `p = +1 if ps ≥ θ else −1`.
+    Binary,
+    /// 1.5-bit: `p = +1 if ps ≥ θ+α; 0 if θ−α < ps < θ+α; −1 if ps ≤ θ−α`.
+    /// `α` is the paper's trainable threshold, held per layer (§4.1).
+    Ternary { alpha: f64 },
+}
+
+impl PsqMode {
+    /// "ADC precision" label used in the paper's tables (1 or 1.5 bits).
+    pub fn precision_label(&self) -> &'static str {
+        match self {
+            PsqMode::Binary => "1",
+            PsqMode::Ternary { .. } => "1.5",
+        }
+    }
+
+    /// Comparators needed per column (paper §4.2: 1 binary, 2 ternary).
+    pub fn comparators(&self) -> usize {
+        match self {
+            PsqMode::Binary => 1,
+            PsqMode::Ternary { .. } => 2,
+        }
+    }
+}
+
+/// Quantize a centred partial sum to its PSQ code `p ∈ {−1, 0, +1}`.
+#[inline]
+pub fn quantize_ps(centered: f64, mode: PsqMode) -> i8 {
+    match mode {
+        PsqMode::Binary => {
+            if centered >= 0.0 {
+                1
+            } else {
+                -1
+            }
+        }
+        PsqMode::Ternary { alpha } => {
+            if centered >= alpha {
+                1
+            } else if centered <= -alpha {
+                -1
+            } else {
+                0
+            }
+        }
+    }
+}
+
+/// Parameters of one PSQ crossbar "macro" invocation.
+#[derive(Clone, Debug)]
+pub struct PsqLayerParams {
+    /// Quantization mode (binary / ternary).
+    pub mode: PsqMode,
+    /// Comparator reference (per layer; trainable). The raw popcount column
+    /// output is compared against this.
+    pub theta: f64,
+    /// Weight precision in bits (bit-slice = 1 → also the physical columns
+    /// per logical output).
+    pub w_bits: u32,
+    /// Activation precision in bits (bit-stream = 1 → also the number of
+    /// input cycles, and of scale-factor rows: Eq. 2).
+    pub x_bits: u32,
+    /// Partial-sum register width (8 for CIFAR configs, 16 for ImageNet).
+    pub ps_bits: u32,
+    /// Quantized scale-factor codes, `[x_bits × cols]` row-major:
+    /// `scales[j * cols + c]` multiplies `p[c,j]`.
+    pub scales: Vec<i64>,
+    /// Per-layer output step (dequantizes `PS`; folded into BN in the net).
+    pub out_step: f64,
+}
+
+impl PsqLayerParams {
+    /// Scale factors per crossbar — Eq. 2 of the paper
+    /// (`input_precision / bit_stream × #columns`, bit_stream = 1).
+    pub fn num_scale_factors(&self, cols: usize) -> usize {
+        self.x_bits as usize * cols
+    }
+
+    /// Heuristic "calibration" initialisation used when no trained scales
+    /// are supplied: `s[c,j] ≈ E[ps−θ | sign] · 2^j`-ish. Good enough for
+    /// functional/energy simulation; real values come from QAT artifacts.
+    pub fn calibrated(
+        w: &Mat,
+        mode: PsqMode,
+        w_bits: u32,
+        x_bits: u32,
+        ps_bits: u32,
+        rng: &mut Rng,
+    ) -> PsqLayerParams {
+        let phys_cols = w.cols * w_bits as usize;
+        let theta = w.rows as f64 * 0.25; // mean popcount for dense 0/1 bits
+        // keep codes within a 4-bit signed scale-factor range (the CIFAR
+        // configs' sf_bits) so they load into any DCiM geometry
+        let sf_max = 7i64;
+        let mut scales = Vec::with_capacity(x_bits as usize * phys_cols);
+        for j in 0..x_bits {
+            for _c in 0..phys_cols {
+                // magnitude grows with the input bit position (2^j merged in),
+                // with small trained jitter
+                let base = (1i64 << j) as f64 * (1.0 + 0.25 * rng.normal());
+                scales.push((base.round() as i64).clamp(1, sf_max));
+            }
+        }
+        PsqLayerParams {
+            mode,
+            theta,
+            w_bits,
+            x_bits,
+            ps_bits,
+            scales,
+            out_step: 1.0,
+        }
+    }
+}
+
+/// Output of the reference PSQ-MVM over one crossbar.
+#[derive(Clone, Debug)]
+pub struct PsqOutput {
+    /// Final per-column partial sums `PS[c]` (integer codes).
+    pub ps: Vec<i64>,
+    /// The comparator codes, `[x_bits × cols]` row-major
+    /// (`p[j * cols + c]`) — consumed by the DCiM model and sparsity stats.
+    pub p: Vec<i8>,
+    /// Raw (pre-comparator) popcount partial sums, same layout. Used by the
+    /// ADC-baseline model and for accuracy analysis.
+    pub raw: Vec<i64>,
+}
+
+/// Reference (bit-exact) PSQ matrix-vector product over one crossbar.
+///
+/// `w` holds *signed weight codes* (`w_bits`-bit two's complement); each
+/// logical column is expanded to `w_bits` physical bit-slice columns, so the
+/// physical column count is `w.cols * w_bits` and must match
+/// `params.scales.len() / x_bits`.
+pub fn psq_mvm(w: &Mat, x: &[i64], params: &PsqLayerParams) -> PsqOutput {
+    assert_eq!(w.rows, x.len(), "input/crossbar row mismatch");
+    let phys_cols = w.cols * params.w_bits as usize;
+    assert_eq!(
+        params.scales.len(),
+        params.x_bits as usize * phys_cols,
+        "scale factor table shape mismatch"
+    );
+
+    // Pre-extract physical column bit vectors (weight-stationary: this is
+    // the program-once cost).
+    let mut colbits: Vec<Vec<u8>> = Vec::with_capacity(phys_cols);
+    for lc in 0..w.cols {
+        let col = w.col(lc);
+        for i in 0..params.w_bits {
+            colbits.push(weight_bitslice(&col, i, params.w_bits));
+        }
+    }
+
+    let mut ps = vec![0i64; phys_cols];
+    let mut p_all = vec![0i8; params.x_bits as usize * phys_cols];
+    let mut raw_all = vec![0i64; params.x_bits as usize * phys_cols];
+    for j in 0..params.x_bits {
+        let xp = input_bitplane(x, j);
+        for c in 0..phys_cols {
+            let raw = bit_dot(&colbits[c], &xp);
+            let p = quantize_ps(raw as f64 - params.theta, params.mode);
+            let idx = j as usize * phys_cols + c;
+            raw_all[idx] = raw;
+            p_all[idx] = p;
+            if p != 0 {
+                let s = params.scales[idx];
+                ps[c] = sat_add(ps[c], p as i64 * s, params.ps_bits);
+            }
+        }
+    }
+    PsqOutput { ps, p: p_all, raw: raw_all }
+}
+
+/// Combine the physical bit-slice columns of each logical output back into
+/// neuron values. With the slice weight/sign merged into the trained scale
+/// factors this is a plain adder tree (the degenerate shift-and-add of
+/// §4.2); `out_step` converts the integer code to a real activation.
+pub fn combine_slices(ps: &[i64], w_bits: u32, out_step: f64) -> Vec<f64> {
+    let w_bits = w_bits as usize;
+    assert_eq!(ps.len() % w_bits, 0);
+    ps.chunks(w_bits)
+        .map(|chunk| chunk.iter().sum::<i64>() as f64 * out_step)
+        .collect()
+}
+
+/// Sparsity statistics over comparator codes (Fig. 2(c) / §4.2.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SparsityStats {
+    pub total: usize,
+    pub zeros: usize,
+    pub plus: usize,
+    pub minus: usize,
+}
+
+impl SparsityStats {
+    pub fn from_codes(p: &[i8]) -> SparsityStats {
+        let mut s = SparsityStats { total: p.len(), ..Default::default() };
+        for &v in p {
+            match v {
+                0 => s.zeros += 1,
+                1 => s.plus += 1,
+                -1 => s.minus += 1,
+                _ => panic!("invalid PSQ code {v}"),
+            }
+        }
+        s
+    }
+
+    /// Fraction of `p = 0` — the energy-saving opportunity exploited by the
+    /// DCiM sparsity controller.
+    pub fn zero_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.zeros as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SparsityStats) {
+        self.total += other.total;
+        self.zeros += other.zeros;
+        self.plus += other.plus;
+        self.minus += other.minus;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn rand_mat(g: &mut Gen, rows: usize, cols: usize, w_bits: u32) -> Mat {
+        let lo = -(1i64 << (w_bits - 1));
+        let hi = (1i64 << (w_bits - 1)) - 1;
+        let data = g.vec_i64(rows * cols, lo, hi);
+        Mat { rows, cols, data }
+    }
+
+    #[test]
+    fn quantize_ps_binary_never_zero() {
+        check("binary PSQ emits ±1 only", 200, |g| {
+            let v = g.f64(-50.0, 50.0);
+            let p = quantize_ps(v, PsqMode::Binary);
+            assert!(p == 1 || p == -1);
+            assert_eq!(p == 1, v >= 0.0);
+        });
+    }
+
+    #[test]
+    fn quantize_ps_ternary_deadzone() {
+        let m = PsqMode::Ternary { alpha: 2.0 };
+        assert_eq!(quantize_ps(2.0, m), 1);
+        assert_eq!(quantize_ps(1.99, m), 0);
+        assert_eq!(quantize_ps(-1.99, m), 0);
+        assert_eq!(quantize_ps(-2.0, m), -1);
+    }
+
+    #[test]
+    fn ternary_alpha_zero_is_binary_except_origin() {
+        check("ternary α=0 ≈ binary", 200, |g| {
+            let v = g.f64(-10.0, 10.0);
+            if v != 0.0 {
+                assert_eq!(
+                    quantize_ps(v, PsqMode::Ternary { alpha: 0.0 }),
+                    quantize_ps(v, PsqMode::Binary)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn psq_shapes_and_eq2() {
+        let mut g = crate::util::rng::Rng::new(5);
+        let w = Mat::from_fn(16, 8, |r, c| ((r * c) as i64 % 15) - 7);
+        let params = PsqLayerParams::calibrated(
+            &w,
+            PsqMode::Ternary { alpha: 1.0 },
+            4,
+            4,
+            8,
+            &mut g,
+        );
+        let phys_cols = 8 * 4;
+        // Eq. 2: #SF = x_bits × #columns
+        assert_eq!(params.num_scale_factors(phys_cols), 4 * phys_cols);
+        let x: Vec<i64> = (0..16).map(|i| i % 16).collect();
+        let out = psq_mvm(&w, &x, &params);
+        assert_eq!(out.ps.len(), phys_cols);
+        assert_eq!(out.p.len(), 4 * phys_cols);
+        assert_eq!(out.raw.len(), 4 * phys_cols);
+        let y = combine_slices(&out.ps, 4, params.out_step);
+        assert_eq!(y.len(), 8);
+    }
+
+    #[test]
+    fn ps_within_register_range() {
+        check("PS respects ps_bits saturation", 60, |g: &mut Gen| {
+            let rows = g.len(32).max(2);
+            let cols = g.len(6).max(1);
+            let w_bits = 4u32;
+            let x_bits = 4u32;
+            let ps_bits = 8u32;
+            let w = rand_mat(g, rows, cols, w_bits);
+            let mut rng = crate::util::rng::Rng::new(g.seed);
+            let params = PsqLayerParams::calibrated(
+                &w,
+                PsqMode::Binary,
+                w_bits,
+                x_bits,
+                ps_bits,
+                &mut rng,
+            );
+            let x = g.vec_i64(rows, 0, 15);
+            let out = psq_mvm(&w, &x, &params);
+            for &v in &out.ps {
+                assert!(v >= -128 && v <= 127, "PS {v} escapes 8-bit register");
+            }
+        });
+    }
+
+    #[test]
+    fn binary_mode_has_zero_sparsity() {
+        check("binary PSQ p≠0", 40, |g: &mut Gen| {
+            let rows = g.len(24).max(2);
+            let w = rand_mat(g, rows, 4, 4);
+            let mut rng = crate::util::rng::Rng::new(g.seed ^ 1);
+            let params =
+                PsqLayerParams::calibrated(&w, PsqMode::Binary, 4, 4, 8, &mut rng);
+            let x = g.vec_i64(rows, 0, 15);
+            let out = psq_mvm(&w, &x, &params);
+            let stats = SparsityStats::from_codes(&out.p);
+            assert_eq!(stats.zeros, 0);
+            assert_eq!(stats.zero_fraction(), 0.0);
+        });
+    }
+
+    #[test]
+    fn ternary_large_alpha_all_zero() {
+        let w = Mat::from_fn(8, 2, |r, c| (r as i64 + c as i64) % 3 - 1);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut params = PsqLayerParams::calibrated(
+            &w,
+            PsqMode::Ternary { alpha: 1e9 },
+            4,
+            2,
+            8,
+            &mut rng,
+        );
+        params.theta = 0.0;
+        let x = vec![3; 8];
+        let out = psq_mvm(&w, &x, &params);
+        assert!(out.ps.iter().all(|&v| v == 0));
+        assert_eq!(SparsityStats::from_codes(&out.p).zero_fraction(), 1.0);
+    }
+
+    #[test]
+    fn sparsity_merge() {
+        let mut a = SparsityStats::from_codes(&[0, 1, -1, 0]);
+        let b = SparsityStats::from_codes(&[1, 1]);
+        a.merge(&b);
+        assert_eq!(a.total, 6);
+        assert_eq!(a.zeros, 2);
+        assert_eq!(a.plus, 3);
+        assert_eq!(a.minus, 1);
+    }
+
+    #[test]
+    fn comparator_counts() {
+        assert_eq!(PsqMode::Binary.comparators(), 1);
+        assert_eq!(PsqMode::Ternary { alpha: 1.0 }.comparators(), 2);
+    }
+}

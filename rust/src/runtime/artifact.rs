@@ -1,0 +1,150 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Model name (e.g. "resnet20-slim").
+    pub model: String,
+    /// PSQ mode the checkpoint was trained with.
+    pub mode: String,
+    /// Input image side length (square, 3 channels).
+    pub image: usize,
+    pub classes: usize,
+    pub w_bits: u32,
+    pub x_bits: u32,
+    pub sf_bits: u32,
+    pub ps_bits: u32,
+    pub xbar_rows: usize,
+    /// Held-out accuracy at export time.
+    pub test_acc: f64,
+    /// Expected logits for the deterministic linspace input (end-to-end
+    /// numeric cross-check written by aot.py).
+    pub golden_logits: Vec<f64>,
+    /// batch size → HLO file name.
+    pub batches: BTreeMap<usize, String>,
+    /// Directory the manifest lives in (files resolve relative to it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut batches = BTreeMap::new();
+        let bobj = j
+            .get("batches")
+            .and_then(|b| b.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'batches'"))?;
+        for (k, v) in bobj {
+            let b: usize = k.parse().map_err(|_| anyhow::anyhow!("bad batch key {k}"))?;
+            let f = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("batch file must be a string"))?;
+            batches.insert(b, f.to_string());
+        }
+        anyhow::ensure!(!batches.is_empty(), "manifest has no executables");
+        Ok(Manifest {
+            model: j.str_field("model")?.to_string(),
+            mode: j.str_field("mode")?.to_string(),
+            image: j.num_field("image")? as usize,
+            classes: j.num_field("classes")? as usize,
+            w_bits: j.num_field("w_bits")? as u32,
+            x_bits: j.num_field("x_bits")? as u32,
+            sf_bits: j.num_field("sf_bits")? as u32,
+            ps_bits: j.num_field("ps_bits")? as u32,
+            xbar_rows: j.num_field("xbar_rows")? as usize,
+            test_acc: j.num_field("test_acc").unwrap_or(f64::NAN),
+            golden_logits: j
+                .get("golden_logits")
+                .and_then(|g| g.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default(),
+            batches,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Input element count for one sample.
+    pub fn input_elems(&self) -> usize {
+        self.image * self.image * 3
+    }
+
+    /// Largest exported batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.batches.keys().max().unwrap()
+    }
+
+    /// Smallest exported batch size that fits `n` samples (or the max).
+    pub fn batch_for(&self, n: usize) -> usize {
+        self.batches
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Path of the executable for batch size `b`.
+    pub fn hlo_path(&self, b: usize) -> crate::Result<PathBuf> {
+        let f = self
+            .batches
+            .get(&b)
+            .ok_or_else(|| anyhow::anyhow!("no executable for batch size {b}"))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn demo_json() -> &'static str {
+        r#"{"model": "tiny", "mode": "ternary", "image": 8, "classes": 10,
+            "w_bits": 4, "x_bits": 4, "sf_bits": 4, "ps_bits": 8,
+            "xbar_rows": 128, "test_acc": 0.5,
+            "batches": {"1": "model_b1.hlo.txt", "8": "model_b8.hlo.txt"}}"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("hcim_manifest_test1");
+        write_manifest(&dir, demo_json());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.input_elems(), 192);
+        assert_eq!(m.max_batch(), 8);
+        assert_eq!(m.batch_for(1), 1);
+        assert_eq!(m.batch_for(3), 8);
+        assert_eq!(m.batch_for(100), 8);
+        assert!(m.hlo_path(8).unwrap().ends_with("model_b8.hlo.txt"));
+        assert!(m.hlo_path(4).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let dir = std::env::temp_dir().join("hcim_manifest_test2");
+        write_manifest(&dir, r#"{"model": "x"}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("hcim_manifest_test3_nonexistent");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

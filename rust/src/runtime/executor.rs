@@ -1,0 +1,123 @@
+//! PJRT execution engine: compile the HLO-text artifacts once, execute
+//! batched inferences from the serving loop.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API over
+//! xla_extension 0.5.1). Interchange is HLO **text** — see
+//! `python/compile/aot.py` and /opt/xla-example/README.md for why the
+//! serialized-proto path is a dead end on this image.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifact::Manifest;
+
+/// One compiled model: a PJRT executable per exported batch size.
+pub struct Engine {
+    pub manifest: Manifest,
+    /// Kept alive for the executables' lifetime (PJRT requires it).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// batch size → compiled executable. `PjRtLoadedExecutable::execute`
+    /// takes `&self`, but the underlying buffers are guarded to be safe
+    /// with the multi-worker coordinator.
+    executables: BTreeMap<usize, Mutex<xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Load + compile every executable in the artifact directory.
+    pub fn load(artifact_dir: &Path) -> crate::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        crate::log_info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut executables = BTreeMap::new();
+        for (&b, _) in &manifest.batches {
+            let path = manifest.hlo_path(b)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling batch-{b}: {e:?}"))?;
+            crate::log_info!("compiled {} (batch {b})", path.display());
+            executables.insert(b, Mutex::new(exe));
+        }
+        Ok(Engine { manifest, client, executables })
+    }
+
+    /// Available batch sizes.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+
+    /// Execute one batch. `images` is row-major `[n × (image²·3)]` f32 with
+    /// `n ≤ batch`; short batches are zero-padded to the executable's
+    /// shape. Returns `n` logit vectors.
+    pub fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<Vec<f32>>> {
+        let m = &self.manifest;
+        let elems = m.input_elems();
+        anyhow::ensure!(images.len() == n * elems, "input length mismatch");
+        let b = m.batch_for(n);
+        let exe = self
+            .executables
+            .get(&b)
+            .ok_or_else(|| anyhow::anyhow!("no executable for batch {b}"))?;
+
+        // pad to the executable's fixed batch
+        let mut padded = vec![0f32; b * elems];
+        padded[..images.len()].copy_from_slice(images);
+        let input = xla::Literal::vec1(&padded)
+            .reshape(&[b as i64, m.image as i64, m.image as i64, 3])
+            .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+
+        let guard = exe.lock().expect("executable mutex poisoned");
+        let result = guard
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        drop(guard);
+
+        // aot.py lowers with return_tuple=True → 1-tuple of logits
+        let logits_lit = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let flat = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(flat.len() == b * m.classes, "unexpected logits size");
+        Ok(flat
+            .chunks(m.classes)
+            .take(n)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+
+    /// Argmax helper for classification results.
+    pub fn classify(&self, images: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        Ok(self
+            .infer(images, n)?
+            .iter()
+            .map(|logits| {
+                logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+// The PJRT client and executables are internally thread-safe at the C API
+// level for independent executions; we serialise per-executable via Mutex.
+unsafe impl Sync for Engine {}
+unsafe impl Send for Engine {}

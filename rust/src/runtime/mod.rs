@@ -1,0 +1,9 @@
+//! PJRT runtime (S14): load the AOT artifacts the python build path wrote
+//! and execute them from the serving hot path. Python is never on this
+//! path — the artifacts are self-contained HLO text.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::Manifest;
+pub use executor::Engine;

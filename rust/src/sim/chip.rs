@@ -1,0 +1,104 @@
+//! Chip-level composition (S8): tiles + buffers + interconnect.
+//!
+//! PUMA-style: a layer's crossbars live in tiles fed from an activation
+//! buffer; per invocation the input vector is read from the buffer,
+//! broadcast to the layer's row tiles, partial sums from row tiles are
+//! gathered over the shared bus and accumulated, and outputs are written
+//! back. Config B (64×64) quadruples the crossbar count and with it this
+//! traffic — the effect Fig. 7 isolates.
+
+use crate::config::hardware::HcimConfig;
+use crate::sim::components::memory::{Buffer, Noc};
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::mapping::LayerMapping;
+use crate::sim::params::CalibParams;
+
+/// Data-movement cost of ONE invocation of one mapped layer (excluding
+/// the in-tile MVM itself).
+pub fn layer_movement_cost(
+    lm: &LayerMapping,
+    cfg: &HcimConfig,
+    params: &CalibParams,
+) -> CostLedger {
+    let mut l = CostLedger::new();
+    let buffer = Buffer::new(64 * 1024);
+
+    // input vector: read once per row tile set, broadcast to col tiles
+    let in_bytes = lm.mvm.rows * (cfg.x_bits as usize).div_ceil(8).max(1);
+    buffer.read(in_bytes, params, &mut l);
+    Noc.transfer(in_bytes, 1, params, &mut l);
+
+    // inter-crossbar partial-sum gather + accumulate (row tiling)
+    let psum_bytes = lm.psum_traffic_bytes(cfg);
+    if psum_bytes > 0 {
+        Noc.transfer(psum_bytes, 1, params, &mut l);
+        // digital accumulation of gathered partials
+        let adds = (lm.row_tiles - 1) * lm.mvm.cols * cfg.w_bits as usize;
+        l.add_energy_n(
+            Component::ShiftAdd,
+            params.shiftadd_pj * adds as f64,
+            adds as u64,
+        );
+    }
+
+    // outputs written back to the buffer
+    let out_bytes = lm.mvm.cols * (cfg.x_bits as usize).div_ceil(8).max(1);
+    buffer.write(out_bytes, params, &mut l);
+    l
+}
+
+/// One-time cost of streaming the model's input image on chip.
+pub fn input_load_cost(bytes: usize, params: &CalibParams) -> CostLedger {
+    let mut l = CostLedger::new();
+    crate::sim::components::memory::OffChip.read(bytes, params, &mut l);
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::sim::mapping::ModelMapping;
+
+    #[test]
+    fn movement_scales_with_row_tiles() {
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let g = zoo::resnet20();
+        let m = ModelMapping::build(&g, &cfg);
+        let single = m.layers.iter().find(|l| l.row_tiles == 1).unwrap();
+        let multi = m.layers.iter().find(|l| l.row_tiles > 1).unwrap();
+        let c1 = layer_movement_cost(single, &cfg, &params);
+        let cn = layer_movement_cost(multi, &cfg, &params);
+        assert_eq!(c1.energy(Component::ShiftAdd), 0.0);
+        assert!(cn.energy(Component::ShiftAdd) > 0.0);
+        assert!(cn.energy(Component::Interconnect) > c1.energy(Component::Interconnect));
+    }
+
+    #[test]
+    fn config_b_moves_more() {
+        let params = CalibParams::at_65nm();
+        let g = zoo::resnet20();
+        let total = |cfg: &HcimConfig| -> f64 {
+            ModelMapping::build(&g, cfg)
+                .layers
+                .iter()
+                .map(|l| {
+                    layer_movement_cost(l, cfg, &params).total_energy_pj()
+                        * l.mvm.invocations as f64
+                })
+                .sum()
+        };
+        assert!(
+            total(&HcimConfig::config_b()) > total(&HcimConfig::config_a()),
+            "Fig. 7 premise: smaller crossbars → more movement"
+        );
+    }
+
+    #[test]
+    fn input_load_books_offchip() {
+        let params = CalibParams::at_65nm();
+        let l = input_load_cost(3 * 32 * 32, &params);
+        assert!(l.energy(Component::OffChip) > 0.0);
+    }
+}

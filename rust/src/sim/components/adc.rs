@@ -1,0 +1,139 @@
+//! ADC model (S3) — used by the *baseline* analog-CiM accelerators only
+//! (HCiM's whole point is to remove this block).
+//!
+//! Functionally a mid-rise uniform quantizer over the column popcount
+//! range; costs come from the Table-3 specs. Per the paper's system setup
+//! ("we consider only 1 ADC ... per analog CiM crossbar"), conversions for
+//! the crossbar's columns are *serialised* through the single ADC, which is
+//! exactly why the DCiM array wins on latency.
+
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::AdcSpec;
+
+/// An ADC instance (one per crossbar in the baselines).
+#[derive(Clone, Copy, Debug)]
+pub struct Adc {
+    pub spec: AdcSpec,
+    /// Full-scale input range: the maximum popcount (= crossbar rows).
+    pub full_scale: i64,
+}
+
+impl Adc {
+    pub fn new(spec: AdcSpec, full_scale: i64) -> Adc {
+        assert!(full_scale > 0);
+        Adc { spec, full_scale }
+    }
+
+    /// Number of levels.
+    pub fn levels(&self) -> i64 {
+        1i64 << self.spec.bits
+    }
+
+    /// Quantize one analog column value (popcount in `[0, full_scale]`) to
+    /// the nearest code, booking one conversion.
+    pub fn convert(&self, value: i64, ledger: &mut CostLedger) -> i64 {
+        ledger.add_energy(Component::Adc, self.spec.energy_pj);
+        self.quantize(value)
+    }
+
+    /// Functional quantization without booking.
+    pub fn quantize(&self, value: i64) -> i64 {
+        let v = value.clamp(0, self.full_scale) as f64;
+        let levels = self.levels() as f64;
+        let step = self.full_scale as f64 / (levels - 1.0);
+        (v / step).round() as i64
+    }
+
+    /// Reconstruct the analog estimate from a code.
+    pub fn dequantize(&self, code: i64) -> f64 {
+        let levels = self.levels() as f64;
+        let step = self.full_scale as f64 / (levels - 1.0);
+        code as f64 * step
+    }
+
+    /// Convert a whole column vector *serially* (1 ADC per crossbar):
+    /// books `n` conversions and the serialised latency.
+    pub fn convert_columns(&self, values: &[i64], ledger: &mut CostLedger) -> Vec<i64> {
+        ledger.add_energy_n(
+            Component::Adc,
+            self.spec.energy_pj * values.len() as f64,
+            values.len() as u64,
+        );
+        ledger.add_latency(self.spec.latency_ns * values.len() as f64);
+        values.iter().map(|&v| self.quantize(v)).collect()
+    }
+
+    /// Worst-case reconstruction error (half an LSB step).
+    pub fn max_error(&self) -> f64 {
+        self.full_scale as f64 / ((self.levels() - 1) as f64) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::params::{ADC_FLASH4, ADC_SAR6, ADC_SAR7};
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn seven_bit_is_lossless_for_128_rows() {
+        // 128×128 crossbar "ideally requires 7-bit ADC" (§5.2): popcounts
+        // 0..=128 fit 2^7+1 levels... the paper treats 7 bits as exact for
+        // 128 rows; max error stays below 1 code unit.
+        let adc = Adc::new(ADC_SAR7, 128);
+        for v in [0i64, 1, 64, 127, 128] {
+            let err = (adc.dequantize(adc.quantize(v)) - v as f64).abs();
+            assert!(err <= adc.max_error() + 1e-9, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn six_bit_enough_for_64_rows() {
+        let adc = Adc::new(ADC_SAR6, 64);
+        check("6-bit ADC error ≤ half step on 64 rows", 100, |g: &mut Gen| {
+            let v = g.i64(0, 64);
+            let err = (adc.dequantize(adc.quantize(v)) - v as f64).abs();
+            assert!(err <= adc.max_error() + 1e-9);
+        });
+    }
+
+    #[test]
+    fn four_bit_is_lossy() {
+        let adc = Adc::new(ADC_FLASH4, 128);
+        // some value must land off-grid by more than 1
+        let worst = (0..=128)
+            .map(|v| (adc.dequantize(adc.quantize(v)) - v as f64).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst > 2.0, "4-bit over 128 rows should be lossy, worst={worst}");
+    }
+
+    #[test]
+    fn serial_conversion_costs() {
+        let adc = Adc::new(ADC_SAR7, 128);
+        let mut l = CostLedger::new();
+        let vals = vec![10i64; 128];
+        adc.convert_columns(&vals, &mut l);
+        assert_eq!(l.ops(Component::Adc), 128);
+        assert!((l.energy(Component::Adc) - 128.0 * 4.1).abs() < 1e-9);
+        assert!((l.latency_ns - 128.0 * 1.52).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let adc = Adc::new(ADC_FLASH4, 64);
+        assert_eq!(adc.quantize(-5), 0);
+        assert_eq!(adc.quantize(1000), adc.levels() - 1);
+    }
+
+    #[test]
+    fn monotone() {
+        let adc = Adc::new(ADC_FLASH4, 128);
+        check("ADC codes monotone in input", 100, |g: &mut Gen| {
+            let a = g.i64(0, 128);
+            let b = g.i64(0, 128);
+            if a <= b {
+                assert!(adc.quantize(a) <= adc.quantize(b));
+            }
+        });
+    }
+}

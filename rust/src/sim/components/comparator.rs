@@ -1,0 +1,106 @@
+//! Column comparator bank (S4) — HCiM's replacement for the ADC.
+//!
+//! One dynamic-bias latch comparator per column for binary PSQ, two for
+//! ternary (paper §4.2, comparator from Bindra et al. JSSC'18). All columns
+//! compare in parallel in a fraction of a crossbar cycle, producing the
+//! 2-bit `p` codes that drive the DCiM array.
+
+use crate::quant::encode::{encode_all, PCode};
+use crate::quant::psq::{quantize_ps, PsqMode};
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+
+/// A bank of comparators covering one crossbar's columns.
+#[derive(Clone, Copy, Debug)]
+pub struct ComparatorBank {
+    pub mode: PsqMode,
+    /// Comparator reference (θ in the PSQ equations).
+    pub theta: f64,
+    pub cols: usize,
+}
+
+impl ComparatorBank {
+    pub fn new(mode: PsqMode, theta: f64, cols: usize) -> ComparatorBank {
+        ComparatorBank { mode, theta, cols }
+    }
+
+    /// Comparators physically present (1 or 2 per column).
+    pub fn count(&self) -> usize {
+        self.mode.comparators() * self.cols
+    }
+
+    /// Compare all column popcounts in parallel; books one decision per
+    /// comparator and a single (parallel) latency step.
+    pub fn compare(&self, raw: &[i64], params: &CalibParams, ledger: &mut CostLedger) -> Vec<PCode> {
+        assert_eq!(raw.len(), self.cols, "column count mismatch");
+        ledger.add_energy_n(
+            Component::Comparator,
+            params.comparator_pj * self.count() as f64,
+            self.count() as u64,
+        );
+        ledger.add_latency(params.comparator_ns);
+        let ps: Vec<i8> = raw
+            .iter()
+            .map(|&v| quantize_ps(v as f64 - self.theta, self.mode))
+            .collect();
+        encode_all(&ps)
+    }
+
+    /// Functional comparison without booking.
+    pub fn compare_pure(&self, raw: &[i64]) -> Vec<PCode> {
+        let ps: Vec<i8> = raw
+            .iter()
+            .map(|&v| quantize_ps(v as f64 - self.theta, self.mode))
+            .collect();
+        encode_all(&ps)
+    }
+
+    /// Bank area.
+    pub fn area_mm2(&self, params: &CalibParams) -> f64 {
+        params.comparator_area_mm2 * self.count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternary_uses_twice_the_comparators() {
+        let b = ComparatorBank::new(PsqMode::Binary, 32.0, 128);
+        let t = ComparatorBank::new(PsqMode::Ternary { alpha: 4.0 }, 32.0, 128);
+        assert_eq!(b.count(), 128);
+        assert_eq!(t.count(), 256);
+        let p = CalibParams::at_65nm();
+        assert!(t.area_mm2(&p) > b.area_mm2(&p));
+    }
+
+    #[test]
+    fn compare_matches_psq_quantizer() {
+        let bank = ComparatorBank::new(PsqMode::Ternary { alpha: 2.0 }, 10.0, 5);
+        let raw = vec![0, 9, 10, 12, 20];
+        let codes = bank.compare_pure(&raw);
+        let decoded: Vec<i8> = codes.iter().map(|c| c.decode()).collect();
+        // centred: -10 (≤ -α ⇒ -1), -1 (dead zone), 0, +2 (≥ α ⇒ +1), +10
+        assert_eq!(decoded, vec![-1, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn parallel_latency_single_step() {
+        let bank = ComparatorBank::new(PsqMode::Binary, 0.0, 128);
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        bank.compare(&vec![1; 128], &p, &mut l);
+        assert!((l.latency_ns - p.comparator_ns).abs() < 1e-12);
+        assert_eq!(l.ops(Component::Comparator), 128);
+    }
+
+    #[test]
+    fn codes_are_valid_pcodes() {
+        let bank = ComparatorBank::new(PsqMode::Ternary { alpha: 1.0 }, 5.0, 16);
+        let raw: Vec<i64> = (0..16).collect();
+        for c in bank.compare_pure(&raw) {
+            assert!(c.is_valid());
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Analog CiM crossbar (S2).
+//!
+//! Functional model: an 8T-SRAM charge-based crossbar (Ali et al., CICC'23)
+//! storing one weight bit per cell (bit-slice = 1). For each streamed input
+//! bit-plane the column output is the idealised popcount dot product
+//! (`quant::bits::bit_dot`). Since the paper's scale factors are processed
+//! digitally, "they do not incur any computation error" (§3) — analog
+//! non-ideality enters only through the PSQ comparator path, which QAT
+//! absorbs; the simulator therefore uses exact integer column sums, like
+//! the paper's own accuracy pipeline.
+//!
+//! Cost model: per bit-stream cycle the crossbar spends wordline-driver
+//! energy on the active rows plus column read energy on every column;
+//! latency is one crossbar cycle per stream (pipelined with the column
+//! periphery downstream).
+
+use crate::quant::bits::{input_bitplane, weight_bitslice, Mat};
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+
+/// A programmed crossbar holding bit-sliced weights (weight-stationary).
+///
+/// Hot-path representation (EXPERIMENTS.md §Perf): each physical column's
+/// cell bits are packed into a `u128` mask over the (≤128) wordlines, so
+/// one analog column evaluation is `(col & plane).count_ones()` — the
+/// idealised popcount current in a single instruction.
+#[derive(Clone, Debug)]
+pub struct Crossbar {
+    pub rows: usize,
+    pub cols: usize,
+    /// Per physical column: bit r = cell (r, c).
+    cells: Vec<u128>,
+}
+
+impl Crossbar {
+    /// Program from signed weight codes: logical matrix `w` (rows ×
+    /// logical-cols) expands each logical column into `w_bits` physical
+    /// bit-slice columns.
+    pub fn program(w: &Mat, w_bits: u32) -> Crossbar {
+        assert!(w.rows <= 128, "one crossbar has at most 128 wordlines");
+        let mut cells = Vec::with_capacity(w.cols * w_bits as usize);
+        for lc in 0..w.cols {
+            let col = w.col(lc);
+            for i in 0..w_bits {
+                cells.push(pack_bits(&weight_bitslice(&col, i, w_bits)));
+            }
+        }
+        Crossbar { rows: w.rows, cols: cells.len(), cells }
+    }
+
+    /// Program raw physical bits directly (for tests / tiling).
+    pub fn from_bits(raw: Vec<Vec<u8>>) -> Crossbar {
+        let rows = raw.first().map(|c| c.len()).unwrap_or(0);
+        assert!(rows <= 128, "one crossbar has at most 128 wordlines");
+        assert!(raw.iter().all(|c| c.len() == rows), "ragged columns");
+        let cells: Vec<u128> = raw.iter().map(|c| pack_bits(c)).collect();
+        Crossbar { rows, cols: cells.len(), cells }
+    }
+
+    /// One analog evaluation for input bit-plane `j` of activation codes
+    /// `x`: returns the per-column popcount partial sums and books the
+    /// energy/latency of one crossbar cycle.
+    pub fn evaluate_stream(
+        &self,
+        x: &[i64],
+        j: u32,
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> Vec<i64> {
+        assert_eq!(x.len(), self.rows, "input length != crossbar rows");
+        let plane = pack_bits(&input_bitplane(x, j));
+        let active_rows = plane.count_ones() as usize;
+        // wordline drivers fire only for set input bits
+        ledger.add_energy_n(
+            Component::InputDriver,
+            params.driver_row_pj * active_rows as f64,
+            active_rows as u64,
+        );
+        // every column discharges/settles
+        ledger.add_energy_n(
+            Component::Crossbar,
+            params.xbar_col_pj * self.cols as f64,
+            self.cols as u64,
+        );
+        ledger.add_latency(params.xbar_cycle_ns);
+        self.cells
+            .iter()
+            .map(|col| (col & plane).count_ones() as i64)
+            .collect()
+    }
+
+    /// Pure functional evaluation (no cost booking) — used by oracles.
+    pub fn evaluate_stream_pure(&self, x: &[i64], j: u32) -> Vec<i64> {
+        let plane = pack_bits(&input_bitplane(x, j));
+        self.cells
+            .iter()
+            .map(|col| (col & plane).count_ones() as i64)
+            .collect()
+    }
+
+    /// Crossbar silicon area.
+    pub fn area_mm2(&self, params: &CalibParams) -> f64 {
+        (self.rows * self.cols) as f64 * params.xbar_cell_area_mm2
+    }
+}
+
+/// Pack a 0/1 byte vector into a `u128` mask (bit i = element i).
+#[inline]
+fn pack_bits(bits: &[u8]) -> u128 {
+    debug_assert!(bits.len() <= 128);
+    let mut m = 0u128;
+    for (i, &b) in bits.iter().enumerate() {
+        m |= (b as u128 & 1) << i;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bits::{bitwise_mvm, Mat};
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn program_expands_bit_slices() {
+        let w = Mat::from_fn(4, 2, |r, c| (r as i64 + c as i64) - 2);
+        let xb = Crossbar::program(&w, 4);
+        assert_eq!(xb.rows, 4);
+        assert_eq!(xb.cols, 8); // 2 logical × 4 bits
+    }
+
+    #[test]
+    fn stream_outputs_match_bit_dot_reconstruction() {
+        check("crossbar streams reconstruct exact MVM", 60, |g: &mut Gen| {
+            let rows = g.len(16).max(2);
+            let cols = g.len(4).max(1);
+            let w_bits = 4u32;
+            let x_bits = 3u32;
+            let w = Mat {
+                rows,
+                cols,
+                data: g.vec_i64(rows * cols, -8, 7),
+            };
+            let x = g.vec_i64(rows, 0, 7);
+            let xb = Crossbar::program(&w, w_bits);
+            // reconstruct y from raw streams with explicit slice weights
+            let mut y = vec![0i64; cols];
+            for j in 0..x_bits {
+                let ps = xb.evaluate_stream_pure(&x, j);
+                for lc in 0..cols {
+                    for i in 0..w_bits as usize {
+                        let sw = crate::quant::bits::slice_weight(i as u32, w_bits);
+                        y[lc] += sw * (1i64 << j) * ps[lc * w_bits as usize + i];
+                    }
+                }
+            }
+            assert_eq!(y, bitwise_mvm(&w, &x, w_bits, x_bits));
+        });
+    }
+
+    #[test]
+    fn books_energy_per_stream() {
+        let w = Mat::from_fn(8, 2, |_, _| 3);
+        let xb = Crossbar::program(&w, 4);
+        let params = CalibParams::at_65nm();
+        let mut ledger = CostLedger::new();
+        let x = vec![1i64; 8]; // bit 0 set on all rows
+        xb.evaluate_stream(&x, 0, &params, &mut ledger);
+        assert!(ledger.energy(Component::Crossbar) > 0.0);
+        assert!(ledger.energy(Component::InputDriver) > 0.0);
+        assert_eq!(ledger.latency_ns, params.xbar_cycle_ns);
+        // zero input plane → no driver energy
+        let mut l2 = CostLedger::new();
+        xb.evaluate_stream(&x, 3, &params, &mut l2); // bit 3 of 1 is 0
+        assert_eq!(l2.energy(Component::InputDriver), 0.0);
+    }
+
+    #[test]
+    fn area_scales_with_cells() {
+        let params = CalibParams::at_65nm();
+        let small = Crossbar::from_bits(vec![vec![0; 64]; 64]);
+        let big = Crossbar::from_bits(vec![vec![0; 128]; 128]);
+        assert!((big.area_mm2(&params) / small.area_mm2(&params) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged_columns() {
+        Crossbar::from_bits(vec![vec![0; 4], vec![0; 5]]);
+    }
+}

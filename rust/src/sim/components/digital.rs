@@ -1,0 +1,145 @@
+//! Digital periphery: shift-and-add tree, registers, and the digital
+//! multiplier used by the Quarry baseline's scale-factor path.
+
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+
+/// Shift-and-add unit combining bit-slice / bit-stream partial results in
+/// the baseline accelerators (PUMA-style). In HCiM the input-bit shift is
+/// merged into the scale factors and the slice combination degenerates to a
+/// plain adder tree, so HCiM books far fewer of these.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShiftAdd;
+
+impl ShiftAdd {
+    /// Combine `n` values with shifts; books `n` ops and one latency step
+    /// (the tree is pipelined at the array cadence).
+    pub fn combine(
+        &self,
+        codes: &[i64],
+        shifts: &[u32],
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> i64 {
+        assert_eq!(codes.len(), shifts.len());
+        ledger.add_energy_n(
+            Component::ShiftAdd,
+            params.shiftadd_pj * codes.len() as f64,
+            codes.len() as u64,
+        );
+        codes
+            .iter()
+            .zip(shifts)
+            .map(|(&c, &s)| c << s)
+            .sum()
+    }
+
+    /// Signed variant with an explicit sign per term (MSB slice negative).
+    pub fn combine_signed(
+        &self,
+        codes: &[i64],
+        shifts: &[u32],
+        signs: &[i64],
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> i64 {
+        assert_eq!(codes.len(), shifts.len());
+        assert_eq!(codes.len(), signs.len());
+        ledger.add_energy_n(
+            Component::ShiftAdd,
+            params.shiftadd_pj * codes.len() as f64,
+            codes.len() as u64,
+        );
+        codes
+            .iter()
+            .zip(shifts.iter().zip(signs))
+            .map(|(&c, (&s, &sg))| sg * (c << s))
+            .sum()
+    }
+}
+
+/// Register file access helper.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Registers;
+
+impl Registers {
+    /// Book `n` register accesses.
+    pub fn access(&self, n: usize, params: &CalibParams, ledger: &mut CostLedger) {
+        ledger.add_energy_n(Component::Register, params.register_pj * n as f64, n as u64);
+    }
+}
+
+/// Digital multiplier (Quarry's floating/fixed scale-factor multiply; the
+/// energy is PUMA's digital multiplier, paper §5.3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Multiplier;
+
+impl Multiplier {
+    /// `value × scale`, booking one multiply.
+    pub fn multiply(
+        &self,
+        value: i64,
+        scale: i64,
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> i64 {
+        ledger.add_energy(Component::Multiplier, params.multiplier_pj);
+        value * scale
+    }
+
+    /// Book `n` multiplies at once (hot-path batch form).
+    pub fn multiply_batch(&self, n: usize, params: &CalibParams, ledger: &mut CostLedger) {
+        ledger.add_energy_n(
+            Component::Multiplier,
+            params.multiplier_pj * n as f64,
+            n as u64,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shiftadd_combines_with_shifts() {
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        let v = ShiftAdd.combine(&[1, 1, 1], &[0, 1, 2], &p, &mut l);
+        assert_eq!(v, 7);
+        assert_eq!(l.ops(Component::ShiftAdd), 3);
+    }
+
+    #[test]
+    fn signed_combine_matches_twos_complement() {
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        // 4-bit value -3 = 1101: bits (1,0,1,1), MSB negative
+        let v = ShiftAdd.combine_signed(
+            &[1, 0, 1, 1],
+            &[0, 1, 2, 3],
+            &[1, 1, 1, -1],
+            &p,
+            &mut l,
+        );
+        assert_eq!(v, -3);
+    }
+
+    #[test]
+    fn multiplier_books_energy() {
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        assert_eq!(Multiplier.multiply(6, 7, &p, &mut l), 42);
+        assert!((l.energy(Component::Multiplier) - p.multiplier_pj).abs() < 1e-12);
+        Multiplier.multiply_batch(10, &p, &mut l);
+        assert_eq!(l.ops(Component::Multiplier), 11);
+    }
+
+    #[test]
+    fn registers_book_per_access() {
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        Registers.access(5, &p, &mut l);
+        assert!((l.energy(Component::Register) - 5.0 * p.register_pj).abs() < 1e-12);
+    }
+}

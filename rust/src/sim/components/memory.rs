@@ -1,0 +1,117 @@
+//! On-chip buffers, the shared bus / NoC, and off-chip DRAM (S8 pieces).
+//!
+//! PUMA-style: each tile owns an eDRAM/SRAM activation buffer; tiles talk
+//! over a shared bus; layer inputs/outputs and inter-crossbar partial sums
+//! ride that bus. The Fig 2(c) strawman (scale factors streamed from
+//! off-chip every MVM) uses the DRAM path.
+
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+
+/// Tile-local activation buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Buffer {
+    /// Capacity in bytes (capacity pressure spills to the next level).
+    pub capacity_bytes: usize,
+}
+
+impl Buffer {
+    pub fn new(capacity_bytes: usize) -> Buffer {
+        Buffer { capacity_bytes }
+    }
+
+    /// Book a read of `bytes`.
+    pub fn read(&self, bytes: usize, params: &CalibParams, ledger: &mut CostLedger) {
+        ledger.add_energy_n(
+            Component::Buffer,
+            params.buffer_byte_pj * bytes as f64,
+            bytes as u64,
+        );
+    }
+
+    /// Book a write of `bytes`.
+    pub fn write(&self, bytes: usize, params: &CalibParams, ledger: &mut CostLedger) {
+        ledger.add_energy_n(
+            Component::Buffer,
+            params.buffer_byte_pj * bytes as f64,
+            bytes as u64,
+        );
+    }
+}
+
+/// Shared bus / NoC between tiles.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Noc;
+
+impl Noc {
+    /// Move `bytes` over `hops` hops; books energy and transfer latency.
+    pub fn transfer(
+        &self,
+        bytes: usize,
+        hops: usize,
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) {
+        let h = hops.max(1);
+        ledger.add_energy_n(
+            Component::Interconnect,
+            params.noc_byte_pj * (bytes * h) as f64,
+            bytes as u64,
+        );
+        ledger.add_latency(params.noc_byte_ns * bytes as f64);
+    }
+}
+
+/// Off-chip DRAM channel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffChip;
+
+impl OffChip {
+    pub fn read(&self, bytes: usize, params: &CalibParams, ledger: &mut CostLedger) {
+        ledger.add_energy_n(
+            Component::OffChip,
+            params.offchip_byte_pj * bytes as f64,
+            bytes as u64,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_books_per_byte() {
+        let p = CalibParams::at_65nm();
+        let mut l = CostLedger::new();
+        Buffer::new(65536).read(100, &p, &mut l);
+        Buffer::new(65536).write(50, &p, &mut l);
+        assert!((l.energy(Component::Buffer) - 150.0 * p.buffer_byte_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noc_scales_with_hops() {
+        let p = CalibParams::at_65nm();
+        let mut l1 = CostLedger::new();
+        Noc.transfer(64, 1, &p, &mut l1);
+        let mut l3 = CostLedger::new();
+        Noc.transfer(64, 3, &p, &mut l3);
+        assert!(
+            (l3.energy(Component::Interconnect) / l1.energy(Component::Interconnect) - 3.0).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn offchip_is_much_pricier_than_buffer() {
+        let p = CalibParams::at_65nm();
+        let mut on = CostLedger::new();
+        Buffer::new(1024).read(100, &p, &mut on);
+        let mut off = CostLedger::new();
+        OffChip.read(100, &p, &mut off);
+        assert!(
+            off.energy(Component::OffChip) > 50.0 * on.energy(Component::Buffer),
+            "DRAM must dominate on-chip access (Fig 2(c) premise)"
+        );
+    }
+}

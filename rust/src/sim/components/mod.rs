@@ -1,0 +1,11 @@
+//! Hardware component models (S2–S4, S8 pieces).
+//!
+//! Each component couples *functional* behaviour (where needed) with cost
+//! booking against a [`crate::sim::energy::CostLedger`] using the
+//! calibration constants in [`crate::sim::params`].
+
+pub mod crossbar;
+pub mod adc;
+pub mod comparator;
+pub mod digital;
+pub mod memory;

@@ -1,0 +1,36 @@
+//! The Digital CiM (DCiM) scale-factor array — the paper's central
+//! hardware contribution (S5, S6).
+//!
+//! A 10T-SRAM array (après IMPULSE, Agrawal et al. SSCL'21) stores, per
+//! crossbar column, the `x_bits` quantized scale-factor words stacked over
+//! the partial-sum word (bits vertical; Table 1: 24×128 for config A).
+//! Activating one scale-factor bit row together with one partial-sum bit
+//! row places their wired-**OR** on `RBL` and wired-**NAND** on `RBLB`;
+//! the column peripheral latches both and computes a full-adder /
+//! full-subtractor bit, storing the result back — a 3-cycle
+//! **Read–Compute–Store** pipeline (Fig. 4).
+//!
+//! The paper's two innovations modelled here:
+//! * **In-memory subtraction in 3 cycles** (§4.2.1): OR/NAND alone cannot
+//!   produce the borrow `B_out = ĀB + B·B_in + B_in·Ā`; HCiM reads the
+//!   scale-factor bit `B` in parallel through the idle write path (TG₁)
+//!   during the Read cycle, after which
+//!   `B_out = B·NAND + B_in·(OR·NAND)̄` — see [`periph`].
+//! * **Sparsity clock gating** (§4.2.2): columns whose comparator code is
+//!   `p = 0` keep TG₁‑₃ off (no bit-line discharge), clock-gate their
+//!   adder, and skip the store — see [`sparsity`].
+//!
+//! Modules:
+//! * [`sram`] — the 10T bit-cell array (`u128` row masks; ≤128 columns),
+//! * [`periph`] — scalar gate-level column peripheral (truth-table tested),
+//! * [`sparsity`] — the sparsity-control block (masks + gating stats),
+//! * [`pipeline`] — Read–Compute–Store timing model,
+//! * [`array`] — the full array: vectorized bit-serial add/sub of scale
+//!   factors into partial sums, energy/latency booking, and equivalence
+//!   with the integer PSQ reference.
+
+pub mod sram;
+pub mod periph;
+pub mod sparsity;
+pub mod pipeline;
+pub mod array;

@@ -1,0 +1,171 @@
+//! Column peripheral — the 1-bit full adder / full subtractor of Fig. 3(d).
+//!
+//! Inputs available to the peripheral after the **Read** cycle:
+//! * `or`   — wired-OR of the two activated rows (latched from `RBL`),
+//! * `nand` — wired-NAND (latched from `RBLB`),
+//! * `b`    — the scale-factor bit itself, read in parallel through the
+//!   idle write bit-line via TG₁ — *only valid when subtracting* (`p=-1`);
+//!   this is the paper's novel enabler for 3-cycle in-memory subtraction,
+//! * `cin`  — the carry/borrow flip-flop from the previous bit step.
+//!
+//! Gate derivations (A = partial-sum bit, B = scale-factor bit):
+//! * `XOR = OR · NAND` (A⊕B from the two latched values),
+//! * Sum/Difference `= XOR ⊕ Cin` (identical for add and subtract),
+//! * Carry `C_out = A·B + Cin·(A⊕B) = NAND̄ + Cin·XOR`,
+//! * Borrow `B_out = Ā·B + Cin·(A⊕B)̄ = B·NAND + Cin·XOR̄`
+//!   (uses the TG₁-read `B`: when `B=1`, `NAND = Ā` so `B·NAND = Ā·B`;
+//!   when `B=0`, both terms with B vanish),
+//! * a MUX selected by `p` picks carry vs borrow (CB_out in Fig. 3(d)).
+
+/// Operation selected by the comparator code `p`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColOp {
+    /// `p = 01`: PS += SF (full adder).
+    Add,
+    /// `p = 11`: PS −= SF (full subtractor via the TG₁ path).
+    Sub,
+    /// `p = 00`: column gated — no bit-line activity, no store.
+    Gated,
+}
+
+/// Result of one peripheral bit-step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitStep {
+    /// Sum/Difference bit to store back into the partial-sum row.
+    pub d: bool,
+    /// Carry (add) or borrow (sub) for the next bit step (CB_out).
+    pub cb: bool,
+}
+
+/// One bit-step of the column peripheral.
+///
+/// `a` is only used to emulate the latched lines; hardware sees `or`,
+/// `nand`, `b_tg1`, `cin` — the function body uses exactly those.
+pub fn col_step(op: ColOp, or: bool, nand: bool, b_tg1: bool, cin: bool) -> BitStep {
+    match op {
+        ColOp::Gated => BitStep { d: false, cb: false },
+        ColOp::Add => {
+            let xor = or && nand;
+            let d = xor ^ cin;
+            let cb = !nand || (cin && xor);
+            BitStep { d, cb }
+        }
+        ColOp::Sub => {
+            let xor = or && nand;
+            let d = xor ^ cin;
+            let cb = (b_tg1 && nand) || (cin && !xor);
+            BitStep { d, cb }
+        }
+    }
+}
+
+/// Convenience wrapper taking the raw cell bits (A = PS bit, B = SF bit)
+/// and deriving the latched line values, as the array model does.
+pub fn col_step_bits(op: ColOp, a: bool, b: bool, cin: bool) -> BitStep {
+    col_step(op, a || b, !(a && b), b, cin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive truth-table check of the full adder against arithmetic.
+    #[test]
+    fn full_adder_truth_table() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let s = col_step_bits(ColOp::Add, a, b, cin);
+                    let total = a as u8 + b as u8 + cin as u8;
+                    assert_eq!(s.d, total & 1 == 1, "sum a={a} b={b} cin={cin}");
+                    assert_eq!(s.cb, total >= 2, "carry a={a} b={b} cin={cin}");
+                }
+            }
+        }
+    }
+
+    /// Exhaustive truth-table check of the full subtractor (D = A−B−Bin)
+    /// against Eq. 3/4 of the paper.
+    #[test]
+    fn full_subtractor_truth_table() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for bin in [false, true] {
+                    let s = col_step_bits(ColOp::Sub, a, b, bin);
+                    // Eq. 3: D = A ⊕ B ⊕ Bin
+                    assert_eq!(s.d, a ^ b ^ bin, "diff a={a} b={b} bin={bin}");
+                    // Eq. 4: Bout = ĀB + B·Bin + Bin·Ā
+                    let bout = (!a && b) || (b && bin) || (bin && !a);
+                    assert_eq!(s.cb, bout, "borrow a={a} b={b} bin={bin}");
+                }
+            }
+        }
+    }
+
+    /// The borrow genuinely needs the TG₁-read B: feeding a wrong `b`
+    /// changes the borrow in at least one input combination (this is why
+    /// prior work needed an extra cycle — §4.2.1).
+    #[test]
+    fn borrow_depends_on_tg1_value() {
+        let mut differs = false;
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let or = a || b;
+                    let nand = !(a && b);
+                    let right = col_step(ColOp::Sub, or, nand, b, cin);
+                    let wrong = col_step(ColOp::Sub, or, nand, !b, cin);
+                    if right.cb != wrong.cb {
+                        differs = true;
+                    }
+                }
+            }
+        }
+        assert!(differs, "borrow must be sensitive to the TG1-read bit");
+    }
+
+    /// Carry, in contrast, is computable from OR/NAND alone (no TG₁ use).
+    #[test]
+    fn carry_ignores_tg1() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let or = a || b;
+                    let nand = !(a && b);
+                    assert_eq!(
+                        col_step(ColOp::Add, or, nand, b, cin),
+                        col_step(ColOp::Add, or, nand, !b, cin)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gated_column_is_inert() {
+        for or in [false, true] {
+            for nand in [false, true] {
+                for cin in [false, true] {
+                    let s = col_step(ColOp::Gated, or, nand, true, cin);
+                    assert_eq!(s, BitStep { d: false, cb: false });
+                }
+            }
+        }
+    }
+
+    /// Difference and Sum share the same gate (paper: "the Difference bit
+    /// is same as the Sum bit of a full adder").
+    #[test]
+    fn sum_equals_difference_gate() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    assert_eq!(
+                        col_step_bits(ColOp::Add, a, b, cin).d,
+                        col_step_bits(ColOp::Sub, a, b, cin).d
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Sparsity-control block (§4.2.2).
+//!
+//! Consumes the 2-bit comparator codes and produces the per-column control
+//! masks for one DCiM word-op: which columns add, which subtract, and which
+//! are gated entirely (`p = 0`): their bit-lines stay precharged (TG₁‑₃
+//! off), their peripherals are clock-gated, and the Store cycle skips them.
+//! The block also accumulates the gating statistics the energy model and
+//! Fig. 5(a) consume.
+
+use crate::quant::encode::PCode;
+
+/// Per-word-op control masks (bit `c` = column `c`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ColMasks {
+    /// Columns performing PS += SF (p = 01).
+    pub add: u128,
+    /// Columns performing PS −= SF (p = 11).
+    pub sub: u128,
+}
+
+impl ColMasks {
+    /// Columns doing *any* work.
+    #[inline]
+    pub fn active(&self) -> u128 {
+        self.add | self.sub
+    }
+
+    /// Decode comparator codes into masks. Panics on invalid codes
+    /// (hardware can't receive them: the encoder never emits `10`).
+    pub fn from_codes(codes: &[PCode]) -> ColMasks {
+        assert!(codes.len() <= 128);
+        let mut m = ColMasks::default();
+        for (c, code) in codes.iter().enumerate() {
+            assert!(code.is_valid(), "invalid p code at column {c}");
+            if code.enable() {
+                if code.subtract() {
+                    m.sub |= 1u128 << c;
+                } else {
+                    m.add |= 1u128 << c;
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Running gating statistics across a simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatingStats {
+    /// Column word-ops that ran (p ≠ 0).
+    pub active_ops: u64,
+    /// Column word-ops gated away (p = 0).
+    pub gated_ops: u64,
+    /// How many of the active ops were subtractions.
+    pub sub_ops: u64,
+}
+
+impl GatingStats {
+    pub fn record(&mut self, masks: &ColMasks, cols: usize) {
+        let active = masks.active().count_ones() as u64;
+        self.active_ops += active;
+        self.gated_ops += cols as u64 - active;
+        self.sub_ops += masks.sub.count_ones() as u64;
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.active_ops + self.gated_ops
+    }
+
+    /// Measured sparsity (fraction of gated column ops).
+    pub fn sparsity(&self) -> f64 {
+        if self.total_ops() == 0 {
+            0.0
+        } else {
+            self.gated_ops as f64 / self.total_ops() as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &GatingStats) {
+        self.active_ops += other.active_ops;
+        self.gated_ops += other.gated_ops;
+        self.sub_ops += other.sub_ops;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::encode::encode_all;
+
+    #[test]
+    fn masks_from_codes() {
+        let codes = encode_all(&[1, 0, -1, 1]);
+        let m = ColMasks::from_codes(&codes);
+        assert_eq!(m.add, 0b1001);
+        assert_eq!(m.sub, 0b0100);
+        assert_eq!(m.active(), 0b1101);
+    }
+
+    #[test]
+    fn add_sub_disjoint() {
+        use crate::util::prop::check;
+        check("add/sub masks disjoint", 100, |g| {
+            let n = g.usize(1, 128);
+            let ps: Vec<i8> = (0..n).map(|_| *g.choose(&[-1i8, 0, 1])).collect();
+            let m = ColMasks::from_codes(&encode_all(&ps));
+            assert_eq!(m.add & m.sub, 0);
+            assert_eq!(
+                m.active().count_ones() as usize,
+                ps.iter().filter(|&&p| p != 0).count()
+            );
+        });
+    }
+
+    #[test]
+    fn stats_track_sparsity() {
+        let mut st = GatingStats::default();
+        let m = ColMasks::from_codes(&encode_all(&[1, 0, 0, -1]));
+        st.record(&m, 4);
+        st.record(&m, 4);
+        assert_eq!(st.total_ops(), 8);
+        assert_eq!(st.gated_ops, 4);
+        assert_eq!(st.sub_ops, 2);
+        assert!((st.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_zero_sparsity() {
+        assert_eq!(GatingStats::default().sparsity(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid p code")]
+    fn invalid_code_rejected() {
+        ColMasks::from_codes(&[PCode(0b10)]);
+    }
+}

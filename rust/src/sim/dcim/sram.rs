@@ -1,0 +1,160 @@
+//! 10T-SRAM bit-cell array with dual-row wired-OR / wired-NAND read.
+//!
+//! Rows are stored as `u128` bit masks (bit `c` = column `c`), so every
+//! array-wide operation is a handful of word ops — this is what makes the
+//! cycle-accurate model fast enough to simulate full networks (see
+//! EXPERIMENTS.md §Perf). One physical array serves ≤128 columns (config
+//! A uses exactly 128); larger systems instantiate more arrays.
+
+/// Bit-cell array: `rows × cols`, cols ≤ 128.
+#[derive(Clone, Debug)]
+pub struct SramArray {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<u128>,
+}
+
+impl SramArray {
+    pub fn new(rows: usize, cols: usize) -> SramArray {
+        assert!(cols >= 1 && cols <= 128, "one array serves 1..=128 columns");
+        SramArray { rows, cols, data: vec![0; rows] }
+    }
+
+    /// Mask with a 1 for every implemented column.
+    #[inline]
+    pub fn col_mask(&self) -> u128 {
+        if self.cols == 128 {
+            u128::MAX
+        } else {
+            (1u128 << self.cols) - 1
+        }
+    }
+
+    /// Read a single row (word-line read through the 10T read port).
+    #[inline]
+    pub fn read_row(&self, r: usize) -> u128 {
+        self.data[r]
+    }
+
+    /// Write a full row (bits outside `mask` keep their old value).
+    #[inline]
+    pub fn write_row_masked(&mut self, r: usize, value: u128, mask: u128) {
+        let m = mask & self.col_mask();
+        self.data[r] = (self.data[r] & !m) | (value & m);
+    }
+
+    /// Write a full row unconditionally.
+    #[inline]
+    pub fn write_row(&mut self, r: usize, value: u128) {
+        self.data[r] = value & self.col_mask();
+    }
+
+    /// Dual-row read: activate `RWL_a` and `RWL_b` simultaneously; the
+    /// pre-charged read bit-line discharges if *either* cell holds 1
+    /// (wired-OR on `RBL`) while the complementary line yields the NAND
+    /// (`RBLB`). Returns `(or, nand)` masks.
+    #[inline]
+    pub fn dual_read(&self, a: usize, b: usize) -> (u128, u128) {
+        let ra = self.data[a];
+        let rb = self.data[b];
+        (ra | rb, !(ra & rb) & self.col_mask())
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(c < self.cols);
+        (self.data[r] >> c) & 1 == 1
+    }
+
+    /// Set one bit.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(c < self.cols);
+        if v {
+            self.data[r] |= 1u128 << c;
+        } else {
+            self.data[r] &= !(1u128 << c);
+        }
+    }
+
+    /// Number of 1-bits in a row (used by write-energy accounting).
+    #[inline]
+    pub fn row_popcount(&self, r: usize) -> u32 {
+        self.data[r].count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn dual_read_is_or_nand() {
+        let mut a = SramArray::new(2, 8);
+        a.write_row(0, 0b1100_1010);
+        a.write_row(1, 0b1010_0110);
+        let (or, nand) = a.dual_read(0, 1);
+        assert_eq!(or, 0b1110_1110);
+        assert_eq!(nand, !(0b1000_0010u128) & 0xFF);
+    }
+
+    #[test]
+    fn col_mask_bounds() {
+        assert_eq!(SramArray::new(1, 128).col_mask(), u128::MAX);
+        assert_eq!(SramArray::new(1, 5).col_mask(), 0b11111);
+    }
+
+    #[test]
+    fn masked_write_preserves_other_columns() {
+        let mut a = SramArray::new(1, 8);
+        a.write_row(0, 0b1111_0000);
+        a.write_row_masked(0, 0b0000_1111, 0b0011_0011);
+        // old 11110000 keeps bits outside the mask (11000000); the masked
+        // bits take the new value (00001111 & 00110011 = 00000011)
+        assert_eq!(a.read_row(0), 0b1100_0011);
+    }
+
+    #[test]
+    fn bit_accessors() {
+        let mut a = SramArray::new(4, 16);
+        a.set(2, 7, true);
+        assert!(a.get(2, 7));
+        a.set(2, 7, false);
+        assert!(!a.get(2, 7));
+    }
+
+    #[test]
+    fn writes_clipped_to_columns() {
+        let mut a = SramArray::new(1, 4);
+        a.write_row(0, u128::MAX);
+        assert_eq!(a.read_row(0), 0b1111);
+        assert_eq!(a.row_popcount(0), 4);
+    }
+
+    #[test]
+    fn dual_read_truth_table_per_column() {
+        check("dual read matches per-bit OR/NAND", 100, |g: &mut Gen| {
+            let cols = g.usize(1, 128);
+            let mut a = SramArray::new(2, cols);
+            for c in 0..cols {
+                a.set(0, c, g.bool(0.5));
+                a.set(1, c, g.bool(0.5));
+            }
+            let (or, nand) = a.dual_read(0, 1);
+            for c in 0..cols {
+                let x = a.get(0, c);
+                let y = a.get(1, c);
+                assert_eq!((or >> c) & 1 == 1, x | y);
+                assert_eq!((nand >> c) & 1 == 1, !(x & y));
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=128")]
+    fn too_many_columns_rejected() {
+        SramArray::new(1, 129);
+    }
+}

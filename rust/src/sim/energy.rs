@@ -1,0 +1,320 @@
+//! Energy / latency / area accounting.
+//!
+//! Every simulated hardware event books energy into a [`CostLedger`] under a
+//! [`Component`] tag; latency is tracked by the pipeline models and added as
+//! critical-path time. The ledger is what the experiment runners turn into
+//! the paper's tables and figures (energy, latency×area, EDAP).
+
+use std::fmt;
+
+/// Hardware component categories (the breakdown axis of Fig. 2(c) and the
+/// energy stack in Figs. 5–7). `repr(usize)` so the ledger can index a
+/// flat array instead of a map on the simulation hot path
+/// (EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Component {
+    /// Analog crossbar array read (wordline + column discharge).
+    Crossbar,
+    /// DAC / wordline input drivers.
+    InputDriver,
+    /// Analog-to-digital converter (baselines only).
+    Adc,
+    /// Column comparator(s) (HCiM only).
+    Comparator,
+    /// DCiM array — read cycle (bitline precharge + RWL).
+    DcimRead,
+    /// DCiM array — compute cycle (adder/subtractor chain).
+    DcimCompute,
+    /// DCiM array — store cycle (write-back to PS rows).
+    DcimStore,
+    /// DCiM control (always-on: decoders, clock trunk, sparsity block).
+    DcimControl,
+    /// Digital shift-and-add tree (baselines; degenerate adder in HCiM).
+    ShiftAdd,
+    /// Digital multiplier (Quarry baseline scale-factor path).
+    Multiplier,
+    /// Input/output registers.
+    Register,
+    /// On-chip buffers (eDRAM/SRAM) read/write.
+    Buffer,
+    /// Inter-tile / inter-crossbar data movement.
+    Interconnect,
+    /// Off-chip (DRAM) access — scale-factor streaming in the no-DCiM
+    /// strawman of Fig. 2(c).
+    OffChip,
+}
+
+impl Component {
+    pub const ALL: [Component; 14] = [
+        Component::Crossbar,
+        Component::InputDriver,
+        Component::Adc,
+        Component::Comparator,
+        Component::DcimRead,
+        Component::DcimCompute,
+        Component::DcimStore,
+        Component::DcimControl,
+        Component::ShiftAdd,
+        Component::Multiplier,
+        Component::Register,
+        Component::Buffer,
+        Component::Interconnect,
+        Component::OffChip,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::Crossbar => "crossbar",
+            Component::InputDriver => "input-driver",
+            Component::Adc => "adc",
+            Component::Comparator => "comparator",
+            Component::DcimRead => "dcim-read",
+            Component::DcimCompute => "dcim-compute",
+            Component::DcimStore => "dcim-store",
+            Component::DcimControl => "dcim-control",
+            Component::ShiftAdd => "shift-add",
+            Component::Multiplier => "multiplier",
+            Component::Register => "register",
+            Component::Buffer => "buffer",
+            Component::Interconnect => "interconnect",
+            Component::OffChip => "off-chip",
+        }
+    }
+
+    /// True for the DCiM sub-components (used to report "DCiM total").
+    pub fn is_dcim(self) -> bool {
+        matches!(
+            self,
+            Component::DcimRead
+                | Component::DcimCompute
+                | Component::DcimStore
+                | Component::DcimControl
+        )
+    }
+}
+
+const N_COMPONENTS: usize = Component::ALL.len();
+
+/// Accumulated costs of a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct CostLedger {
+    energy_pj: [f64; N_COMPONENTS],
+    ops: [u64; N_COMPONENTS],
+    /// Critical-path latency (ns).
+    pub latency_ns: f64,
+    /// Total silicon area of the configuration (mm²) — set once by the
+    /// hardware builder, not accumulated.
+    pub area_mm2: f64,
+}
+
+impl CostLedger {
+    pub fn new() -> CostLedger {
+        CostLedger::default()
+    }
+
+    /// Book `pj` picojoules of energy (and one op) under `c`.
+    #[inline]
+    pub fn add_energy(&mut self, c: Component, pj: f64) {
+        debug_assert!(pj >= 0.0, "negative energy for {c:?}");
+        self.energy_pj[c as usize] += pj;
+        self.ops[c as usize] += 1;
+    }
+
+    /// Book `pj` picojoules spread over `n` ops at once (hot-path batching
+    /// — one array access per event class; see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn add_energy_n(&mut self, c: Component, pj: f64, n: u64) {
+        debug_assert!(pj >= 0.0, "negative energy for {c:?}");
+        self.energy_pj[c as usize] += pj;
+        self.ops[c as usize] += n;
+    }
+
+    /// Extend critical-path latency.
+    pub fn add_latency(&mut self, ns: f64) {
+        debug_assert!(ns >= 0.0);
+        self.latency_ns += ns;
+    }
+
+    #[inline]
+    pub fn energy(&self, c: Component) -> f64 {
+        self.energy_pj[c as usize]
+    }
+
+    #[inline]
+    pub fn ops(&self, c: Component) -> u64 {
+        self.ops[c as usize]
+    }
+
+    /// Total energy in pJ.
+    pub fn total_energy_pj(&self) -> f64 {
+        self.energy_pj.iter().sum()
+    }
+
+    /// Energy of the DCiM sub-components only.
+    pub fn dcim_energy_pj(&self) -> f64 {
+        Component::ALL
+            .iter()
+            .filter(|c| c.is_dcim())
+            .map(|&c| self.energy(c))
+            .sum()
+    }
+
+    /// Latency × area (the paper's area-normalised latency, Fig. 1/6/7).
+    pub fn latency_area(&self) -> f64 {
+        self.latency_ns * self.area_mm2
+    }
+
+    /// Energy–delay–area product (Fig. 5(b)).
+    pub fn edap(&self) -> f64 {
+        self.total_energy_pj() * self.latency_ns * self.area_mm2
+    }
+
+    /// Merge another ledger (parallel hardware: energies add, latency max).
+    pub fn merge_parallel(&mut self, other: &CostLedger) {
+        for i in 0..N_COMPONENTS {
+            self.energy_pj[i] += other.energy_pj[i];
+            self.ops[i] += other.ops[i];
+        }
+        self.latency_ns = self.latency_ns.max(other.latency_ns);
+    }
+
+    /// Merge another ledger sequentially (energies add, latencies add).
+    pub fn merge_serial(&mut self, other: &CostLedger) {
+        for i in 0..N_COMPONENTS {
+            self.energy_pj[i] += other.energy_pj[i];
+            self.ops[i] += other.ops[i];
+        }
+        self.latency_ns += other.latency_ns;
+    }
+
+    /// Replicate this ledger across `serial` sequential repetitions of
+    /// `parallel` concurrent hardware instances: energy (and op counts)
+    /// multiply by `serial × parallel`, latency only by `serial`. This is
+    /// the bulk form the layer-level simulator uses instead of booking
+    /// millions of identical events (EXPERIMENTS.md §Perf).
+    pub fn replicate(&self, serial: u64, parallel: u64) -> CostLedger {
+        let f = (serial * parallel) as f64;
+        let mut out = CostLedger::new();
+        for i in 0..N_COMPONENTS {
+            out.energy_pj[i] = self.energy_pj[i] * f;
+            out.ops[i] = self.ops[i] * serial * parallel;
+        }
+        out.latency_ns = self.latency_ns * serial as f64;
+        out.area_mm2 = self.area_mm2;
+        out
+    }
+
+    /// Per-component breakdown, descending by energy (zero rows omitted).
+    pub fn breakdown(&self) -> Vec<(Component, f64)> {
+        let mut v: Vec<(Component, f64)> = Component::ALL
+            .iter()
+            .map(|&c| (c, self.energy_pj[c as usize]))
+            .filter(|(_, e)| *e > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+impl fmt::Display for CostLedger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "total {:.1} pJ, latency {:.1} ns, area {:.4} mm², EDAP {:.3e}",
+            self.total_energy_pj(),
+            self.latency_ns,
+            self.area_mm2,
+            self.edap()
+        )?;
+        for (c, e) in self.breakdown() {
+            writeln!(
+                f,
+                "  {:>13}: {:>12.1} pJ ({:>5.1}%)  [{} ops]",
+                c.name(),
+                e,
+                100.0 * e / self.total_energy_pj().max(1e-12),
+                self.ops(c)
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_energy_and_ops() {
+        let mut l = CostLedger::new();
+        l.add_energy(Component::Adc, 4.1);
+        l.add_energy(Component::Adc, 4.1);
+        l.add_energy(Component::Crossbar, 0.05);
+        assert!((l.energy(Component::Adc) - 8.2).abs() < 1e-12);
+        assert_eq!(l.ops(Component::Adc), 2);
+        assert!((l.total_energy_pj() - 8.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_energy_n_batches() {
+        let mut l = CostLedger::new();
+        l.add_energy_n(Component::DcimCompute, 22.0, 100);
+        assert_eq!(l.ops(Component::DcimCompute), 100);
+        assert!((l.energy(Component::DcimCompute) - 22.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_merge_takes_max_latency() {
+        let mut a = CostLedger::new();
+        a.add_latency(10.0);
+        a.add_energy(Component::Crossbar, 1.0);
+        let mut b = CostLedger::new();
+        b.add_latency(25.0);
+        b.add_energy(Component::Crossbar, 2.0);
+        a.merge_parallel(&b);
+        assert_eq!(a.latency_ns, 25.0);
+        assert!((a.energy(Component::Crossbar) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_merge_adds_latency() {
+        let mut a = CostLedger::new();
+        a.add_latency(10.0);
+        let mut b = CostLedger::new();
+        b.add_latency(25.0);
+        a.merge_serial(&b);
+        assert_eq!(a.latency_ns, 35.0);
+    }
+
+    #[test]
+    fn dcim_rollup() {
+        let mut l = CostLedger::new();
+        l.add_energy(Component::DcimRead, 1.0);
+        l.add_energy(Component::DcimCompute, 2.0);
+        l.add_energy(Component::DcimStore, 3.0);
+        l.add_energy(Component::Adc, 100.0);
+        assert!((l.dcim_energy_pj() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edap_and_latency_area() {
+        let mut l = CostLedger::new();
+        l.add_energy(Component::Crossbar, 10.0);
+        l.add_latency(5.0);
+        l.area_mm2 = 2.0;
+        assert!((l.latency_area() - 10.0).abs() < 1e-12);
+        assert!((l.edap() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc() {
+        let mut l = CostLedger::new();
+        l.add_energy(Component::Crossbar, 1.0);
+        l.add_energy(Component::Adc, 5.0);
+        l.add_energy(Component::Buffer, 3.0);
+        let b = l.breakdown();
+        assert_eq!(b[0].0, Component::Adc);
+        assert_eq!(b[2].0, Component::Crossbar);
+    }
+}

@@ -1,0 +1,198 @@
+//! Weight-stationary mapping of a DNN onto crossbars (S10).
+//!
+//! Each MVM layer's (im2col) weight matrix is tiled over `rows × cols`
+//! crossbars: logical columns expand ×`w_bits` (bit-slice = 1), rows tile
+//! over the crossbar's wordlines. Row tiles produce *partial* partial-sums
+//! that must be accumulated across crossbars digitally — the data movement
+//! that grows when config B shrinks the crossbar (Fig. 7 discussion).
+
+use crate::config::hardware::HcimConfig;
+use crate::model::graph::Graph;
+use crate::model::layer::MvmShape;
+
+/// Mapping of one MVM layer.
+#[derive(Clone, Debug)]
+pub struct LayerMapping {
+    /// Index into the graph's layer list.
+    pub layer_index: usize,
+    pub mvm: MvmShape,
+    /// Crossbar tiles along the input (row) dimension.
+    pub row_tiles: usize,
+    /// Crossbar tiles along the (bit-sliced) column dimension.
+    pub col_tiles: usize,
+    /// Physical bit-slice columns used in the last column tile.
+    pub last_tile_cols: usize,
+    /// Rows used in the last row tile.
+    pub last_tile_rows: usize,
+}
+
+impl LayerMapping {
+    /// Total crossbars allocated to this layer.
+    pub fn crossbars(&self) -> usize {
+        self.row_tiles * self.col_tiles
+    }
+
+    /// Scale factors for the layer (Eq. 2 summed over its crossbars;
+    /// partially-filled tiles still provision full columns).
+    pub fn scale_factors(&self, cfg: &HcimConfig) -> usize {
+        self.crossbars() * cfg.scale_factors_per_xbar()
+    }
+
+    /// Column utilisation across the layer's crossbars (0, 1].
+    pub fn col_utilization(&self, cfg: &HcimConfig) -> f64 {
+        let used = (self.col_tiles - 1) * cfg.xbar.cols + self.last_tile_cols;
+        used as f64 / (self.col_tiles * cfg.xbar.cols) as f64
+    }
+
+    /// Row utilisation (0, 1].
+    pub fn row_utilization(&self, cfg: &HcimConfig) -> f64 {
+        let used = (self.row_tiles - 1) * cfg.xbar.rows + self.last_tile_rows;
+        used as f64 / (self.row_tiles * cfg.xbar.rows) as f64
+    }
+
+    /// Bytes of inter-crossbar partial-sum traffic per invocation:
+    /// every column tile gathers `row_tiles − 1` partial results of
+    /// `ps_bits` for each of its physical columns.
+    pub fn psum_traffic_bytes(&self, cfg: &HcimConfig) -> usize {
+        if self.row_tiles <= 1 {
+            return 0;
+        }
+        let phys_cols = self.mvm.cols * cfg.w_bits as usize;
+        (self.row_tiles - 1) * phys_cols * (cfg.ps_bits as usize).div_ceil(8)
+    }
+}
+
+/// Mapping of a whole model.
+#[derive(Clone, Debug)]
+pub struct ModelMapping {
+    pub model: String,
+    pub layers: Vec<LayerMapping>,
+}
+
+impl ModelMapping {
+    /// Map `graph` onto crossbars of `cfg`.
+    pub fn build(graph: &Graph, cfg: &HcimConfig) -> ModelMapping {
+        let mut layers = Vec::new();
+        for ann in graph.annotate() {
+            let Some(mvm) = ann.mvm else { continue };
+            let phys_cols = mvm.cols * cfg.w_bits as usize;
+            let row_tiles = mvm.rows.div_ceil(cfg.xbar.rows);
+            let col_tiles = phys_cols.div_ceil(cfg.xbar.cols);
+            let last_tile_cols = phys_cols - (col_tiles - 1) * cfg.xbar.cols;
+            let last_tile_rows = mvm.rows - (row_tiles - 1) * cfg.xbar.rows;
+            layers.push(LayerMapping {
+                layer_index: ann.index,
+                mvm,
+                row_tiles,
+                col_tiles,
+                last_tile_cols,
+                last_tile_rows,
+            });
+        }
+        ModelMapping { model: graph.name.clone(), layers }
+    }
+
+    pub fn total_crossbars(&self) -> usize {
+        self.layers.iter().map(|l| l.crossbars()).sum()
+    }
+
+    pub fn total_scale_factors(&self, cfg: &HcimConfig) -> usize {
+        self.layers.iter().map(|l| l.scale_factors(cfg)).sum()
+    }
+
+    /// Total MVM invocations per inference (Σ layers × spatial positions).
+    pub fn total_invocations(&self) -> usize {
+        self.layers.iter().map(|l| l.mvm.invocations).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn small_layer_fits_one_crossbar() {
+        // 27×16 conv (first ResNet layer) → 27 rows, 64 phys cols: 1 xbar
+        let cfg = HcimConfig::config_a();
+        let g = zoo::resnet20();
+        let m = ModelMapping::build(&g, &cfg);
+        let first = &m.layers[0];
+        assert_eq!(first.mvm.rows, 27);
+        assert_eq!(first.row_tiles, 1);
+        assert_eq!(first.col_tiles, 1);
+        assert_eq!(first.crossbars(), 1);
+        assert!(first.col_utilization(&cfg) <= 1.0);
+    }
+
+    #[test]
+    fn row_tiling_kicks_in_for_deep_inputs() {
+        // 64-ch 3×3 conv: rows = 576 > 128 → 5 row tiles (config A)
+        let cfg = HcimConfig::config_a();
+        let g = zoo::resnet20();
+        let m = ModelMapping::build(&g, &cfg);
+        let deep = m
+            .layers
+            .iter()
+            .find(|l| l.mvm.rows == 576)
+            .expect("64-channel conv present");
+        assert_eq!(deep.row_tiles, 5);
+        assert!(deep.psum_traffic_bytes(&cfg) > 0);
+    }
+
+    #[test]
+    fn config_b_needs_more_crossbars_and_traffic() {
+        // Same MAC capacity ⇒ ~4× as many 64×64 crossbars (paper §5.3).
+        let g = zoo::resnet20();
+        let a = ModelMapping::build(&g, &HcimConfig::config_a());
+        let b = ModelMapping::build(&g, &HcimConfig::config_b());
+        let ratio = b.total_crossbars() as f64 / a.total_crossbars() as f64;
+        assert!(ratio >= 2.0 && ratio <= 4.5, "ratio = {ratio}");
+        let traffic = |m: &ModelMapping, cfg: &HcimConfig| -> usize {
+            m.layers
+                .iter()
+                .map(|l| l.psum_traffic_bytes(cfg) * l.mvm.invocations)
+                .sum()
+        };
+        assert!(
+            traffic(&b, &HcimConfig::config_b()) > traffic(&a, &HcimConfig::config_a()),
+            "config B must move more partial sums"
+        );
+    }
+
+    #[test]
+    fn eq2_scale_factor_totals() {
+        let cfg = HcimConfig::config_a();
+        let g = zoo::resnet20();
+        let m = ModelMapping::build(&g, &cfg);
+        assert_eq!(m.total_scale_factors(&cfg), m.total_crossbars() * 4 * 128);
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        let cfg = HcimConfig::config_b();
+        for g in zoo::cifar_suite() {
+            for l in ModelMapping::build(&g, &cfg).layers {
+                let cu = l.col_utilization(&cfg);
+                let ru = l.row_utilization(&cfg);
+                assert!(cu > 0.0 && cu <= 1.0, "{}: cu={cu}", g.name);
+                assert!(ru > 0.0 && ru <= 1.0, "{}: ru={ru}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn no_mvm_layers_no_mappings() {
+        use crate::model::graph::Graph;
+        use crate::model::layer::{Chw, Layer};
+        let g = Graph {
+            name: "pool-only".into(),
+            input: Chw { c: 4, h: 8, w: 8 },
+            classes: 0,
+            layers: vec![Layer::ReLU, Layer::GlobalAvgPool],
+        };
+        let m = ModelMapping::build(&g, &HcimConfig::config_a());
+        assert!(m.layers.is_empty());
+        assert_eq!(m.total_crossbars(), 0);
+    }
+}

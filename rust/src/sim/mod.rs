@@ -1,0 +1,35 @@
+//! Cycle-accurate HCiM architecture simulator (systems S2–S12).
+//!
+//! Methodology (identical to the paper's): the *functional* and *timing*
+//! behaviour — op counts, pipeline schedules, sparsity — are simulated
+//! cycle-by-cycle, while per-operation energy/latency/area constants come
+//! from a calibration table ([`params`]) carrying the paper's measured
+//! schematic-level numbers (its Table 3, crossbar from Ali'23 CICC,
+//! comparator from Bindra'18 JSSC), scaled across technology nodes with
+//! Stillmaker's predictive equations ([`tech`]). The paper plugs its DCiM
+//! array into the PUMA simulator the same way; [`tile`]/[`chip`] re-create
+//! that hierarchy.
+//!
+//! Layering:
+//! * [`components`] — analog crossbar, ADCs, comparators, DAC, shift-add,
+//!   buffers, bus;
+//! * [`dcim`] — the paper's contribution: a gate-level functional +
+//!   cycle-accurate model of the 10T-SRAM digital CiM scale-factor array
+//!   (Read–Compute–Store pipeline, in-memory full subtractor, sparsity
+//!   clock gating);
+//! * [`mapping`] — weight-stationary layer → crossbar allocation (Eq. 2);
+//! * [`tile`], [`chip`] — PUMA-style macro/tile/chip composition;
+//! * [`simulator`] — drives a [`crate::model::graph::Graph`] through the
+//!   hardware and fills a [`energy::CostLedger`].
+
+pub mod tech;
+pub mod energy;
+pub mod params;
+pub mod components;
+pub mod dcim;
+pub mod trace;
+pub mod noc;
+pub mod mapping;
+pub mod tile;
+pub mod chip;
+pub mod simulator;

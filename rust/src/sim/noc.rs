@@ -1,0 +1,219 @@
+//! Mesh network-on-chip with XY routing and link contention (upgrade of
+//! the flat shared-bus model in `components::memory::Noc`).
+//!
+//! PUMA connects tiles over an on-chip network; when config B quadruples
+//! the crossbar count, partial-sum gather traffic concentrates on the
+//! links toward the accumulating tile. This model makes that effect
+//! first-class: tiles sit on a `w×h` mesh, flits route XY, each directed
+//! link is a resource with a cycle-accurate busy-until time, and transfer
+//! latency includes queueing.
+
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+
+/// Mesh coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+/// One directed mesh link's occupancy.
+#[derive(Clone, Copy, Debug, Default)]
+struct Link {
+    busy_until_ns: f64,
+}
+
+/// A `w × h` mesh with XY (dimension-ordered) routing.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub w: usize,
+    pub h: usize,
+    /// `links[from][dir]`, dir ∈ {0:+x, 1:−x, 2:+y, 3:−y}.
+    links: Vec<[Link; 4]>,
+    /// Per-flit serialisation time on one link (ns/byte).
+    pub byte_ns: f64,
+}
+
+/// Result of one routed transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferResult {
+    pub hops: usize,
+    /// Total latency including queueing (ns).
+    pub latency_ns: f64,
+    /// Pure serialisation+propagation latency (no contention).
+    pub ideal_ns: f64,
+}
+
+impl Mesh {
+    pub fn new(w: usize, h: usize, params: &CalibParams) -> Mesh {
+        assert!(w >= 1 && h >= 1);
+        Mesh {
+            w,
+            h,
+            links: vec![[Link::default(); 4]; w * h],
+            byte_ns: params.noc_byte_ns,
+        }
+    }
+
+    /// Mesh just large enough for `tiles` tiles (near-square).
+    pub fn for_tiles(tiles: usize, params: &CalibParams) -> Mesh {
+        let w = (tiles as f64).sqrt().ceil() as usize;
+        let h = tiles.div_ceil(w.max(1));
+        Mesh::new(w.max(1), h.max(1), params)
+    }
+
+    /// Tile index → coordinate (row-major).
+    pub fn coord(&self, tile: usize) -> Coord {
+        Coord { x: tile % self.w, y: tile / self.w }
+    }
+
+    /// XY route between two coordinates (list of (node, dir) steps).
+    fn route(&self, from: Coord, to: Coord) -> Vec<(usize, usize)> {
+        let mut steps = Vec::new();
+        let mut cur = from;
+        while cur.x != to.x {
+            let dir = if to.x > cur.x { 0 } else { 1 };
+            steps.push((cur.y * self.w + cur.x, dir));
+            cur.x = if dir == 0 { cur.x + 1 } else { cur.x - 1 };
+        }
+        while cur.y != to.y {
+            let dir = if to.y > cur.y { 2 } else { 3 };
+            steps.push((cur.y * self.w + cur.x, dir));
+            cur.y = if dir == 2 { cur.y + 1 } else { cur.y - 1 };
+        }
+        steps
+    }
+
+    /// Manhattan hop count.
+    pub fn hops(&self, from: usize, to: usize) -> usize {
+        let (a, b) = (self.coord(from), self.coord(to));
+        a.x.abs_diff(b.x) + a.y.abs_diff(b.y)
+    }
+
+    /// Send `bytes` from tile `from` to tile `to` starting at `now_ns`.
+    /// Books energy per hop and returns latency including link queueing
+    /// (wormhole-ish: the whole message serialises on each busy link).
+    pub fn transfer(
+        &mut self,
+        from: usize,
+        to: usize,
+        bytes: usize,
+        now_ns: f64,
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> TransferResult {
+        let steps = self.route(self.coord(from), self.coord(to));
+        let hops = steps.len();
+        let ser_ns = self.byte_ns * bytes as f64;
+        let mut t = now_ns;
+        for (node, dir) in steps {
+            let link = &mut self.links[node][dir];
+            let start = t.max(link.busy_until_ns);
+            t = start + ser_ns;
+            link.busy_until_ns = t;
+        }
+        ledger.add_energy_n(
+            Component::Interconnect,
+            params.noc_byte_pj * (bytes * hops.max(1)) as f64,
+            bytes as u64,
+        );
+        TransferResult {
+            hops,
+            latency_ns: t - now_ns,
+            ideal_ns: ser_ns * hops.max(1) as f64,
+        }
+    }
+
+    /// Reset link occupancy (new simulation window).
+    pub fn reset(&mut self) {
+        for l in self.links.iter_mut() {
+            *l = [Link::default(); 4];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn mesh(w: usize, h: usize) -> Mesh {
+        Mesh::new(w, h, &CalibParams::at_65nm())
+    }
+
+    #[test]
+    fn hop_counts_are_manhattan() {
+        let m = mesh(4, 4);
+        assert_eq!(m.hops(0, 0), 0);
+        assert_eq!(m.hops(0, 3), 3); // same row
+        assert_eq!(m.hops(0, 15), 6); // corner to corner
+    }
+
+    #[test]
+    fn transfer_books_energy_and_latency() {
+        let params = CalibParams::at_65nm();
+        let mut m = mesh(3, 3);
+        let mut l = CostLedger::new();
+        let r = m.transfer(0, 8, 64, 0.0, &params, &mut l);
+        assert_eq!(r.hops, 4);
+        assert!(r.latency_ns > 0.0);
+        assert!((r.latency_ns - r.ideal_ns).abs() < 1e-9, "no contention yet");
+        assert!(l.energy(Component::Interconnect) > 0.0);
+    }
+
+    #[test]
+    fn contention_queues_on_shared_links() {
+        let params = CalibParams::at_65nm();
+        let mut m = mesh(4, 1);
+        let mut l = CostLedger::new();
+        // two messages cross the same 0→1→2→3 links at the same time
+        let a = m.transfer(0, 3, 128, 0.0, &params, &mut l);
+        let b = m.transfer(0, 3, 128, 0.0, &params, &mut l);
+        assert!(b.latency_ns > a.latency_ns, "second message must queue");
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_interfere() {
+        let params = CalibParams::at_65nm();
+        let mut m = mesh(2, 2);
+        let mut l = CostLedger::new();
+        let a = m.transfer(0, 1, 64, 0.0, &params, &mut l); // top edge
+        let b = m.transfer(2, 3, 64, 0.0, &params, &mut l); // bottom edge
+        assert!((a.latency_ns - b.latency_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_occupancy() {
+        let params = CalibParams::at_65nm();
+        let mut m = mesh(2, 1);
+        let mut l = CostLedger::new();
+        m.transfer(0, 1, 256, 0.0, &params, &mut l);
+        m.reset();
+        let r = m.transfer(0, 1, 256, 0.0, &params, &mut l);
+        assert!((r.latency_ns - r.ideal_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn route_endpoints_property() {
+        check("XY route lengths match manhattan", 100, |g| {
+            let w = g.usize(1, 8);
+            let h = g.usize(1, 8);
+            let m = mesh(w, h);
+            let a = g.usize(0, w * h - 1);
+            let b = g.usize(0, w * h - 1);
+            assert_eq!(m.hops(a, b), m.hops(b, a));
+            let r = m.route(m.coord(a), m.coord(b));
+            assert_eq!(r.len(), m.hops(a, b));
+        });
+    }
+
+    #[test]
+    fn for_tiles_covers_count() {
+        let params = CalibParams::at_65nm();
+        for n in [1usize, 2, 5, 16, 37] {
+            let m = Mesh::for_tiles(n, &params);
+            assert!(m.w * m.h >= n, "mesh {}x{} < {n}", m.w, m.h);
+        }
+    }
+}

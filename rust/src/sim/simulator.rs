@@ -1,0 +1,376 @@
+//! The cycle-accurate simulation engine (S11).
+//!
+//! For each mapped layer the engine prices one representative crossbar
+//! MVM with the architecture's tile model, then replicates it over the
+//! layer's invocations (serial) and crossbars (parallel), adds the
+//! buffer/bus movement of [`super::chip`], and accumulates everything in
+//! one [`CostLedger`] — the PUMA methodology with HCiM's periphery
+//! swapped in, exactly as the paper evaluates (§5.1).
+//!
+//! Sparsity per layer comes from a [`SparsityTable`]: measured from the
+//! QAT artifacts (`artifacts/sparsity.json`, written by the python build
+//! path) when present, falling back to the paper's Fig. 2(c)
+//! "at least 50 %" distribution.
+
+use crate::config::hardware::{BaselineKind, HcimConfig};
+use crate::model::graph::Graph;
+use crate::quant::psq::PsqMode;
+use crate::sim::energy::CostLedger;
+use crate::sim::mapping::ModelMapping;
+use crate::sim::params::CalibParams;
+use crate::sim::tech::TechNode;
+use crate::sim::tile::{
+    baseline_mvm_cost, baseline_tile_area, hcim_mvm_cost, hcim_tile_area, MvmStats,
+};
+use crate::util::json::Json;
+
+/// Architecture under simulation.
+#[derive(Clone, Debug)]
+pub enum Arch {
+    /// The proposed accelerator (binary or ternary PSQ per its config).
+    Hcim(HcimConfig),
+    /// Conventional analog CiM with an N-bit ADC.
+    AdcBaseline(HcimConfig, BaselineKind),
+    /// Quarry with the given ADC precision (1 or 4).
+    Quarry(HcimConfig, u32),
+    /// BitSplitNet independent bit paths.
+    BitSplitNet(HcimConfig),
+}
+
+impl Arch {
+    pub fn name(&self) -> String {
+        match self {
+            Arch::Hcim(c) => match c.mode {
+                PsqMode::Binary => "HCiM (Binary)".into(),
+                PsqMode::Ternary { .. } => "HCiM (Ternary)".into(),
+            },
+            Arch::AdcBaseline(_, k) => k.name().into(),
+            Arch::Quarry(_, bits) => format!("Quarry ({bits}-bit)"),
+            Arch::BitSplitNet(_) => "BitSplitNet".into(),
+        }
+    }
+
+    pub fn config(&self) -> &HcimConfig {
+        match self {
+            Arch::Hcim(c) | Arch::AdcBaseline(c, _) | Arch::Quarry(c, _) | Arch::BitSplitNet(c) => {
+                c
+            }
+        }
+    }
+}
+
+/// Per-layer ternary sparsity (fraction of `p = 0` comparator codes).
+#[derive(Clone, Debug)]
+pub struct SparsityTable {
+    /// `model → per-MVM-layer zero fractions` (layer order = mapping order).
+    entries: std::collections::BTreeMap<String, Vec<f64>>,
+    /// Fallback (paper Fig. 2(c): "at least 50 % of ternary values are 0").
+    pub default: f64,
+}
+
+impl SparsityTable {
+    pub fn paper_default() -> SparsityTable {
+        SparsityTable { entries: Default::default(), default: 0.55 }
+    }
+
+    /// Parse `artifacts/sparsity.json`:
+    /// `{"model": {"layers": [0.6, 0.5, ...], ...}, ...}`.
+    pub fn from_json(json: &Json) -> crate::Result<SparsityTable> {
+        let mut t = SparsityTable::paper_default();
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("sparsity.json: top level must be an object"))?;
+        for (model, v) in obj {
+            let layers = v
+                .get("layers")
+                .and_then(|l| l.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("sparsity.json: missing layers for {model}"))?;
+            let fr: Vec<f64> = layers.iter().filter_map(|x| x.as_f64()).collect();
+            anyhow::ensure!(
+                fr.iter().all(|f| (0.0..=1.0).contains(f)),
+                "sparsity fractions must be in [0,1]"
+            );
+            t.entries.insert(model.clone(), fr);
+        }
+        Ok(t)
+    }
+
+    /// Load from a file if it exists, else paper defaults.
+    pub fn load_or_default(path: &std::path::Path) -> SparsityTable {
+        match std::fs::read_to_string(path) {
+            Ok(src) => match Json::parse(&src).map_err(anyhow::Error::from).and_then(|j| Self::from_json(&j)) {
+                Ok(t) => t,
+                Err(e) => {
+                    crate::log_warn!("ignoring malformed {}: {e}", path.display());
+                    SparsityTable::paper_default()
+                }
+            },
+            Err(_) => SparsityTable::paper_default(),
+        }
+    }
+
+    /// Sparsity for MVM-layer `idx` of `model` under the given PSQ mode
+    /// (binary PSQ has no zeros by construction).
+    pub fn lookup(&self, model: &str, idx: usize, mode: PsqMode) -> f64 {
+        if matches!(mode, PsqMode::Binary) {
+            return 0.0;
+        }
+        self.entries
+            .get(model)
+            .and_then(|v| v.get(idx))
+            .copied()
+            .unwrap_or(self.default)
+    }
+}
+
+/// Per-layer simulation output.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer_index: usize,
+    pub crossbars: usize,
+    pub invocations: usize,
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    pub sparsity: f64,
+}
+
+/// Whole-run output.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub model: String,
+    pub arch: String,
+    pub ledger: CostLedger,
+    pub layers: Vec<LayerReport>,
+}
+
+impl SimReport {
+    pub fn energy_pj(&self) -> f64 {
+        self.ledger.total_energy_pj()
+    }
+
+    pub fn latency_ns(&self) -> f64 {
+        self.ledger.latency_ns
+    }
+
+    pub fn area_mm2(&self) -> f64 {
+        self.ledger.area_mm2
+    }
+
+    pub fn latency_area(&self) -> f64 {
+        self.ledger.latency_area()
+    }
+
+    pub fn edap(&self) -> f64 {
+        self.ledger.edap()
+    }
+}
+
+/// The simulation engine.
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    /// Calibration table already scaled to the evaluation node.
+    pub params: CalibParams,
+    pub sparsity: SparsityTable,
+}
+
+impl Simulator {
+    /// Simulator at the paper's system node (65 nm calibration → `node`).
+    pub fn new(node: TechNode) -> Simulator {
+        Simulator {
+            params: CalibParams::at_65nm().rescaled(node),
+            sparsity: SparsityTable::paper_default(),
+        }
+    }
+
+    pub fn with_sparsity(mut self, table: SparsityTable) -> Simulator {
+        self.sparsity = table;
+        self
+    }
+
+    /// Simulate one inference of `graph` on `arch`.
+    pub fn run(&self, graph: &Graph, arch: &Arch) -> SimReport {
+        let cfg = arch.config();
+        let mapping = ModelMapping::build(graph, cfg);
+        let mut total = CostLedger::new();
+
+        // one-time input image load
+        let in_bytes = graph.input.numel() * (cfg.x_bits as usize).div_ceil(8).max(1);
+        total.merge_serial(&super::chip::input_load_cost(in_bytes, &self.params));
+
+        let mut layers = Vec::with_capacity(mapping.layers.len());
+        for (mvm_idx, lm) in mapping.layers.iter().enumerate() {
+            let stats = MvmStats {
+                sparsity: self.sparsity.lookup(&graph.name, mvm_idx, cfg.mode),
+                input_density: 0.30,
+                row_utilization: lm.row_utilization(cfg),
+            };
+            let per_mvm = match arch {
+                Arch::Hcim(c) => hcim_mvm_cost(c, &self.params, &stats),
+                Arch::AdcBaseline(c, kind) => {
+                    let adc = self.params.adc_at_node(kind.adc());
+                    baseline_mvm_cost(c, &adc, &self.params, &stats)
+                }
+                Arch::Quarry(c, bits) => {
+                    crate::baselines::quarry_mvm_cost(c, *bits, &self.params, &stats)
+                }
+                Arch::BitSplitNet(c) => {
+                    crate::baselines::bitsplit_mvm_cost(c, &self.params, &stats)
+                }
+            };
+            // crossbars of the layer run in parallel; invocations serialise
+            let layer_mvms =
+                per_mvm.replicate(lm.mvm.invocations as u64, lm.crossbars() as u64);
+            let movement = super::chip::layer_movement_cost(lm, cfg, &self.params)
+                .replicate(lm.mvm.invocations as u64, 1);
+            let mut layer_total = layer_mvms;
+            layer_total.merge_serial(&movement);
+            layers.push(LayerReport {
+                layer_index: lm.layer_index,
+                crossbars: lm.crossbars(),
+                invocations: lm.mvm.invocations,
+                energy_pj: layer_total.total_energy_pj(),
+                latency_ns: layer_total.latency_ns,
+                sparsity: stats.sparsity,
+            });
+            total.merge_serial(&layer_total);
+        }
+
+        // chip area: Σ tiles
+        let tile_area = match arch {
+            Arch::Hcim(c) => hcim_tile_area(c, &self.params),
+            Arch::AdcBaseline(c, kind) => {
+                let adc = self.params.adc_at_node(kind.adc());
+                baseline_tile_area(c, &adc, &self.params)
+            }
+            Arch::Quarry(c, bits) => crate::baselines::quarry_tile_area(c, *bits, &self.params),
+            Arch::BitSplitNet(c) => crate::baselines::bitsplit_tile_area(c, &self.params),
+        };
+        total.area_mm2 = tile_area * mapping.total_crossbars() as f64;
+
+        SimReport {
+            model: graph.name.clone(),
+            arch: arch.name(),
+            ledger: total,
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::new(TechNode::N32)
+    }
+
+    #[test]
+    fn hcim_beats_all_adc_baselines_on_energy() {
+        // Fig 6(a): "at least 3× lower energy compared to all the
+        // baselines" on average across models; check per model ≥ 2×.
+        let s = sim();
+        let g = zoo::resnet20();
+        let cfg = HcimConfig::config_a();
+        let h = s.run(&g, &Arch::Hcim(cfg.clone()));
+        for kind in BaselineKind::ADC_BASELINES {
+            let b = s.run(&g, &Arch::AdcBaseline(cfg.clone(), kind));
+            let ratio = b.energy_pj() / h.energy_pj();
+            assert!(ratio > 2.0, "{}: only {ratio:.2}×", kind.name());
+        }
+    }
+
+    #[test]
+    fn ternary_at_least_15pct_below_binary() {
+        // Fig 6(a): "HCiM (Ternary) has at least 15 % lower energy".
+        let s = sim();
+        let g = zoo::resnet20();
+        let t = s.run(&g, &Arch::Hcim(HcimConfig::config_a()));
+        let b = s.run(&g, &Arch::Hcim(HcimConfig::config_a().binary()));
+        let saving = 1.0 - t.energy_pj() / b.energy_pj();
+        assert!(saving >= 0.10, "ternary saving = {saving:.3}");
+    }
+
+    #[test]
+    fn latency_beats_sar_but_not_flash() {
+        // Fig 6(b): 3–12× lower latency×area than SAR baselines, slightly
+        // higher than the 4-bit flash.
+        let s = sim();
+        let g = zoo::resnet20();
+        let cfg = HcimConfig::config_a();
+        let h = s.run(&g, &Arch::Hcim(cfg.clone()));
+        let sar7 = s.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcSar7));
+        let flash = s.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcFlash4));
+        assert!(
+            sar7.latency_area() / h.latency_area() > 2.0,
+            "vs SAR7: {:.2}",
+            sar7.latency_area() / h.latency_area()
+        );
+        let vs_flash = h.latency_area() / flash.latency_area();
+        assert!(
+            vs_flash > 0.8 && vs_flash < 2.0,
+            "vs flash should be close/slightly worse: {vs_flash:.2}"
+        );
+    }
+
+    #[test]
+    fn config_b_keeps_energy_win_but_smaller() {
+        // Fig 7: still ≥2.5× lower energy than the 6/4-bit baselines.
+        let s = sim();
+        let g = zoo::resnet20();
+        let cfg = HcimConfig::config_b();
+        let h = s.run(&g, &Arch::Hcim(cfg.clone()));
+        for kind in [BaselineKind::AdcSar6, BaselineKind::AdcFlash4] {
+            let b = s.run(&g, &Arch::AdcBaseline(cfg.clone(), kind));
+            let ratio = b.energy_pj() / h.energy_pj();
+            assert!(ratio > 1.8, "{}: {ratio:.2}×", kind.name());
+        }
+    }
+
+    #[test]
+    fn reports_have_layers_and_area() {
+        let s = sim();
+        let g = zoo::vgg9();
+        let r = s.run(&g, &Arch::Hcim(HcimConfig::config_a()));
+        assert_eq!(r.layers.len(), 8);
+        assert!(r.area_mm2() > 0.0);
+        assert!(r.energy_pj() > 0.0);
+        assert!(r.latency_ns() > 0.0);
+        assert!(r.edap() > 0.0);
+    }
+
+    #[test]
+    fn sparsity_table_roundtrip() {
+        let j = Json::parse(r#"{"resnet20": {"layers": [0.6, 0.4]}}"#).unwrap();
+        let t = SparsityTable::from_json(&j).unwrap();
+        let tern = PsqMode::Ternary { alpha: 1.0 };
+        assert_eq!(t.lookup("resnet20", 0, tern), 0.6);
+        assert_eq!(t.lookup("resnet20", 1, tern), 0.4);
+        // missing layer/model → default
+        assert_eq!(t.lookup("resnet20", 9, tern), t.default);
+        assert_eq!(t.lookup("unknown", 0, tern), t.default);
+        // binary mode has no zeros
+        assert_eq!(t.lookup("resnet20", 0, PsqMode::Binary), 0.0);
+    }
+
+    #[test]
+    fn sparsity_table_rejects_bad_fractions() {
+        let j = Json::parse(r#"{"m": {"layers": [1.5]}}"#).unwrap();
+        assert!(SparsityTable::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quarry_and_bitsplit_run_on_imagenet_model() {
+        let s = sim();
+        let g = zoo::resnet18();
+        let cfg = HcimConfig::imagenet();
+        let h = s.run(&g, &Arch::Hcim(cfg.clone()));
+        let q1 = s.run(&g, &Arch::Quarry(cfg.clone(), 1));
+        let q4 = s.run(&g, &Arch::Quarry(cfg.clone(), 4));
+        let bs = s.run(&g, &Arch::BitSplitNet(cfg.clone()));
+        // Fig 5(b) shape: HCiM EDAP < Quarry-1 < Quarry-4; < BitSplitNet
+        assert!(h.edap() < q1.edap(), "h={:.3e} q1={:.3e}", h.edap(), q1.edap());
+        assert!(q1.edap() < q4.edap());
+        assert!(h.edap() < bs.edap());
+    }
+}

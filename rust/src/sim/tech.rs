@@ -1,0 +1,135 @@
+//! Predictive technology scaling (Stillmaker & Baas, *Integration* 2017).
+//!
+//! The paper designs its DCiM array in 65 nm but evaluates at the system
+//! level against PUMA's 32 nm components, scaling "the metrics of ADCs and
+//! our DCiM array to 32nm using predictive technology models [26]". We do
+//! the same: first-order scaling of delay/energy/area between nodes using
+//! per-node feature size and nominal supply voltage.
+//!
+//! Model (standard alpha-power first-order):
+//! * area    ∝ L²
+//! * delay   ∝ L · V / (V − V_t)^α   (α ≈ 1.3, V_t ≈ 0.35 V)
+//! * energy  ∝ C·V² with C ∝ L  ⇒ energy ∝ L · V²
+//!
+//! These land within a few percent of the Stillmaker general-purpose
+//! scaling tables for the planar nodes we care about (65 ↔ 45 ↔ 32 nm).
+
+/// A fabrication node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechNode {
+    /// Feature size in nm.
+    pub nm: f64,
+    /// Nominal supply voltage in V.
+    pub vdd: f64,
+}
+
+impl TechNode {
+    pub const N65: TechNode = TechNode { nm: 65.0, vdd: 1.1 };
+    pub const N45: TechNode = TechNode { nm: 45.0, vdd: 1.0 };
+    pub const N32: TechNode = TechNode { nm: 32.0, vdd: 0.9 };
+    pub const N22: TechNode = TechNode { nm: 22.0, vdd: 0.8 };
+
+    pub fn by_name(name: &str) -> Option<TechNode> {
+        match name {
+            "65" | "65nm" => Some(Self::N65),
+            "45" | "45nm" => Some(Self::N45),
+            "32" | "32nm" => Some(Self::N32),
+            "22" | "22nm" => Some(Self::N22),
+            _ => None,
+        }
+    }
+}
+
+const ALPHA: f64 = 1.3;
+const VTH: f64 = 0.35;
+
+/// Multiplicative factors to convert a metric measured at `from` into its
+/// predicted value at `to` (multiply: `metric_to = metric_from * factor`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleFactors {
+    pub delay: f64,
+    pub energy: f64,
+    pub area: f64,
+}
+
+/// Compute scaling factors between two nodes.
+pub fn scale(from: TechNode, to: TechNode) -> ScaleFactors {
+    let l = to.nm / from.nm;
+    let drive = |n: TechNode| (n.vdd - VTH).powf(ALPHA) / n.vdd;
+    ScaleFactors {
+        delay: l * drive(from) / drive(to),
+        energy: l * (to.vdd / from.vdd).powi(2),
+        area: l * l,
+    }
+}
+
+/// Identity check helper.
+pub fn identity() -> ScaleFactors {
+    ScaleFactors { delay: 1.0, energy: 1.0, area: 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn same_node_is_identity() {
+        let s = scale(TechNode::N65, TechNode::N65);
+        assert!((s.delay - 1.0).abs() < 1e-12);
+        assert!((s.energy - 1.0).abs() < 1e-12);
+        assert!((s.area - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shrink_improves_everything() {
+        let s = scale(TechNode::N65, TechNode::N32);
+        assert!(s.delay < 1.0, "delay factor {}", s.delay);
+        assert!(s.energy < 1.0, "energy factor {}", s.energy);
+        assert!(s.area < 1.0, "area factor {}", s.area);
+        // area scales quadratically with feature size
+        assert!((s.area - (32.0f64 / 65.0).powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sixty5_to_32_magnitudes_reasonable() {
+        // Stillmaker's tables put 65→32 energy around 2.5–4× better and
+        // area around 4×; sanity-check we are in that band.
+        let s = scale(TechNode::N65, TechNode::N32);
+        assert!(s.energy > 0.2 && s.energy < 0.5, "energy factor {}", s.energy);
+        assert!(s.area > 0.2 && s.area < 0.3, "area factor {}", s.area);
+        assert!(s.delay > 0.3 && s.delay < 0.8, "delay factor {}", s.delay);
+    }
+
+    #[test]
+    fn scaling_composes() {
+        check("scale(a,b)·scale(b,c) == scale(a,c)", 50, |g| {
+            let nodes = [TechNode::N65, TechNode::N45, TechNode::N32, TechNode::N22];
+            let a = *g.choose(&nodes);
+            let b = *g.choose(&nodes);
+            let c = *g.choose(&nodes);
+            let ab = scale(a, b);
+            let bc = scale(b, c);
+            let ac = scale(a, c);
+            assert!((ab.delay * bc.delay - ac.delay).abs() < 1e-9);
+            assert!((ab.energy * bc.energy - ac.energy).abs() < 1e-9);
+            assert!((ab.area * bc.area - ac.area).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn roundtrip_inverts() {
+        let fwd = scale(TechNode::N65, TechNode::N32);
+        let back = scale(TechNode::N32, TechNode::N65);
+        assert!((fwd.delay * back.delay - 1.0).abs() < 1e-9);
+        assert!((fwd.energy * back.energy - 1.0).abs() < 1e-9);
+        assert!((fwd.area * back.area - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_lookup() {
+        assert_eq!(TechNode::by_name("65nm"), Some(TechNode::N65));
+        assert_eq!(TechNode::by_name("32"), Some(TechNode::N32));
+        assert_eq!(TechNode::by_name("7"), None);
+    }
+}

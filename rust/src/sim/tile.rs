@@ -1,0 +1,357 @@
+//! Tile models: one analog crossbar plus its column periphery (S8).
+//!
+//! Two peripheries exist:
+//! * **HCiM tile** — comparator bank + DCiM scale-factor array (+ a thin
+//!   slice-combine adder). Columns are processed in parallel.
+//! * **Baseline tile** — a single N-bit ADC per crossbar (paper §5.3
+//!   "we consider only 1 ADC ... per analog CiM crossbar") + shift-and-add;
+//!   column conversions serialise through the ADC.
+//!
+//! Each periphery offers a *statistical* per-MVM cost model (used by the
+//! layer-level simulator: one representative ledger, replicated per
+//! invocation) and a *functional* path (bit-exact, used by the examples
+//! and the equivalence tests).
+
+use crate::config::hardware::HcimConfig;
+use crate::quant::bits::Mat;
+use crate::quant::encode::PCode;
+use crate::quant::psq::{PsqLayerParams, SparsityStats};
+use crate::sim::components::comparator::ComparatorBank;
+use crate::sim::components::crossbar::Crossbar;
+use crate::sim::dcim::array::{DcimArray, DcimGeometry};
+use crate::sim::dcim::pipeline::PipelineCfg;
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::{AdcSpec, CalibParams};
+
+/// Workload statistics that parameterise the statistical cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmStats {
+    /// Fraction of `p = 0` comparator codes (ternary sparsity, Fig. 2(c)).
+    pub sparsity: f64,
+    /// Fraction of set input bits per stream (drives wordline energy).
+    pub input_density: f64,
+    /// Fraction of crossbar rows actually occupied by this layer's tile.
+    pub row_utilization: f64,
+}
+
+impl Default for MvmStats {
+    fn default() -> Self {
+        MvmStats { sparsity: 0.55, input_density: 0.30, row_utilization: 1.0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// statistical cost models
+// ---------------------------------------------------------------------------
+
+/// Cost of ONE crossbar MVM on an HCiM tile (all `x_bits` streams).
+pub fn hcim_mvm_cost(cfg: &HcimConfig, params: &CalibParams, stats: &MvmStats) -> CostLedger {
+    let mut l = CostLedger::new();
+    let cols = cfg.xbar.cols as f64;
+    let rows = cfg.xbar.rows as f64 * stats.row_utilization;
+    let streams = cfg.x_bits as f64;
+    let pipe = PipelineCfg {
+        cycle_ns: params.dcim_cycle_ns,
+        ..PipelineCfg::default()
+    };
+
+    // crossbar reads + input drivers, one per stream
+    l.add_energy_n(
+        Component::InputDriver,
+        params.driver_row_pj * rows * stats.input_density * streams,
+        (rows * stats.input_density * streams) as u64,
+    );
+    l.add_energy_n(
+        Component::Crossbar,
+        params.xbar_col_pj * cols * streams,
+        (cols * streams) as u64,
+    );
+
+    // comparators: every column decides per stream
+    let cmp = cfg.mode.comparators() as f64 * cols * streams;
+    l.add_energy_n(Component::Comparator, params.comparator_pj * cmp, cmp as u64);
+
+    // DCiM word-ops: active vs gated columns (§4.2.2)
+    let ops = cols * streams;
+    let active = ops * (1.0 - stats.sparsity);
+    l.add_energy_n(Component::DcimRead, params.dcim_read_pj * active, active as u64);
+    l.add_energy_n(Component::DcimCompute, params.dcim_compute_pj * active, active as u64);
+    l.add_energy_n(Component::DcimStore, params.dcim_store_pj * active, active as u64);
+    l.add_energy_n(Component::DcimControl, params.dcim_control_pj * ops, ops as u64);
+
+    // slice-combine adder (shift merged into SFs, so a plain add tree over
+    // the w_bits physical columns of each logical output)
+    let combines = cols; // (cols/w_bits) outputs × (w_bits−1) adds ≈ cols
+    l.add_energy_n(Component::ShiftAdd, params.shiftadd_pj * combines, combines as u64);
+
+    // PS read-out registers
+    l.add_energy_n(Component::Register, params.register_pj * cols, cols as u64);
+
+    // latency: streams pipeline through (crossbar read ∥ comparator ∥
+    // DCiM word-op); the DCiM op (2 slots) is the bottleneck stage.
+    let dcim_op_ns = pipe.phase_factor as f64 * pipe.cycle_ns;
+    let stage_ns = params.xbar_cycle_ns.max(dcim_op_ns);
+    let drain_ns = (pipe.depth as f64 - 1.0) * pipe.cycle_ns + params.comparator_ns;
+    l.add_latency(streams * stage_ns + drain_ns);
+    l
+}
+
+/// Cost of ONE crossbar MVM on an ADC-baseline tile.
+pub fn baseline_mvm_cost(
+    cfg: &HcimConfig,
+    adc: &AdcSpec,
+    params: &CalibParams,
+    stats: &MvmStats,
+) -> CostLedger {
+    let mut l = CostLedger::new();
+    let cols = cfg.xbar.cols as f64;
+    let rows = cfg.xbar.rows as f64 * stats.row_utilization;
+    let streams = cfg.x_bits as f64;
+
+    l.add_energy_n(
+        Component::InputDriver,
+        params.driver_row_pj * rows * stats.input_density * streams,
+        (rows * stats.input_density * streams) as u64,
+    );
+    l.add_energy_n(
+        Component::Crossbar,
+        params.xbar_col_pj * cols * streams,
+        (cols * streams) as u64,
+    );
+
+    // every column of every stream converts through the single ADC
+    let convs = cols * streams;
+    l.add_energy_n(Component::Adc, adc.energy_pj * convs, convs as u64);
+
+    // shift-and-add across streams and slices, per column per stream
+    l.add_energy_n(Component::ShiftAdd, params.shiftadd_pj * convs, convs as u64);
+    l.add_energy_n(Component::Register, params.register_pj * cols, cols as u64);
+
+    // latency: serialised conversions dominate; the crossbar read of the
+    // next stream overlaps the tail of the previous stream's conversions.
+    l.add_latency(convs * adc.latency_ns + params.xbar_cycle_ns);
+    l
+}
+
+/// Silicon area of one HCiM tile.
+pub fn hcim_tile_area(cfg: &HcimConfig, params: &CalibParams) -> f64 {
+    let xbar = cfg.xbar.cells() as f64 * params.xbar_cell_area_mm2;
+    let cmp = cfg.comparators_per_xbar() as f64 * params.comparator_area_mm2;
+    let dcim = DcimArray::new(dcim_geometry(cfg)).area_mm2(params);
+    xbar + params.driver_area_mm2 + cmp + dcim + params.shiftadd_area_mm2
+}
+
+/// Silicon area of one baseline tile.
+pub fn baseline_tile_area(cfg: &HcimConfig, adc: &AdcSpec, params: &CalibParams) -> f64 {
+    let xbar = cfg.xbar.cells() as f64 * params.xbar_cell_area_mm2;
+    xbar + params.driver_area_mm2 + adc.area_mm2 + params.shiftadd_area_mm2
+}
+
+/// DCiM geometry for a config (Table 1).
+pub fn dcim_geometry(cfg: &HcimConfig) -> DcimGeometry {
+    DcimGeometry {
+        cols: cfg.xbar.cols,
+        sf_words: cfg.x_bits as usize,
+        sf_bits: cfg.sf_bits,
+        ps_bits: cfg.ps_bits,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// functional tile (bit-exact)
+// ---------------------------------------------------------------------------
+
+/// A fully-functional HCiM tile: crossbar + comparators + DCiM array.
+pub struct HcimTile {
+    pub cfg: HcimConfig,
+    crossbar: Crossbar,
+    bank: ComparatorBank,
+    dcim: DcimArray,
+}
+
+impl HcimTile {
+    /// Program a tile from signed weight codes and PSQ parameters. The
+    /// weight matrix must fit a single crossbar
+    /// (`w.rows ≤ xbar.rows`, `w.cols·w_bits ≤ xbar.cols`).
+    pub fn program(cfg: &HcimConfig, w: &Mat, psq: &PsqLayerParams) -> HcimTile {
+        assert!(w.rows <= cfg.xbar.rows, "rows exceed crossbar");
+        let phys_cols = w.cols * cfg.w_bits as usize;
+        assert!(phys_cols <= cfg.xbar.cols, "columns exceed crossbar");
+        let crossbar = Crossbar::program(w, cfg.w_bits);
+        let bank = ComparatorBank::new(psq.mode, psq.theta, phys_cols);
+        let mut geom = dcim_geometry(cfg);
+        geom.cols = phys_cols;
+        let mut dcim = DcimArray::new(geom);
+        for j in 0..cfg.x_bits as usize {
+            let row = &psq.scales[j * phys_cols..(j + 1) * phys_cols];
+            dcim.load_scales(j, row);
+        }
+        HcimTile { cfg: cfg.clone(), crossbar, bank, dcim }
+    }
+
+    /// Execute one full MVM (all bit-streams) bit-exactly, booking costs.
+    /// Returns the per-physical-column partial sums.
+    pub fn mvm(&mut self, x: &[i64], params: &CalibParams, ledger: &mut CostLedger) -> Vec<i64> {
+        self.dcim.clear_ps();
+        for j in 0..self.cfg.x_bits {
+            let raw = self.crossbar.evaluate_stream(x, j, params, ledger);
+            let codes: Vec<PCode> = self.bank.compare(&raw, params, ledger);
+            self.dcim.accumulate(j as usize, &codes, params, ledger);
+        }
+        self.dcim.read_ps()
+    }
+
+    /// Measured comparator-code sparsity so far.
+    pub fn sparsity(&self) -> f64 {
+        self.dcim.stats.sparsity()
+    }
+
+    /// Sparsity statistics of a single functional MVM without cost
+    /// booking (used to calibrate the statistical model per layer).
+    pub fn probe_sparsity(&mut self, x: &[i64]) -> SparsityStats {
+        let mut stats = SparsityStats::default();
+        for j in 0..self.cfg.x_bits {
+            let raw = self.crossbar.evaluate_stream_pure(x, j);
+            let ps: Vec<i8> = self.bank.compare_pure(&raw).iter().map(|c| c.decode()).collect();
+            stats.merge(&SparsityStats::from_codes(&ps));
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::psq::{psq_mvm, PsqMode};
+    use crate::sim::params::{ADC_FLASH4, ADC_SAR7};
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> HcimConfig {
+        let mut c = HcimConfig::config_a();
+        c.xbar.rows = 32;
+        c.xbar.cols = 32;
+        c
+    }
+
+    #[test]
+    fn functional_tile_matches_integer_psq_reference() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(11);
+        let w = Mat::from_fn(16, 8, |r, c| ((r * 7 + c * 3) as i64 % 15) - 7);
+        let mut psq = PsqLayerParams::calibrated(
+            &w,
+            PsqMode::Ternary { alpha: 1.5 },
+            cfg.w_bits,
+            cfg.x_bits,
+            cfg.ps_bits,
+            &mut rng,
+        );
+        // keep |Σ p·s| < 2^(ps_bits−1): scales ≤ 7 over 4 streams
+        for s in psq.scales.iter_mut() {
+            *s = (*s).clamp(-7, 7);
+        }
+        let mut tile = HcimTile::program(&cfg, &w, &psq);
+        let params = CalibParams::at_65nm();
+        let mut ledger = CostLedger::new();
+        let x: Vec<i64> = (0..16).map(|i| (i * 3) % 16).collect();
+        let got = tile.mvm(&x, &params, &mut ledger);
+        let expect = psq_mvm(&w, &x, &psq);
+        assert_eq!(got, expect.ps, "gate-level tile must equal integer PSQ");
+        assert!(ledger.total_energy_pj() > 0.0);
+        assert!(ledger.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn statistical_hcim_beats_adc_baselines_on_energy() {
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let stats = MvmStats::default();
+        let h = hcim_mvm_cost(&cfg, &params, &stats);
+        for adc in [ADC_SAR7, ADC_FLASH4] {
+            let b = baseline_mvm_cost(&cfg, &adc, &params, &stats);
+            let ratio = b.total_energy_pj() / h.total_energy_pj();
+            assert!(ratio > 2.0, "vs {}: only {ratio:.2}×", adc.name);
+        }
+    }
+
+    #[test]
+    fn column_level_ratios_match_paper_abstract() {
+        // "energy reductions up to 28× and 12×" vs 7-/4-bit ADCs at the
+        // column-periphery level (ADC vs comparator+DCiM only).
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let stats = MvmStats::default();
+        let h = hcim_mvm_cost(&cfg, &params, &stats);
+        let periph_h = h.dcim_energy_pj() + h.energy(Component::Comparator);
+        let b7 = baseline_mvm_cost(&cfg, &ADC_SAR7, &params, &stats);
+        let b4 = baseline_mvm_cost(&cfg, &ADC_FLASH4, &params, &stats);
+        let r7 = b7.energy(Component::Adc) / periph_h;
+        let r4 = b4.energy(Component::Adc) / periph_h;
+        assert!(r7 > 15.0 && r7 < 35.0, "vs 7-bit: {r7:.1}×");
+        assert!(r4 > 7.0 && r4 < 16.0, "vs 4-bit: {r4:.1}×");
+    }
+
+    #[test]
+    fn hcim_latency_between_sar_and_flash() {
+        // §5.3: 3–12× lower latency than SAR baselines, but slightly
+        // WORSE than the 4-bit flash once area-normalised.
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let stats = MvmStats::default();
+        let h = hcim_mvm_cost(&cfg, &params, &stats);
+        let sar = baseline_mvm_cost(&cfg, &ADC_SAR7, &params, &stats);
+        let flash = baseline_mvm_cost(&cfg, &ADC_FLASH4, &params, &stats);
+        assert!(sar.latency_ns / h.latency_ns > 3.0, "SAR should be ≫ slower");
+        let a_h = hcim_tile_area(&cfg, &params);
+        let a_f = baseline_tile_area(&cfg, &ADC_FLASH4.clone(), &params);
+        let la_h = h.latency_ns * a_h;
+        let la_f = flash.latency_ns * a_f;
+        let rel = la_h / la_f;
+        assert!(rel > 0.9 && rel < 1.6, "HCiM vs flash latency×area = {rel:.2}");
+    }
+
+    #[test]
+    fn ternary_sparsity_cuts_dcim_energy() {
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let dense = hcim_mvm_cost(&cfg, &params, &MvmStats { sparsity: 0.0, ..Default::default() });
+        let sparse =
+            hcim_mvm_cost(&cfg, &params, &MvmStats { sparsity: 0.5, ..Default::default() });
+        let saving = 1.0 - sparse.dcim_energy_pj() / dense.dcim_energy_pj();
+        assert!((saving - 0.24).abs() < 0.02, "Fig 5(a): ~24 % at 50 %, got {saving:.3}");
+        // latency is unaffected by sparsity (§5.3)
+        assert!((dense.latency_ns - sparse.latency_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn areas_are_positive_and_ordered() {
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let h = hcim_tile_area(&cfg, &params);
+        let b7 = baseline_tile_area(&cfg, &ADC_SAR7, &params);
+        assert!(h > 0.0 && b7 > 0.0);
+        // HCiM trades ADC area for the (larger) DCiM array
+        assert!(h > b7, "HCiM tile should be larger than SAR-7 tile");
+    }
+
+    #[test]
+    fn probe_sparsity_reports_ternary_zeros() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(3);
+        let w = Mat::from_fn(24, 4, |r, c| ((r + c) as i64 % 15) - 7);
+        let mut psq = PsqLayerParams::calibrated(
+            &w,
+            PsqMode::Ternary { alpha: 3.0 },
+            cfg.w_bits,
+            cfg.x_bits,
+            cfg.ps_bits,
+            &mut rng,
+        );
+        psq.theta = 6.0;
+        let mut tile = HcimTile::program(&cfg, &w, &psq);
+        let x: Vec<i64> = (0..24).map(|i| i % 16).collect();
+        let st = tile.probe_sparsity(&x);
+        assert!(st.total > 0);
+        assert!(st.zero_fraction() > 0.0, "ternary with α>0 should gate some columns");
+    }
+}

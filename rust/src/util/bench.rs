@@ -1,0 +1,164 @@
+//! Criterion-flavoured micro-bench harness (criterion is unavailable
+//! offline). Used by the `harness = false` bench targets.
+//!
+//! Each benchmark warms up, then runs timed batches until a wall-clock
+//! budget is exhausted, and reports mean / p50 / p90 per-iteration times.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+use super::table::{fnum, Table};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+/// Prevent the optimizer from deleting a computed value
+/// (stable-Rust `black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // `read_volatile` of a stack copy is the standard trick on stable.
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+/// Bench runner with shared settings.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(Duration::from_millis(200), Duration::from_millis(1200))
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration) -> Bencher {
+        Bencher { warmup, budget, results: Vec::new() }
+    }
+
+    /// Fast settings for CI-ish runs (set `HCIM_BENCH_FAST=1`).
+    pub fn from_env() -> Bencher {
+        if std::env::var("HCIM_BENCH_FAST").is_ok() {
+            Bencher::new(Duration::from_millis(30), Duration::from_millis(150))
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: figure out how many iters fit in ~5 ms.
+        let wstart = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while wstart.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let batch = ((0.005 / per_iter.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut total_iters: u64 = 0;
+        let start = Instant::now();
+        while start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(dt);
+            total_iters += batch;
+        }
+        let s = Summary::of(&samples_ns);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: s.mean,
+            p50_ns: s.p50,
+            p90_ns: s.p90,
+            throughput_per_s: if s.mean > 0.0 { 1e9 / s.mean } else { 0.0 },
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Render all collected results as a table.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            "microbenchmarks",
+            &["benchmark", "iters", "mean", "p50", "p90", "ops/s"],
+        );
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p90_ns),
+                fnum(r.throughput_per_s),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(20));
+        let r = b.bench("noop-ish", || {
+            black_box(1u64 + 1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn black_box_returns_value() {
+        assert_eq!(black_box(42), 42);
+        assert_eq!(black_box(String::from("x")), "x");
+    }
+}

@@ -1,0 +1,24 @@
+//! Infrastructure substrates.
+//!
+//! This environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `proptest`, `criterion`, `rayon`, `serde_json`, …) are not
+//! available. Everything the rest of the crate needs is implemented here:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256++ PRNG,
+//! * [`prop`] — a miniature property-based testing harness,
+//! * [`stats`] — descriptive statistics and percentile helpers,
+//! * [`table`] — ASCII table rendering for bench/experiment output,
+//! * [`threadpool`] — scoped worker pool used by the coordinator and the
+//!   parameter sweeps,
+//! * [`bench`] — a criterion-flavoured timing harness for `cargo bench`,
+//! * [`json`] — a minimal JSON parser/serializer for artifact manifests,
+//! * [`logging`] — leveled stderr logger.
+
+pub mod rng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod bench;
+pub mod json;
+pub mod logging;

@@ -1,0 +1,187 @@
+//! Failure-injection and edge-case tests: malformed artifacts, degenerate
+//! models, invalid hardware programs — the system must fail loudly and
+//! precisely, never silently mis-simulate.
+
+use hcim::config::hardware::HcimConfig;
+use hcim::model::graph::Graph;
+use hcim::model::layer::{Chw, Layer};
+use hcim::quant::bits::Mat;
+use hcim::quant::psq::{PsqLayerParams, PsqMode};
+use hcim::runtime::Manifest;
+use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
+use hcim::sim::tech::TechNode;
+use hcim::util::json::Json;
+use hcim::util::rng::Rng;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("hcim_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---- artifact layer ----
+
+#[test]
+fn malformed_manifest_json_is_an_error() {
+    let d = tmp_dir("badjson");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("json") || err.contains("parse"), "{err}");
+}
+
+#[test]
+fn manifest_with_no_batches_rejected() {
+    let d = tmp_dir("nobatches");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"model":"m","mode":"ternary","image":8,"classes":10,"w_bits":4,
+            "x_bits":4,"sf_bits":4,"ps_bits":8,"xbar_rows":128,
+            "test_acc":0.1,"batches":{}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn sparsity_table_bad_file_falls_back_to_default() {
+    let d = tmp_dir("badsparsity");
+    std::fs::write(d.join("sparsity.json"), "42").unwrap();
+    let t = SparsityTable::load_or_default(&d.join("sparsity.json"));
+    // falls back instead of crashing mid-simulation
+    assert!((t.default - 0.55).abs() < 1e-9);
+}
+
+#[test]
+fn sparsity_fraction_out_of_range_rejected() {
+    let j = Json::parse(r#"{"m": {"layers": [-0.1]}}"#).unwrap();
+    assert!(SparsityTable::from_json(&j).is_err());
+}
+
+// ---- hardware programming layer ----
+
+#[test]
+#[should_panic(expected = "rows exceed crossbar")]
+fn tile_rejects_oversized_rows() {
+    let mut cfg = HcimConfig::config_a();
+    cfg.xbar.rows = 16;
+    let w = Mat::zeros(32, 2);
+    let mut rng = Rng::new(0);
+    let psq = PsqLayerParams::calibrated(&w, PsqMode::Binary, 4, 4, 8, &mut rng);
+    let _ = hcim::sim::tile::HcimTile::program(&cfg, &w, &psq);
+}
+
+#[test]
+#[should_panic(expected = "columns exceed crossbar")]
+fn tile_rejects_oversized_columns() {
+    let mut cfg = HcimConfig::config_a();
+    cfg.xbar.cols = 8;
+    let w = Mat::zeros(4, 8); // 8 logical × 4 bits = 32 > 8
+    let mut rng = Rng::new(0);
+    let psq = PsqLayerParams::calibrated(&w, PsqMode::Binary, 4, 4, 8, &mut rng);
+    let _ = hcim::sim::tile::HcimTile::program(&cfg, &w, &psq);
+}
+
+#[test]
+#[should_panic(expected = "outside")]
+fn dcim_rejects_out_of_range_scales() {
+    use hcim::sim::dcim::array::{DcimArray, DcimGeometry};
+    let mut arr = DcimArray::new(DcimGeometry { cols: 4, sf_words: 1, sf_bits: 4, ps_bits: 8 });
+    arr.load_scales(0, &[100, 0, 0, 0]); // 100 does not fit 4 signed bits
+}
+
+#[test]
+#[should_panic(expected = "one p code per column")]
+fn dcim_rejects_wrong_code_count() {
+    use hcim::quant::encode::encode_all;
+    use hcim::sim::dcim::array::{DcimArray, DcimGeometry};
+    let mut arr = DcimArray::new(DcimGeometry { cols: 4, sf_words: 1, sf_bits: 4, ps_bits: 8 });
+    let params = hcim::sim::params::CalibParams::at_65nm();
+    let mut l = hcim::sim::energy::CostLedger::new();
+    arr.accumulate(0, &encode_all(&[1, 1]), &params, &mut l);
+}
+
+// ---- model / simulation layer ----
+
+#[test]
+fn degenerate_model_without_mvm_layers_costs_only_io() {
+    let g = Graph {
+        name: "identity".into(),
+        input: Chw { c: 4, h: 8, w: 8 },
+        classes: 0,
+        layers: vec![Layer::ReLU, Layer::GlobalAvgPool],
+    };
+    let sim = Simulator::new(TechNode::N32);
+    let r = sim.run(&g, &Arch::Hcim(HcimConfig::config_a()));
+    assert!(r.layers.is_empty());
+    // only the off-chip input load is booked
+    assert!(r.energy_pj() > 0.0);
+    assert_eq!(
+        r.energy_pj(),
+        r.ledger.energy(hcim::sim::energy::Component::OffChip)
+    );
+}
+
+#[test]
+fn single_pixel_model_simulates() {
+    let g = Graph {
+        name: "dot".into(),
+        input: Chw { c: 3, h: 1, w: 1 },
+        classes: 2,
+        layers: vec![
+            Layer::Flatten,
+            Layer::Linear { in_features: 3, out_features: 2 },
+        ],
+    };
+    let sim = Simulator::new(TechNode::N32);
+    let r = sim.run(&g, &Arch::Hcim(HcimConfig::config_a()));
+    assert_eq!(r.layers.len(), 1);
+    assert_eq!(r.layers[0].crossbars, 1);
+}
+
+#[test]
+#[should_panic(expected = "linear input size mismatch")]
+fn shape_mismatch_caught_at_annotation() {
+    let g = Graph {
+        name: "broken".into(),
+        input: Chw { c: 4, h: 2, w: 2 },
+        classes: 2,
+        layers: vec![
+            Layer::Flatten,
+            Layer::Linear { in_features: 99, out_features: 2 },
+        ],
+    };
+    g.annotate();
+}
+
+// ---- coordinator layer ----
+
+#[test]
+fn batcher_survives_worker_panic_isolation() {
+    // a consumer dropping mid-stream must not deadlock producers
+    use hcim::coordinator::batcher::{Batcher, Request};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let b = Arc::new(Batcher::new(4, Duration::from_millis(1)));
+    let b2 = Arc::clone(&b);
+    let producer = std::thread::spawn(move || {
+        for i in 0..20 {
+            b2.submit(Request { id: i, image: vec![0.0], enqueued: Instant::now() });
+        }
+        b2.close();
+    });
+    let mut seen = 0;
+    while let Some(batch) = b.next_batch() {
+        seen += batch.len();
+        if seen >= 8 {
+            break; // simulate consumer bailing early
+        }
+    }
+    producer.join().unwrap();
+    // remaining items stay retrievable
+    while let Some(batch) = b.next_batch() {
+        seen += batch.len();
+    }
+    assert_eq!(seen, 20);
+}

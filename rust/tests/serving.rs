@@ -1,0 +1,131 @@
+//! Serving-path integration over the real AOT artifacts. These tests skip
+//! (with a notice) when `artifacts/` has not been built yet — `make
+//! artifacts` produces them; `make test` runs them for real.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hcim::coordinator::{Server, ServerConfig};
+use hcim::runtime::{Engine, Manifest};
+use hcim::util::rng::Rng;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("(skipping: artifacts/ not built — run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert!(m.classes >= 2);
+    assert!(m.image >= 8);
+    for (&b, _) in &m.batches {
+        assert!(m.hlo_path(b).unwrap().exists(), "missing HLO for batch {b}");
+    }
+}
+
+#[test]
+fn engine_executes_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let m = &engine.manifest;
+    let mut rng = Rng::new(11);
+    let img: Vec<f32> = (0..m.input_elems()).map(|_| rng.f64() as f32).collect();
+    let a = engine.infer(&img, 1).unwrap();
+    let b = engine.infer(&img, 1).unwrap();
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0].len(), m.classes);
+    assert_eq!(a, b, "same input must give identical logits");
+    assert!(a[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn padding_short_batches_matches_single() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let m = &engine.manifest;
+    if m.max_batch() < 2 {
+        eprintln!("(skipping: only batch-1 exported)");
+        return;
+    }
+    let mut rng = Rng::new(13);
+    let img: Vec<f32> = (0..m.input_elems()).map(|_| rng.f64() as f32).collect();
+    let single = engine.infer(&img, 1).unwrap();
+    // submit the same image inside a short batch on the bigger executable
+    let mut two = img.clone();
+    two.extend_from_slice(&img);
+    let batch = engine.infer(&two, 2).unwrap();
+    for (x, y) in single[0].iter().zip(&batch[0]) {
+        // XLA may re-associate f32 reductions differently per batch shape;
+        // logits are O(1), so 5e-3 absolute is "same result" here.
+        assert!(
+            (x - y).abs() < 5e-3,
+            "batch padding changed the result: {x} vs {y}"
+        );
+    }
+}
+
+/// End-to-end numeric golden: the rust PJRT path must reproduce the
+/// python-side logits bit-closely for the canonical linspace input. This
+/// is the cross-layer guard that caught the HLO-text constant-elision bug
+/// (see aot.py: print_large_constants).
+#[test]
+fn golden_logits_match_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).unwrap();
+    let m = &engine.manifest;
+    if m.golden_logits.is_empty() {
+        eprintln!("(skipping: no golden logits in manifest — re-run `make artifacts`)");
+        return;
+    }
+    let n = m.input_elems();
+    let img: Vec<f32> = (0..n).map(|i| i as f32 / (n - 1) as f32).collect();
+    let logits = engine.infer(&img, 1).unwrap();
+    assert_eq!(logits[0].len(), m.golden_logits.len());
+    for (i, (got, want)) in logits[0].iter().zip(&m.golden_logits).enumerate() {
+        assert!(
+            (*got as f64 - want).abs() < 1e-3 + 1e-3 * want.abs(),
+            "logit {i}: rust {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn server_round_trip_with_cosim() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Arc::new(Engine::load(dir).unwrap());
+    let elems = engine.manifest.input_elems();
+    let classes = engine.manifest.classes;
+    let mut server = Server::start(
+        engine,
+        ServerConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            workers: 2,
+        },
+    );
+    assert!(server.hw_estimate.is_some(), "co-simulation must attach");
+    let mut rng = Rng::new(17);
+    let n = 12;
+    for _ in 0..n {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
+        server.submit(img);
+    }
+    let responses = server.collect(n);
+    assert_eq!(responses.len(), n);
+    for r in &responses {
+        assert!(r.class < classes);
+        assert_eq!(r.logits.len(), classes);
+    }
+    let metrics = server.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.requests as usize, n);
+    assert!(snap.sim_energy_uj_per_inf > 0.0, "co-sim energy must be booked");
+}
