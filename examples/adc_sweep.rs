@@ -2,51 +2,74 @@
 //!
 //! Sweeps (a) baseline ADC precision, (b) ternary sparsity, (c) crossbar
 //! geometry, printing the energy / latency×area landscape around the
-//! paper's two operating points (configs A & B).
+//! paper's two operating points (configs A & B). Sections (a) and (c) are
+//! thin clients of the `hcim::dse` subsystem — (a) through the experiments
+//! registry, (c) as a custom design space priced by the parallel runner.
 //!
 //!   cargo run --release --example adc_sweep
 
-use hcim::config::hardware::{BaselineKind, CrossbarDims, HcimConfig};
+use hcim::config::hardware::CrossbarDims;
+use hcim::dse::{ArchKind, DesignSpace, SweepReport, SweepRunner};
 use hcim::experiments;
-use hcim::model::zoo;
-use hcim::sim::simulator::{Arch, Simulator};
+use hcim::sim::simulator::Simulator;
 use hcim::sim::tech::TechNode;
 use hcim::util::table::{fnum, Table};
 
 fn main() -> hcim::Result<()> {
     let sim = Simulator::new(TechNode::N32);
-    let g = zoo::resnet20();
 
-    // (a) ADC precision sweep (the ablation table)
+    // (a) ADC precision sweep (the ablation table, DSE-backed)
     experiments::ablation_adc_precision_sweep(&sim).print();
 
     // (b) sparsity sweep — Fig 5(a)
     experiments::fig5a().print();
 
     // (c) crossbar geometry sweep: 32..256 on both HCiM and the 4-bit
-    // flash baseline (extends the paper's A/B comparison to a curve)
+    // flash baseline (extends the paper's A/B comparison to a curve).
+    // >128 columns → multiple DCiM arrays per crossbar; the model clamps
+    // one array at 128, so keep cols ≤ 128 and scale rows.
+    let sizes = [
+        CrossbarDims { rows: 32, cols: 32 },
+        CrossbarDims { rows: 64, cols: 64 },
+        CrossbarDims { rows: 128, cols: 128 },
+        CrossbarDims { rows: 256, cols: 128 },
+    ];
+    let space = DesignSpace::new()
+        .with_workloads(&["resnet20"])
+        .with_sizes(&sizes)
+        .with_nodes(&[TechNode::N32])
+        .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcFlash4]);
+    let sweep = SweepRunner::new(space).run()?;
+
     let mut t = Table::new(
         "Crossbar-size sweep — ResNet-20 energy (µJ) and latency×area",
         &["xbar", "HCiM E", "Flash4 E", "E ratio", "HCiM L·A", "Flash4 L·A", "L·A ratio"],
     );
-    for size in [32usize, 64, 128, 256] {
-        let mut cfg = HcimConfig::config_a();
-        // >128 columns → multiple DCiM arrays per crossbar; the model
-        // clamps one array at 128, so keep cols ≤ 128 and scale rows
-        cfg.xbar = CrossbarDims { rows: size, cols: size.min(128) };
-        let h = sim.run(&g, &Arch::Hcim(cfg.clone()));
-        let f = sim.run(&g, &Arch::AdcBaseline(cfg.clone(), BaselineKind::AdcFlash4));
+    for size in sizes {
+        let find = |arch: ArchKind| {
+            sweep
+                .points
+                .iter()
+                .find(|p| p.point.xbar == size && p.point.arch == arch)
+                .expect("point swept")
+        };
+        let h = &find(ArchKind::HcimTernary).metrics;
+        let f = &find(ArchKind::AdcFlash4).metrics;
         t.row(&[
-            format!("{}x{}", cfg.xbar.rows, cfg.xbar.cols),
-            fnum(h.energy_pj() / 1e6),
-            fnum(f.energy_pj() / 1e6),
-            format!("{:.2}x", f.energy_pj() / h.energy_pj()),
+            format!("{}x{}", size.rows, size.cols),
+            fnum(h.energy_pj / 1e6),
+            fnum(f.energy_pj / 1e6),
+            format!("{:.2}x", f.energy_pj / h.energy_pj),
             fnum(h.latency_area() / 1e9),
             fnum(f.latency_area() / 1e9),
             format!("{:.2}x", h.latency_area() / f.latency_area()),
         ]);
     }
     t.print();
+
+    // the same sweep's Pareto view: which (geometry, periphery) points are
+    // optimal trade-offs in (energy, latency, area)?
+    SweepReport::build(&sweep).pareto_table().print();
 
     // peripheral-sharing ablation
     experiments::ablation_phase_sharing().print();

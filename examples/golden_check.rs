@@ -6,6 +6,11 @@
 //!   cargo run --release --example golden_check -- [artifacts-dir]
 
 fn main() -> hcim::Result<()> {
+    anyhow::ensure!(
+        cfg!(feature = "pjrt"),
+        "golden_check needs real PJRT execution — rebuild with --features pjrt \
+         (the default offline build serves synthetic logits)"
+    );
     let args: Vec<String> = std::env::args().collect();
     let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
     let engine = hcim::runtime::Engine::load(std::path::Path::new(dir))?;

@@ -87,6 +87,17 @@ COMMANDS:
                 --artifacts DIR  --requests N  --max-batch N  --workers N
   tables      print every paper table/figure reproduction
                 --artifacts DIR
+  dse         parallel design-space exploration with Pareto extraction
+                --workload resnet20[,vgg9,...]   comma-separated zoo models
+                --out DIR        report/cache directory (default dse_out)
+                --workers N      worker threads (default: all cores)
+                --no-cache       ignore and do not write the result cache
+                --sparsity FILE  measured sparsity table (artifacts/sparsity.json)
+              running a sweep:
+                `hcim dse --workload resnet20` prices 24 design points
+                (crossbar 64/128 x node 32/65nm x 6 peripheries) in
+                parallel, then writes dse_out/sweep.{json,csv} with the
+                (energy, latency, area) Pareto frontier marked
   info        show a model's crossbar mapping (Eq. 2 bookkeeping)
                 --model NAME --config A|B
   help        this message

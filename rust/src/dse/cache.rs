@@ -1,0 +1,239 @@
+//! Content-hash result cache for design-space sweeps.
+//!
+//! Every simulated point is stored under the FNV-1a hash of its canonical
+//! key (point identity + sparsity-table fingerprint + model version), so a
+//! repeated sweep — or a new sweep whose space overlaps an earlier one —
+//! skips the points already priced. The cache optionally persists as a
+//! JSON file (written with [`crate::util::json`]) and loads tolerantly:
+//! a malformed file is ignored rather than failing the sweep.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Bump when the cost model changes in a way that invalidates old entries.
+pub const CACHE_SCHEMA: &str = "hcim-dse-v1";
+
+pub use crate::util::hash::fnv1a64;
+
+/// The simulated metrics of one design point (the Pareto objectives).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PointMetrics {
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    pub area_mm2: f64,
+}
+
+impl PointMetrics {
+    pub fn latency_area(&self) -> f64 {
+        self.latency_ns * self.area_mm2
+    }
+
+    pub fn edap(&self) -> f64 {
+        self.energy_pj * self.latency_ns * self.area_mm2
+    }
+
+    /// The minimization objectives used for Pareto extraction.
+    pub fn objectives(&self) -> [f64; 3] {
+        [self.energy_pj, self.latency_ns, self.area_mm2]
+    }
+}
+
+/// One stored entry: readable key kept alongside the hash for debugging.
+#[derive(Clone, Debug)]
+struct Entry {
+    key: String,
+    metrics: PointMetrics,
+}
+
+/// In-memory cache with optional file persistence.
+#[derive(Debug, Default)]
+pub struct ResultCache {
+    entries: BTreeMap<u64, Entry>,
+    path: Option<PathBuf>,
+    /// Lookups answered from the cache during this process.
+    pub hits: u64,
+    /// Lookups that missed.
+    pub misses: u64,
+}
+
+impl ResultCache {
+    /// Purely in-memory cache (tests, one-shot sweeps).
+    pub fn in_memory() -> ResultCache {
+        ResultCache::default()
+    }
+
+    /// Cache backed by `path`: existing entries are loaded if the file
+    /// parses, otherwise the cache starts empty (and will overwrite the
+    /// file on the next save).
+    pub fn at_path(path: &Path) -> ResultCache {
+        let mut cache = ResultCache { path: Some(path.to_path_buf()), ..Default::default() };
+        if let Ok(src) = std::fs::read_to_string(path) {
+            match Json::parse(&src) {
+                Ok(j) => cache.absorb_json(&j),
+                Err(e) => crate::log_warn!("ignoring malformed cache {}: {e}", path.display()),
+            }
+        }
+        cache
+    }
+
+    fn absorb_json(&mut self, j: &Json) {
+        if j.get("schema").and_then(|s| s.as_str()) != Some(CACHE_SCHEMA) {
+            crate::log_warn!("cache schema mismatch: discarding old entries");
+            return;
+        }
+        let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) else { return };
+        for e in entries {
+            let (Some(key), Ok(energy), Ok(latency), Ok(area)) = (
+                e.get("key").and_then(|k| k.as_str()),
+                e.num_field("energy_pj"),
+                e.num_field("latency_ns"),
+                e.num_field("area_mm2"),
+            ) else {
+                continue;
+            };
+            self.entries.insert(
+                fnv1a64(key.as_bytes()),
+                Entry {
+                    key: key.to_string(),
+                    metrics: PointMetrics {
+                        energy_pj: energy,
+                        latency_ns: latency,
+                        area_mm2: area,
+                    },
+                },
+            );
+        }
+    }
+
+    /// Look up a canonical key, counting hit/miss statistics.
+    pub fn lookup(&mut self, key: &str) -> Option<PointMetrics> {
+        let h = fnv1a64(key.as_bytes());
+        match self.entries.get(&h) {
+            // guard against (astronomically unlikely) hash collisions
+            Some(e) if e.key == key => {
+                self.hits += 1;
+                Some(e.metrics)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly simulated point.
+    pub fn insert(&mut self, key: &str, metrics: PointMetrics) {
+        self.entries.insert(
+            fnv1a64(key.as_bytes()),
+            Entry { key: key.to_string(), metrics },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .values()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("key".to_string(), Json::Str(e.key.clone()));
+                m.insert("energy_pj".to_string(), Json::Num(e.metrics.energy_pj));
+                m.insert("latency_ns".to_string(), Json::Num(e.metrics.latency_ns));
+                m.insert("area_mm2".to_string(), Json::Num(e.metrics.area_mm2));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Str(CACHE_SCHEMA.to_string()));
+        top.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(top)
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches).
+    pub fn save(&self) -> crate::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(e: f64) -> PointMetrics {
+        PointMetrics { energy_pj: e, latency_ns: 2.0 * e, area_mm2: 0.5 }
+    }
+
+    #[test]
+    fn fnv_reference_value() {
+        // FNV-1a("a") — canonical published value
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"acb"));
+    }
+
+    #[test]
+    fn in_memory_hit_miss_accounting() {
+        let mut c = ResultCache::in_memory();
+        assert!(c.lookup("k1").is_none());
+        c.insert("k1", metrics(1.0));
+        assert_eq!(c.lookup("k1"), Some(metrics(1.0)));
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("hcim_dse_cache_roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let mut c = ResultCache::at_path(&path);
+        assert!(c.is_empty());
+        c.insert("p1", metrics(3.0));
+        c.insert("p2", metrics(4.0));
+        c.save().unwrap();
+
+        let mut reloaded = ResultCache::at_path(&path);
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.lookup("p1"), Some(metrics(3.0)));
+        assert_eq!(reloaded.lookup("p2"), Some(metrics(4.0)));
+        assert!(reloaded.lookup("p3").is_none());
+    }
+
+    #[test]
+    fn malformed_or_mismatched_files_start_empty() {
+        let dir = std::env::temp_dir().join("hcim_dse_cache_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, "{not json").unwrap();
+        assert!(ResultCache::at_path(&garbage).is_empty());
+        let old_schema = dir.join("old.json");
+        std::fs::write(&old_schema, r#"{"schema":"v0","entries":[]}"#).unwrap();
+        assert!(ResultCache::at_path(&old_schema).is_empty());
+    }
+
+    #[test]
+    fn metrics_derived_quantities() {
+        let m = PointMetrics { energy_pj: 2.0, latency_ns: 3.0, area_mm2: 4.0 };
+        assert_eq!(m.latency_area(), 12.0);
+        assert_eq!(m.edap(), 24.0);
+        assert_eq!(m.objectives(), [2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,46 @@
+//! Design-space exploration (DSE) subsystem.
+//!
+//! The paper reports two hand-picked operating points (configs A and B);
+//! the surrounding design space — crossbar geometry × technology node ×
+//! column-periphery architecture × workload — is where the real
+//! energy/latency/area trade-offs live. This subsystem makes sweeping that
+//! space a first-class operation:
+//!
+//! * [`space`] — declarative axes ([`space::DesignSpace`]) expanded into a
+//!   deterministic list of [`space::DesignPoint`]s;
+//! * [`runner`] — [`runner::SweepRunner`] prices points in parallel on the
+//!   worker pool, one independent simulator instance per point;
+//! * [`cache`] — a content-hash result cache ([`cache::ResultCache`]), so
+//!   repeated or overlapping sweeps skip already-simulated points (keys
+//!   include the sparsity-table fingerprint and a schema version);
+//! * [`pareto`] — frontier extraction over (energy, latency, area), all
+//!   minimized;
+//! * [`report`] — [`report::SweepReport`]: per-workload Pareto
+//!   annotation, JSON + CSV export, and ASCII summary tables.
+//!
+//! Entry points: the `hcim dse` CLI subcommand, or programmatically:
+//!
+//! ```no_run
+//! use hcim::dse::{DesignSpace, SweepReport, SweepRunner};
+//! let space = DesignSpace::default_for(&["resnet20".to_string()]);
+//! let result = SweepRunner::new(space).run().unwrap();
+//! let report = SweepReport::build(&result);
+//! report.pareto_table().print();
+//! ```
+//! (`no_run` for the same reason as `util::prop`: doctest binaries cannot
+//! resolve their rpath in this offline image.)
+//!
+//! `experiments::ablation_adc_precision_sweep` and
+//! `examples/adc_sweep.rs` are thin clients of this subsystem.
+
+pub mod space;
+pub mod cache;
+pub mod pareto;
+pub mod runner;
+pub mod report;
+
+pub use cache::{PointMetrics, ResultCache};
+pub use pareto::{dominates, pareto_indices};
+pub use report::SweepReport;
+pub use runner::{PointResult, SweepResult, SweepRunner};
+pub use space::{ArchKind, DesignPoint, DesignSpace};

@@ -1,0 +1,127 @@
+//! Pareto frontier extraction over (energy, latency, area).
+//!
+//! All objectives are minimized. A point `a` *dominates* `b` when it is no
+//! worse on every objective and strictly better on at least one; the
+//! frontier is the set of points dominated by nobody. Points with
+//! identical objective vectors are all kept (neither strictly dominates
+//! the other), so duplicated architectures still show up in reports.
+
+/// `a` dominates `b` (minimization on every axis).
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strictly_better = false;
+    for i in 0..3 {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated points of `objs`, in input order.
+///
+/// O(n²) pairwise scan — sweeps are at most a few thousand points, far
+/// below where divide-and-conquer frontier algorithms pay off.
+pub fn pareto_indices(objs: &[[f64; 3]]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| !objs.iter().any(|other| dominates(other, &objs[i])))
+        .collect()
+}
+
+/// Convenience: per-index frontier membership flags.
+pub fn pareto_flags(objs: &[[f64; 3]]) -> Vec<bool> {
+    let mut flags = vec![false; objs.len()];
+    for i in pareto_indices(objs) {
+        flags[i] = true;
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        let a = [1.0, 1.0, 1.0];
+        let b = [2.0, 2.0, 2.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // equal vectors: neither dominates
+        assert!(!dominates(&a, &a));
+        // trade-off: better on one axis, worse on another
+        let c = [0.5, 3.0, 1.0];
+        assert!(!dominates(&a, &c));
+        assert!(!dominates(&c, &a));
+    }
+
+    #[test]
+    fn single_dominating_point_wins() {
+        let objs = vec![
+            [1.0, 1.0, 1.0], // dominates everything below
+            [2.0, 1.5, 1.0],
+            [3.0, 3.0, 3.0],
+        ];
+        assert_eq!(pareto_indices(&objs), vec![0]);
+    }
+
+    #[test]
+    fn trade_off_curve_is_fully_kept() {
+        // strictly decreasing energy vs strictly increasing latency: every
+        // point is a distinct optimal trade-off
+        let objs: Vec<[f64; 3]> = (0..5)
+            .map(|i| [10.0 - i as f64, 1.0 + i as f64, 1.0])
+            .collect();
+        assert_eq!(pareto_indices(&objs), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dominated_interior_point_removed() {
+        let objs = vec![
+            [1.0, 4.0, 1.0],
+            [4.0, 1.0, 1.0],
+            [3.0, 3.0, 1.0], // dominated by nothing (trade-off in 2 axes)
+            [4.0, 4.0, 1.0], // dominated by all three above
+        ];
+        let front = pareto_indices(&objs);
+        assert_eq!(front, vec![0, 1, 2]);
+        assert_eq!(pareto_flags(&objs), vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn duplicates_both_kept() {
+        let objs = vec![[1.0, 2.0, 3.0], [1.0, 2.0, 3.0], [2.0, 3.0, 4.0]];
+        assert_eq!(pareto_indices(&objs), vec![0, 1]);
+    }
+
+    #[test]
+    fn frontier_has_no_internally_dominated_point() {
+        // pseudo-random cloud; check the invariant the acceptance criteria
+        // demand: no frontier member dominates another frontier member
+        let mut rng = crate::util::rng::Rng::new(0xD5E);
+        let objs: Vec<[f64; 3]> = (0..200)
+            .map(|_| [rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0])
+            .collect();
+        let front = pareto_indices(&objs);
+        assert!(!front.is_empty());
+        for &i in &front {
+            for &j in &front {
+                assert!(!dominates(&objs[i], &objs[j]) || i == j);
+            }
+        }
+        // and every non-member is dominated by someone
+        let flags = pareto_flags(&objs);
+        for (i, &on_front) in flags.iter().enumerate() {
+            if !on_front {
+                assert!(objs.iter().any(|o| dominates(o, &objs[i])));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_empty_frontier() {
+        assert!(pareto_indices(&[]).is_empty());
+    }
+}

@@ -1,0 +1,297 @@
+//! Sweep reporting: Pareto annotation, JSON / CSV export, and the ASCII
+//! summary tables printed by the `hcim dse` subcommand.
+//!
+//! Pareto membership is computed **per workload** over the minimization
+//! objectives (energy, latency, area) — comparing a ResNet-20 point
+//! against a VGG-11 point would be meaningless.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::dse::pareto::pareto_flags;
+use crate::dse::runner::{PointResult, SweepResult};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// One reported row: a priced point plus its frontier flag.
+#[derive(Clone, Debug)]
+pub struct ReportRow {
+    pub result: PointResult,
+    pub pareto: bool,
+}
+
+/// A fully annotated sweep report.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub rows: Vec<ReportRow>,
+    /// Per-workload indices (into `rows`) of the Pareto frontier.
+    pub frontier: BTreeMap<String, Vec<usize>>,
+    pub simulated: usize,
+    pub cache_hits: usize,
+}
+
+impl SweepReport {
+    /// Annotate a sweep result with per-workload Pareto membership.
+    pub fn build(result: &SweepResult) -> SweepReport {
+        let mut rows: Vec<ReportRow> = result
+            .points
+            .iter()
+            .map(|p| ReportRow { result: p.clone(), pareto: false })
+            .collect();
+
+        // group row indices by workload, preserving order
+        let mut by_workload: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, row) in rows.iter().enumerate() {
+            by_workload
+                .entry(row.result.point.workload.clone())
+                .or_default()
+                .push(i);
+        }
+
+        let mut frontier = BTreeMap::new();
+        for (workload, indices) in &by_workload {
+            let objs: Vec<[f64; 3]> = indices
+                .iter()
+                .map(|&i| rows[i].result.metrics.objectives())
+                .collect();
+            let flags = pareto_flags(&objs);
+            let members: Vec<usize> = indices
+                .iter()
+                .zip(&flags)
+                .filter(|(_, &f)| f)
+                .map(|(&i, _)| i)
+                .collect();
+            for &i in &members {
+                rows[i].pareto = true;
+            }
+            frontier.insert(workload.clone(), members);
+        }
+
+        SweepReport {
+            rows,
+            frontier,
+            simulated: result.simulated,
+            cache_hits: result.cache_hits,
+        }
+    }
+
+    /// Full point listing.
+    pub fn points_table(&self) -> Table {
+        let mut t = Table::new(
+            "DSE sweep — all design points",
+            &["Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
+              "Latency (µs)", "Area (mm²)", "EDAP", "Pareto", "Cached"],
+        );
+        for row in &self.rows {
+            let p = &row.result.point;
+            let m = &row.result.metrics;
+            t.row(&[
+                p.workload.clone(),
+                p.arch.name().to_string(),
+                format!("{}x{}", p.xbar.rows, p.xbar.cols),
+                p.node_label(),
+                fnum(m.energy_pj / 1e6),
+                fnum(m.latency_ns / 1e3),
+                format!("{:.4}", m.area_mm2),
+                format!("{:.3e}", m.edap()),
+                if row.pareto { "*".into() } else { "".into() },
+                if row.result.cached { "hit".into() } else { "".into() },
+            ]);
+        }
+        t
+    }
+
+    /// Frontier-only listing.
+    pub fn pareto_table(&self) -> Table {
+        let mut t = Table::new(
+            "DSE sweep — Pareto frontier (energy, latency, area minimized)",
+            &["Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
+              "Latency (µs)", "Area (mm²)"],
+        );
+        for members in self.frontier.values() {
+            for &i in members {
+                let p = &self.rows[i].result.point;
+                let m = &self.rows[i].result.metrics;
+                t.row(&[
+                    p.workload.clone(),
+                    p.arch.name().to_string(),
+                    format!("{}x{}", p.xbar.rows, p.xbar.cols),
+                    p.node_label(),
+                    fnum(m.energy_pj / 1e6),
+                    fnum(m.latency_ns / 1e3),
+                    format!("{:.4}", m.area_mm2),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// JSON document (point list + per-workload frontier indices).
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let p = &row.result.point;
+                let m = &row.result.metrics;
+                let mut o = BTreeMap::new();
+                o.insert("workload".into(), Json::Str(p.workload.clone()));
+                o.insert("arch".into(), Json::Str(p.arch.name().to_string()));
+                o.insert("arch_key".into(), Json::Str(p.arch.key().to_string()));
+                o.insert("xbar_rows".into(), Json::Num(p.xbar.rows as f64));
+                o.insert("xbar_cols".into(), Json::Num(p.xbar.cols as f64));
+                o.insert("node".into(), Json::Str(p.node_label()));
+                o.insert("energy_pj".into(), Json::Num(m.energy_pj));
+                o.insert("latency_ns".into(), Json::Num(m.latency_ns));
+                o.insert("area_mm2".into(), Json::Num(m.area_mm2));
+                o.insert("edap".into(), Json::Num(m.edap()));
+                o.insert("pareto".into(), Json::Bool(row.pareto));
+                o.insert("cached".into(), Json::Bool(row.result.cached));
+                Json::Obj(o)
+            })
+            .collect();
+        let frontier: BTreeMap<String, Json> = self
+            .frontier
+            .iter()
+            .map(|(w, members)| {
+                (
+                    w.clone(),
+                    Json::Arr(members.iter().map(|&i| Json::Num(i as f64)).collect()),
+                )
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("version".into(), Json::Num(1.0));
+        top.insert("simulated".into(), Json::Num(self.simulated as f64));
+        top.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        top.insert("points".into(), Json::Arr(points));
+        top.insert("pareto".into(), Json::Obj(frontier));
+        Json::Obj(top)
+    }
+
+    /// CSV export (one row per point).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,pareto,cached\n",
+        );
+        for row in &self.rows {
+            let p = &row.result.point;
+            let m = &row.result.metrics;
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{},{}\n",
+                p.workload,
+                p.arch.key(),
+                p.xbar.rows,
+                p.xbar.cols,
+                p.node_label(),
+                m.energy_pj,
+                m.latency_ns,
+                m.area_mm2,
+                m.edap(),
+                row.pareto,
+                row.result.cached,
+            ));
+        }
+        out
+    }
+
+    /// Write `sweep.json` and `sweep.csv` under `dir`; returns both paths.
+    pub fn write(&self, dir: &Path) -> crate::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        let json_path = dir.join("sweep.json");
+        let csv_path = dir.join("sweep.csv");
+        std::fs::write(&json_path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::CrossbarDims;
+    use crate::dse::cache::PointMetrics;
+    use crate::dse::space::{ArchKind, DesignPoint};
+    use crate::sim::tech::TechNode;
+
+    fn synthetic_result() -> SweepResult {
+        let mk = |arch: ArchKind, e: f64, l: f64, a: f64| PointResult {
+            point: DesignPoint {
+                workload: "resnet20".into(),
+                xbar: CrossbarDims { rows: 128, cols: 128 },
+                node: TechNode::N32,
+                arch,
+            },
+            metrics: PointMetrics { energy_pj: e, latency_ns: l, area_mm2: a },
+            cached: false,
+        };
+        SweepResult {
+            points: vec![
+                mk(ArchKind::HcimTernary, 1.0, 2.0, 3.0), // frontier
+                mk(ArchKind::AdcSar7, 5.0, 1.0, 3.0),     // frontier (faster)
+                mk(ArchKind::AdcSar6, 6.0, 2.0, 4.0),     // dominated by both
+            ],
+            simulated: 3,
+            cache_hits: 0,
+        }
+    }
+
+    #[test]
+    fn frontier_annotation() {
+        let report = SweepReport::build(&synthetic_result());
+        let flags: Vec<bool> = report.rows.iter().map(|r| r.pareto).collect();
+        assert_eq!(flags, vec![true, true, false]);
+        assert_eq!(report.frontier["resnet20"], vec![0, 1]);
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let report = SweepReport::build(&synthetic_result());
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let points = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].str_field("arch_key").unwrap(), "hcim-ternary");
+        assert_eq!(points[0].get("pareto"), Some(&Json::Bool(true)));
+        assert_eq!(points[2].get("pareto"), Some(&Json::Bool(false)));
+        let frontier = parsed.get("pareto").unwrap().get("resnet20").unwrap();
+        assert_eq!(frontier.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn csv_has_header_plus_rows() {
+        let report = SweepReport::build(&synthetic_result());
+        let csv = report.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("workload,arch"));
+        assert!(lines[1].contains("hcim-ternary"));
+        assert!(lines[1].ends_with("true,false"));
+    }
+
+    #[test]
+    fn tables_render() {
+        let report = SweepReport::build(&synthetic_result());
+        let all = report.points_table().render();
+        assert!(all.contains("HCiM (Ternary)"));
+        assert!(all.contains("*"));
+        let front = report.pareto_table().render();
+        assert!(front.contains("Pareto frontier"));
+        assert!(!front.contains("ADC-6b"), "dominated point must not appear");
+    }
+
+    #[test]
+    fn write_emits_both_files() {
+        let dir = std::env::temp_dir().join("hcim_dse_report_write");
+        let _ = std::fs::remove_dir_all(&dir);
+        let report = SweepReport::build(&synthetic_result());
+        let (j, c) = report.write(&dir).unwrap();
+        assert!(j.exists());
+        assert!(c.exists());
+        let body = std::fs::read_to_string(j).unwrap();
+        assert!(Json::parse(&body).is_ok());
+    }
+}

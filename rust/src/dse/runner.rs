@@ -1,0 +1,243 @@
+//! Parallel sweep execution.
+//!
+//! [`SweepRunner`] expands a [`DesignSpace`], answers what it can from the
+//! [`ResultCache`], and prices the remaining points on the
+//! [`crate::util::threadpool::ThreadPool`] — one independent
+//! [`crate::sim::simulator::Simulator`] run per point, so the sweep scales
+//! with cores. Results come back in enumeration order regardless of worker
+//! scheduling, which makes whole-sweep output deterministic.
+
+use std::sync::Arc;
+
+use crate::dse::cache::{PointMetrics, ResultCache, CACHE_SCHEMA};
+use crate::dse::space::{DesignPoint, DesignSpace};
+use crate::model::zoo;
+use crate::sim::simulator::{Simulator, SparsityTable};
+use crate::util::threadpool::ThreadPool;
+
+/// One priced design point.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub point: DesignPoint,
+    pub metrics: PointMetrics,
+    /// True when the metrics came from the cache instead of a fresh run.
+    pub cached: bool,
+}
+
+/// Output of one sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// All points in enumeration order.
+    pub points: Vec<PointResult>,
+    /// Points simulated fresh in this run.
+    pub simulated: usize,
+    /// Points answered from the cache.
+    pub cache_hits: usize,
+}
+
+/// Configurable sweep driver.
+pub struct SweepRunner {
+    space: DesignSpace,
+    sparsity: SparsityTable,
+    workers: usize,
+    cache: ResultCache,
+}
+
+impl SweepRunner {
+    /// Runner over `space` with paper-default sparsity, an in-memory cache,
+    /// and one worker per core.
+    pub fn new(space: DesignSpace) -> SweepRunner {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        SweepRunner {
+            space,
+            sparsity: SparsityTable::paper_default(),
+            workers: workers.max(1),
+            cache: ResultCache::in_memory(),
+        }
+    }
+
+    /// Use measured sparsity (changes the cache key fingerprint).
+    pub fn with_sparsity(mut self, table: SparsityTable) -> SweepRunner {
+        self.sparsity = table;
+        self
+    }
+
+    /// Worker-thread count (0 = auto).
+    pub fn with_workers(mut self, n: usize) -> SweepRunner {
+        if n > 0 {
+            self.workers = n;
+        }
+        self
+    }
+
+    /// Attach a result cache (e.g. [`ResultCache::at_path`]).
+    pub fn with_cache(mut self, cache: ResultCache) -> SweepRunner {
+        self.cache = cache;
+        self
+    }
+
+    /// Cache key of one point under the current sparsity table.
+    fn cache_key(&self, point: &DesignPoint) -> String {
+        format!("{CACHE_SCHEMA}|{}|sp{:016x}", point.key(), self.sparsity.fingerprint())
+    }
+
+    /// Run the sweep: validate, split cached/uncached, simulate the
+    /// uncached points in parallel, merge in enumeration order, and
+    /// persist the cache.
+    pub fn run(&mut self) -> crate::Result<SweepResult> {
+        self.space.validate()?;
+        let points = self.space.enumerate();
+
+        // Partition against the cache, remembering each point's slot so
+        // fresh results can be scattered back into enumeration order.
+        let mut results: Vec<Option<PointResult>> = vec![None; points.len()];
+        let mut pending: Vec<(usize, DesignPoint)> = Vec::new();
+        for (i, p) in points.into_iter().enumerate() {
+            let key = self.cache_key(&p);
+            match self.cache.lookup(&key) {
+                Some(metrics) => {
+                    results[i] = Some(PointResult { point: p, metrics, cached: true })
+                }
+                None => pending.push((i, p)),
+            }
+        }
+        let cache_hits = results.iter().filter(|r| r.is_some()).count();
+        let simulated = pending.len();
+
+        if !pending.is_empty() {
+            let table = Arc::new(self.sparsity.clone());
+            let pool = ThreadPool::new(self.workers.min(pending.len()).max(1));
+            let fresh = pool.map(pending, move |(i, p)| {
+                let metrics = simulate_point(&p, &table);
+                (i, p, metrics)
+            });
+            for (i, p, metrics) in fresh {
+                let key = self.cache_key(&p);
+                self.cache.insert(&key, metrics);
+                results[i] = Some(PointResult { point: p, metrics, cached: false });
+            }
+            if let Err(e) = self.cache.save() {
+                crate::log_warn!("could not persist sweep cache: {e}");
+            }
+        }
+
+        Ok(SweepResult {
+            points: results.into_iter().map(|r| r.expect("all slots filled")).collect(),
+            simulated,
+            cache_hits,
+        })
+    }
+}
+
+/// Price one design point (runs on a worker thread). The workload was
+/// validated by [`DesignSpace::validate`], so the zoo lookup cannot fail.
+fn simulate_point(point: &DesignPoint, sparsity: &SparsityTable) -> PointMetrics {
+    let graph = zoo::by_name(&point.workload).expect("workload validated before dispatch");
+    let sim = Simulator::new(point.node).with_sparsity(sparsity.clone());
+    let report = sim.run(&graph, &point.arch());
+    PointMetrics {
+        energy_pj: report.energy_pj(),
+        latency_ns: report.latency_ns(),
+        area_mm2: report.area_mm2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::CrossbarDims;
+    use crate::dse::space::ArchKind;
+    use crate::sim::tech::TechNode;
+
+    fn tiny_space() -> DesignSpace {
+        DesignSpace::new()
+            .with_workloads(&["resnet20"])
+            .with_sizes(&[CrossbarDims { rows: 128, cols: 128 }])
+            .with_nodes(&[TechNode::N32])
+            .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcFlash4])
+    }
+
+    #[test]
+    fn runs_and_orders_points() {
+        let r = SweepRunner::new(tiny_space()).with_workers(2).run().unwrap();
+        assert_eq!(r.points.len(), 2);
+        assert_eq!(r.simulated, 2);
+        assert_eq!(r.cache_hits, 0);
+        assert_eq!(r.points[0].point.arch, ArchKind::HcimTernary);
+        assert_eq!(r.points[1].point.arch, ArchKind::AdcFlash4);
+        for p in &r.points {
+            assert!(!p.cached);
+            assert!(p.metrics.energy_pj > 0.0);
+            assert!(p.metrics.latency_ns > 0.0);
+            assert!(p.metrics.area_mm2 > 0.0);
+        }
+        // the ADC baseline costs more energy than ternary HCiM (Fig. 6)
+        assert!(r.points[1].metrics.energy_pj > r.points[0].metrics.energy_pj);
+    }
+
+    #[test]
+    fn matches_direct_simulator_run() {
+        let r = SweepRunner::new(tiny_space()).run().unwrap();
+        let direct = {
+            let sim = Simulator::new(TechNode::N32);
+            let g = zoo::resnet20();
+            sim.run(&g, &r.points[0].point.arch())
+        };
+        assert!((r.points[0].metrics.energy_pj - direct.energy_pj()).abs() < 1e-6);
+        assert!((r.points[0].metrics.latency_ns - direct.latency_ns()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invalid_space_is_an_error() {
+        let bad = tiny_space().with_workloads(&["not-a-model"]);
+        assert!(SweepRunner::new(bad).run().is_err());
+    }
+
+    #[test]
+    fn second_run_hits_file_cache() {
+        let dir = std::env::temp_dir().join("hcim_dse_runner_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+
+        let first = SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(first.simulated, 2);
+
+        let second = SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(second.simulated, 0, "everything should come from the cache");
+        assert_eq!(second.cache_hits, 2);
+        for (a, b) in first.points.iter().zip(&second.points) {
+            assert_eq!(a.metrics, b.metrics);
+            assert!(b.cached);
+        }
+    }
+
+    #[test]
+    fn sparsity_change_invalidates_cache() {
+        let dir = std::env::temp_dir().join("hcim_dse_runner_sparsity");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        let custom = {
+            let j = crate::util::json::Json::parse(
+                r#"{"resnet20": {"layers": [0.9,0.9,0.9,0.9,0.9,0.9,0.9,0.9,0.9,0.9]}}"#,
+            )
+            .unwrap();
+            SparsityTable::from_json(&j).unwrap()
+        };
+        let second = SweepRunner::new(tiny_space())
+            .with_sparsity(custom)
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(second.simulated, 2, "different sparsity must not reuse entries");
+    }
+}

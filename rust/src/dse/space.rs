@@ -1,0 +1,307 @@
+//! Declarative design-space description.
+//!
+//! A [`DesignSpace`] is a set of axes over the hardware/workload knobs the
+//! simulator exposes: crossbar geometry, technology node, column-periphery
+//! architecture, and workload (zoo model). [`DesignSpace::enumerate`]
+//! expands the cartesian product into concrete [`DesignPoint`]s in a
+//! deterministic order; each point knows how to build its [`HcimConfig`]
+//! and [`Arch`] and carries a canonical string key used by the result
+//! cache.
+
+use crate::config::hardware::{BaselineKind, CrossbarDims, HcimConfig};
+use crate::model::zoo;
+use crate::sim::simulator::Arch;
+use crate::sim::tech::TechNode;
+
+/// Column-periphery architecture axis: the proposed design, its binary
+/// variant, and every baseline the simulator models (§5.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArchKind {
+    HcimTernary,
+    HcimBinary,
+    AdcSar7,
+    AdcSar6,
+    AdcFlash4,
+    Quarry1,
+    Quarry4,
+    BitSplitNet,
+}
+
+impl ArchKind {
+    pub const ALL: [ArchKind; 8] = [
+        ArchKind::HcimTernary,
+        ArchKind::HcimBinary,
+        ArchKind::AdcSar7,
+        ArchKind::AdcSar6,
+        ArchKind::AdcFlash4,
+        ArchKind::Quarry1,
+        ArchKind::Quarry4,
+        ArchKind::BitSplitNet,
+    ];
+
+    /// Short stable slug used in cache keys, CSV, and CLI arguments.
+    pub fn key(self) -> &'static str {
+        match self {
+            ArchKind::HcimTernary => "hcim-ternary",
+            ArchKind::HcimBinary => "hcim-binary",
+            ArchKind::AdcSar7 => "adc7",
+            ArchKind::AdcSar6 => "adc6",
+            ArchKind::AdcFlash4 => "adc4",
+            ArchKind::Quarry1 => "quarry1",
+            ArchKind::Quarry4 => "quarry4",
+            ArchKind::BitSplitNet => "bitsplit",
+        }
+    }
+
+    /// Human label, matching the figure legends of the experiments module.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::HcimTernary => "HCiM (Ternary)",
+            ArchKind::HcimBinary => "HCiM (Binary)",
+            ArchKind::AdcSar7 => BaselineKind::AdcSar7.name(),
+            ArchKind::AdcSar6 => BaselineKind::AdcSar6.name(),
+            ArchKind::AdcFlash4 => BaselineKind::AdcFlash4.name(),
+            ArchKind::Quarry1 => "Quarry (1-bit)",
+            ArchKind::Quarry4 => "Quarry (4-bit)",
+            ArchKind::BitSplitNet => "BitSplitNet",
+        }
+    }
+
+    /// Parse a CLI slug.
+    pub fn by_key(key: &str) -> Option<ArchKind> {
+        ArchKind::ALL.iter().copied().find(|a| a.key() == key)
+    }
+
+    /// The simulator architecture for this axis value on `cfg`.
+    pub fn to_arch(self, cfg: HcimConfig) -> Arch {
+        match self {
+            ArchKind::HcimTernary => Arch::Hcim(cfg.ternary(4.0)),
+            ArchKind::HcimBinary => Arch::Hcim(cfg.binary()),
+            ArchKind::AdcSar7 => Arch::AdcBaseline(cfg, BaselineKind::AdcSar7),
+            ArchKind::AdcSar6 => Arch::AdcBaseline(cfg, BaselineKind::AdcSar6),
+            ArchKind::AdcFlash4 => Arch::AdcBaseline(cfg, BaselineKind::AdcFlash4),
+            ArchKind::Quarry1 => Arch::Quarry(cfg, 1),
+            ArchKind::Quarry4 => Arch::Quarry(cfg, 4),
+            ArchKind::BitSplitNet => Arch::BitSplitNet(cfg),
+        }
+    }
+}
+
+/// One concrete point of the design space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignPoint {
+    /// Zoo model name.
+    pub workload: String,
+    pub xbar: CrossbarDims,
+    pub node: TechNode,
+    pub arch: ArchKind,
+}
+
+impl DesignPoint {
+    /// Canonical identity string (cache key component, stable across runs).
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}x{}|{:.0}nm|{}",
+            self.workload, self.xbar.rows, self.xbar.cols, self.node.nm,
+            self.arch.key()
+        )
+    }
+
+    /// Display label for the technology node.
+    pub fn node_label(&self) -> String {
+        format!("{:.0}nm", self.node.nm)
+    }
+
+    /// Hardware configuration of this point: the paper's base config for
+    /// the workload family with the geometry/node axes applied.
+    pub fn config(&self) -> HcimConfig {
+        let mut cfg = if self.workload == "resnet18" {
+            HcimConfig::imagenet()
+        } else {
+            HcimConfig::config_a()
+        };
+        cfg.xbar = self.xbar;
+        cfg.node = self.node;
+        cfg.name = format!("{}x{}", self.xbar.rows, self.xbar.cols);
+        cfg
+    }
+
+    /// The simulator architecture for this point.
+    pub fn arch(&self) -> Arch {
+        self.arch.to_arch(self.config())
+    }
+}
+
+/// Axes of a sweep. Build with the `with_*` methods; empty axes are
+/// rejected at validation time.
+#[derive(Clone, Debug, Default)]
+pub struct DesignSpace {
+    pub workloads: Vec<String>,
+    pub xbar_sizes: Vec<CrossbarDims>,
+    pub nodes: Vec<TechNode>,
+    pub archs: Vec<ArchKind>,
+}
+
+impl DesignSpace {
+    pub fn new() -> DesignSpace {
+        DesignSpace::default()
+    }
+
+    pub fn with_workloads(mut self, names: &[&str]) -> DesignSpace {
+        self.workloads = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn with_sizes(mut self, sizes: &[CrossbarDims]) -> DesignSpace {
+        self.xbar_sizes = sizes.to_vec();
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: &[TechNode]) -> DesignSpace {
+        self.nodes = nodes.to_vec();
+        self
+    }
+
+    pub fn with_archs(mut self, archs: &[ArchKind]) -> DesignSpace {
+        self.archs = archs.to_vec();
+        self
+    }
+
+    /// The default exploration space around the paper's operating points:
+    /// config-A/B crossbar geometries × {32 nm, 65 nm} × six peripheries —
+    /// 24 design points per workload.
+    pub fn default_for(workloads: &[String]) -> DesignSpace {
+        DesignSpace {
+            workloads: workloads.to_vec(),
+            xbar_sizes: vec![
+                CrossbarDims { rows: 64, cols: 64 },
+                CrossbarDims { rows: 128, cols: 128 },
+            ],
+            nodes: vec![TechNode::N32, TechNode::N65],
+            archs: vec![
+                ArchKind::HcimTernary,
+                ArchKind::HcimBinary,
+                ArchKind::AdcSar7,
+                ArchKind::AdcSar6,
+                ArchKind::AdcFlash4,
+                ArchKind::Quarry1,
+            ],
+        }
+    }
+
+    /// Number of points the cartesian product will produce.
+    pub fn len(&self) -> usize {
+        self.workloads.len() * self.xbar_sizes.len() * self.nodes.len() * self.archs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Check the axes are usable before a sweep starts: non-empty, known
+    /// workloads, and geometries the DCiM array model supports (≤128
+    /// columns per array).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.is_empty(), "design space has an empty axis");
+        for w in &self.workloads {
+            anyhow::ensure!(zoo::by_name(w).is_some(), "unknown workload `{w}` in design space");
+        }
+        for s in &self.xbar_sizes {
+            anyhow::ensure!(s.rows >= 1 && s.cols >= 1, "degenerate crossbar {}x{}", s.rows, s.cols);
+            anyhow::ensure!(
+                s.cols <= 128,
+                "crossbar {}x{}: one DCiM array serves at most 128 columns",
+                s.rows,
+                s.cols
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the cartesian product, deterministically ordered
+    /// (workload-major, then geometry, node, arch).
+    pub fn enumerate(&self) -> Vec<DesignPoint> {
+        let mut points = Vec::with_capacity(self.len());
+        for w in &self.workloads {
+            for &xbar in &self.xbar_sizes {
+                for &node in &self.nodes {
+                    for &arch in &self.archs {
+                        points.push(DesignPoint { workload: w.clone(), xbar, node, arch });
+                    }
+                }
+            }
+        }
+        points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn default_space_has_at_least_24_points() {
+        let s = DesignSpace::default_for(&["resnet20".to_string()]);
+        assert!(s.len() >= 24, "default space has {} points", s.len());
+        assert!(s.validate().is_ok());
+        assert_eq!(s.enumerate().len(), s.len());
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_with_unique_keys() {
+        let s = DesignSpace::default_for(&["resnet20".to_string(), "vgg9".to_string()]);
+        let a = s.enumerate();
+        let b = s.enumerate();
+        assert_eq!(a, b);
+        let keys: BTreeSet<String> = a.iter().map(|p| p.key()).collect();
+        assert_eq!(keys.len(), a.len(), "cache keys must be unique");
+    }
+
+    #[test]
+    fn validate_rejects_bad_spaces() {
+        assert!(DesignSpace::new().validate().is_err()); // all axes empty
+        let unknown = DesignSpace::default_for(&["alexnet".to_string()]);
+        assert!(unknown.validate().is_err());
+        let wide = DesignSpace::default_for(&["resnet20".to_string()])
+            .with_sizes(&[CrossbarDims { rows: 128, cols: 256 }]);
+        assert!(wide.validate().is_err());
+    }
+
+    #[test]
+    fn arch_kind_round_trips_and_matches_baseline_names() {
+        for a in ArchKind::ALL {
+            assert_eq!(ArchKind::by_key(a.key()), Some(a));
+        }
+        assert_eq!(ArchKind::AdcSar7.name(), "ADC-7b (SAR)");
+        assert_eq!(ArchKind::HcimTernary.name(), "HCiM (Ternary)");
+    }
+
+    #[test]
+    fn point_config_applies_axes() {
+        let p = DesignPoint {
+            workload: "resnet20".into(),
+            xbar: CrossbarDims { rows: 64, cols: 64 },
+            node: TechNode::N65,
+            arch: ArchKind::AdcFlash4,
+        };
+        let cfg = p.config();
+        assert_eq!(cfg.xbar.rows, 64);
+        assert_eq!(cfg.node, TechNode::N65);
+        assert_eq!(p.key(), "resnet20|64x64|65nm|adc4");
+        // imagenet workloads use the imagenet base precision
+        let q = DesignPoint { workload: "resnet18".into(), ..p };
+        assert_eq!(q.config().w_bits, 3);
+    }
+
+    #[test]
+    fn arch_names_flow_into_simulator() {
+        let p = DesignPoint {
+            workload: "resnet20".into(),
+            xbar: CrossbarDims { rows: 128, cols: 128 },
+            node: TechNode::N32,
+            arch: ArchKind::HcimBinary,
+        };
+        assert_eq!(p.arch().name(), "HCiM (Binary)");
+    }
+}

@@ -403,26 +403,50 @@ pub fn ablation_phase_sharing() -> Table {
 }
 
 /// Ablation: ADC-baseline energy as a function of ADC precision, showing
-/// where HCiM's column periphery sits.
+/// where HCiM's column periphery sits. Thin client of the [`crate::dse`]
+/// subsystem: the hand-rolled serial loop this used to be is now a
+/// four-point design space priced by the parallel sweep runner.
 pub fn ablation_adc_precision_sweep(sim: &Simulator) -> Table {
-    let g = zoo::resnet20();
+    use crate::dse::{ArchKind, DesignSpace, SweepRunner};
+
     let cfg = HcimConfig::config_a();
-    let hcim = sim.run(&g, &Arch::Hcim(cfg.clone()));
+    let space = DesignSpace::new()
+        .with_workloads(&["resnet20"])
+        .with_sizes(&[cfg.xbar])
+        .with_nodes(&[sim.params.node])
+        .with_archs(&[
+            ArchKind::AdcSar7,
+            ArchKind::AdcSar6,
+            ArchKind::AdcFlash4,
+            ArchKind::HcimTernary,
+        ]);
+    let sweep = SweepRunner::new(space)
+        .with_sparsity(sim.sparsity.clone())
+        .run()
+        .expect("static ablation space is valid");
+    let hcim = sweep
+        .points
+        .iter()
+        .find(|p| p.point.arch == ArchKind::HcimTernary)
+        .expect("HCiM point swept");
+
     let mut t = Table::new(
         "Ablation — energy vs baseline ADC precision (ResNet-20)",
         &["System", "Energy (µJ)", "vs HCiM ternary"],
     );
-    for kind in BaselineKind::ADC_BASELINES {
-        let r = sim.run(&g, &Arch::AdcBaseline(cfg.clone(), kind));
+    for p in &sweep.points {
+        if p.point.arch == ArchKind::HcimTernary {
+            continue;
+        }
         t.row(&[
-            kind.name().into(),
-            fnum(r.energy_pj() / 1e6),
-            format!("{:.1}×", r.energy_pj() / hcim.energy_pj()),
+            p.point.arch.name().into(),
+            fnum(p.metrics.energy_pj / 1e6),
+            format!("{:.1}×", p.metrics.energy_pj / hcim.metrics.energy_pj),
         ]);
     }
     t.row(&[
         "HCiM (Ternary)".into(),
-        fnum(hcim.energy_pj() / 1e6),
+        fnum(hcim.metrics.energy_pj / 1e6),
         "1.0×".into(),
     ]);
     t
@@ -555,6 +579,26 @@ mod tests {
         assert!(t.contains("shared odd/even"));
         let t2 = ablation_adc_precision_sweep(&sim()).render();
         assert!(t2.contains("HCiM"));
+    }
+
+    #[test]
+    fn adc_sweep_via_dse_matches_direct_simulation() {
+        // the refactor onto the DSE runner must reproduce the exact
+        // energies the old hand-rolled loop printed
+        let s = sim();
+        let g = zoo::resnet20();
+        let cfg = HcimConfig::config_a();
+        let table = ablation_adc_precision_sweep(&s).render();
+        for kind in BaselineKind::ADC_BASELINES {
+            let direct = s.run(&g, &Arch::AdcBaseline(cfg.clone(), kind));
+            assert!(
+                table.contains(&fnum(direct.energy_pj() / 1e6)),
+                "{} energy missing from:\n{table}",
+                kind.name()
+            );
+        }
+        let hcim = s.run(&g, &Arch::Hcim(cfg));
+        assert!(table.contains(&fnum(hcim.energy_pj() / 1e6)));
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //!   compiled artifacts.
 //! * [`experiments`] — one runner per paper table/figure (shared by
 //!   `cargo bench` and `examples/paper_figures.rs`).
+//! * [`dse`] — parallel design-space exploration: sweep crossbar geometry ×
+//!   tech node × periphery × workload with a content-hash result cache and
+//!   extract the (energy, latency, area) Pareto frontier (`hcim dse`).
 
 pub mod util;
 pub mod config;
@@ -31,6 +34,7 @@ pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
+pub mod dse;
 pub mod cli;
 
 /// Crate version (mirrors `Cargo.toml`).

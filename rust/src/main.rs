@@ -2,14 +2,17 @@
 //!
 //! Subcommands: `simulate` (cycle-accurate run), `serve` (batched PJRT
 //! inference over the AOT artifacts), `tables` (regenerate every paper
-//! table/figure), `info` (mapping bookkeeping). See `cli::USAGE`.
+//! table/figure), `dse` (parallel design-space sweep with Pareto
+//! extraction), `info` (mapping bookkeeping). See `cli::USAGE`.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use hcim::cli::{Args, USAGE};
 use hcim::config::hardware::{BaselineKind, HcimConfig};
 use hcim::coordinator::{Server, ServerConfig};
+use hcim::dse::{DesignSpace, ResultCache, SweepReport, SweepRunner};
 use hcim::experiments;
 use hcim::model::zoo;
 use hcim::runtime::Engine;
@@ -29,6 +32,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "tables" => cmd_tables(&args),
+        "dse" => cmd_dse(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -156,6 +160,52 @@ fn cmd_tables(args: &Args) -> hcim::Result<()> {
     experiments::fig67_table(&sim, &HcimConfig::config_b(), "Fig 7 (config B)").print();
     experiments::ablation_phase_sharing().print();
     experiments::ablation_adc_precision_sweep(&sim).print();
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> hcim::Result<()> {
+    let workloads: Vec<String> = args
+        .flag_or("workload", "resnet20")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!workloads.is_empty(), "no workloads given");
+    let out_dir = PathBuf::from(args.flag_or("out", "dse_out"));
+
+    let space = DesignSpace::default_for(&workloads);
+    println!(
+        "sweeping {} design points ({} workloads x {} geometries x {} nodes x {} peripheries)",
+        space.len(),
+        space.workloads.len(),
+        space.xbar_sizes.len(),
+        space.nodes.len(),
+        space.archs.len()
+    );
+
+    let mut runner = SweepRunner::new(space).with_workers(args.usize_or("workers", 0));
+    if !args.has("no-cache") {
+        runner = runner.with_cache(ResultCache::at_path(&out_dir.join("cache.json")));
+    }
+    if let Some(path) = args.flag("sparsity") {
+        runner = runner.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
+    }
+
+    let t0 = Instant::now();
+    let result = runner.run()?;
+    let elapsed = t0.elapsed();
+    let report = SweepReport::build(&result);
+    report.points_table().print();
+    report.pareto_table().print();
+    let (json_path, csv_path) = report.write(&out_dir)?;
+    println!(
+        "swept {} points in {:.2}s ({} simulated, {} cache hits)",
+        report.rows.len(),
+        elapsed.as_secs_f64(),
+        result.simulated,
+        result.cache_hits
+    );
+    println!("report: {}  {}", json_path.display(), csv_path.display());
     Ok(())
 }
 

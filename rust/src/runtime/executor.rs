@@ -1,105 +1,196 @@
 //! PJRT execution engine: compile the HLO-text artifacts once, execute
 //! batched inferences from the serving loop.
 //!
-//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API over
-//! xla_extension 0.5.1). Interchange is HLO **text** — see
-//! `python/compile/aot.py` and /opt/xla-example/README.md for why the
-//! serialized-proto path is a dead end on this image.
+//! Two builds of the same `Engine` API:
+//!
+//! * **`--features pjrt`** — wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT
+//!   C API over xla_extension 0.5.1). Interchange is HLO **text** — see
+//!   `python/compile/aot.py` and /opt/xla-example/README.md for why the
+//!   serialized-proto path is a dead end on this image. The `xla` crate
+//!   must be added to `[dependencies]` on a networked machine.
+//! * **default (offline)** — a deterministic stub: it still parses the
+//!   manifest and honours the batching/padding contract, but produces
+//!   synthetic logits that are a pure function of the input image. This
+//!   keeps the serving coordinator, examples, and tests building and
+//!   running in environments where no PJRT runtime exists; the numeric
+//!   golden checks (which compare against python-side logits) require the
+//!   real backend.
 
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-use super::artifact::Manifest;
+    use crate::runtime::artifact::Manifest;
 
-/// One compiled model: a PJRT executable per exported batch size.
-pub struct Engine {
-    pub manifest: Manifest,
-    /// Kept alive for the executables' lifetime (PJRT requires it).
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// batch size → compiled executable. `PjRtLoadedExecutable::execute`
-    /// takes `&self`, but the underlying buffers are guarded to be safe
-    /// with the multi-worker coordinator.
-    executables: BTreeMap<usize, Mutex<xla::PjRtLoadedExecutable>>,
+    /// One compiled model: a PJRT executable per exported batch size.
+    pub struct Engine {
+        pub manifest: Manifest,
+        /// Kept alive for the executables' lifetime (PJRT requires it).
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        /// batch size → compiled executable. `PjRtLoadedExecutable::execute`
+        /// takes `&self`, but the underlying buffers are guarded to be safe
+        /// with the multi-worker coordinator.
+        executables: BTreeMap<usize, Mutex<xla::PjRtLoadedExecutable>>,
+    }
+
+    impl Engine {
+        /// Load + compile every executable in the artifact directory.
+        pub fn load(artifact_dir: &Path) -> crate::Result<Engine> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            crate::log_info!(
+                "PJRT platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            let mut executables = BTreeMap::new();
+            for (&b, _) in &manifest.batches {
+                let path = manifest.hlo_path(b)?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling batch-{b}: {e:?}"))?;
+                crate::log_info!("compiled {} (batch {b})", path.display());
+                executables.insert(b, Mutex::new(exe));
+            }
+            Ok(Engine { manifest, client, executables })
+        }
+
+        /// Available batch sizes.
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            self.executables.keys().copied().collect()
+        }
+
+        /// Execute one batch. `images` is row-major `[n × (image²·3)]` f32
+        /// with `n ≤ batch`; short batches are zero-padded to the
+        /// executable's shape. Returns `n` logit vectors.
+        pub fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<Vec<f32>>> {
+            let m = &self.manifest;
+            let elems = m.input_elems();
+            anyhow::ensure!(images.len() == n * elems, "input length mismatch");
+            anyhow::ensure!(
+                n <= m.max_batch(),
+                "batch of {n} exceeds the largest exported executable ({})",
+                m.max_batch()
+            );
+            let b = m.batch_for(n);
+            let exe = self
+                .executables
+                .get(&b)
+                .ok_or_else(|| anyhow::anyhow!("no executable for batch {b}"))?;
+
+            // pad to the executable's fixed batch
+            let mut padded = vec![0f32; b * elems];
+            padded[..images.len()].copy_from_slice(images);
+            let input = xla::Literal::vec1(&padded)
+                .reshape(&[b as i64, m.image as i64, m.image as i64, 3])
+                .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+
+            let guard = exe.lock().expect("executable mutex poisoned");
+            let result = guard
+                .execute::<xla::Literal>(&[input])
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+            drop(guard);
+
+            // aot.py lowers with return_tuple=True → 1-tuple of logits
+            let logits_lit = result
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            let flat = logits_lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            anyhow::ensure!(flat.len() == b * m.classes, "unexpected logits size");
+            Ok(flat
+                .chunks(m.classes)
+                .take(n)
+                .map(|c| c.to_vec())
+                .collect())
+        }
+    }
+
+    // The PJRT client and executables are internally thread-safe at the C
+    // API level for independent executions; we serialise per-executable via
+    // Mutex.
+    unsafe impl Sync for Engine {}
+    unsafe impl Send for Engine {}
 }
 
-impl Engine {
-    /// Load + compile every executable in the artifact directory.
-    pub fn load(artifact_dir: &Path) -> crate::Result<Engine> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        crate::log_info!(
-            "PJRT platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        let mut executables = BTreeMap::new();
-        for (&b, _) in &manifest.batches {
-            let path = manifest.hlo_path(b)?;
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling batch-{b}: {e:?}"))?;
-            crate::log_info!("compiled {} (batch {b})", path.display());
-            executables.insert(b, Mutex::new(exe));
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use crate::runtime::artifact::Manifest;
+
+    /// Offline stand-in for the PJRT engine: same loading and batching
+    /// contract, synthetic logits (a fixed deterministic projection of the
+    /// input image, so identical inputs give identical outputs regardless
+    /// of batch padding).
+    pub struct Engine {
+        pub manifest: Manifest,
+    }
+
+    impl Engine {
+        /// Load the manifest; no compilation happens in the stub.
+        pub fn load(artifact_dir: &Path) -> crate::Result<Engine> {
+            let manifest = Manifest::load(artifact_dir)?;
+            anyhow::ensure!(manifest.classes > 0, "manifest has zero classes");
+            crate::log_warn!(
+                "pjrt feature disabled: serving {} with synthetic logits \
+                 (build with --features pjrt for real XLA execution)",
+                manifest.model
+            );
+            Ok(Engine { manifest })
         }
-        Ok(Engine { manifest, client, executables })
+
+        /// Batch sizes the manifest exports (the stub honours the same
+        /// padding behaviour as the real engine).
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            self.manifest.batches.keys().copied().collect()
+        }
+
+        /// Deterministic per-sample pseudo-logits. Each sample's output
+        /// depends only on that sample's pixels, so batch padding cannot
+        /// change results — the property the serving tests rely on.
+        pub fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<Vec<f32>>> {
+            let m = &self.manifest;
+            let elems = m.input_elems();
+            anyhow::ensure!(images.len() == n * elems, "input length mismatch");
+            anyhow::ensure!(
+                n <= m.max_batch(),
+                "batch of {n} exceeds the largest exported executable ({})",
+                m.max_batch()
+            );
+            let mut out = Vec::with_capacity(n);
+            for s in 0..n {
+                let sample = &images[s * elems..(s + 1) * elems];
+                let mut logits = vec![0f32; m.classes];
+                for (i, &v) in sample.iter().enumerate() {
+                    // fixed sparse projection: scatter pixel i into a class
+                    // with a signed coefficient derived from its index
+                    let k = (i.wrapping_mul(31).wrapping_add(7)) % m.classes;
+                    let coeff = ((i % 13) as f32 - 6.0) * 0.01;
+                    logits[k] += v * coeff;
+                }
+                out.push(logits);
+            }
+            Ok(out)
+        }
     }
+}
 
-    /// Available batch sizes.
-    pub fn batch_sizes(&self) -> Vec<usize> {
-        self.executables.keys().copied().collect()
-    }
+pub use backend::Engine;
 
-    /// Execute one batch. `images` is row-major `[n × (image²·3)]` f32 with
-    /// `n ≤ batch`; short batches are zero-padded to the executable's
-    /// shape. Returns `n` logit vectors.
-    pub fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<Vec<f32>>> {
-        let m = &self.manifest;
-        let elems = m.input_elems();
-        anyhow::ensure!(images.len() == n * elems, "input length mismatch");
-        let b = m.batch_for(n);
-        let exe = self
-            .executables
-            .get(&b)
-            .ok_or_else(|| anyhow::anyhow!("no executable for batch {b}"))?;
-
-        // pad to the executable's fixed batch
-        let mut padded = vec![0f32; b * elems];
-        padded[..images.len()].copy_from_slice(images);
-        let input = xla::Literal::vec1(&padded)
-            .reshape(&[b as i64, m.image as i64, m.image as i64, 3])
-            .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
-
-        let guard = exe.lock().expect("executable mutex poisoned");
-        let result = guard
-            .execute::<xla::Literal>(&[input])
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
-        drop(guard);
-
-        // aot.py lowers with return_tuple=True → 1-tuple of logits
-        let logits_lit = result
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let flat = logits_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-        anyhow::ensure!(flat.len() == b * m.classes, "unexpected logits size");
-        Ok(flat
-            .chunks(m.classes)
-            .take(n)
-            .map(|c| c.to_vec())
-            .collect())
-    }
-
+impl Engine {
     /// Argmax helper for classification results.
     pub fn classify(&self, images: &[f32], n: usize) -> crate::Result<Vec<usize>> {
         Ok(self
@@ -117,7 +208,60 @@ impl Engine {
     }
 }
 
-// The PJRT client and executables are internally thread-safe at the C API
-// level for independent executions; we serialise per-executable via Mutex.
-unsafe impl Sync for Engine {}
-unsafe impl Send for Engine {}
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    fn demo_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("hcim_stub_engine_{name}"));
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(
+            d.join("manifest.json"),
+            r#"{"model": "tiny", "mode": "ternary", "image": 4, "classes": 10,
+                "w_bits": 4, "x_bits": 4, "sf_bits": 4, "ps_bits": 8,
+                "xbar_rows": 128, "test_acc": 0.5,
+                "batches": {"1": "model_b1.hlo.txt", "4": "model_b4.hlo.txt"}}"#,
+        )
+        .unwrap();
+        d
+    }
+
+    #[test]
+    fn stub_is_deterministic_and_padding_safe() {
+        let engine = Engine::load(&demo_dir("det")).unwrap();
+        let elems = engine.manifest.input_elems();
+        let img: Vec<f32> = (0..elems).map(|i| i as f32 * 0.01).collect();
+        let single = engine.infer(&img, 1).unwrap();
+        assert_eq!(single.len(), 1);
+        assert_eq!(single[0].len(), 10);
+        // same image inside a 2-batch → identical logits for sample 0
+        let mut two = img.clone();
+        two.extend_from_slice(&img);
+        let batch = engine.infer(&two, 2).unwrap();
+        assert_eq!(single[0], batch[0]);
+        assert_eq!(batch[0], batch[1]);
+        // repeated call identical
+        assert_eq!(engine.infer(&img, 1).unwrap(), single);
+    }
+
+    #[test]
+    fn stub_rejects_bad_lengths_and_classifies() {
+        let engine = Engine::load(&demo_dir("len")).unwrap();
+        let elems = engine.manifest.input_elems();
+        assert!(engine.infer(&[0.0; 3], 1).is_err());
+        let img = vec![0.5f32; elems];
+        let classes = engine.classify(&img, 1).unwrap();
+        assert_eq!(classes.len(), 1);
+        assert!(classes[0] < 10);
+    }
+
+    #[test]
+    fn stub_rejects_oversized_batches_like_the_real_engine() {
+        let engine = Engine::load(&demo_dir("batch")).unwrap();
+        let elems = engine.manifest.input_elems();
+        // manifest exports batches {1, 4}; n = 5 must be a clean error
+        let img = vec![0.1f32; 5 * elems];
+        let err = engine.infer(&img, 5).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+}

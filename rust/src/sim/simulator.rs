@@ -109,6 +109,23 @@ impl SparsityTable {
         }
     }
 
+    /// Content fingerprint of the table (entries + default), used by the
+    /// DSE result cache so sweeps re-run when measured sparsity changes.
+    /// Names are length-delimited and layer vectors length-prefixed, so
+    /// the byte stream encodes the table injectively.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write(&self.default.to_bits().to_le_bytes());
+        for (model, layers) in &self.entries {
+            h.write_delimited(model.as_bytes());
+            h.write(&(layers.len() as u64).to_le_bytes());
+            for f in layers {
+                h.write(&f.to_bits().to_le_bytes());
+            }
+        }
+        h.finish()
+    }
+
     /// Sparsity for MVM-layer `idx` of `model` under the given PSQ mode
     /// (binary PSQ has no zeros by construction).
     pub fn lookup(&self, model: &str, idx: usize, mode: PsqMode) -> f64 {
@@ -351,6 +368,16 @@ mod tests {
         assert_eq!(t.lookup("unknown", 0, tern), t.default);
         // binary mode has no zeros
         assert_eq!(t.lookup("resnet20", 0, PsqMode::Binary), 0.0);
+    }
+
+    #[test]
+    fn sparsity_fingerprint_tracks_content() {
+        let a = SparsityTable::paper_default();
+        let b = SparsityTable::paper_default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let j = Json::parse(r#"{"resnet20": {"layers": [0.6, 0.4]}}"#).unwrap();
+        let c = SparsityTable::from_json(&j).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

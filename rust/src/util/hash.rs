@@ -1,0 +1,85 @@
+//! Non-cryptographic hashing (FNV-1a 64) shared by the DSE result cache
+//! and the sparsity-table fingerprint.
+//!
+//! One home for the FNV constants so cache keys and fingerprints cannot
+//! drift apart. [`Fnv1a`] is the streaming form; use
+//! [`Fnv1a::write_delimited`] for variable-length fields so the encoding
+//! stays injective (a length prefix prevents `"ab" + "c"` from colliding
+//! with `"a" + "bc"`).
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// One-shot FNV-1a 64-bit hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a hasher for multi-field keys.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Mix raw bytes (fixed-width fields).
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Mix a variable-length field with a length prefix, keeping the
+    /// overall byte stream an injective encoding of the field sequence.
+    pub fn write_delimited(&mut self, bytes: &[u8]) {
+        self.write(&(bytes.len() as u64).to_le_bytes());
+        self.write(bytes);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // canonical published FNV-1a 64 values
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.write(b"hello ");
+        h.write(b"world");
+        assert_eq!(h.finish(), fnv1a64(b"hello world"));
+    }
+
+    #[test]
+    fn delimited_fields_do_not_collide_on_boundaries() {
+        let hash2 = |a: &[u8], b: &[u8]| {
+            let mut h = Fnv1a::new();
+            h.write_delimited(a);
+            h.write_delimited(b);
+            h.finish()
+        };
+        assert_ne!(hash2(b"ab", b"c"), hash2(b"a", b"bc"));
+        assert_ne!(hash2(b"", b"x"), hash2(b"x", b""));
+    }
+}

@@ -12,9 +12,11 @@
 //!   parameter sweeps,
 //! * [`bench`] — a criterion-flavoured timing harness for `cargo bench`,
 //! * [`json`] — a minimal JSON parser/serializer for artifact manifests,
+//! * [`hash`] — FNV-1a hashing for cache keys and fingerprints,
 //! * [`logging`] — leveled stderr logger.
 
 pub mod rng;
+pub mod hash;
 pub mod prop;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,164 @@
+//! Integration tests for the design-space exploration subsystem: default
+//! sweep scale, whole-sweep determinism, cache behaviour across runner
+//! instances, and Pareto consistency of the emitted report.
+
+use hcim::config::hardware::CrossbarDims;
+use hcim::dse::{
+    dominates, ArchKind, DesignSpace, ResultCache, SweepReport, SweepRunner,
+};
+use hcim::sim::simulator::{Arch, Simulator};
+use hcim::sim::tech::TechNode;
+use hcim::util::json::Json;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("hcim_dse_it_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The acceptance-criteria sweep: `hcim dse --workload resnet20` prices at
+/// least 24 points and its Pareto set contains no dominated point.
+#[test]
+fn default_resnet20_sweep_end_to_end() {
+    let space = DesignSpace::default_for(&["resnet20".to_string()]);
+    assert!(space.len() >= 24, "default space too small: {}", space.len());
+
+    let result = SweepRunner::new(space).run().unwrap();
+    assert_eq!(result.simulated, result.points.len());
+    let report = SweepReport::build(&result);
+
+    // every frontier member must be non-dominated against the WHOLE sweep
+    let objs: Vec<[f64; 3]> = report
+        .rows
+        .iter()
+        .map(|r| r.result.metrics.objectives())
+        .collect();
+    for (i, row) in report.rows.iter().enumerate() {
+        if row.pareto {
+            assert!(
+                !objs.iter().any(|o| dominates(o, &objs[i])),
+                "pareto-marked point {i} is dominated"
+            );
+        } else {
+            assert!(
+                objs.iter().any(|o| dominates(o, &objs[i])),
+                "non-pareto point {i} is not dominated by anything"
+            );
+        }
+    }
+    let frontier = &report.frontier["resnet20"];
+    assert!(!frontier.is_empty());
+    assert!(frontier.len() < report.rows.len(), "a real sweep has dominated points");
+
+    // the JSON report round-trips and agrees with the in-memory flags
+    let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+    let points = parsed.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), report.rows.len());
+    for (row, j) in report.rows.iter().zip(points) {
+        assert_eq!(j.get("pareto"), Some(&Json::Bool(row.pareto)));
+    }
+}
+
+/// Same space → byte-identical report, regardless of worker scheduling.
+#[test]
+fn sweep_is_deterministic() {
+    let space = || {
+        DesignSpace::new()
+            .with_workloads(&["resnet20", "vgg9"])
+            .with_sizes(&[
+                CrossbarDims { rows: 64, cols: 64 },
+                CrossbarDims { rows: 128, cols: 128 },
+            ])
+            .with_nodes(&[TechNode::N32])
+            .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcSar6, ArchKind::Quarry1])
+    };
+    let a = SweepRunner::new(space()).with_workers(8).run().unwrap();
+    let b = SweepRunner::new(space()).with_workers(1).run().unwrap();
+    let ja = SweepReport::build(&a).to_json().to_string();
+    let jb = SweepReport::build(&b).to_json().to_string();
+    assert_eq!(ja, jb, "parallel and serial sweeps must agree byte-for-byte");
+    let ca = SweepReport::build(&a).to_csv();
+    let cb = SweepReport::build(&b).to_csv();
+    assert_eq!(ca, cb);
+}
+
+/// A second run of the same space against the same cache file performs
+/// zero new simulations and reproduces identical metrics.
+#[test]
+fn overlapping_sweeps_reuse_the_cache() {
+    let dir = tmp_dir("cache_reuse");
+    let cache_path = dir.join("cache.json");
+    let space = || DesignSpace::default_for(&["resnet20".to_string()]);
+
+    let first = SweepRunner::new(space())
+        .with_cache(ResultCache::at_path(&cache_path))
+        .run()
+        .unwrap();
+    assert_eq!(first.cache_hits, 0);
+    assert_eq!(first.simulated, first.points.len());
+    assert!(cache_path.exists(), "cache must persist after the sweep");
+
+    let second = SweepRunner::new(space())
+        .with_cache(ResultCache::at_path(&cache_path))
+        .run()
+        .unwrap();
+    assert_eq!(second.simulated, 0, "second identical sweep must be all cache hits");
+    assert_eq!(second.cache_hits, second.points.len());
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.metrics, b.metrics);
+        assert!(b.cached);
+    }
+
+    // an OVERLAPPING (not identical) space only simulates the new points
+    let wider = DesignSpace::default_for(&["resnet20".to_string()])
+        .with_nodes(&[TechNode::N32, TechNode::N65, TechNode::N45]);
+    let third = SweepRunner::new(wider)
+        .with_cache(ResultCache::at_path(&cache_path))
+        .run()
+        .unwrap();
+    assert_eq!(third.cache_hits, first.points.len());
+    assert_eq!(third.simulated, third.points.len() - first.points.len());
+}
+
+/// Sweep metrics equal a direct simulator run of the same point — the
+/// runner adds parallelism and caching, never different physics.
+#[test]
+fn sweep_agrees_with_direct_simulation() {
+    let space = DesignSpace::new()
+        .with_workloads(&["vgg9"])
+        .with_sizes(&[CrossbarDims { rows: 64, cols: 64 }])
+        .with_nodes(&[TechNode::N65])
+        .with_archs(&[ArchKind::BitSplitNet, ArchKind::HcimBinary]);
+    let result = SweepRunner::new(space).run().unwrap();
+    let sim = Simulator::new(TechNode::N65);
+    let g = hcim::model::zoo::vgg9();
+    for p in &result.points {
+        let direct = sim.run(&g, &p.point.arch());
+        assert!((p.metrics.energy_pj - direct.energy_pj()).abs() < 1e-6);
+        assert!((p.metrics.latency_ns - direct.latency_ns()).abs() < 1e-6);
+        assert!((p.metrics.area_mm2 - direct.area_mm2()).abs() < 1e-9);
+    }
+    // arch naming stays consistent with the simulator's own labels
+    let arch: Arch = result.points[0].point.arch();
+    assert_eq!(arch.name(), "BitSplitNet");
+}
+
+/// The written artifacts parse and the CSV matches the point count.
+#[test]
+fn report_files_are_written_and_parse() {
+    let dir = tmp_dir("report_files");
+    let space = DesignSpace::new()
+        .with_workloads(&["resnet20"])
+        .with_sizes(&[CrossbarDims { rows: 128, cols: 128 }])
+        .with_nodes(&[TechNode::N32])
+        .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcSar7, ArchKind::AdcFlash4]);
+    let result = SweepRunner::new(space).run().unwrap();
+    let report = SweepReport::build(&result);
+    let (json_path, csv_path) = report.write(&dir).unwrap();
+
+    let parsed = Json::parse(&std::fs::read_to_string(json_path).unwrap()).unwrap();
+    assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 3);
+    let csv = std::fs::read_to_string(csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 1 + 3);
+}

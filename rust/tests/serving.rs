@@ -78,6 +78,10 @@ fn padding_short_batches_matches_single() {
 /// (see aot.py: print_large_constants).
 #[test]
 fn golden_logits_match_python() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("(skipping: stub engine has synthetic logits — build with --features pjrt)");
+        return;
+    }
     let Some(dir) = artifacts_dir() else { return };
     let engine = Engine::load(dir).unwrap();
     let m = &engine.manifest;

@@ -1,0 +1,160 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored path
+//! dependency provides exactly the surface the `hcim` crate uses:
+//!
+//! * [`Error`] — a message plus an optional boxed source error,
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type,
+//! * `anyhow!`, `bail!`, `ensure!` — format-string constructors.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` itself: that is what makes the blanket
+//! `From<E: std::error::Error>` impl (and therefore `?` conversion from any
+//! concrete error type) coherent.
+
+use std::fmt;
+
+/// A catch-all error: human-readable message plus optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a plain message (what `anyhow!` expands to).
+    pub fn msg<M: Into<String>>(m: M) -> Error {
+        Error { msg: m.into(), source: None }
+    }
+
+    /// The message this error was created with.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// The wrapped source error, if this came from a typed error via `?`.
+    pub fn source_ref(&self) -> Option<&(dyn std::error::Error + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn std::error::Error);
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+/// Any concrete error converts via `?` (mirrors anyhow's blanket impl).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_debug() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn from_typed_error_keeps_source() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source_ref().is_some());
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(200).unwrap_err().to_string().contains("too big"));
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn ensure_without_message_names_condition() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("1 + 1 == 3"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
