@@ -5,7 +5,7 @@
 //! reports latency/throughput plus the co-simulated HCiM hardware cost.
 //!
 //!   make artifacts            # build + train + lower (one-time)
-//!   cargo run --release --example serve_cifar -- [artifacts-dir] [requests]
+//!   cargo run --release --example serve_cifar -- [artifacts-dir] [requests] [seed]
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -15,8 +15,9 @@ use hcim::runtime::Engine;
 use hcim::util::rng::Rng;
 
 /// Synthetic test images mirroring `python/compile/data.py`'s value range.
-fn synth_images(n: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Rng::new(seed);
+/// Draws from a generator forked off the single master seed — never from
+/// hand-picked sequential seeds, which correlate streams.
+fn synth_images(n: usize, elems: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
     (0..n)
         .map(|_| (0..elems).map(|_| rng.f64() as f32).collect())
         .collect()
@@ -26,6 +27,9 @@ fn main() -> hcim::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let dir = args.get(1).map(|s| s.as_str()).unwrap_or("artifacts");
     let requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seed: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(42);
+    // one master generator; every stochastic path below forks from it
+    let mut master = Rng::new(seed);
 
     let engine = Arc::new(Engine::load(std::path::Path::new(dir))?);
     let m = engine.manifest.clone();
@@ -59,7 +63,7 @@ fn main() -> hcim::Result<()> {
             hw.latency_ns() / 1e3
         );
     }
-    let images = synth_images(requests, m.input_elems(), 1);
+    let images = synth_images(requests, m.input_elems(), &mut master.fork());
     for img in &images {
         server.submit(img.clone());
     }
@@ -82,11 +86,11 @@ fn main() -> hcim::Result<()> {
             workers: 2,
         },
     );
-    let mut rng = Rng::new(2);
-    for img in synth_images(requests, m.input_elems(), 3) {
+    let mut arrival_rng = master.fork();
+    for img in synth_images(requests, m.input_elems(), &mut master.fork()) {
         server.submit(img);
         // exponential inter-arrival, mean 2 ms
-        let gap = -2000.0 * (1.0 - rng.f64()).ln();
+        let gap = -2000.0 * (1.0 - arrival_rng.f64()).ln();
         std::thread::sleep(Duration::from_micros(gap as u64));
     }
     let _ = server.collect(requests);

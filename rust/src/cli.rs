@@ -66,6 +66,19 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Seed-style flag: decimal or `0x`-prefixed hex.
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .and_then(|v| {
+                if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                    u64::from_str_radix(hex, 16).ok()
+                } else {
+                    v.parse().ok()
+                }
+            })
+            .unwrap_or(default)
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -85,6 +98,7 @@ COMMANDS:
                 --node 65nm|32nm   [--sparsity artifacts/sparsity.json]
   serve       batched inference over the AOT artifacts
                 --artifacts DIR  --requests N  --max-batch N  --workers N
+                --seed S         master seed for the synthetic request stream
   tables      print every paper table/figure reproduction
                 --artifacts DIR
   dse         parallel design-space exploration with Pareto extraction
@@ -93,11 +107,30 @@ COMMANDS:
                 --workers N      worker threads (default: all cores)
                 --no-cache       ignore and do not write the result cache
                 --sparsity FILE  measured sparsity table (artifacts/sparsity.json)
+                --robustness     also Monte Carlo each point's PSQ flip rate
+                                 and extend the Pareto frontier to 4 objectives
+                --trials N       robustness trials per point (default 8)
+                --seed S         robustness master seed (default 42)
               running a sweep:
                 `hcim dse --workload resnet20` prices 24 design points
                 (crossbar 64/128 x node 32/65nm x 6 peripheries) in
                 parallel, then writes dse_out/sweep.{json,csv} with the
                 (energy, latency, area) Pareto frontier marked
+  robustness  Monte Carlo analog non-ideality analysis of the PSQ path
+                --model NAME     zoo model (default resnet20)
+                --config A|B|imagenet   --node 65nm|32nm|22nm
+                --trials N       independent trials (default 32)
+                --seed S         master seed; trial seeds derive via SplitMix64
+                --workers N      worker threads (0 = all cores; the report is
+                                 byte-identical for any worker count)
+                --sigma-g F      log-normal conductance sigma
+                --stuck-on F --stuck-off F   stuck-at cell fault rates
+                --ir-drop F      far-row bitline attenuation fraction
+                --sigma-cmp F    comparator offset sigma (popcount LSBs)
+                --ideal          zero every magnitude (regression guard:
+                                 measured flip rate must be exactly 0)
+                --format table|json|csv   stdout format (default table)
+                --out DIR        also write robustness.{json,csv}
   info        show a model's crossbar mapping (Eq. 2 bookkeeping)
                 --model NAME --config A|B
   help        this message
@@ -127,6 +160,18 @@ mod tests {
         assert_eq!(a.usize_or("requests", 1), 64);
         assert_eq!(a.usize_or("missing", 7), 7);
         assert!((a.f64_or("rate", 0.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seed_flag_accepts_decimal_and_hex() {
+        let a = parse(&["robustness", "--seed", "12345"]);
+        assert_eq!(a.u64_or("seed", 0), 12345);
+        let b = parse(&["robustness", "--seed", "0xDEADBEEF"]);
+        assert_eq!(b.u64_or("seed", 0), 0xDEADBEEF);
+        let c = parse(&["robustness"]);
+        assert_eq!(c.u64_or("seed", 42), 42);
+        let d = parse(&["robustness", "--seed", "not-a-number"]);
+        assert_eq!(d.u64_or("seed", 42), 42);
     }
 
     #[test]

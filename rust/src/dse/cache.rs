@@ -13,7 +13,8 @@ use std::path::{Path, PathBuf};
 use crate::util::json::Json;
 
 /// Bump when the cost model changes in a way that invalidates old entries.
-pub const CACHE_SCHEMA: &str = "hcim-dse-v1";
+/// (v2: entries optionally carry a robustness objective.)
+pub const CACHE_SCHEMA: &str = "hcim-dse-v2";
 
 pub use crate::util::hash::fnv1a64;
 
@@ -23,6 +24,10 @@ pub struct PointMetrics {
     pub energy_pj: f64,
     pub latency_ns: f64,
     pub area_mm2: f64,
+    /// Mean Monte Carlo PSQ-code flip rate under the node's default
+    /// non-ideality magnitudes; present only when the sweep ran with
+    /// robustness enabled.
+    pub robustness: Option<f64>,
 }
 
 impl PointMetrics {
@@ -34,9 +39,19 @@ impl PointMetrics {
         self.energy_pj * self.latency_ns * self.area_mm2
     }
 
-    /// The minimization objectives used for Pareto extraction.
+    /// The three always-present minimization objectives.
     pub fn objectives(&self) -> [f64; 3] {
         [self.energy_pj, self.latency_ns, self.area_mm2]
+    }
+
+    /// All minimization objectives, including robustness when measured —
+    /// the vector the Pareto extraction runs on (3- or 4-dimensional).
+    pub fn objectives_nd(&self) -> Vec<f64> {
+        let mut objs = vec![self.energy_pj, self.latency_ns, self.area_mm2];
+        if let Some(r) = self.robustness {
+            objs.push(r);
+        }
+        objs
     }
 }
 
@@ -93,6 +108,7 @@ impl ResultCache {
             ) else {
                 continue;
             };
+            let robustness = e.get("robustness").and_then(|r| r.as_f64());
             self.entries.insert(
                 fnv1a64(key.as_bytes()),
                 Entry {
@@ -101,6 +117,7 @@ impl ResultCache {
                         energy_pj: energy,
                         latency_ns: latency,
                         area_mm2: area,
+                        robustness,
                     },
                 },
             );
@@ -149,6 +166,9 @@ impl ResultCache {
                 m.insert("energy_pj".to_string(), Json::Num(e.metrics.energy_pj));
                 m.insert("latency_ns".to_string(), Json::Num(e.metrics.latency_ns));
                 m.insert("area_mm2".to_string(), Json::Num(e.metrics.area_mm2));
+                if let Some(r) = e.metrics.robustness {
+                    m.insert("robustness".to_string(), Json::Num(r));
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -178,7 +198,7 @@ mod tests {
     use super::*;
 
     fn metrics(e: f64) -> PointMetrics {
-        PointMetrics { energy_pj: e, latency_ns: 2.0 * e, area_mm2: 0.5 }
+        PointMetrics { energy_pj: e, latency_ns: 2.0 * e, area_mm2: 0.5, robustness: None }
     }
 
     #[test]
@@ -231,9 +251,27 @@ mod tests {
 
     #[test]
     fn metrics_derived_quantities() {
-        let m = PointMetrics { energy_pj: 2.0, latency_ns: 3.0, area_mm2: 4.0 };
+        let m = PointMetrics { energy_pj: 2.0, latency_ns: 3.0, area_mm2: 4.0, robustness: None };
         assert_eq!(m.latency_area(), 12.0);
         assert_eq!(m.edap(), 24.0);
         assert_eq!(m.objectives(), [2.0, 3.0, 4.0]);
+        assert_eq!(m.objectives_nd(), vec![2.0, 3.0, 4.0]);
+        let r = PointMetrics { robustness: Some(0.05), ..m };
+        assert_eq!(r.objectives_nd(), vec![2.0, 3.0, 4.0, 0.05]);
+    }
+
+    #[test]
+    fn robustness_survives_a_file_roundtrip() {
+        let dir = std::env::temp_dir().join("hcim_dse_cache_rob");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let mut c = ResultCache::at_path(&path);
+        let with_rob = PointMetrics { robustness: Some(0.0125), ..metrics(1.0) };
+        c.insert("rob", with_rob);
+        c.insert("plain", metrics(2.0));
+        c.save().unwrap();
+        let mut reloaded = ResultCache::at_path(&path);
+        assert_eq!(reloaded.lookup("rob"), Some(with_rob));
+        assert_eq!(reloaded.lookup("plain"), Some(metrics(2.0)));
     }
 }

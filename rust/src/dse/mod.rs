@@ -14,7 +14,9 @@
 //!   repeated or overlapping sweeps skip already-simulated points (keys
 //!   include the sparsity-table fingerprint and a schema version);
 //! * [`pareto`] — frontier extraction over (energy, latency, area), all
-//!   minimized;
+//!   minimized — extended to a fourth minimized robustness objective (the
+//!   Monte Carlo PSQ-code flip rate from [`crate::nonideal`]) when the
+//!   runner is built with [`runner::SweepRunner::with_robustness`];
 //! * [`report`] — [`report::SweepReport`]: per-workload Pareto
 //!   annotation, JSON + CSV export, and ASCII summary tables.
 //!
@@ -40,7 +42,7 @@ pub mod runner;
 pub mod report;
 
 pub use cache::{PointMetrics, ResultCache};
-pub use pareto::{dominates, pareto_indices};
+pub use pareto::{dominates, dominates_nd, pareto_indices, pareto_indices_nd};
 pub use report::SweepReport;
-pub use runner::{PointResult, SweepResult, SweepRunner};
+pub use runner::{PointResult, RobustnessCfg, SweepResult, SweepRunner};
 pub use space::{ArchKind, DesignPoint, DesignSpace};

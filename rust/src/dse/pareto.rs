@@ -1,4 +1,6 @@
-//! Pareto frontier extraction over (energy, latency, area).
+//! Pareto frontier extraction over (energy, latency, area) — and, when the
+//! sweep carries a robustness objective, over any objective count via the
+//! `_nd` variants.
 //!
 //! All objectives are minimized. A point `a` *dominates* `b` when it is no
 //! worse on every objective and strictly better on at least one; the
@@ -6,14 +8,18 @@
 //! identical objective vectors are all kept (neither strictly dominates
 //! the other), so duplicated architectures still show up in reports.
 
-/// `a` dominates `b` (minimization on every axis).
-pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+/// `a` dominates `b` over an arbitrary (equal) number of minimized
+/// objectives. Unequal lengths are a caller bug (mixed 3- and 4-objective
+/// rows would silently truncate the comparison), so they panic in every
+/// build profile.
+pub fn dominates_nd(a: &[f64], b: &[f64]) -> bool {
+    assert_eq!(a.len(), b.len(), "objective vectors must have equal length");
     let mut strictly_better = false;
-    for i in 0..3 {
-        if a[i] > b[i] {
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
             return false;
         }
-        if a[i] < b[i] {
+        if x < y {
             strictly_better = true;
         }
     }
@@ -22,8 +28,29 @@ pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
 
 /// Indices of the non-dominated points of `objs`, in input order.
 ///
-/// O(n²) pairwise scan — sweeps are at most a few thousand points, far
+/// O(n²·d) pairwise scan — sweeps are at most a few thousand points, far
 /// below where divide-and-conquer frontier algorithms pay off.
+pub fn pareto_indices_nd(objs: &[Vec<f64>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| !objs.iter().any(|other| dominates_nd(other, &objs[i])))
+        .collect()
+}
+
+/// Per-index frontier membership flags over arbitrary objective counts.
+pub fn pareto_flags_nd(objs: &[Vec<f64>]) -> Vec<bool> {
+    let mut flags = vec![false; objs.len()];
+    for i in pareto_indices_nd(objs) {
+        flags[i] = true;
+    }
+    flags
+}
+
+/// `a` dominates `b` (3-objective convenience wrapper).
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    dominates_nd(a, b)
+}
+
+/// Indices of the non-dominated points of `objs`, in input order.
 pub fn pareto_indices(objs: &[[f64; 3]]) -> Vec<usize> {
     (0..objs.len())
         .filter(|&i| !objs.iter().any(|other| dominates(other, &objs[i])))
@@ -123,5 +150,26 @@ mod tests {
     #[test]
     fn empty_input_empty_frontier() {
         assert!(pareto_indices(&[]).is_empty());
+        assert!(pareto_indices_nd(&[]).is_empty());
+    }
+
+    #[test]
+    fn nd_agrees_with_fixed_arity_on_three_objectives() {
+        let mut rng = crate::util::rng::Rng::new(0x4D);
+        let objs3: Vec<[f64; 3]> = (0..50)
+            .map(|_| [rng.f64() * 5.0, rng.f64() * 5.0, rng.f64() * 5.0])
+            .collect();
+        let objsv: Vec<Vec<f64>> = objs3.iter().map(|o| o.to_vec()).collect();
+        assert_eq!(pareto_indices(&objs3), pareto_indices_nd(&objsv));
+        assert_eq!(pareto_flags(&objs3), pareto_flags_nd(&objsv));
+    }
+
+    #[test]
+    fn fourth_objective_can_rescue_a_dominated_point() {
+        // dominated on (e, l, a) but uniquely robust → on the 4D frontier
+        let objs3 = vec![vec![1.0, 1.0, 1.0], vec![2.0, 2.0, 2.0]];
+        assert_eq!(pareto_indices_nd(&objs3), vec![0]);
+        let objs4 = vec![vec![1.0, 1.0, 1.0, 0.5], vec![2.0, 2.0, 2.0, 0.1]];
+        assert_eq!(pareto_indices_nd(&objs4), vec![0, 1]);
     }
 }

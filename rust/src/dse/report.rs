@@ -2,13 +2,15 @@
 //! summary tables printed by the `hcim dse` subcommand.
 //!
 //! Pareto membership is computed **per workload** over the minimization
-//! objectives (energy, latency, area) — comparing a ResNet-20 point
-//! against a VGG-11 point would be meaningless.
+//! objectives — (energy, latency, area), extended by the Monte Carlo
+//! flip-rate objective when the sweep ran with robustness enabled.
+//! Comparing a ResNet-20 point against a VGG-11 point would be
+//! meaningless.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::dse::pareto::pareto_flags;
+use crate::dse::pareto::pareto_flags_nd;
 use crate::dse::runner::{PointResult, SweepResult};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
@@ -50,11 +52,12 @@ impl SweepReport {
 
         let mut frontier = BTreeMap::new();
         for (workload, indices) in &by_workload {
-            let objs: Vec<[f64; 3]> = indices
+            // 3-objective, or 4 when the sweep measured robustness
+            let objs: Vec<Vec<f64>> = indices
                 .iter()
-                .map(|&i| rows[i].result.metrics.objectives())
+                .map(|&i| rows[i].result.metrics.objectives_nd())
                 .collect();
-            let flags = pareto_flags(&objs);
+            let flags = pareto_flags_nd(&objs);
             let members: Vec<usize> = indices
                 .iter()
                 .zip(&flags)
@@ -75,17 +78,33 @@ impl SweepReport {
         }
     }
 
-    /// Full point listing.
+    /// True when any row carries the robustness objective.
+    fn has_robustness(&self) -> bool {
+        self.rows.iter().any(|r| r.result.metrics.robustness.is_some())
+    }
+
+    fn fmt_robustness(m: &crate::dse::cache::PointMetrics) -> String {
+        m.robustness.map(|r| format!("{r:.4}")).unwrap_or_default()
+    }
+
+    /// Full point listing. The "Flip rate" column appears only when the
+    /// sweep measured robustness.
     pub fn points_table(&self) -> Table {
-        let mut t = Table::new(
-            "DSE sweep — all design points",
-            &["Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
-              "Latency (µs)", "Area (mm²)", "EDAP", "Pareto", "Cached"],
-        );
+        let with_rob = self.has_robustness();
+        let mut headers = vec![
+            "Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
+            "Latency (µs)", "Area (mm²)", "EDAP",
+        ];
+        if with_rob {
+            headers.push("Flip rate");
+        }
+        headers.push("Pareto");
+        headers.push("Cached");
+        let mut t = Table::new("DSE sweep — all design points", &headers);
         for row in &self.rows {
             let p = &row.result.point;
             let m = &row.result.metrics;
-            t.row(&[
+            let mut cells = vec![
                 p.workload.clone(),
                 p.arch.name().to_string(),
                 format!("{}x{}", p.xbar.rows, p.xbar.cols),
@@ -94,25 +113,38 @@ impl SweepReport {
                 fnum(m.latency_ns / 1e3),
                 format!("{:.4}", m.area_mm2),
                 format!("{:.3e}", m.edap()),
-                if row.pareto { "*".into() } else { "".into() },
-                if row.result.cached { "hit".into() } else { "".into() },
-            ]);
+            ];
+            if with_rob {
+                cells.push(Self::fmt_robustness(m));
+            }
+            cells.push(if row.pareto { "*".into() } else { "".into() });
+            cells.push(if row.result.cached { "hit".into() } else { "".into() });
+            t.row(&cells);
         }
         t
     }
 
-    /// Frontier-only listing.
+    /// Frontier-only listing (plus the flip-rate objective when measured).
     pub fn pareto_table(&self) -> Table {
-        let mut t = Table::new(
-            "DSE sweep — Pareto frontier (energy, latency, area minimized)",
-            &["Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
-              "Latency (µs)", "Area (mm²)"],
-        );
+        let with_rob = self.has_robustness();
+        let title = if with_rob {
+            "DSE sweep — Pareto frontier (energy, latency, area, flip rate minimized)"
+        } else {
+            "DSE sweep — Pareto frontier (energy, latency, area minimized)"
+        };
+        let mut headers = vec![
+            "Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
+            "Latency (µs)", "Area (mm²)",
+        ];
+        if with_rob {
+            headers.push("Flip rate");
+        }
+        let mut t = Table::new(title, &headers);
         for members in self.frontier.values() {
             for &i in members {
                 let p = &self.rows[i].result.point;
                 let m = &self.rows[i].result.metrics;
-                t.row(&[
+                let mut cells = vec![
                     p.workload.clone(),
                     p.arch.name().to_string(),
                     format!("{}x{}", p.xbar.rows, p.xbar.cols),
@@ -120,7 +152,11 @@ impl SweepReport {
                     fnum(m.energy_pj / 1e6),
                     fnum(m.latency_ns / 1e3),
                     format!("{:.4}", m.area_mm2),
-                ]);
+                ];
+                if with_rob {
+                    cells.push(Self::fmt_robustness(m));
+                }
+                t.row(&cells);
             }
         }
         t
@@ -145,6 +181,9 @@ impl SweepReport {
                 o.insert("latency_ns".into(), Json::Num(m.latency_ns));
                 o.insert("area_mm2".into(), Json::Num(m.area_mm2));
                 o.insert("edap".into(), Json::Num(m.edap()));
+                if let Some(r) = m.robustness {
+                    o.insert("robustness".into(), Json::Num(r));
+                }
                 o.insert("pareto".into(), Json::Bool(row.pareto));
                 o.insert("cached".into(), Json::Bool(row.result.cached));
                 Json::Obj(o)
@@ -169,16 +208,17 @@ impl SweepReport {
         Json::Obj(top)
     }
 
-    /// CSV export (one row per point).
+    /// CSV export (one row per point; `robustness` empty when the sweep
+    /// did not measure it).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,pareto,cached\n",
+            "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,robustness,pareto,cached\n",
         );
         for row in &self.rows {
             let p = &row.result.point;
             let m = &row.result.metrics;
             out.push_str(&format!(
-                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{},{}\n",
+                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{},{},{}\n",
                 p.workload,
                 p.arch.key(),
                 p.xbar.rows,
@@ -188,6 +228,7 @@ impl SweepReport {
                 m.latency_ns,
                 m.area_mm2,
                 m.edap(),
+                m.robustness.map(|r| format!("{r:.6}")).unwrap_or_default(),
                 row.pareto,
                 row.result.cached,
             ));
@@ -217,22 +258,25 @@ mod tests {
     use crate::dse::space::{ArchKind, DesignPoint};
     use crate::sim::tech::TechNode;
 
-    fn synthetic_result() -> SweepResult {
-        let mk = |arch: ArchKind, e: f64, l: f64, a: f64| PointResult {
+    fn mk_point(arch: ArchKind, e: f64, l: f64, a: f64, rob: Option<f64>) -> PointResult {
+        PointResult {
             point: DesignPoint {
                 workload: "resnet20".into(),
                 xbar: CrossbarDims { rows: 128, cols: 128 },
                 node: TechNode::N32,
                 arch,
             },
-            metrics: PointMetrics { energy_pj: e, latency_ns: l, area_mm2: a },
+            metrics: PointMetrics { energy_pj: e, latency_ns: l, area_mm2: a, robustness: rob },
             cached: false,
-        };
+        }
+    }
+
+    fn synthetic_result() -> SweepResult {
         SweepResult {
             points: vec![
-                mk(ArchKind::HcimTernary, 1.0, 2.0, 3.0), // frontier
-                mk(ArchKind::AdcSar7, 5.0, 1.0, 3.0),     // frontier (faster)
-                mk(ArchKind::AdcSar6, 6.0, 2.0, 4.0),     // dominated by both
+                mk_point(ArchKind::HcimTernary, 1.0, 2.0, 3.0, None), // frontier
+                mk_point(ArchKind::AdcSar7, 5.0, 1.0, 3.0, None),     // frontier (faster)
+                mk_point(ArchKind::AdcSar6, 6.0, 2.0, 4.0, None),     // dominated by both
             ],
             simulated: 3,
             cache_hits: 0,
@@ -245,6 +289,33 @@ mod tests {
         let flags: Vec<bool> = report.rows.iter().map(|r| r.pareto).collect();
         assert_eq!(flags, vec![true, true, false]);
         assert_eq!(report.frontier["resnet20"], vec![0, 1]);
+    }
+
+    #[test]
+    fn robustness_objective_reshapes_the_frontier() {
+        // same (e, l, a) geometry as synthetic_result(), but the point
+        // dominated in 3D is uniquely robust → it joins the 4D frontier
+        let result = SweepResult {
+            points: vec![
+                mk_point(ArchKind::HcimTernary, 1.0, 2.0, 3.0, Some(0.05)),
+                mk_point(ArchKind::AdcSar7, 5.0, 1.0, 3.0, Some(0.05)),
+                mk_point(ArchKind::AdcSar6, 6.0, 2.0, 4.0, Some(0.001)),
+            ],
+            simulated: 3,
+            cache_hits: 0,
+        };
+        let report = SweepReport::build(&result);
+        let flags: Vec<bool> = report.rows.iter().map(|r| r.pareto).collect();
+        assert_eq!(flags, vec![true, true, true]);
+        assert_eq!(report.frontier["resnet20"], vec![0, 1, 2]);
+        // the robustness value flows into JSON and CSV
+        let json = Json::parse(&report.to_json().to_string()).unwrap();
+        let pts = json.get("points").unwrap().as_arr().unwrap();
+        assert!((pts[2].num_field("robustness").unwrap() - 0.001).abs() < 1e-12);
+        let csv = report.to_csv();
+        assert!(csv.lines().nth(1).unwrap().contains(",0.050000,"));
+        // and the frontier table advertises the fourth objective
+        assert!(report.pareto_table().render().contains("flip rate minimized"));
     }
 
     #[test]

@@ -12,8 +12,37 @@ use std::sync::Arc;
 use crate::dse::cache::{PointMetrics, ResultCache, CACHE_SCHEMA};
 use crate::dse::space::{DesignPoint, DesignSpace};
 use crate::model::zoo;
+use crate::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
 use crate::sim::simulator::{Simulator, SparsityTable};
 use crate::util::threadpool::ThreadPool;
+
+/// Configuration of the optional robustness objective: when attached to a
+/// [`SweepRunner`], every design point additionally runs a small Monte
+/// Carlo ([`crate::nonideal`]) under its node's default non-ideality
+/// magnitudes, and the mean PSQ-code flip rate joins (energy, latency,
+/// area) as a fourth minimized Pareto objective. The same master seed is
+/// used for every point, so points are compared under paired noise.
+///
+/// Periphery awareness is first-order: all archs share the analog
+/// crossbar effects (conductance variation, stuck-at faults, IR drop) and
+/// the PSQ quantizer of the point's config, but the comparator
+/// input-referred offset is applied only to comparator-bank archs
+/// ([`crate::dse::space::ArchKind::has_comparator_bank`]) — an ADC
+/// baseline's own quantization behaviour is part of its ideal model, not
+/// a non-ideality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RobustnessCfg {
+    /// Monte Carlo trials per design point.
+    pub trials: usize,
+    /// Master seed shared by all points.
+    pub seed: u64,
+}
+
+impl Default for RobustnessCfg {
+    fn default() -> Self {
+        RobustnessCfg { trials: 8, seed: 42 }
+    }
+}
 
 /// One priced design point.
 #[derive(Clone, Debug)]
@@ -41,6 +70,7 @@ pub struct SweepRunner {
     sparsity: SparsityTable,
     workers: usize,
     cache: ResultCache,
+    robustness: Option<RobustnessCfg>,
 }
 
 impl SweepRunner {
@@ -53,7 +83,15 @@ impl SweepRunner {
             sparsity: SparsityTable::paper_default(),
             workers: workers.max(1),
             cache: ResultCache::in_memory(),
+            robustness: None,
         }
+    }
+
+    /// Attach the robustness objective: every point gains a Monte Carlo
+    /// mean flip rate and the Pareto frontier becomes 4-objective.
+    pub fn with_robustness(mut self, cfg: RobustnessCfg) -> SweepRunner {
+        self.robustness = Some(cfg);
+        self
     }
 
     /// Use measured sparsity (changes the cache key fingerprint).
@@ -76,9 +114,21 @@ impl SweepRunner {
         self
     }
 
-    /// Cache key of one point under the current sparsity table.
+    /// Cache key of one point under the current sparsity table (and, when
+    /// enabled, the robustness configuration — a plain sweep and a
+    /// robustness sweep must not share entries).
     fn cache_key(&self, point: &DesignPoint) -> String {
-        format!("{CACHE_SCHEMA}|{}|sp{:016x}", point.key(), self.sparsity.fingerprint())
+        let mut key =
+            format!("{CACHE_SCHEMA}|{}|sp{:016x}", point.key(), self.sparsity.fingerprint());
+        if let Some(r) = self.robustness {
+            key.push_str(&format!(
+                "|{}t{}s{:016x}",
+                crate::nonideal::MODEL_VERSION,
+                r.trials,
+                r.seed
+            ));
+        }
+        key
     }
 
     /// Run the sweep: validate, split cached/uncached, simulate the
@@ -95,10 +145,15 @@ impl SweepRunner {
         for (i, p) in points.into_iter().enumerate() {
             let key = self.cache_key(&p);
             match self.cache.lookup(&key) {
-                Some(metrics) => {
+                // accept a hit only when its objective arity matches the
+                // sweep's: a hand-edited cache file can strip a robustness
+                // value (or graft one onto a plain entry), and mixed
+                // 3/4-objective rows would corrupt the Pareto extraction —
+                // re-simulate such entries instead
+                Some(metrics) if metrics.robustness.is_some() == self.robustness.is_some() => {
                     results[i] = Some(PointResult { point: p, metrics, cached: true })
                 }
-                None => pending.push((i, p)),
+                _ => pending.push((i, p)),
             }
         }
         let cache_hits = results.iter().filter(|r| r.is_some()).count();
@@ -106,9 +161,10 @@ impl SweepRunner {
 
         if !pending.is_empty() {
             let table = Arc::new(self.sparsity.clone());
+            let robustness = self.robustness;
             let pool = ThreadPool::new(self.workers.min(pending.len()).max(1));
             let fresh = pool.map(pending, move |(i, p)| {
-                let metrics = simulate_point(&p, &table);
+                let metrics = simulate_point(&p, &table, robustness);
                 (i, p, metrics)
             });
             for (i, p, metrics) in fresh {
@@ -131,14 +187,32 @@ impl SweepRunner {
 
 /// Price one design point (runs on a worker thread). The workload was
 /// validated by [`DesignSpace::validate`], so the zoo lookup cannot fail.
-fn simulate_point(point: &DesignPoint, sparsity: &SparsityTable) -> PointMetrics {
+/// With `robustness` set, the point additionally runs a serial Monte Carlo
+/// (serial because this function already executes inside a pool worker).
+fn simulate_point(
+    point: &DesignPoint,
+    sparsity: &SparsityTable,
+    robustness: Option<RobustnessCfg>,
+) -> PointMetrics {
     let graph = zoo::by_name(&point.workload).expect("workload validated before dispatch");
     let sim = Simulator::new(point.node).with_sparsity(sparsity.clone());
     let report = sim.run(&graph, &point.arch());
+    let robustness = robustness.map(|rc| {
+        let cfg = point.arch().config().clone();
+        let mut ni = NonIdealityParams::default_for(point.node);
+        // the crossbar effects hit every analog periphery; the comparator
+        // input-referred offset only exists where a comparator bank does
+        if !point.arch.has_comparator_bank() {
+            ni.sigma_cmp = 0.0;
+        }
+        let mc = MonteCarloCfg { trials: rc.trials.max(1), seed: rc.seed, workers: 1 };
+        run_monte_carlo(&graph, &cfg, &ni, &mc).flip.mean
+    });
     PointMetrics {
         energy_pj: report.energy_pj(),
         latency_ns: report.latency_ns(),
         area_mm2: report.area_mm2(),
+        robustness,
     }
 }
 
@@ -215,6 +289,121 @@ mod tests {
             assert_eq!(a.metrics, b.metrics);
             assert!(b.cached);
         }
+    }
+
+    #[test]
+    fn robustness_objective_attaches_to_every_point() {
+        let r = SweepRunner::new(tiny_space())
+            .with_workers(2)
+            .with_robustness(RobustnessCfg { trials: 2, seed: 7 })
+            .run()
+            .unwrap();
+        for p in &r.points {
+            let rob = p.metrics.robustness.expect("robustness must be measured");
+            assert!((0.0..=1.0).contains(&rob), "flip rate {rob} out of range");
+            assert_eq!(p.metrics.objectives_nd().len(), 4);
+        }
+        // plain sweeps stay 3-objective
+        let plain = SweepRunner::new(tiny_space()).run().unwrap();
+        assert!(plain.points.iter().all(|p| p.metrics.robustness.is_none()));
+    }
+
+    #[test]
+    fn robustness_sweeps_do_not_share_cache_with_plain_sweeps() {
+        let dir = std::env::temp_dir().join("hcim_dse_runner_rob_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let plain = SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(plain.simulated, 2);
+        // a robustness sweep must not reuse the 3-objective entries…
+        let rob = SweepRunner::new(tiny_space())
+            .with_robustness(RobustnessCfg { trials: 2, seed: 7 })
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(rob.simulated, 2, "plain entries must not satisfy a robustness sweep");
+        // …but a repeated robustness sweep hits, robustness value intact
+        let again = SweepRunner::new(tiny_space())
+            .with_robustness(RobustnessCfg { trials: 2, seed: 7 })
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(again.cache_hits, 2);
+        for (a, b) in rob.points.iter().zip(&again.points) {
+            assert_eq!(a.metrics, b.metrics);
+            assert!(b.metrics.robustness.is_some());
+        }
+    }
+
+    #[test]
+    fn stripped_robustness_entries_are_resimulated_not_mixed() {
+        // a hand-edited cache file can drop robustness values while
+        // keeping the robustness-flavoured keys; the runner must
+        // re-simulate those entries rather than feed a 3-objective row
+        // into a 4-objective Pareto extraction
+        let dir = std::env::temp_dir().join("hcim_dse_runner_rob_strip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let rob = RobustnessCfg { trials: 2, seed: 7 };
+        let first = SweepRunner::new(tiny_space())
+            .with_robustness(rob)
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(first.simulated, 2);
+
+        // strip every `"robustness":<value>` field from the cache file
+        let body = std::fs::read_to_string(&path).unwrap();
+        let needle = ",\"robustness\":";
+        let mut stripped = String::new();
+        let mut rest = body.as_str();
+        while let Some(i) = rest.find(needle) {
+            stripped.push_str(&rest[..i]);
+            let after = &rest[i + needle.len()..];
+            let j = after.find('}').expect("entry object closes");
+            rest = &after[j..];
+        }
+        stripped.push_str(rest);
+        assert_ne!(body, stripped, "test must actually strip something");
+        std::fs::write(&path, stripped).unwrap();
+
+        let second = SweepRunner::new(tiny_space())
+            .with_robustness(rob)
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(second.simulated, 2, "stripped entries must be re-simulated");
+        assert_eq!(second.cache_hits, 0);
+        assert!(second.points.iter().all(|p| p.metrics.robustness.is_some()));
+    }
+
+    #[test]
+    fn plain_sweep_rejects_entries_grafted_with_robustness() {
+        // the opposite corruption: a robustness value added to an entry a
+        // plain sweep would hit must also force re-simulation, or the
+        // plain sweep would mix 3- and 4-objective rows
+        let dir = std::env::temp_dir().join("hcim_dse_runner_rob_graft");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        // graft a robustness field onto every cached entry
+        let body = std::fs::read_to_string(&path).unwrap();
+        let grafted = body.replace("\"energy_pj\":", "\"robustness\":0.01,\"energy_pj\":");
+        assert_ne!(body, grafted);
+        std::fs::write(&path, grafted).unwrap();
+
+        let second = SweepRunner::new(tiny_space())
+            .with_cache(ResultCache::at_path(&path))
+            .run()
+            .unwrap();
+        assert_eq!(second.simulated, 2, "grafted entries must be re-simulated");
+        assert!(second.points.iter().all(|p| p.metrics.robustness.is_none()));
     }
 
     #[test]

@@ -72,6 +72,15 @@ impl ArchKind {
         ArchKind::ALL.iter().copied().find(|a| a.key() == key)
     }
 
+    /// True when this periphery quantizes with HCiM's comparator bank —
+    /// the archs subject to comparator input-referred offset. ADC-based
+    /// peripheries (baselines, Quarry, BitSplitNet) share the analog
+    /// crossbar effects (conductance variation, faults, IR drop) but have
+    /// no comparator to offset.
+    pub fn has_comparator_bank(self) -> bool {
+        matches!(self, ArchKind::HcimTernary | ArchKind::HcimBinary)
+    }
+
     /// The simulator architecture for this axis value on `cfg`.
     pub fn to_arch(self, cfg: HcimConfig) -> Arch {
         match self {

@@ -452,6 +452,36 @@ pub fn ablation_adc_precision_sweep(sim: &Simulator) -> Table {
     t
 }
 
+/// Ablation: Monte Carlo PSQ-code flip rate of config A under growing RRAM
+/// conductance variation — the robustness axis the comparator-based
+/// periphery lives or dies on (§4.2: the comparator bank replaces the
+/// ADC, so analog noise lands directly on the ternary code decisions).
+/// The σ_G = 0 row doubles as the ideal-path regression guard: its flip
+/// rate must print as exactly zero. Thin client of [`crate::nonideal`].
+pub fn ablation_variation_robustness() -> Table {
+    use crate::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
+
+    let g = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    let mut t = Table::new(
+        "Ablation — PSQ flip rate vs conductance variation (ResNet-20, config A)",
+        &["sigma_G", "Flip rate", "Std", "Zero-code corruption", "PS disagreement"],
+    );
+    for &sigma in &[0.0, 0.05, 0.10, 0.20] {
+        let ni = NonIdealityParams { sigma_g: sigma, ..NonIdealityParams::ideal() };
+        let mc = MonteCarloCfg { trials: 6, seed: 7, workers: 0 };
+        let r = run_monte_carlo(&g, &cfg, &ni, &mc);
+        t.row(&[
+            format!("{sigma:.2}"),
+            format!("{:.5}", r.flip.mean),
+            format!("{:.5}", r.flip.std_dev),
+            format!("{:.5}", r.zero.mean),
+            format!("{:.6}", r.disagreement.mean),
+        ]);
+    }
+    t
+}
+
 /// Reports used by EXPERIMENTS.md: run everything and also return the raw
 /// SimReports for the headline claims.
 pub fn headline_reports(sim: &Simulator) -> Vec<SimReport> {
@@ -579,6 +609,15 @@ mod tests {
         assert!(t.contains("shared odd/even"));
         let t2 = ablation_adc_precision_sweep(&sim()).render();
         assert!(t2.contains("HCiM"));
+    }
+
+    #[test]
+    fn variation_ablation_zero_sigma_row_is_exactly_zero() {
+        let t = ablation_variation_robustness().render();
+        assert!(t.contains("conductance variation"));
+        // the σ_G = 0 row is the ideal-path regression guard
+        let zero_row = t.lines().find(|l| l.contains("0.00 ")).expect("σ=0 row present");
+        assert!(zero_row.contains("0.00000"), "ideal row must read exactly zero: {zero_row}");
     }
 
     #[test]

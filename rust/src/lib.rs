@@ -23,7 +23,12 @@
 //!   `cargo bench` and `examples/paper_figures.rs`).
 //! * [`dse`] — parallel design-space exploration: sweep crossbar geometry ×
 //!   tech node × periphery × workload with a content-hash result cache and
-//!   extract the (energy, latency, area) Pareto frontier (`hcim dse`).
+//!   extract the (energy, latency, area) Pareto frontier (`hcim dse`),
+//!   optionally extended to a fourth robustness objective.
+//! * [`nonideal`] — analog non-ideality models (conductance variation,
+//!   stuck-at faults, IR drop, comparator offset) injected into the
+//!   functional PSQ path, with a parallel Monte Carlo robustness harness
+//!   (`hcim robustness`).
 
 pub mod util;
 pub mod config;
@@ -35,6 +40,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
 pub mod dse;
+pub mod nonideal;
 pub mod cli;
 
 /// Crate version (mirrors `Cargo.toml`).

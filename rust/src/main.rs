@@ -12,9 +12,10 @@ use std::time::Instant;
 use hcim::cli::{Args, USAGE};
 use hcim::config::hardware::{BaselineKind, HcimConfig};
 use hcim::coordinator::{Server, ServerConfig};
-use hcim::dse::{DesignSpace, ResultCache, SweepReport, SweepRunner};
+use hcim::dse::{DesignSpace, ResultCache, RobustnessCfg, SweepReport, SweepRunner};
 use hcim::experiments;
 use hcim::model::zoo;
+use hcim::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
 use hcim::runtime::Engine;
 use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
 use hcim::sim::tech::TechNode;
@@ -33,6 +34,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "tables" => cmd_tables(&args),
         "dse" => cmd_dse(&args),
+        "robustness" => cmd_robustness(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -127,7 +129,8 @@ fn cmd_serve(args: &Args) -> hcim::Result<()> {
             hw.latency_ns() / 1e3
         );
     }
-    let mut rng = Rng::new(42);
+    // single CLI-provided master seed for every stochastic path
+    let mut rng = Rng::new(args.u64_or("seed", 42));
     let elems = m.input_elems();
     for _ in 0..requests {
         let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
@@ -160,6 +163,7 @@ fn cmd_tables(args: &Args) -> hcim::Result<()> {
     experiments::fig67_table(&sim, &HcimConfig::config_b(), "Fig 7 (config B)").print();
     experiments::ablation_phase_sharing().print();
     experiments::ablation_adc_precision_sweep(&sim).print();
+    experiments::ablation_variation_robustness().print();
     Ok(())
 }
 
@@ -190,6 +194,12 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
     if let Some(path) = args.flag("sparsity") {
         runner = runner.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
     }
+    if args.has("robustness") {
+        runner = runner.with_robustness(RobustnessCfg {
+            trials: args.usize_or("trials", 8).max(1),
+            seed: args.u64_or("seed", 42),
+        });
+    }
 
     let t0 = Instant::now();
     let result = runner.run()?;
@@ -206,6 +216,59 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
         result.cache_hits
     );
     println!("report: {}  {}", json_path.display(), csv_path.display());
+    Ok(())
+}
+
+fn cmd_robustness(args: &Args) -> hcim::Result<()> {
+    let model = args.flag_or("model", "resnet20");
+    let graph = zoo::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}` (see `hcim help`)"))?;
+    let node = TechNode::by_name(args.flag_or("node", "32nm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let mut cfg = config_from(args);
+    cfg.node = node;
+
+    let mut ni = if args.has("ideal") {
+        NonIdealityParams::ideal()
+    } else {
+        NonIdealityParams::default_for(node)
+    };
+    ni.sigma_g = args.f64_or("sigma-g", ni.sigma_g);
+    ni.stuck_on = args.f64_or("stuck-on", ni.stuck_on);
+    ni.stuck_off = args.f64_or("stuck-off", ni.stuck_off);
+    ni.ir_drop = args.f64_or("ir-drop", ni.ir_drop);
+    ni.sigma_cmp = args.f64_or("sigma-cmp", ni.sigma_cmp);
+    ni.validate()?;
+
+    let mc = MonteCarloCfg {
+        trials: args.usize_or("trials", 32).max(1),
+        seed: args.u64_or("seed", 42),
+        workers: args.usize_or("workers", 0),
+    };
+    let t0 = Instant::now();
+    let report = run_monte_carlo(&graph, &cfg, &ni, &mc);
+    let elapsed = t0.elapsed();
+
+    // stdout carries only seed-deterministic content, so the output is
+    // byte-identical for any --workers value; timing goes to stderr
+    match args.flag_or("format", "table") {
+        "json" => println!("{}", report.to_json()),
+        "csv" => print!("{}", report.to_csv()),
+        _ => {
+            report.params_table().print();
+            report.table().print();
+        }
+    }
+    if let Some(dir) = args.flag("out") {
+        let (json_path, csv_path) = report.write(Path::new(dir))?;
+        eprintln!("report: {}  {}", json_path.display(), csv_path.display());
+    }
+    eprintln!(
+        "{} trials on {model} in {:.2}s ({} workers)",
+        mc.trials,
+        elapsed.as_secs_f64(),
+        if mc.workers == 0 { "auto".to_string() } else { mc.workers.to_string() }
+    );
     Ok(())
 }
 

@@ -1,0 +1,392 @@
+//! Injection of non-idealities into the functional PSQ path.
+//!
+//! [`psq_mvm_nonideal`] mirrors [`crate::quant::psq::psq_mvm`] bit-step by
+//! bit-step but perturbs the *analog* partial sum between the crossbar
+//! popcount ([`crate::quant::bits::bit_dot`]'s role) and the comparator
+//! decision: weight bit-slices are stuck-at-fault masked, each conducting
+//! cell contributes its perturbed current (log-normal conductance ×
+//! IR-drop attenuation), and the decision runs through a real
+//! [`ComparatorBank`] with per-column input-referred offsets. Everything
+//! downstream (scale factors, saturating PS accumulation) is the ideal
+//! digital path — HCiM's DCiM array is digital and assumed correct.
+//!
+//! [`run_trial`] applies this layer-by-layer to a [`crate::model::zoo`]
+//! graph: for every MVM layer it synthesizes a representative
+//! crossbar-sized problem from a forked per-layer generator, runs the
+//! ideal and the perturbed path on identical inputs, and counts PSQ-code
+//! flips, ternary zero-code corruptions, and partial-sum disagreement.
+
+use crate::config::hardware::HcimConfig;
+use crate::model::graph::Graph;
+use crate::nonideal::models::{CrossbarPerturbation, NonIdealityParams};
+use crate::quant::bits::{input_bitplane, weight_bitslice, Mat};
+use crate::quant::fixed::sat_add;
+use crate::quant::psq::{psq_mvm, PsqLayerParams, PsqOutput};
+use crate::sim::components::comparator::ComparatorBank;
+use crate::util::rng::Rng;
+
+/// Output of one perturbed PSQ-MVM (same layout as
+/// [`crate::quant::psq::PsqOutput`], with the analog pre-comparator values
+/// kept as floats).
+#[derive(Clone, Debug)]
+pub struct NonIdealOutput {
+    /// Final per-physical-column partial sums.
+    pub ps: Vec<i64>,
+    /// Comparator codes, `[x_bits × phys_cols]` row-major.
+    pub p: Vec<i8>,
+    /// Perturbed analog column values, same layout.
+    pub analog: Vec<f64>,
+}
+
+/// Perturbed PSQ matrix-vector product over one crossbar.
+///
+/// With `pert` the exact identity this is code- and PS-identical to
+/// [`psq_mvm`] (the analog value of a column is then the integer popcount,
+/// exactly representable in `f64`).
+pub fn psq_mvm_nonideal(
+    w: &Mat,
+    x: &[i64],
+    params: &PsqLayerParams,
+    pert: &CrossbarPerturbation,
+) -> NonIdealOutput {
+    assert_eq!(w.rows, x.len(), "input/crossbar row mismatch");
+    let phys_cols = w.cols * params.w_bits as usize;
+    assert_eq!(pert.rows, w.rows, "perturbation row mismatch");
+    assert_eq!(pert.phys_cols, phys_cols, "perturbation column mismatch");
+    assert_eq!(
+        params.scales.len(),
+        params.x_bits as usize * phys_cols,
+        "scale factor table shape mismatch"
+    );
+
+    // program the crossbar: bit-sliced columns with stuck-at faults applied
+    let mut colbits: Vec<Vec<u8>> = Vec::with_capacity(phys_cols);
+    for lc in 0..w.cols {
+        let col = w.col(lc);
+        for i in 0..params.w_bits {
+            let c = colbits.len();
+            let mut bits = weight_bitslice(&col, i, params.w_bits);
+            for (r, b) in bits.iter_mut().enumerate() {
+                *b = pert.fault_bit(r, c, *b);
+            }
+            colbits.push(bits);
+        }
+    }
+
+    let bank = ComparatorBank::new(params.mode, params.theta, phys_cols);
+    let mut ps = vec![0i64; phys_cols];
+    let mut p_all = vec![0i8; params.x_bits as usize * phys_cols];
+    let mut analog_all = vec![0.0f64; params.x_bits as usize * phys_cols];
+    for j in 0..params.x_bits {
+        let xp = input_bitplane(x, j);
+        let analog: Vec<f64> = (0..phys_cols)
+            .map(|c| {
+                let mut a = 0.0;
+                for (r, (&wb, &xb)) in colbits[c].iter().zip(xp.iter()).enumerate() {
+                    if (wb & xb) == 1 {
+                        a += pert.cell_gain(r, c);
+                    }
+                }
+                a
+            })
+            .collect();
+        let codes = bank.compare_analog(&analog, pert.comparator_offsets());
+        for (c, code) in codes.iter().enumerate() {
+            let idx = j as usize * phys_cols + c;
+            analog_all[idx] = analog[c];
+            let p = code.decode();
+            p_all[idx] = p;
+            if p != 0 {
+                ps[c] = sat_add(ps[c], p as i64 * params.scales[idx], params.ps_bits);
+            }
+        }
+    }
+    NonIdealOutput { ps, p: p_all, analog: analog_all }
+}
+
+/// Ideal-vs-perturbed comparison for one MVM layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerOutcome {
+    /// Index of the layer in the graph's layer list.
+    pub layer_index: usize,
+    /// Comparator decisions compared (`x_bits × phys_cols`).
+    pub codes: usize,
+    /// Decisions whose PSQ code changed under perturbation.
+    pub flips: usize,
+    /// Ideal-path zero codes (the sparsity the DCiM gating exploits).
+    pub ideal_zeros: usize,
+    /// Ideal zeros that became non-zero — lost gating opportunities.
+    pub zero_corruptions: usize,
+    /// Physical columns compared.
+    pub columns: usize,
+    /// Σ|PS_ideal − PS_perturbed| over the columns.
+    pub ps_l1: f64,
+}
+
+impl LayerOutcome {
+    /// Compare the ideal and perturbed outputs of one crossbar MVM.
+    pub fn compare(layer_index: usize, ideal: &PsqOutput, actual: &NonIdealOutput) -> LayerOutcome {
+        assert_eq!(ideal.p.len(), actual.p.len());
+        assert_eq!(ideal.ps.len(), actual.ps.len());
+        let mut flips = 0;
+        let mut ideal_zeros = 0;
+        let mut zero_corruptions = 0;
+        for (&pi, &pa) in ideal.p.iter().zip(&actual.p) {
+            if pi != pa {
+                flips += 1;
+            }
+            if pi == 0 {
+                ideal_zeros += 1;
+                if pa != 0 {
+                    zero_corruptions += 1;
+                }
+            }
+        }
+        let ps_l1 = ideal
+            .ps
+            .iter()
+            .zip(&actual.ps)
+            .map(|(&a, &b)| (a - b).abs() as f64)
+            .sum();
+        LayerOutcome {
+            layer_index,
+            codes: ideal.p.len(),
+            flips,
+            ideal_zeros,
+            zero_corruptions,
+            columns: ideal.ps.len(),
+            ps_l1,
+        }
+    }
+}
+
+/// One full Monte Carlo trial: every MVM layer of a model compared
+/// ideal-vs-perturbed under a single seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialOutcome {
+    pub seed: u64,
+    pub layers: Vec<LayerOutcome>,
+    /// Full-scale magnitude of the PS register (`2^{ps_bits−1}`), the
+    /// normalizer of [`TrialOutcome::disagreement`].
+    pub ps_full_scale: f64,
+}
+
+impl TrialOutcome {
+    /// Fraction of comparator decisions whose PSQ code flipped.
+    pub fn flip_rate(&self) -> f64 {
+        let codes: usize = self.layers.iter().map(|l| l.codes).sum();
+        let flips: usize = self.layers.iter().map(|l| l.flips).sum();
+        if codes == 0 { 0.0 } else { flips as f64 / codes as f64 }
+    }
+
+    /// Fraction of ideal ternary zero codes corrupted to ±1 (0 when the
+    /// ideal path produced no zeros, e.g. binary PSQ).
+    pub fn zero_corruption_rate(&self) -> f64 {
+        let zeros: usize = self.layers.iter().map(|l| l.ideal_zeros).sum();
+        let corrupted: usize = self.layers.iter().map(|l| l.zero_corruptions).sum();
+        if zeros == 0 { 0.0 } else { corrupted as f64 / zeros as f64 }
+    }
+
+    /// End-to-end code-disagreement score: mean |ΔPS| per column,
+    /// normalized by the PS register full scale (0 = bit-identical,
+    /// 1 ≈ every column off by the whole register range).
+    pub fn disagreement(&self) -> f64 {
+        let cols: usize = self.layers.iter().map(|l| l.columns).sum();
+        let l1: f64 = self.layers.iter().map(|l| l.ps_l1).sum();
+        if cols == 0 { 0.0 } else { l1 / (cols as f64 * self.ps_full_scale) }
+    }
+}
+
+/// Run one trial of `graph` on the PSQ periphery of `cfg` under `ni`.
+///
+/// Per-layer state (synthetic weights/activations in the config's code
+/// ranges, calibrated PSQ parameters, and the sampled perturbation) comes
+/// from a generator forked off the trial seed in layer order — fully
+/// deterministic, and independent across trials by construction.
+pub fn run_trial(
+    graph: &Graph,
+    cfg: &HcimConfig,
+    ni: &NonIdealityParams,
+    seed: u64,
+) -> TrialOutcome {
+    let mut rng = Rng::new(seed);
+    let w_lo = -(1i64 << (cfg.w_bits - 1));
+    let w_hi = (1i64 << (cfg.w_bits - 1)) - 1;
+    let x_hi = (1i64 << cfg.x_bits) - 1;
+    let mut layers = Vec::new();
+    for ann in graph.annotate() {
+        let Some(mvm) = ann.mvm else { continue };
+        let mut lr = rng.fork();
+        // one representative crossbar tile of the layer's mapping
+        let rows = mvm.rows.min(cfg.xbar.rows).max(1);
+        let max_logical = (cfg.xbar.cols / cfg.w_bits as usize).max(1);
+        let cols = mvm.cols.min(max_logical).max(1);
+        let w = Mat::from_fn(rows, cols, |_, _| lr.range_i64(w_lo, w_hi));
+        let x: Vec<i64> = (0..rows).map(|_| lr.range_i64(0, x_hi)).collect();
+        let params = PsqLayerParams::calibrated(
+            &w,
+            cfg.mode,
+            cfg.w_bits,
+            cfg.x_bits,
+            cfg.ps_bits,
+            &mut lr,
+        );
+        let pert =
+            CrossbarPerturbation::sample(rows, cols * cfg.w_bits as usize, ni, &mut lr);
+        let ideal = psq_mvm(&w, &x, &params);
+        let actual = psq_mvm_nonideal(&w, &x, &params, &pert);
+        layers.push(LayerOutcome::compare(ann.index, &ideal, &actual));
+    }
+    TrialOutcome {
+        seed,
+        layers,
+        ps_full_scale: (1i64 << (cfg.ps_bits - 1)) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::quant::psq::PsqMode;
+    use crate::util::prop::{check, Gen};
+
+    fn small_cfg() -> HcimConfig {
+        let mut cfg = HcimConfig::config_a();
+        cfg.xbar.rows = 32;
+        cfg.xbar.cols = 32;
+        cfg
+    }
+
+    fn rand_problem(g: &mut Gen, w_bits: u32) -> (Mat, Vec<i64>) {
+        let rows = g.len(24).max(2);
+        let cols = g.len(6).max(1);
+        let lo = -(1i64 << (w_bits - 1));
+        let hi = (1i64 << (w_bits - 1)) - 1;
+        let w = Mat { rows, cols, data: g.vec_i64(rows * cols, lo, hi) };
+        let x = g.vec_i64(rows, 0, 15);
+        (w, x)
+    }
+
+    #[test]
+    fn identity_perturbation_is_bit_exact() {
+        check("identity perturbation == ideal PSQ path", 40, |g: &mut Gen| {
+            let (w, x) = rand_problem(g, 4);
+            let mut rng = Rng::new(g.seed ^ 0xA5);
+            let mode = if g.bool(0.5) {
+                PsqMode::Ternary { alpha: 2.0 }
+            } else {
+                PsqMode::Binary
+            };
+            let params = PsqLayerParams::calibrated(&w, mode, 4, 4, 8, &mut rng);
+            let pert = CrossbarPerturbation::identity(w.rows, w.cols * 4);
+            let ideal = psq_mvm(&w, &x, &params);
+            let actual = psq_mvm_nonideal(&w, &x, &params, &pert);
+            assert_eq!(ideal.p, actual.p, "codes must match bit-for-bit");
+            assert_eq!(ideal.ps, actual.ps, "partial sums must match");
+            let out = LayerOutcome::compare(0, &ideal, &actual);
+            assert_eq!(out.flips, 0);
+            assert_eq!(out.zero_corruptions, 0);
+            assert_eq!(out.ps_l1, 0.0);
+        });
+    }
+
+    fn rand_problem_rng(rng: &mut Rng, rows: usize, cols: usize, w_bits: u32) -> (Mat, Vec<i64>) {
+        let lo = -(1i64 << (w_bits - 1));
+        let hi = (1i64 << (w_bits - 1)) - 1;
+        let w = Mat::from_fn(rows, cols, |_, _| rng.range_i64(lo, hi));
+        let x = (0..rows).map(|_| rng.range_i64(0, 15)).collect();
+        (w, x)
+    }
+
+    #[test]
+    fn sampled_ideal_params_are_also_bit_exact() {
+        // sample() with all-zero magnitudes must behave like identity()
+        let mut rng = Rng::new(42);
+        let (w, x) = rand_problem_rng(&mut rng, 20, 5, 4);
+        let params =
+            PsqLayerParams::calibrated(&w, PsqMode::Ternary { alpha: 2.0 }, 4, 4, 8, &mut rng);
+        let pert = CrossbarPerturbation::sample(
+            w.rows,
+            w.cols * 4,
+            &NonIdealityParams::ideal(),
+            &mut rng,
+        );
+        let ideal = psq_mvm(&w, &x, &params);
+        let actual = psq_mvm_nonideal(&w, &x, &params, &pert);
+        assert_eq!(ideal.p, actual.p);
+        assert_eq!(ideal.ps, actual.ps);
+    }
+
+    #[test]
+    fn all_cells_stuck_off_silence_every_column() {
+        let w = Mat::from_fn(8, 2, |r, c| ((r + c) as i64 % 15) - 7);
+        let mut rng = Rng::new(5);
+        let params =
+            PsqLayerParams::calibrated(&w, PsqMode::Binary, 4, 2, 8, &mut rng);
+        let ni = NonIdealityParams { stuck_off: 1.0, ..NonIdealityParams::ideal() };
+        let pert = CrossbarPerturbation::sample(8, 8, &ni, &mut rng);
+        let out = psq_mvm_nonideal(&w, &x_ones(8), &params, &pert);
+        assert!(out.analog.iter().all(|&a| a == 0.0), "stuck-off array conducts nothing");
+        // binary comparator sees 0 − θ < 0 everywhere → all −1
+        assert!(out.p.iter().all(|&p| p == -1));
+    }
+
+    fn x_ones(n: usize) -> Vec<i64> {
+        vec![3; n]
+    }
+
+    #[test]
+    fn strong_variation_flips_codes() {
+        let mut rng = Rng::new(17);
+        let (w, x) = rand_problem_rng(&mut rng, 24, 6, 4);
+        let params =
+            PsqLayerParams::calibrated(&w, PsqMode::Ternary { alpha: 1.0 }, 4, 4, 8, &mut rng);
+        let ni = NonIdealityParams {
+            sigma_g: 0.5,
+            sigma_cmp: 2.0,
+            ..NonIdealityParams::ideal()
+        };
+        let pert = CrossbarPerturbation::sample(w.rows, w.cols * 4, &ni, &mut rng);
+        let ideal = psq_mvm(&w, &x, &params);
+        let actual = psq_mvm_nonideal(&w, &x, &params, &pert);
+        let out = LayerOutcome::compare(0, &ideal, &actual);
+        assert!(out.flips > 0, "σ_G = 0.5 + σ_cmp = 2 LSB must flip codes");
+    }
+
+    #[test]
+    fn trial_covers_every_mvm_layer_and_is_deterministic() {
+        let g = zoo::resnet20();
+        let cfg = small_cfg();
+        let ni = NonIdealityParams::default_for(cfg.node);
+        let a = run_trial(&g, &cfg, &ni, 99);
+        let b = run_trial(&g, &cfg, &ni, 99);
+        assert_eq!(a, b, "same seed, same outcome");
+        let mvm_layers = g.annotate().iter().filter(|ann| ann.mvm.is_some()).count();
+        assert_eq!(a.layers.len(), mvm_layers);
+        assert!(a.flip_rate() > 0.0, "default 32 nm magnitudes perturb something");
+        let c = run_trial(&g, &cfg, &ni, 100);
+        assert_ne!(a, c, "different seed, different outcome");
+    }
+
+    #[test]
+    fn ideal_trial_has_exactly_zero_flip_rate() {
+        let g = zoo::vgg9();
+        let cfg = small_cfg();
+        let t = run_trial(&g, &cfg, &NonIdealityParams::ideal(), 7);
+        assert_eq!(t.flip_rate(), 0.0, "ideal path must be exact, not approximate");
+        assert_eq!(t.zero_corruption_rate(), 0.0);
+        assert_eq!(t.disagreement(), 0.0);
+    }
+
+    #[test]
+    fn binary_mode_has_no_zero_codes_to_corrupt() {
+        let g = zoo::resnet20();
+        let cfg = small_cfg().binary();
+        let ni = NonIdealityParams::default_for(cfg.node);
+        let t = run_trial(&g, &cfg, &ni, 13);
+        let zeros: usize = t.layers.iter().map(|l| l.ideal_zeros).sum();
+        assert_eq!(zeros, 0);
+        assert_eq!(t.zero_corruption_rate(), 0.0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Analog non-ideality modeling and Monte Carlo robustness analysis.
+//!
+//! HCiM replaces the ADC with a 1/1.5-bit comparator bank (paper §4.2),
+//! which makes accuracy hostage to analog effects the ideal functional
+//! model ignores: conductance variation, stuck-at cell faults, bitline IR
+//! drop, and comparator input-referred offset all shift the analog partial
+//! sum — exactly the quantity the paper's PSQ algorithm (§4.1, Fig. 2(a))
+//! thresholds into ternary codes, and the ternary zero codes (§4.2.2,
+//! Fig. 2(c)) are what the DCiM sparsity gating banks its energy savings
+//! on. This subsystem quantifies how fragile those decisions are:
+//!
+//! * [`models`] — composable, seed-deterministic perturbation models
+//!   ([`NonIdealityParams`], [`CrossbarPerturbation`]), magnitudes
+//!   scalable per [`crate::sim::tech::TechNode`];
+//! * [`inject`] — the perturbed functional PSQ path
+//!   ([`inject::psq_mvm_nonideal`]) and layer-by-layer ideal-vs-perturbed
+//!   comparison over [`crate::model::zoo`] graphs ([`inject::run_trial`]);
+//! * [`monte_carlo`] — N seeded trials fanned out on the worker pool
+//!   ([`run_monte_carlo`]), byte-identical for any worker count;
+//! * [`report`] — [`RobustnessReport`]: mean/std/percentile summaries,
+//!   ASCII tables, JSON + CSV export.
+//!
+//! Entry points: the `hcim robustness` CLI subcommand,
+//! `hcim dse --robustness` (adds a flip-rate objective to the Pareto
+//! frontier), `examples/variation_sweep.rs`, or programmatically:
+//!
+//! ```no_run
+//! use hcim::config::hardware::HcimConfig;
+//! use hcim::model::zoo;
+//! use hcim::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
+//! let cfg = HcimConfig::config_a();
+//! let ni = NonIdealityParams::default_for(cfg.node);
+//! let report = run_monte_carlo(
+//!     &zoo::resnet20(),
+//!     &cfg,
+//!     &ni,
+//!     &MonteCarloCfg::default(),
+//! );
+//! report.table().print();
+//! ```
+//! (`no_run` for the same reason as `util::prop`: doctest binaries cannot
+//! resolve their rpath in this offline image.)
+
+pub mod models;
+pub mod inject;
+pub mod monte_carlo;
+pub mod report;
+
+/// Version tag of the non-ideality model family; bumped when the
+/// perturbation math changes, so DSE cache entries carrying robustness
+/// values invalidate correctly.
+pub const MODEL_VERSION: &str = "ni-v1";
+
+pub use inject::{psq_mvm_nonideal, run_trial, LayerOutcome, NonIdealOutput, TrialOutcome};
+pub use models::{CellFault, CrossbarPerturbation, NonIdealityParams};
+pub use monte_carlo::{run_monte_carlo, trial_seeds, MonteCarloCfg, TrialMetrics};
+pub use report::RobustnessReport;

@@ -1,0 +1,333 @@
+//! Composable, seed-deterministic analog non-ideality models.
+//!
+//! Four perturbation sources, each independently configurable and scaled
+//! per [`TechNode`] (Pelgrom mismatch grows on shrink —
+//! [`TechNode::variability_scale`]):
+//!
+//! * **Conductance variation** — RRAM/8T-cell drive strength follows a
+//!   mean-one log-normal `exp(σ_G·N − σ_G²/2)` (the standard device model
+//!   used by the RRAM-CiM scalability literature).
+//! * **Stuck-at faults** — a cell is stuck at `G_on` (always conducts) or
+//!   `G_off` (never conducts) with independent per-cell probability.
+//! * **Bitline IR drop** — rows electrically farther from the column
+//!   sense point see a linearly growing attenuation of their cell current
+//!   (up to `ir_drop` at the last row).
+//! * **Comparator offset** — each column comparator carries a Gaussian
+//!   input-referred offset `σ_cmp·N` in popcount-LSB units, added to its
+//!   decision threshold (paper §4.2's dynamic-bias latch comparator).
+//!
+//! All sampling flows through [`crate::util::rng::Rng`], so a perturbation
+//! is a pure function of its seed. With every magnitude set to `0.0` the
+//! sampled perturbation is *exactly* the identity (gain `1.0`, offset
+//! `0.0`, no faults) — the ideal-path regression guard the Monte Carlo
+//! harness asserts on.
+
+use crate::sim::tech::TechNode;
+use crate::util::hash::Fnv1a;
+use crate::util::rng::Rng;
+
+/// Magnitudes of the four non-ideality sources.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NonIdealityParams {
+    /// Log-normal σ of per-cell conductance (ln-space, mean-corrected).
+    pub sigma_g: f64,
+    /// Probability a cell is stuck at `G_on` (conducts regardless of the
+    /// stored weight bit).
+    pub stuck_on: f64,
+    /// Probability a cell is stuck at `G_off` (never conducts).
+    pub stuck_off: f64,
+    /// Fractional bitline attenuation at the electrically farthest row
+    /// (linear ramp from ~0 at row 0).
+    pub ir_drop: f64,
+    /// Gaussian σ of the comparator input-referred offset, in popcount
+    /// LSBs.
+    pub sigma_cmp: f64,
+}
+
+impl NonIdealityParams {
+    /// All magnitudes zero — the exact-identity perturbation.
+    pub fn ideal() -> NonIdealityParams {
+        NonIdealityParams {
+            sigma_g: 0.0,
+            stuck_on: 0.0,
+            stuck_off: 0.0,
+            ir_drop: 0.0,
+            sigma_cmp: 0.0,
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.sigma_g == 0.0
+            && self.stuck_on == 0.0
+            && self.stuck_off == 0.0
+            && self.ir_drop == 0.0
+            && self.sigma_cmp == 0.0
+    }
+
+    /// Representative magnitudes at `node`, scaled from 65 nm baselines by
+    /// the node's mismatch factor (σ_G ≈ 8 %, σ_cmp ≈ 0.35 LSB and 3 %
+    /// far-row IR drop at 65 nm; 0.1 % stuck cells independent of node).
+    pub fn default_for(node: TechNode) -> NonIdealityParams {
+        let s = node.variability_scale();
+        NonIdealityParams {
+            sigma_g: 0.08 * s,
+            stuck_on: 1e-3,
+            stuck_off: 1e-3,
+            ir_drop: 0.03 * s,
+            sigma_cmp: 0.35 * s,
+        }
+    }
+
+    /// Reject physically meaningless magnitudes before a run.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.sigma_g >= 0.0 && self.sigma_g.is_finite(),
+            "sigma_g must be a finite non-negative number (got {})",
+            self.sigma_g
+        );
+        anyhow::ensure!(
+            self.sigma_cmp >= 0.0 && self.sigma_cmp.is_finite(),
+            "sigma_cmp must be a finite non-negative number (got {})",
+            self.sigma_cmp
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.stuck_on) && (0.0..=1.0).contains(&self.stuck_off),
+            "stuck-at rates must lie in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.stuck_on + self.stuck_off <= 1.0,
+            "stuck_on + stuck_off must not exceed 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.ir_drop),
+            "ir_drop must lie in [0, 1] (got {})",
+            self.ir_drop
+        );
+        Ok(())
+    }
+
+    /// Content fingerprint (cache keys, report metadata).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        for v in [self.sigma_g, self.stuck_on, self.stuck_off, self.ir_drop, self.sigma_cmp] {
+            h.write(&v.to_bits().to_le_bytes());
+        }
+        h.finish()
+    }
+}
+
+/// Manufacturing state of one crossbar cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellFault {
+    Healthy,
+    /// Conducts regardless of the stored weight bit.
+    StuckOn,
+    /// Never conducts.
+    StuckOff,
+}
+
+/// One sampled perturbation instance for a `rows × phys_cols` crossbar:
+/// per-cell current gains (conductance × IR-drop attenuation), per-cell
+/// fault state, and per-column comparator offsets.
+#[derive(Clone, Debug)]
+pub struct CrossbarPerturbation {
+    pub rows: usize,
+    pub phys_cols: usize,
+    /// Row-major `rows × phys_cols` cell current gain (1.0 = nominal).
+    gain: Vec<f64>,
+    /// Row-major `rows × phys_cols` fault map.
+    fault: Vec<CellFault>,
+    /// Per-physical-column comparator input-referred offset (LSBs).
+    cmp_offset: Vec<f64>,
+}
+
+impl CrossbarPerturbation {
+    /// Sample a perturbation from `rng`. Draw order is fixed (cells
+    /// row-major, gain then fault, then per-column offsets), so the result
+    /// is a pure function of the generator state.
+    pub fn sample(
+        rows: usize,
+        phys_cols: usize,
+        p: &NonIdealityParams,
+        rng: &mut Rng,
+    ) -> CrossbarPerturbation {
+        assert!(rows > 0 && phys_cols > 0, "degenerate crossbar");
+        let mut gain = Vec::with_capacity(rows * phys_cols);
+        let mut fault = Vec::with_capacity(rows * phys_cols);
+        for r in 0..rows {
+            // linear IR-drop ramp; exactly 1.0 when ir_drop == 0
+            let atten = (1.0 - p.ir_drop * (r as f64 + 1.0) / rows as f64).max(0.0);
+            for _c in 0..phys_cols {
+                // mean-one log-normal: E[exp(σN − σ²/2)] = 1; exactly 1.0
+                // when σ == 0
+                let g = (p.sigma_g * rng.normal() - 0.5 * p.sigma_g * p.sigma_g).exp();
+                gain.push(atten * g);
+                let u = rng.f64();
+                fault.push(if u < p.stuck_on {
+                    CellFault::StuckOn
+                } else if u < p.stuck_on + p.stuck_off {
+                    CellFault::StuckOff
+                } else {
+                    CellFault::Healthy
+                });
+            }
+        }
+        let cmp_offset = (0..phys_cols).map(|_| p.sigma_cmp * rng.normal()).collect();
+        CrossbarPerturbation { rows, phys_cols, gain, fault, cmp_offset }
+    }
+
+    /// The exact-identity perturbation (no rng draw at all).
+    pub fn identity(rows: usize, phys_cols: usize) -> CrossbarPerturbation {
+        CrossbarPerturbation {
+            rows,
+            phys_cols,
+            gain: vec![1.0; rows * phys_cols],
+            fault: vec![CellFault::Healthy; rows * phys_cols],
+            cmp_offset: vec![0.0; phys_cols],
+        }
+    }
+
+    /// Effective current contributed by cell `(r, c)` when it conducts.
+    #[inline]
+    pub fn cell_gain(&self, r: usize, c: usize) -> f64 {
+        self.gain[r * self.phys_cols + c]
+    }
+
+    /// Apply the cell's stuck-at fault to its programmed weight bit.
+    #[inline]
+    pub fn fault_bit(&self, r: usize, c: usize, bit: u8) -> u8 {
+        match self.fault[r * self.phys_cols + c] {
+            CellFault::Healthy => bit,
+            CellFault::StuckOn => 1,
+            CellFault::StuckOff => 0,
+        }
+    }
+
+    /// Per-column comparator offsets (length `phys_cols`).
+    pub fn comparator_offsets(&self) -> &[f64] {
+        &self.cmp_offset
+    }
+
+    /// Number of faulty cells in the map.
+    pub fn fault_count(&self) -> usize {
+        self.fault.iter().filter(|f| **f != CellFault::Healthy).count()
+    }
+
+    /// True when this instance is bit-exactly the identity.
+    pub fn is_identity(&self) -> bool {
+        self.gain.iter().all(|&g| g == 1.0)
+            && self.cmp_offset.iter().all(|&o| o == 0.0)
+            && self.fault_count() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_params_sample_exact_identity() {
+        // the regression guard: zero magnitudes must produce gain 1.0 and
+        // offset 0.0 *exactly*, not approximately
+        let mut rng = Rng::new(1234);
+        let p = CrossbarPerturbation::sample(64, 32, &NonIdealityParams::ideal(), &mut rng);
+        assert!(p.is_identity());
+        assert_eq!(p.fault_count(), 0);
+        for r in 0..64 {
+            for c in 0..32 {
+                assert_eq!(p.cell_gain(r, c), 1.0);
+                assert_eq!(p.fault_bit(r, c, 1), 1);
+                assert_eq!(p.fault_bit(r, c, 0), 0);
+            }
+        }
+        assert!(p.comparator_offsets().iter().all(|&o| o == 0.0));
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let ni = NonIdealityParams::default_for(TechNode::N32);
+        let a = CrossbarPerturbation::sample(16, 8, &ni, &mut Rng::new(7));
+        let b = CrossbarPerturbation::sample(16, 8, &ni, &mut Rng::new(7));
+        assert_eq!(a.gain, b.gain);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.cmp_offset, b.cmp_offset);
+        let c = CrossbarPerturbation::sample(16, 8, &ni, &mut Rng::new(8));
+        assert_ne!(a.gain, c.gain);
+    }
+
+    #[test]
+    fn lognormal_gain_is_mean_one() {
+        let ni = NonIdealityParams { sigma_g: 0.2, ..NonIdealityParams::ideal() };
+        let p = CrossbarPerturbation::sample(128, 128, &ni, &mut Rng::new(3));
+        let mean: f64 = p.gain.iter().sum::<f64>() / p.gain.len() as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean gain = {mean}");
+        assert!(p.gain.iter().all(|&g| g > 0.0));
+    }
+
+    #[test]
+    fn stuck_rates_roughly_respected() {
+        let ni = NonIdealityParams {
+            stuck_on: 0.05,
+            stuck_off: 0.10,
+            ..NonIdealityParams::ideal()
+        };
+        let p = CrossbarPerturbation::sample(128, 128, &ni, &mut Rng::new(5));
+        let on = p.fault.iter().filter(|f| **f == CellFault::StuckOn).count();
+        let off = p.fault.iter().filter(|f| **f == CellFault::StuckOff).count();
+        let n = p.fault.len() as f64;
+        assert!((on as f64 / n - 0.05).abs() < 0.01, "on rate {}", on as f64 / n);
+        assert!((off as f64 / n - 0.10).abs() < 0.01, "off rate {}", off as f64 / n);
+    }
+
+    #[test]
+    fn ir_drop_attenuates_far_rows_monotonically() {
+        let ni = NonIdealityParams { ir_drop: 0.2, ..NonIdealityParams::ideal() };
+        let p = CrossbarPerturbation::sample(100, 4, &ni, &mut Rng::new(9));
+        // with sigma_g = 0 the gain is pure attenuation: strictly decreasing
+        for r in 1..100 {
+            assert!(p.cell_gain(r, 0) < p.cell_gain(r - 1, 0));
+        }
+        assert!((p.cell_gain(99, 0) - 0.8).abs() < 1e-12, "far row keeps 1 − ir_drop");
+    }
+
+    #[test]
+    fn node_scaling_orders_magnitudes() {
+        let n65 = NonIdealityParams::default_for(TechNode::N65);
+        let n22 = NonIdealityParams::default_for(TechNode::N22);
+        assert!(n22.sigma_g > n65.sigma_g);
+        assert!(n22.sigma_cmp > n65.sigma_cmp);
+        assert!(n22.ir_drop > n65.ir_drop);
+        assert_eq!(n22.stuck_on, n65.stuck_on);
+        assert!(n65.validate().is_ok());
+        assert!(n22.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut p = NonIdealityParams::ideal();
+        assert!(p.validate().is_ok());
+        assert!(NonIdealityParams { sigma_g: -0.1, ..p }.validate().is_err());
+        assert!(NonIdealityParams { ir_drop: 1.5, ..p }.validate().is_err());
+        assert!(NonIdealityParams { stuck_on: -0.01, ..p }.validate().is_err());
+        p.stuck_on = 0.7;
+        p.stuck_off = 0.7;
+        assert!(p.validate().is_err(), "rates summing past 1 must be rejected");
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = NonIdealityParams::default_for(TechNode::N32);
+        let b = NonIdealityParams::default_for(TechNode::N32);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = NonIdealityParams { sigma_g: a.sigma_g + 0.01, ..a };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), NonIdealityParams::ideal().fingerprint());
+    }
+
+    #[test]
+    fn ideal_flag_consistency() {
+        assert!(NonIdealityParams::ideal().is_ideal());
+        assert!(!NonIdealityParams::default_for(TechNode::N65).is_ideal());
+        assert!(CrossbarPerturbation::identity(4, 4).is_identity());
+    }
+}

@@ -1,0 +1,182 @@
+//! Parallel Monte Carlo robustness harness.
+//!
+//! N independent trials of [`crate::nonideal::inject::run_trial`] fan out
+//! over [`crate::util::threadpool::ThreadPool`]. Per-trial seeds are drawn
+//! from a single SplitMix64 stream over the master seed
+//! ([`trial_seeds`]) and every trial is self-contained, so the aggregated
+//! report is **byte-identical for any worker count** — the pool's
+//! order-preserving `map` scatters results back into trial order before
+//! any statistics are computed.
+
+use std::sync::Arc;
+
+use crate::config::hardware::HcimConfig;
+use crate::model::graph::Graph;
+use crate::nonideal::inject::run_trial;
+use crate::nonideal::models::NonIdealityParams;
+use crate::nonideal::report::RobustnessReport;
+use crate::util::rng::splitmix64;
+use crate::util::threadpool::ThreadPool;
+
+/// Monte Carlo run configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MonteCarloCfg {
+    /// Number of independent trials (≥ 1).
+    pub trials: usize,
+    /// Master seed; each trial's seed derives from it via SplitMix64.
+    pub seed: u64,
+    /// Worker threads (0 = one per core). Any value yields identical
+    /// results; it only changes wall-clock time.
+    pub workers: usize,
+}
+
+impl Default for MonteCarloCfg {
+    fn default() -> Self {
+        MonteCarloCfg { trials: 32, seed: 42, workers: 0 }
+    }
+}
+
+/// Headline metrics of one trial.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrialMetrics {
+    /// The trial's derived seed.
+    pub seed: u64,
+    /// Fraction of comparator decisions whose PSQ code flipped.
+    pub flip_rate: f64,
+    /// Fraction of ideal ternary zero codes corrupted to ±1.
+    pub zero_corruption_rate: f64,
+    /// Mean |ΔPS| per column, normalized by the PS register full scale.
+    pub disagreement: f64,
+}
+
+/// Derive `n` independent trial seeds from `master` via SplitMix64 (never
+/// sequential integers — neighbouring integer seeds correlate in many
+/// generators; SplitMix64 outputs do not).
+pub fn trial_seeds(master: u64, n: usize) -> Vec<u64> {
+    let mut s = master;
+    (0..n).map(|_| splitmix64(&mut s)).collect()
+}
+
+/// Run the Monte Carlo: `mc.trials` seeded trials of `graph` on `cfg`
+/// under `ni`, in parallel, aggregated into a [`RobustnessReport`].
+pub fn run_monte_carlo(
+    graph: &Graph,
+    cfg: &HcimConfig,
+    ni: &NonIdealityParams,
+    mc: &MonteCarloCfg,
+) -> RobustnessReport {
+    assert!(mc.trials >= 1, "monte carlo needs at least one trial");
+    let seeds = trial_seeds(mc.seed, mc.trials);
+    let ctx = Arc::new((graph.clone(), cfg.clone(), *ni));
+    let trials: Vec<TrialMetrics> = if mc.trials == 1 || mc.workers == 1 {
+        // serial path: also used when a trial runs inside another pool's
+        // worker (e.g. the DSE sweep), avoiding nested pool spawns
+        seeds.into_iter().map(|s| run_one(&ctx, s)).collect()
+    } else {
+        let workers = if mc.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            mc.workers
+        };
+        let pool = ThreadPool::new(workers.min(mc.trials).max(1));
+        let ctx = Arc::clone(&ctx);
+        pool.map(seeds, move |s| run_one(&ctx, s))
+    };
+    RobustnessReport::build(&ctx.0.name, &ctx.1, ni, mc.seed, trials)
+}
+
+fn run_one(ctx: &(Graph, HcimConfig, NonIdealityParams), seed: u64) -> TrialMetrics {
+    let t = run_trial(&ctx.0, &ctx.1, &ctx.2, seed);
+    TrialMetrics {
+        seed,
+        flip_rate: t.flip_rate(),
+        zero_corruption_rate: t.zero_corruption_rate(),
+        disagreement: t.disagreement(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn small_cfg() -> HcimConfig {
+        let mut cfg = HcimConfig::config_a();
+        cfg.xbar.rows = 32;
+        cfg.xbar.cols = 32;
+        cfg
+    }
+
+    #[test]
+    fn trial_seeds_are_splitmix_not_sequential() {
+        let seeds = trial_seeds(0, 8);
+        assert_eq!(seeds.len(), 8);
+        // distinct, and not master+i
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 8);
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_ne!(s, i as u64, "sequential seeds are forbidden");
+        }
+        // reproducible
+        assert_eq!(seeds, trial_seeds(0, 8));
+        assert_ne!(seeds, trial_seeds(1, 8));
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let g = zoo::resnet20();
+        let cfg = small_cfg();
+        let ni = NonIdealityParams::default_for(cfg.node);
+        let serial = run_monte_carlo(
+            &g,
+            &cfg,
+            &ni,
+            &MonteCarloCfg { trials: 6, seed: 77, workers: 1 },
+        );
+        let parallel = run_monte_carlo(
+            &g,
+            &cfg,
+            &ni,
+            &MonteCarloCfg { trials: 6, seed: 77, workers: 4 },
+        );
+        assert_eq!(serial.trials, parallel.trials, "trial metrics must be identical");
+        assert_eq!(
+            serial.to_json().to_string(),
+            parallel.to_json().to_string(),
+            "whole report must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn ideal_magnitudes_measure_exactly_zero() {
+        let g = zoo::resnet20();
+        let cfg = small_cfg();
+        let r = run_monte_carlo(
+            &g,
+            &cfg,
+            &NonIdealityParams::ideal(),
+            &MonteCarloCfg { trials: 4, seed: 1, workers: 2 },
+        );
+        for t in &r.trials {
+            assert_eq!(t.flip_rate, 0.0);
+            assert_eq!(t.zero_corruption_rate, 0.0);
+            assert_eq!(t.disagreement, 0.0);
+        }
+        assert_eq!(r.flip.mean, 0.0);
+        assert_eq!(r.flip.max, 0.0);
+    }
+
+    #[test]
+    fn summaries_cover_all_trials() {
+        let g = zoo::vgg9();
+        let cfg = small_cfg();
+        let ni = NonIdealityParams::default_for(cfg.node);
+        let r = run_monte_carlo(&g, &cfg, &ni, &MonteCarloCfg { trials: 5, seed: 3, workers: 0 });
+        assert_eq!(r.trials.len(), 5);
+        assert_eq!(r.flip.n, 5);
+        assert!(r.flip.mean > 0.0);
+        assert!(r.flip.min <= r.flip.p50 && r.flip.p50 <= r.flip.max);
+    }
+}

@@ -1,0 +1,281 @@
+//! Robustness report: aggregation, ASCII tables, JSON/CSV export.
+//!
+//! Everything rendered here is a pure function of the trial metrics, which
+//! are themselves a pure function of (model, config, params, master seed)
+//! — so two runs with the same seed produce byte-identical artifacts no
+//! matter how many workers executed the trials. Seeds are serialized as
+//! hex strings (JSON numbers cannot hold a full `u64`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::hardware::HcimConfig;
+use crate::nonideal::models::NonIdealityParams;
+use crate::nonideal::monte_carlo::TrialMetrics;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// Aggregated output of one Monte Carlo robustness run.
+#[derive(Clone, Debug)]
+pub struct RobustnessReport {
+    /// Zoo model name.
+    pub model: String,
+    /// PSQ precision label ("1" binary, "1.5" ternary — paper Table 2).
+    pub mode: String,
+    /// Evaluation node label ("32nm", …).
+    pub node: String,
+    /// Crossbar geometry label ("128x128").
+    pub xbar: String,
+    /// Master seed of the run.
+    pub seed: u64,
+    /// Magnitudes the trials ran under.
+    pub params: NonIdealityParams,
+    /// Per-trial metrics, in trial order.
+    pub trials: Vec<TrialMetrics>,
+    /// Summary over per-trial flip rates.
+    pub flip: Summary,
+    /// Summary over per-trial zero-code corruption rates.
+    pub zero: Summary,
+    /// Summary over per-trial PS disagreement scores.
+    pub disagreement: Summary,
+}
+
+impl RobustnessReport {
+    /// Aggregate trial metrics into a report.
+    pub fn build(
+        model: &str,
+        cfg: &HcimConfig,
+        params: &NonIdealityParams,
+        seed: u64,
+        trials: Vec<TrialMetrics>,
+    ) -> RobustnessReport {
+        let flips: Vec<f64> = trials.iter().map(|t| t.flip_rate).collect();
+        let zeros: Vec<f64> = trials.iter().map(|t| t.zero_corruption_rate).collect();
+        let dis: Vec<f64> = trials.iter().map(|t| t.disagreement).collect();
+        RobustnessReport {
+            model: model.to_string(),
+            mode: cfg.mode.precision_label().to_string(),
+            node: format!("{:.0}nm", cfg.node.nm),
+            xbar: format!("{}x{}", cfg.xbar.rows, cfg.xbar.cols),
+            seed,
+            params: *params,
+            flip: Summary::of(&flips),
+            zero: Summary::of(&zeros),
+            disagreement: Summary::of(&dis),
+            trials,
+        }
+    }
+
+    /// Summary statistics table (one row per metric).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "robustness — {} ({}-bit PSQ, {}, {} crossbar, {} trials, seed {:#x})",
+                self.model,
+                self.mode,
+                self.node,
+                self.xbar,
+                self.trials.len(),
+                self.seed
+            ),
+            &["Metric", "Mean", "Std", "Min", "P50", "P90", "P99", "Max"],
+        );
+        for (name, s) in [
+            ("PSQ code flip rate", &self.flip),
+            ("zero-code corruption", &self.zero),
+            ("PS disagreement", &self.disagreement),
+        ] {
+            t.row(&[
+                name.to_string(),
+                format!("{:.5}", s.mean),
+                format!("{:.5}", s.std_dev),
+                format!("{:.5}", s.min),
+                format!("{:.5}", s.p50),
+                format!("{:.5}", s.p90),
+                format!("{:.5}", s.p99),
+                format!("{:.5}", s.max),
+            ]);
+        }
+        t
+    }
+
+    /// The non-ideality magnitudes the run used.
+    pub fn params_table(&self) -> Table {
+        let mut t = Table::new(
+            "non-ideality magnitudes",
+            &["sigma_G", "stuck_on", "stuck_off", "ir_drop", "sigma_cmp (LSB)"],
+        );
+        t.row(&[
+            format!("{:.4}", self.params.sigma_g),
+            format!("{:.5}", self.params.stuck_on),
+            format!("{:.5}", self.params.stuck_off),
+            format!("{:.4}", self.params.ir_drop),
+            format!("{:.4}", self.params.sigma_cmp),
+        ]);
+        t
+    }
+
+    /// JSON document (metadata + summaries + per-trial rows).
+    pub fn to_json(&self) -> Json {
+        let summary = |s: &Summary| {
+            let mut o = BTreeMap::new();
+            o.insert("n".into(), Json::Num(s.n as f64));
+            o.insert("mean".into(), Json::Num(s.mean));
+            o.insert("std".into(), Json::Num(s.std_dev));
+            o.insert("min".into(), Json::Num(s.min));
+            o.insert("p50".into(), Json::Num(s.p50));
+            o.insert("p90".into(), Json::Num(s.p90));
+            o.insert("p99".into(), Json::Num(s.p99));
+            o.insert("max".into(), Json::Num(s.max));
+            Json::Obj(o)
+        };
+        let mut params = BTreeMap::new();
+        params.insert("sigma_g".into(), Json::Num(self.params.sigma_g));
+        params.insert("stuck_on".into(), Json::Num(self.params.stuck_on));
+        params.insert("stuck_off".into(), Json::Num(self.params.stuck_off));
+        params.insert("ir_drop".into(), Json::Num(self.params.ir_drop));
+        params.insert("sigma_cmp".into(), Json::Num(self.params.sigma_cmp));
+        let per_trial: Vec<Json> = self
+            .trials
+            .iter()
+            .map(|t| {
+                let mut o = BTreeMap::new();
+                o.insert("seed".into(), Json::Str(format!("{:#018x}", t.seed)));
+                o.insert("flip_rate".into(), Json::Num(t.flip_rate));
+                o.insert(
+                    "zero_corruption_rate".into(),
+                    Json::Num(t.zero_corruption_rate),
+                );
+                o.insert("ps_disagreement".into(), Json::Num(t.disagreement));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut metrics = BTreeMap::new();
+        metrics.insert("flip_rate".into(), summary(&self.flip));
+        metrics.insert("zero_corruption_rate".into(), summary(&self.zero));
+        metrics.insert("ps_disagreement".into(), summary(&self.disagreement));
+        let mut top = BTreeMap::new();
+        top.insert("version".into(), Json::Num(1.0));
+        top.insert("model".into(), Json::Str(self.model.clone()));
+        top.insert("mode".into(), Json::Str(self.mode.clone()));
+        top.insert("node".into(), Json::Str(self.node.clone()));
+        top.insert("xbar".into(), Json::Str(self.xbar.clone()));
+        top.insert("seed".into(), Json::Str(format!("{:#018x}", self.seed)));
+        top.insert("trials".into(), Json::Num(self.trials.len() as f64));
+        top.insert("params".into(), Json::Obj(params));
+        top.insert("metrics".into(), Json::Obj(metrics));
+        top.insert("per_trial".into(), Json::Arr(per_trial));
+        Json::Obj(top)
+    }
+
+    /// CSV export (one row per trial).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("trial,seed,flip_rate,zero_corruption_rate,ps_disagreement\n");
+        for (i, t) in self.trials.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{:#018x},{:.6},{:.6},{:.6}\n",
+                i, t.seed, t.flip_rate, t.zero_corruption_rate, t.disagreement
+            ));
+        }
+        out
+    }
+
+    /// Write `robustness.json` and `robustness.csv` under `dir`.
+    pub fn write(&self, dir: &Path) -> crate::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        let json_path = dir.join("robustness.json");
+        let csv_path = dir.join("robustness.csv");
+        std::fs::write(&json_path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> RobustnessReport {
+        let cfg = HcimConfig::config_a();
+        let trials = vec![
+            TrialMetrics {
+                seed: 0xAA,
+                flip_rate: 0.01,
+                zero_corruption_rate: 0.002,
+                disagreement: 0.0005,
+            },
+            TrialMetrics {
+                seed: 0xBB,
+                flip_rate: 0.03,
+                zero_corruption_rate: 0.004,
+                disagreement: 0.0015,
+            },
+        ];
+        RobustnessReport::build(
+            "resnet20",
+            &cfg,
+            &NonIdealityParams::default_for(cfg.node),
+            42,
+            trials,
+        )
+    }
+
+    #[test]
+    fn build_aggregates_summaries() {
+        let r = synthetic();
+        assert_eq!(r.trials.len(), 2);
+        assert_eq!(r.flip.n, 2);
+        assert!((r.flip.mean - 0.02).abs() < 1e-12);
+        assert_eq!(r.mode, "1.5");
+        assert_eq!(r.node, "32nm");
+        assert_eq!(r.xbar, "128x128");
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let r = synthetic();
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.str_field("model").unwrap(), "resnet20");
+        assert_eq!(parsed.num_field("trials").unwrap(), 2.0);
+        let per_trial = parsed.get("per_trial").unwrap().as_arr().unwrap();
+        assert_eq!(per_trial.len(), 2);
+        assert_eq!(per_trial[0].str_field("seed").unwrap(), "0x00000000000000aa");
+        let flip = parsed.get("metrics").unwrap().get("flip_rate").unwrap();
+        assert!((flip.num_field("mean").unwrap() - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_plus_trial_rows() {
+        let r = synthetic();
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("trial,seed,flip_rate"));
+        assert!(lines[1].starts_with("0,0x00000000000000aa,0.010000"));
+    }
+
+    #[test]
+    fn tables_render() {
+        let r = synthetic();
+        let t = r.table().render();
+        assert!(t.contains("PSQ code flip rate"));
+        assert!(t.contains("zero-code corruption"));
+        let p = r.params_table().render();
+        assert!(p.contains("sigma_G"));
+    }
+
+    #[test]
+    fn write_emits_both_files() {
+        let dir = std::env::temp_dir().join("hcim_nonideal_report_write");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = synthetic();
+        let (j, c) = r.write(&dir).unwrap();
+        assert!(j.exists() && c.exists());
+        assert!(Json::parse(&std::fs::read_to_string(j).unwrap()).is_ok());
+    }
+}

@@ -159,4 +159,83 @@ mod tests {
             assert!(r >= lo && r <= hi);
         });
     }
+
+    #[test]
+    fn sat_add_pins_to_the_rails_at_ps_extremes() {
+        check("sat_add saturation at the register rails", 300, |g: &mut Gen| {
+            // every PS width the hardware uses, up to the full i64-safe max
+            let bits = g.usize(1, 32) as u32;
+            let hi = (1i64 << (bits - 1)) - 1;
+            let lo = -(1i64 << (bits - 1));
+            let d = g.i64(0, 1i64 << 40);
+            // any non-negative delta from the top rail stays pinned there
+            assert_eq!(sat_add(hi, d, bits), hi);
+            // any non-positive delta from the bottom rail stays pinned
+            assert_eq!(sat_add(lo, -d, bits), lo);
+            // adding zero at either rail is the identity
+            assert_eq!(sat_add(hi, 0, bits), hi);
+            assert_eq!(sat_add(lo, 0, bits), lo);
+            // a delta crossing the whole range still lands inside
+            let r = sat_add(lo, d, bits);
+            assert!(r >= lo && r <= hi);
+            // one step off the rail comes back exactly
+            if hi > lo {
+                assert_eq!(sat_add(hi - 1, 1, bits), hi);
+                assert_eq!(sat_add(lo + 1, -1, bits), lo);
+            }
+        });
+    }
+
+    #[test]
+    fn quantizer_roundtrip_at_qmin_qmax_for_extreme_bit_widths() {
+        // bits = 1 (single-rail) through bits = 32, signed and unsigned:
+        // dequantize→quantize must return the edge codes exactly, and
+        // values beyond the range must clamp to them
+        for bits in [1u32, 2, 8, 16, 31, 32] {
+            for signed in [true, false] {
+                for step in [0.75, 1.0, 0.001] {
+                    let q = Quantizer::new(bits, step, signed);
+                    for code in [q.qmin(), q.qmax()] {
+                        assert_eq!(
+                            q.quantize(q.dequantize(code)),
+                            code,
+                            "round trip failed: bits={bits} signed={signed} step={step} code={code}"
+                        );
+                    }
+                    // outside the representable range: clamp to the edges
+                    assert_eq!(
+                        q.quantize(q.dequantize(q.qmax()) + 10.0 * step),
+                        q.qmax(),
+                        "over-range must clamp to qmax (bits={bits} signed={signed})"
+                    );
+                    assert_eq!(
+                        q.quantize(q.dequantize(q.qmin()) - 10.0 * step),
+                        q.qmin(),
+                        "under-range must clamp to qmin (bits={bits} signed={signed})"
+                    );
+                }
+            }
+        }
+        // spot-check the edge geometries the loop covers
+        let one_signed = Quantizer::new(1, 1.0, true);
+        assert_eq!((one_signed.qmin(), one_signed.qmax()), (-1, 0));
+        let one_unsigned = Quantizer::new(1, 1.0, false);
+        assert_eq!((one_unsigned.qmin(), one_unsigned.qmax()), (0, 1));
+        let full_signed = Quantizer::new(32, 1.0, true);
+        assert_eq!((full_signed.qmin(), full_signed.qmax()), (i32::MIN as i64, i32::MAX as i64));
+        let full_unsigned = Quantizer::new(32, 1.0, false);
+        assert_eq!((full_unsigned.qmin(), full_unsigned.qmax()), (0, u32::MAX as i64));
+    }
+
+    #[test]
+    fn quantizer_roundtrip_property_inside_range() {
+        check("any in-range code survives dequantize→quantize", 300, |g: &mut Gen| {
+            let bits = g.usize(1, 32) as u32;
+            let signed = g.bool(0.5);
+            let step = g.f64(0.01, 2.0);
+            let q = Quantizer::new(bits, step, signed);
+            let code = g.i64(q.qmin(), q.qmax());
+            assert_eq!(q.quantize(q.dequantize(code)), code);
+        });
+    }
 }

@@ -55,6 +55,22 @@ impl ComparatorBank {
         encode_all(&ps)
     }
 
+    /// Functional comparison of *analog* (non-integer) column values with a
+    /// per-column input-referred offset added to each comparator — the hook
+    /// the `nonideal` subsystem uses to model device/circuit variation. With
+    /// every offset exactly `0.0` and integer-valued inputs this is
+    /// bit-identical to [`ComparatorBank::compare_pure`].
+    pub fn compare_analog(&self, analog: &[f64], offsets: &[f64]) -> Vec<PCode> {
+        assert_eq!(analog.len(), self.cols, "column count mismatch");
+        assert_eq!(offsets.len(), self.cols, "offset count mismatch");
+        let ps: Vec<i8> = analog
+            .iter()
+            .zip(offsets)
+            .map(|(&a, &o)| quantize_ps(a + o - self.theta, self.mode))
+            .collect();
+        encode_all(&ps)
+    }
+
     /// Bank area.
     pub fn area_mm2(&self, params: &CalibParams) -> f64 {
         params.comparator_area_mm2 * self.count() as f64
@@ -93,6 +109,25 @@ mod tests {
         bank.compare(&vec![1; 128], &p, &mut l);
         assert!((l.latency_ns - p.comparator_ns).abs() < 1e-12);
         assert_eq!(l.ops(Component::Comparator), 128);
+    }
+
+    #[test]
+    fn analog_compare_with_zero_offsets_matches_pure() {
+        let bank = ComparatorBank::new(PsqMode::Ternary { alpha: 2.0 }, 10.0, 5);
+        let raw = vec![0, 9, 10, 12, 20];
+        let analog: Vec<f64> = raw.iter().map(|&v| v as f64).collect();
+        let offsets = vec![0.0; 5];
+        assert_eq!(bank.compare_analog(&analog, &offsets), bank.compare_pure(&raw));
+    }
+
+    #[test]
+    fn comparator_offset_flips_threshold_decisions() {
+        let bank = ComparatorBank::new(PsqMode::Binary, 10.0, 2);
+        // raw 10 sits exactly on the threshold: +1 ideally, flipped to −1
+        // by a small negative input-referred offset
+        let codes = bank.compare_analog(&[10.0, 10.0], &[0.0, -0.25]);
+        assert_eq!(codes[0].decode(), 1);
+        assert_eq!(codes[1].decode(), -1);
     }
 
     #[test]

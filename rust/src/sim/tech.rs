@@ -38,6 +38,16 @@ impl TechNode {
             _ => None,
         }
     }
+
+    /// First-order device-mismatch scale relative to the 65 nm calibration
+    /// node. Pelgrom's law puts threshold/conductance mismatch at
+    /// σ ∝ 1/√(W·L), so with cell dimensions tracking the feature size the
+    /// relative variation grows as √(65/L) on shrink. Used by
+    /// `nonideal::NonIdealityParams::default_for` to scale the analog
+    /// non-ideality magnitudes per node.
+    pub fn variability_scale(&self) -> f64 {
+        (65.0 / self.nm).sqrt()
+    }
 }
 
 const ALPHA: f64 = 1.3;
@@ -124,6 +134,14 @@ mod tests {
         assert!((fwd.delay * back.delay - 1.0).abs() < 1e-9);
         assert!((fwd.energy * back.energy - 1.0).abs() < 1e-9);
         assert!((fwd.area * back.area - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variability_grows_on_shrink() {
+        assert!((TechNode::N65.variability_scale() - 1.0).abs() < 1e-12);
+        assert!(TechNode::N45.variability_scale() > TechNode::N65.variability_scale());
+        assert!(TechNode::N32.variability_scale() > TechNode::N45.variability_scale());
+        assert!(TechNode::N22.variability_scale() > TechNode::N32.variability_scale());
     }
 
     #[test]

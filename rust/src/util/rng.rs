@@ -123,7 +123,15 @@ impl Rng {
         &xs[self.below(xs.len() as u64) as usize]
     }
 
-    /// Derive an independent child generator (for parallel workers).
+    /// Derive an independent child generator (for parallel workers and
+    /// per-layer / per-trial sub-streams).
+    ///
+    /// Rng hygiene: never `clone()` a generator you keep using — the clone
+    /// replays the parent's exact stream, silently correlating everything
+    /// drawn from both. Never seed siblings with sequential integers
+    /// either; derive sub-seeds through `fork()` (or
+    /// [`splitmix64`] for raw seeds), which advances the parent so every
+    /// child stream is independent.
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
@@ -208,5 +216,25 @@ mod tests {
         let mut c1 = parent.fork();
         let mut c2 = parent.fork();
         assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn clone_replays_the_parent_stream_fork_does_not() {
+        // the hygiene hazard fork() exists to prevent: a clone is a
+        // correlated (identical) stream, a fork is an independent one
+        let mut parent = Rng::new(99);
+        let mut cloned = parent.clone();
+        assert_eq!(
+            (0..8).map(|_| parent.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| cloned.next_u64()).collect::<Vec<_>>(),
+            "clone replays the parent stream"
+        );
+        let mut parent = Rng::new(99);
+        let mut forked = parent.fork();
+        assert_ne!(
+            (0..8).map(|_| parent.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| forked.next_u64()).collect::<Vec<_>>(),
+            "fork must not replay the parent stream"
+        );
     }
 }

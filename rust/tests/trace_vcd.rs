@@ -1,0 +1,89 @@
+//! Golden-file test for the cycle-trace VCD exporter: a small DCiM
+//! Read–Compute–Store pipeline trace (one word-op flowing through the
+//! three stages of Fig. 4, at the paper's 2 ns / 500 MHz cycle) must
+//! export byte-identical VCD, with a well-formed header, one `$var`
+//! declaration per signal, and strictly increasing timestamps — and the
+//! disabled-tracer path must record nothing at all.
+
+use hcim::sim::trace::Tracer;
+
+/// One word-op through the 3-stage DCiM pipeline: Read fires at cycle 0,
+/// Compute at 1, Store (with the partial-sum write-back 0b101010) at 2.
+fn pipeline_trace() -> Tracer {
+    let mut t = Tracer::new(true);
+    t.declare("dcim.rwl", 1);
+    t.declare("dcim.compute", 1);
+    t.declare("dcim.store", 1);
+    t.declare("dcim.ps", 8);
+    t.record(0, "dcim.rwl", 1);
+    t.record(1, "dcim.rwl", 0);
+    t.record(1, "dcim.compute", 1);
+    t.record(2, "dcim.compute", 0);
+    t.record(2, "dcim.store", 1);
+    t.record(2, "dcim.ps", 0b10_1010);
+    t.record(3, "dcim.store", 0);
+    t
+}
+
+#[test]
+fn vcd_export_matches_golden_file() {
+    let vcd = pipeline_trace().render_vcd(2.0);
+    let golden = include_str!("golden/dcim_pipeline.vcd");
+    assert_eq!(vcd, golden, "VCD output drifted from tests/golden/dcim_pipeline.vcd");
+}
+
+#[test]
+fn vcd_is_structurally_valid() {
+    let vcd = pipeline_trace().render_vcd(2.0);
+
+    // header block
+    assert!(vcd.starts_with("$date"));
+    assert!(vcd.contains("$timescale 1ns $end"));
+    assert!(vcd.contains("$scope module hcim $end"));
+    assert!(vcd.contains("$upscope $end"));
+    assert!(vcd.contains("$enddefinitions $end"));
+
+    // one $var per declared signal, with the declared widths
+    let vars: Vec<&str> = vcd.lines().filter(|l| l.starts_with("$var wire")).collect();
+    assert_eq!(vars.len(), 4);
+    assert!(vars.iter().any(|v| v.contains(" 8 ") && v.contains("dcim.ps")));
+    assert!(vars.iter().filter(|v| v.contains(" 1 ")).count() == 3);
+
+    // timestamps strictly increase and reflect the 2 ns cycle
+    let stamps: Vec<u64> = vcd
+        .lines()
+        .filter_map(|l| l.strip_prefix('#'))
+        .map(|n| n.parse().expect("timestamp parses"))
+        .collect();
+    assert_eq!(stamps, vec![0, 2, 4, 6]);
+    assert!(stamps.windows(2).all(|w| w[0] < w[1]));
+
+    // the multi-bit write-back uses binary vector notation
+    assert!(vcd.contains("b101010 "));
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let mut t = Tracer::new(false);
+    t.declare("dcim.rwl", 1);
+    t.declare("dcim.ps", 8);
+    t.record(0, "dcim.rwl", 1);
+    t.record(1, "dcim.ps", 0xFF);
+    assert!(t.is_empty(), "disabled tracer must drop events");
+    assert!(t.events().is_empty());
+    assert!(t.render_text().is_empty());
+    let vcd = t.render_vcd(2.0);
+    assert!(!vcd.contains("$var"), "disabled tracer must not declare signals");
+    assert!(
+        !vcd.lines().any(|l| l.starts_with('#')),
+        "disabled tracer must emit no timestamps"
+    );
+}
+
+#[test]
+fn golden_write_roundtrip_through_fs() {
+    let path = std::env::temp_dir().join("hcim_dcim_pipeline_roundtrip.vcd");
+    pipeline_trace().write_vcd(&path, 2.0).unwrap();
+    let body = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(body, include_str!("golden/dcim_pipeline.vcd"));
+}
