@@ -1,12 +1,26 @@
 //! Hot-path microbenchmarks (the §Perf targets of EXPERIMENTS.md):
-//! gate-level DCiM word-ops, crossbar evaluation, full-model simulation,
-//! batcher throughput, and the infra substrates.
+//! gate-level DCiM word-ops, crossbar evaluation, packed-vs-scalar PSQ
+//! engines, robustness Monte Carlo trials, full-model simulation, batcher
+//! throughput, and the infra substrates.
 //!
 //! `HCIM_BENCH_FAST=1 cargo bench --bench hotpath` for a quick pass.
+//! Results are also written as JSON (`BENCH_hotpath.json`, or the path in
+//! `HCIM_BENCH_JSON`) so the perf trajectory accumulates per PR.
+//!
+//! The `(scalar oracle)` rows time the pre-packed-engine implementations
+//! (kept in-tree as bit-exact oracles); dividing them by their
+//! `(packed …)` siblings gives the before/after speedup recorded in
+//! EXPERIMENTS.md §Perf.
 
 use hcim::config::hardware::HcimConfig;
 use hcim::model::zoo;
+use hcim::nonideal::{
+    psq_mvm_nonideal_scalar, run_trial, run_trial_scalar, CrossbarPerturbation, NonIdealEngine,
+    NonIdealOutput, NonIdealityParams,
+};
+use hcim::quant::bits::Mat;
 use hcim::quant::encode::encode_all;
+use hcim::quant::psq::{psq_mvm_scalar, PsqEngine, PsqLayerParams, PsqMode, PsqOutput};
 use hcim::sim::dcim::array::DcimArray;
 use hcim::sim::energy::CostLedger;
 use hcim::sim::params::CalibParams;
@@ -47,11 +61,54 @@ fn main() {
     });
 
     // ---- L3 crossbar functional eval ----
-    let w = hcim::quant::bits::Mat::from_fn(128, 32, |r, c| ((r + c) as i64 % 15) - 7);
+    let w = Mat::from_fn(128, 32, |r, c| ((r + c) as i64 % 15) - 7);
     let xbar = hcim::sim::components::crossbar::Crossbar::program(&w, 4);
     let x: Vec<i64> = (0..128).map(|i| i % 16).collect();
     b.bench("crossbar stream eval (128x128)", || {
         black_box(xbar.evaluate_stream_pure(&x, 2));
+    });
+
+    // ---- PSQ MVM: scalar oracle vs packed weight-stationary engine ----
+    // same 128×128 physical crossbar (32 logical cols × 4 bit-slices)
+    let mut prng_psq = Rng::new(9);
+    let psq = PsqLayerParams::calibrated(
+        &w,
+        PsqMode::Ternary { alpha: 1.0 },
+        4,
+        4,
+        8,
+        &mut prng_psq,
+    );
+    b.bench("psq_mvm 128x128 (scalar oracle)", || {
+        black_box(psq_mvm_scalar(&w, &x, &psq));
+    });
+    let mut engine = PsqEngine::program(&w, &psq);
+    let mut psq_out = PsqOutput::zeroed(0, 0);
+    b.bench("psq_mvm 128x128 (packed engine, amortized)", || {
+        engine.mvm_into(&x, &mut psq_out);
+        black_box(psq_out.ps[0]);
+    });
+
+    // ---- perturbed PSQ MVM: scalar oracle vs packed engine ----
+    let ni = NonIdealityParams::default_for(TechNode::N32);
+    let pert = CrossbarPerturbation::sample(128, 128, &ni, &mut prng_psq);
+    b.bench("psq_mvm_nonideal 128x128 (scalar oracle)", || {
+        black_box(psq_mvm_nonideal_scalar(&w, &x, &psq, &pert));
+    });
+    let mut ni_engine = NonIdealEngine::program(&w, &psq, &pert);
+    let mut ni_out = NonIdealOutput::zeroed(0, 0);
+    b.bench("psq_mvm_nonideal 128x128 (packed engine, amortized)", || {
+        ni_engine.mvm_into(&x, &mut ni_out);
+        black_box(ni_out.ps[0]);
+    });
+
+    // ---- robustness Monte Carlo trial (the `hcim robustness` unit) ----
+    let g_rob = zoo::resnet20();
+    b.bench("robustness trial resnet20 (scalar oracle)", || {
+        black_box(run_trial_scalar(&g_rob, &cfg, &ni, 7).flip_rate());
+    });
+    b.bench("robustness trial resnet20 (packed)", || {
+        black_box(run_trial(&g_rob, &cfg, &ni, 7).flip_rate());
     });
 
     // ---- full-model cycle-accurate simulation ----
@@ -106,4 +163,29 @@ fn main() {
         "derived: {:.1} M simulated DCiM column-ops/s",
         dcim.throughput_per_s * 128.0 / 1e6
     );
+
+    // derived §Perf metric: packed-engine speedup over the scalar oracles
+    for (scalar, packed) in [
+        ("psq_mvm 128x128 (scalar oracle)", "psq_mvm 128x128 (packed engine, amortized)"),
+        (
+            "psq_mvm_nonideal 128x128 (scalar oracle)",
+            "psq_mvm_nonideal 128x128 (packed engine, amortized)",
+        ),
+        ("robustness trial resnet20 (scalar oracle)", "robustness trial resnet20 (packed)"),
+    ] {
+        let find = |name: &str| b.results().iter().find(|r| r.name == name).unwrap();
+        let (s, p) = (find(scalar), find(packed));
+        if p.mean_ns > 0.0 {
+            println!("derived: {:.1}x speedup — {} vs scalar", s.mean_ns / p.mean_ns, packed);
+        }
+    }
+
+    // perf-trajectory artifact (EXPERIMENTS.md §Perf; uploaded by CI and
+    // checked in per perf-relevant PR). A failed write must fail the bench
+    // step, not surface later as a missing artifact.
+    let json_path =
+        std::env::var("HCIM_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    b.write_json(std::path::Path::new(&json_path))
+        .unwrap_or_else(|e| panic!("could not write {json_path}: {e}"));
+    println!("wrote {json_path}");
 }

@@ -189,6 +189,11 @@ impl SweepRunner {
 /// validated by [`DesignSpace::validate`], so the zoo lookup cannot fail.
 /// With `robustness` set, the point additionally runs a serial Monte Carlo
 /// (serial because this function already executes inside a pool worker).
+/// The Monte Carlo's trials × layers of crossbar MVMs run on the packed
+/// [`crate::quant::psq::PsqEngine`] / [`crate::nonideal::NonIdealEngine`]
+/// hot path — weight-stationary programming paid once per (layer, trial),
+/// AND+popcount word kernels per stream — which is what keeps
+/// `--robustness` sweeps tractable at DSE scale (EXPERIMENTS.md §Perf).
 fn simulate_point(
     point: &DesignPoint,
     sparsity: &SparsityTable,

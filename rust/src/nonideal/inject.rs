@@ -10,6 +10,12 @@
 //! downstream (scale factors, saturating PS accumulation) is the ideal
 //! digital path — HCiM's DCiM array is digital and assumed correct.
 //!
+//! The hot path runs on [`NonIdealEngine`], which programs the faulted
+//! crossbar once per (layer, trial) on the packed
+//! [`crate::quant::bits::PackedBits`] representation; the byte-per-bit
+//! scalar implementation survives as [`psq_mvm_nonideal_scalar`], the
+//! bit-exact oracle the engine is property-tested against.
+//!
 //! [`run_trial`] applies this layer-by-layer to a [`crate::model::zoo`]
 //! graph: for every MVM layer it synthesizes a representative
 //! crossbar-sized problem from a forked per-layer generator, runs the
@@ -19,9 +25,9 @@
 use crate::config::hardware::HcimConfig;
 use crate::model::graph::Graph;
 use crate::nonideal::models::{CrossbarPerturbation, NonIdealityParams};
-use crate::quant::bits::{input_bitplane, weight_bitslice, Mat};
+use crate::quant::bits::{input_bitplane, weight_bitslice, Mat, PackedBits};
 use crate::quant::fixed::sat_add;
-use crate::quant::psq::{psq_mvm, PsqLayerParams, PsqOutput};
+use crate::quant::psq::{psq_mvm_scalar, quantize_ps, PsqEngine, PsqLayerParams, PsqOutput};
 use crate::sim::components::comparator::ComparatorBank;
 use crate::util::rng::Rng;
 
@@ -38,12 +44,180 @@ pub struct NonIdealOutput {
     pub analog: Vec<f64>,
 }
 
+impl NonIdealOutput {
+    /// All-zero output for a `phys_cols`-column crossbar over `x_bits`
+    /// streams. Pass to [`NonIdealEngine::mvm_into`] and reuse.
+    pub fn zeroed(phys_cols: usize, x_bits: u32) -> NonIdealOutput {
+        NonIdealOutput {
+            ps: vec![0; phys_cols],
+            p: vec![0; x_bits as usize * phys_cols],
+            analog: vec![0.0; x_bits as usize * phys_cols],
+        }
+    }
+
+    fn reset(&mut self, phys_cols: usize, x_bits: u32) {
+        let codes = x_bits as usize * phys_cols;
+        self.ps.clear();
+        self.ps.resize(phys_cols, 0);
+        self.p.clear();
+        self.p.resize(codes, 0);
+        self.analog.clear();
+        self.analog.resize(codes, 0.0);
+    }
+}
+
+/// A perturbed crossbar programmed once per (layer, trial), serving
+/// repeated MVMs on the packed representation.
+///
+/// Programming applies the stuck-at fault map as precomputed per-column
+/// OR (stuck-ON) / AND-NOT (stuck-OFF) word masks over the packed
+/// bit-slices, and snapshots the cell gains column-major so the inner
+/// loop streams one contiguous `f64` slice per column. Evaluation packs
+/// each input bit-plane once and accumulates the perturbed analog value
+/// by iterating **only the set bits** of `(col & plane)` via
+/// `trailing_zeros` — work proportional to the active cells (the
+/// simulator-side mirror of the paper's §4.2.2 sparsity energy argument) —
+/// in ascending row order, so the `f64` summation order (and therefore
+/// every Monte Carlo artifact downstream) is bit-identical to the scalar
+/// oracle [`psq_mvm_nonideal_scalar`].
+#[derive(Clone, Debug)]
+pub struct NonIdealEngine {
+    params: PsqLayerParams,
+    rows: usize,
+    phys_cols: usize,
+    /// Packed bit-slice columns with stuck-at masks already applied.
+    cols: Vec<PackedBits>,
+    /// Column-major cell current gains: `gains[c * rows + r]`.
+    gains: Vec<f64>,
+    /// Per-column comparator input-referred offsets.
+    offsets: Vec<f64>,
+    /// Input bit-plane scratch, repacked per stream.
+    plane: PackedBits,
+}
+
+impl NonIdealEngine {
+    /// Program the perturbed crossbar (the once-per-(layer, trial) cost).
+    pub fn program(
+        w: &Mat,
+        params: &PsqLayerParams,
+        pert: &CrossbarPerturbation,
+    ) -> NonIdealEngine {
+        let rows = w.rows;
+        let phys_cols = w.cols * params.w_bits as usize;
+        assert_eq!(pert.rows, rows, "perturbation row mismatch");
+        assert_eq!(pert.phys_cols, phys_cols, "perturbation column mismatch");
+        assert_eq!(
+            params.scales.len(),
+            params.x_bits as usize * phys_cols,
+            "scale factor table shape mismatch"
+        );
+
+        let mut cols = Vec::with_capacity(phys_cols);
+        let mut on = PackedBits::zeros(rows);
+        let mut off = PackedBits::zeros(rows);
+        for lc in 0..w.cols {
+            let col = w.col(lc);
+            for i in 0..params.w_bits {
+                let c = cols.len();
+                on.reset(rows);
+                off.reset(rows);
+                for r in 0..rows {
+                    if pert.is_stuck_on(r, c) {
+                        on.set(r, 1);
+                    }
+                    if pert.is_stuck_off(r, c) {
+                        off.set(r, 1);
+                    }
+                }
+                let mut bits = PackedBits::from_bitslice(&col, i, params.w_bits);
+                bits.or_assign(&on);
+                bits.andnot_assign(&off);
+                cols.push(bits);
+            }
+        }
+
+        let mut gains = Vec::with_capacity(rows * phys_cols);
+        for c in 0..phys_cols {
+            for r in 0..rows {
+                gains.push(pert.cell_gain(r, c));
+            }
+        }
+
+        NonIdealEngine {
+            offsets: pert.comparator_offsets().to_vec(),
+            params: params.clone(),
+            rows,
+            phys_cols,
+            cols,
+            gains,
+            plane: PackedBits::zeros(rows),
+        }
+    }
+
+    /// One full perturbed MVM (allocates the output; see
+    /// [`NonIdealEngine::mvm_into`] for the reuse path).
+    pub fn mvm(&mut self, x: &[i64]) -> NonIdealOutput {
+        let mut out = NonIdealOutput::zeroed(self.phys_cols, self.params.x_bits);
+        self.mvm_into(x, &mut out);
+        out
+    }
+
+    /// One full perturbed MVM into a reusable output buffer — no heap
+    /// allocation once `out` and the plane scratch have warmed up. The
+    /// comparator decision is the inlined form of
+    /// [`ComparatorBank::compare_analog`]'s per-column expression
+    /// (`quantize_ps(a + offset − θ)`), evaluated in the same order with
+    /// the same associativity, so codes stay bit-identical to the scalar
+    /// oracle without its per-stream code-vector allocations.
+    pub fn mvm_into(&mut self, x: &[i64], out: &mut NonIdealOutput) {
+        assert_eq!(x.len(), self.rows, "input/crossbar row mismatch");
+        out.reset(self.phys_cols, self.params.x_bits);
+        for j in 0..self.params.x_bits {
+            self.plane.pack_bitplane(x, j);
+            for c in 0..self.phys_cols {
+                // perturbed column current: Σ gains over conducting cells,
+                // ascending rows (bit-identical to the scalar oracle's sum)
+                let g = &self.gains[c * self.rows..(c + 1) * self.rows];
+                let mut a = 0.0;
+                self.cols[c].and_for_each_one(&self.plane, |r| a += g[r]);
+                let p =
+                    quantize_ps(a + self.offsets[c] - self.params.theta, self.params.mode);
+                let idx = j as usize * self.phys_cols + c;
+                out.analog[idx] = a;
+                out.p[idx] = p;
+                if p != 0 {
+                    let s = self.params.scales[idx];
+                    out.ps[c] = sat_add(out.ps[c], p as i64 * s, self.params.ps_bits);
+                }
+            }
+        }
+    }
+}
+
 /// Perturbed PSQ matrix-vector product over one crossbar.
 ///
 /// With `pert` the exact identity this is code- and PS-identical to
-/// [`psq_mvm`] (the analog value of a column is then the integer popcount,
-/// exactly representable in `f64`).
+/// [`crate::quant::psq::psq_mvm`] (the analog value of a column is then
+/// the integer popcount, exactly representable in `f64`).
+///
+/// Thin program-then-eval wrapper over [`NonIdealEngine`]; callers issuing
+/// many MVMs against one programmed perturbation should hold the engine.
 pub fn psq_mvm_nonideal(
+    w: &Mat,
+    x: &[i64],
+    params: &PsqLayerParams,
+    pert: &CrossbarPerturbation,
+) -> NonIdealOutput {
+    assert_eq!(w.rows, x.len(), "input/crossbar row mismatch");
+    NonIdealEngine::program(w, params, pert).mvm(x)
+}
+
+/// The original byte-per-bit scalar implementation, kept verbatim as the
+/// bit-exact oracle for [`psq_mvm_nonideal`] / [`NonIdealEngine`]
+/// (equivalence — including identical `f64` analog sums — is
+/// property-tested; the scalar path also anchors the before/after speedup
+/// rows in `benches/hotpath.rs` and EXPERIMENTS.md §Perf).
+pub fn psq_mvm_nonideal_scalar(
     w: &Mat,
     x: &[i64],
     params: &PsqLayerParams,
@@ -203,6 +377,12 @@ impl TrialOutcome {
 /// ranges, calibrated PSQ parameters, and the sampled perturbation) comes
 /// from a generator forked off the trial seed in layer order — fully
 /// deterministic, and independent across trials by construction.
+///
+/// Hot path of `hcim robustness` and `hcim dse --robustness`
+/// (trials × layers of this per Monte Carlo): both the ideal and the
+/// perturbed MVM run on the packed engines, programmed once per
+/// (layer, trial) and evaluated into output buffers reused across layers.
+/// Bit-identical to [`run_trial_scalar`].
 pub fn run_trial(
     graph: &Graph,
     cfg: &HcimConfig,
@@ -214,6 +394,8 @@ pub fn run_trial(
     let w_hi = (1i64 << (cfg.w_bits - 1)) - 1;
     let x_hi = (1i64 << cfg.x_bits) - 1;
     let mut layers = Vec::new();
+    let mut ideal = PsqOutput::zeroed(0, 0);
+    let mut actual = NonIdealOutput::zeroed(0, 0);
     for ann in graph.annotate() {
         let Some(mvm) = ann.mvm else { continue };
         let mut lr = rng.fork();
@@ -233,8 +415,53 @@ pub fn run_trial(
         );
         let pert =
             CrossbarPerturbation::sample(rows, cols * cfg.w_bits as usize, ni, &mut lr);
-        let ideal = psq_mvm(&w, &x, &params);
-        let actual = psq_mvm_nonideal(&w, &x, &params, &pert);
+        PsqEngine::program(&w, &params).mvm_into(&x, &mut ideal);
+        NonIdealEngine::program(&w, &params, &pert).mvm_into(&x, &mut actual);
+        layers.push(LayerOutcome::compare(ann.index, &ideal, &actual));
+    }
+    TrialOutcome {
+        seed,
+        layers,
+        ps_full_scale: (1i64 << (cfg.ps_bits - 1)) as f64,
+    }
+}
+
+/// [`run_trial`] on the byte-per-bit scalar oracles
+/// ([`psq_mvm_scalar`] / [`psq_mvm_nonideal_scalar`]) — the pre-packed
+/// implementation, kept as the regression oracle (`run_trial` must match
+/// it exactly for every seed) and as the "before" row of the
+/// `robustness trial` benchmark in `benches/hotpath.rs`.
+pub fn run_trial_scalar(
+    graph: &Graph,
+    cfg: &HcimConfig,
+    ni: &NonIdealityParams,
+    seed: u64,
+) -> TrialOutcome {
+    let mut rng = Rng::new(seed);
+    let w_lo = -(1i64 << (cfg.w_bits - 1));
+    let w_hi = (1i64 << (cfg.w_bits - 1)) - 1;
+    let x_hi = (1i64 << cfg.x_bits) - 1;
+    let mut layers = Vec::new();
+    for ann in graph.annotate() {
+        let Some(mvm) = ann.mvm else { continue };
+        let mut lr = rng.fork();
+        let rows = mvm.rows.min(cfg.xbar.rows).max(1);
+        let max_logical = (cfg.xbar.cols / cfg.w_bits as usize).max(1);
+        let cols = mvm.cols.min(max_logical).max(1);
+        let w = Mat::from_fn(rows, cols, |_, _| lr.range_i64(w_lo, w_hi));
+        let x: Vec<i64> = (0..rows).map(|_| lr.range_i64(0, x_hi)).collect();
+        let params = PsqLayerParams::calibrated(
+            &w,
+            cfg.mode,
+            cfg.w_bits,
+            cfg.x_bits,
+            cfg.ps_bits,
+            &mut lr,
+        );
+        let pert =
+            CrossbarPerturbation::sample(rows, cols * cfg.w_bits as usize, ni, &mut lr);
+        let ideal = psq_mvm_scalar(&w, &x, &params);
+        let actual = psq_mvm_nonideal_scalar(&w, &x, &params, &pert);
         layers.push(LayerOutcome::compare(ann.index, &ideal, &actual));
     }
     TrialOutcome {
@@ -248,7 +475,7 @@ pub fn run_trial(
 mod tests {
     use super::*;
     use crate::model::zoo;
-    use crate::quant::psq::PsqMode;
+    use crate::quant::psq::{psq_mvm, PsqMode};
     use crate::util::prop::{check, Gen};
 
     fn small_cfg() -> HcimConfig {
@@ -388,5 +615,101 @@ mod tests {
         let zeros: usize = t.layers.iter().map(|l| l.ideal_zeros).sum();
         assert_eq!(zeros, 0);
         assert_eq!(t.zero_corruption_rate(), 0.0);
+    }
+
+    // ---- packed engine ⇄ scalar oracle equivalence -----------------------
+
+    fn assert_nonideal_identical(a: &NonIdealOutput, b: &NonIdealOutput, ctx: &str) {
+        assert_eq!(a.p, b.p, "{ctx}: comparator codes diverge");
+        assert_eq!(a.ps, b.ps, "{ctx}: partial sums diverge");
+        // f64 equality is intentional: the packed path must reproduce the
+        // scalar summation order exactly, not approximately
+        assert_eq!(a.analog, b.analog, "{ctx}: analog sums diverge");
+    }
+
+    #[test]
+    fn packed_nonideal_matches_scalar_oracle_under_perturbation() {
+        check("psq_mvm_nonideal (packed) == scalar oracle", 80, |g: &mut Gen| {
+            let rows = g.usize(1, 300);
+            let cols = g.usize(1, 3);
+            let w_bits = g.usize(1, 8) as u32;
+            let x_bits = g.usize(1, 8) as u32;
+            let mode = if g.bool(0.5) {
+                PsqMode::Binary
+            } else {
+                PsqMode::Ternary { alpha: g.f64(0.0, 4.0) }
+            };
+            let lo = -(1i64 << (w_bits - 1));
+            let hi = (1i64 << (w_bits - 1)) - 1;
+            let w = Mat { rows, cols, data: g.vec_i64(rows * cols, lo, hi) };
+            let x = g.vec_i64(rows, 0, (1i64 << x_bits) - 1);
+            let mut rng = Rng::new(g.seed ^ 0x51CE);
+            let params =
+                PsqLayerParams::calibrated(&w, mode, w_bits, x_bits, 8, &mut rng);
+            // non-trivial magnitudes: every perturbation source active
+            let ni = NonIdealityParams {
+                sigma_g: g.f64(0.0, 0.4),
+                stuck_on: g.f64(0.0, 0.05),
+                stuck_off: g.f64(0.0, 0.05),
+                ir_drop: g.f64(0.0, 0.2),
+                sigma_cmp: g.f64(0.0, 1.5),
+            };
+            let pert =
+                CrossbarPerturbation::sample(rows, cols * w_bits as usize, &ni, &mut rng);
+            assert_nonideal_identical(
+                &psq_mvm_nonideal(&w, &x, &params, &pert),
+                &psq_mvm_nonideal_scalar(&w, &x, &params, &pert),
+                "sampled perturbation",
+            );
+            // and under the exact identity
+            let id = CrossbarPerturbation::identity(rows, cols * w_bits as usize);
+            assert_nonideal_identical(
+                &psq_mvm_nonideal(&w, &x, &params, &id),
+                &psq_mvm_nonideal_scalar(&w, &x, &params, &id),
+                "identity perturbation",
+            );
+        });
+    }
+
+    #[test]
+    fn nonideal_engine_is_reusable_across_inputs() {
+        let mut rng = Rng::new(31);
+        let (w, _) = rand_problem_rng(&mut rng, 130, 3, 4);
+        let params =
+            PsqLayerParams::calibrated(&w, PsqMode::Ternary { alpha: 1.0 }, 4, 4, 8, &mut rng);
+        let ni = NonIdealityParams {
+            sigma_g: 0.2,
+            stuck_on: 0.02,
+            stuck_off: 0.02,
+            ir_drop: 0.1,
+            sigma_cmp: 0.5,
+        };
+        let pert = CrossbarPerturbation::sample(130, 12, &ni, &mut rng);
+        let mut engine = NonIdealEngine::program(&w, &params, &pert);
+        let mut out = NonIdealOutput::zeroed(0, 0);
+        for s in 0..6u64 {
+            let mut xr = Rng::new(s);
+            let x: Vec<i64> = (0..130).map(|_| xr.range_i64(0, 15)).collect();
+            engine.mvm_into(&x, &mut out);
+            assert_nonideal_identical(
+                &out,
+                &psq_mvm_nonideal_scalar(&w, &x, &params, &pert),
+                "engine reuse",
+            );
+        }
+    }
+
+    #[test]
+    fn run_trial_matches_scalar_trial_bit_for_bit() {
+        let g = zoo::resnet20();
+        let cfg = small_cfg();
+        let ni = NonIdealityParams::default_for(cfg.node);
+        for seed in [0u64, 1, 99, 0xC0FFEE] {
+            assert_eq!(
+                run_trial(&g, &cfg, &ni, seed),
+                run_trial_scalar(&g, &cfg, &ni, seed),
+                "trial outcome must be byte-identical at seed {seed}"
+            );
+        }
     }
 }

@@ -13,8 +13,10 @@
 //!   ([`NonIdealityParams`], [`CrossbarPerturbation`]), magnitudes
 //!   scalable per [`crate::sim::tech::TechNode`];
 //! * [`inject`] — the perturbed functional PSQ path
-//!   ([`inject::psq_mvm_nonideal`]) and layer-by-layer ideal-vs-perturbed
-//!   comparison over [`crate::model::zoo`] graphs ([`inject::run_trial`]);
+//!   ([`inject::psq_mvm_nonideal`], hot path: [`inject::NonIdealEngine`]
+//!   on packed bit-planes with precomputed stuck-at word masks) and
+//!   layer-by-layer ideal-vs-perturbed comparison over
+//!   [`crate::model::zoo`] graphs ([`inject::run_trial`]);
 //! * [`monte_carlo`] — N seeded trials fanned out on the worker pool
 //!   ([`run_monte_carlo`]), byte-identical for any worker count;
 //! * [`report`] — [`RobustnessReport`]: mean/std/percentile summaries,
@@ -51,7 +53,10 @@ pub mod report;
 /// values invalidate correctly.
 pub const MODEL_VERSION: &str = "ni-v1";
 
-pub use inject::{psq_mvm_nonideal, run_trial, LayerOutcome, NonIdealOutput, TrialOutcome};
+pub use inject::{
+    psq_mvm_nonideal, psq_mvm_nonideal_scalar, run_trial, run_trial_scalar, LayerOutcome,
+    NonIdealEngine, NonIdealOutput, TrialOutcome,
+};
 pub use models::{CellFault, CrossbarPerturbation, NonIdealityParams};
 pub use monte_carlo::{run_monte_carlo, trial_seeds, MonteCarloCfg, TrialMetrics};
 pub use report::RobustnessReport;

@@ -203,6 +203,20 @@ impl CrossbarPerturbation {
         }
     }
 
+    /// Cell `(r, c)` conducts regardless of the programmed bit. Used by
+    /// the packed engine to precompute per-column OR masks.
+    #[inline]
+    pub fn is_stuck_on(&self, r: usize, c: usize) -> bool {
+        self.fault[r * self.phys_cols + c] == CellFault::StuckOn
+    }
+
+    /// Cell `(r, c)` never conducts. Used by the packed engine to
+    /// precompute per-column AND-NOT masks.
+    #[inline]
+    pub fn is_stuck_off(&self, r: usize, c: usize) -> bool {
+        self.fault[r * self.phys_cols + c] == CellFault::StuckOff
+    }
+
     /// Per-column comparator offsets (length `phys_cols`).
     pub fn comparator_offsets(&self) -> &[f64] {
         &self.cmp_offset
@@ -322,6 +336,24 @@ mod tests {
         let c = NonIdealityParams { sigma_g: a.sigma_g + 0.01, ..a };
         assert_ne!(a.fingerprint(), c.fingerprint());
         assert_ne!(a.fingerprint(), NonIdealityParams::ideal().fingerprint());
+    }
+
+    #[test]
+    fn stuck_accessors_agree_with_fault_bit() {
+        let ni = NonIdealityParams {
+            stuck_on: 0.1,
+            stuck_off: 0.1,
+            ..NonIdealityParams::ideal()
+        };
+        let p = CrossbarPerturbation::sample(32, 16, &ni, &mut Rng::new(11));
+        for r in 0..32 {
+            for c in 0..16 {
+                assert_eq!(p.is_stuck_on(r, c), p.fault_bit(r, c, 0) == 1);
+                assert_eq!(p.is_stuck_off(r, c), p.fault_bit(r, c, 1) == 0);
+                assert!(!(p.is_stuck_on(r, c) && p.is_stuck_off(r, c)));
+            }
+        }
+        assert!(p.fault_count() > 0, "10 %+10 % rates over 512 cells must fault some");
     }
 
     #[test]

@@ -52,6 +52,9 @@ pub fn slice_weight(i: u32, w_bits: u32) -> i64 {
 /// current for one (bit-slice, bit-stream) pair. Range `[0, len]`; for a
 /// 128-row crossbar this is the 7-bit value the paper says "ideally
 /// requires a 7-bit ADC".
+///
+/// Scalar reference; the hot paths use [`PackedBits::dot`], which is
+/// property-tested against this oracle.
 pub fn bit_dot(wbits: &[u8], xbits: &[u8]) -> i64 {
     assert_eq!(wbits.len(), xbits.len());
     wbits
@@ -99,6 +102,173 @@ pub fn direct_mvm(w: &Mat, x: &[i64]) -> Vec<i64> {
         }
     }
     y
+}
+
+/// Multi-word packed bit vector — the hot-path representation of one
+/// crossbar bit-slice column or one input bit-plane.
+///
+/// Bit `i` lives in word `i / 64` at position `i % 64`, for an arbitrary
+/// number of rows (a 128-wordline crossbar column is two words; larger
+/// tiles just grow the word vector). The payoff is the paper's own framing
+/// of a column operation: "AND and popcount" (§3) becomes one `&` plus one
+/// `count_ones` per word instead of a byte-per-bit scalar loop.
+///
+/// Invariant: bits at positions `>= len` are always zero, so word-level
+/// AND/OR/popcount never see garbage from the partial tail word. All
+/// constructors and mutators preserve this.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBits {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedBits {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> PackedBits {
+        PackedBits { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Pack a 0/1 byte vector (the scalar representation).
+    pub fn from_bits(bits: &[u8]) -> PackedBits {
+        let mut p = PackedBits::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            p.words[i >> 6] |= ((b & 1) as u64) << (i & 63);
+        }
+        p
+    }
+
+    /// Pack bit-plane `j` of unsigned activation codes — the packed
+    /// equivalent of [`input_bitplane`].
+    pub fn from_bitplane(x: &[i64], j: u32) -> PackedBits {
+        let mut p = PackedBits::zeros(x.len());
+        p.pack_bitplane(x, j);
+        p
+    }
+
+    /// Pack bit-slice `i` of signed weight codes (two's complement over
+    /// `w_bits`) — the packed equivalent of [`weight_bitslice`].
+    pub fn from_bitslice(w: &[i64], i: u32, w_bits: u32) -> PackedBits {
+        assert!(i < w_bits);
+        let mut p = PackedBits::zeros(w.len());
+        for (k, &v) in w.iter().enumerate() {
+            let lo = -(1i64 << (w_bits - 1));
+            let hi = (1i64 << (w_bits - 1)) - 1;
+            debug_assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
+            let pattern = (v as u64) & ((1u64 << w_bits) - 1);
+            p.words[k >> 6] |= ((pattern >> i) & 1) << (k & 63);
+        }
+        p
+    }
+
+    /// Repack bit-plane `j` of `x` in place, reusing the word buffer when
+    /// the length already matches (the per-stream path of the engines —
+    /// zero allocation once warmed up).
+    pub fn pack_bitplane(&mut self, x: &[i64], j: u32) {
+        self.reset(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            debug_assert!(v >= 0, "activations must be unsigned codes (got {v})");
+            self.words[i >> 6] |= (((v >> j) & 1) as u64) << (i & 63);
+        }
+    }
+
+    /// Resize to `len` bits, all zero (keeps the allocation when possible).
+    pub fn reset(&mut self, len: usize) {
+        self.len = len;
+        let nwords = len.div_ceil(64);
+        self.words.clear();
+        self.words.resize(nwords, 0);
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bit `i` as 0/1.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        ((self.words[i >> 6] >> (i & 63)) & 1) as u8
+    }
+
+    /// Set bit `i` to 0/1.
+    #[inline]
+    pub fn set(&mut self, i: usize, bit: u8) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let mask = 1u64 << (i & 63);
+        if bit & 1 == 1 {
+            self.words[i >> 6] |= mask;
+        } else {
+            self.words[i >> 6] &= !mask;
+        }
+    }
+
+    /// Backing words (tail bits beyond `len` are zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// AND + popcount dot kernel: `Σ_i self[i]·other[i]` — one idealised
+    /// analog column current in a handful of word ops. Packed equivalent
+    /// of [`bit_dot`].
+    #[inline]
+    pub fn dot(&self, other: &PackedBits) -> i64 {
+        assert_eq!(self.len, other.len, "bit-vector length mismatch");
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a & b).count_ones() as i64)
+            .sum()
+    }
+
+    /// Visit the indices of set bits of `self & other` in ascending order
+    /// (word-by-word `trailing_zeros` scan). Work is proportional to the
+    /// number of *active* cells, not the row count — the simulator-side
+    /// mirror of the paper's §4.2.2 sparsity energy argument. Ascending
+    /// order matters: callers accumulate `f64` contributions and must keep
+    /// the scalar oracle's summation order to stay bit-identical.
+    #[inline]
+    pub fn and_for_each_one<F: FnMut(usize)>(&self, other: &PackedBits, mut f: F) {
+        assert_eq!(self.len, other.len, "bit-vector length mismatch");
+        for (wi, (&a, &b)) in self.words.iter().zip(&other.words).enumerate() {
+            let mut m = a & b;
+            while m != 0 {
+                f((wi << 6) + m.trailing_zeros() as usize);
+                m &= m - 1;
+            }
+        }
+    }
+
+    /// `self |= other` (stuck-ON fault mask application).
+    pub fn or_assign(&mut self, other: &PackedBits) {
+        assert_eq!(self.len, other.len, "bit-vector length mismatch");
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// `self &= !other` (stuck-OFF fault mask application). The tail
+    /// invariant holds because `self`'s tail bits are already zero.
+    pub fn andnot_assign(&mut self, other: &PackedBits) {
+        assert_eq!(self.len, other.len, "bit-vector length mismatch");
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// Unpack to the scalar 0/1 byte representation (tests, debugging).
+    pub fn to_bits(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
 }
 
 /// Dense row-major integer matrix (rows = crossbar wordlines,
@@ -218,5 +388,137 @@ mod tests {
         let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as i64);
         assert_eq!(m.at(1, 2), 12);
         assert_eq!(m.col(1), vec![1, 11]);
+    }
+
+    // ---- PackedBits ⇄ scalar equivalence ---------------------------------
+
+    /// Row counts that exercise the word boundaries of the packed layout.
+    const BOUNDARY_LENS: &[usize] = &[1, 2, 63, 64, 65, 127, 128, 129, 191, 192, 193, 256, 300];
+
+    #[test]
+    fn packed_roundtrip_and_boundaries() {
+        for &n in BOUNDARY_LENS {
+            let bits: Vec<u8> = (0..n).map(|i| ((i * 7 + 3) % 5 < 2) as u8).collect();
+            let p = PackedBits::from_bits(&bits);
+            assert_eq!(p.len(), n);
+            assert_eq!(p.to_bits(), bits, "round trip at {n} bits");
+            assert_eq!(p.count_ones() as i64, bits.iter().map(|&b| b as i64).sum::<i64>());
+            assert_eq!(p.words().len(), n.div_ceil(64));
+            // tail invariant: no garbage beyond `len`
+            if n % 64 != 0 {
+                let tail = p.words()[n / 64] >> (n % 64);
+                assert_eq!(tail, 0, "tail bits must stay zero at {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dot_matches_scalar_oracle() {
+        check("PackedBits::dot == bit_dot", 200, |g: &mut Gen| {
+            let n = g.usize(1, 300);
+            let a: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| g.bool(0.3) as u8).collect();
+            let pa = PackedBits::from_bits(&a);
+            let pb = PackedBits::from_bits(&b);
+            assert_eq!(pa.dot(&pb), bit_dot(&a, &b));
+            assert_eq!(pb.dot(&pa), bit_dot(&a, &b));
+        });
+    }
+
+    #[test]
+    fn packed_bitplane_matches_scalar_oracle() {
+        check("PackedBits::from_bitplane == input_bitplane", 150, |g: &mut Gen| {
+            let n = g.usize(1, 300);
+            let x_bits = g.usize(1, 8) as u32;
+            let x = g.vec_i64(n, 0, (1i64 << x_bits) - 1);
+            for j in 0..x_bits {
+                let p = PackedBits::from_bitplane(&x, j);
+                assert_eq!(p.to_bits(), input_bitplane(&x, j));
+            }
+        });
+    }
+
+    #[test]
+    fn packed_bitslice_matches_scalar_oracle() {
+        check("PackedBits::from_bitslice == weight_bitslice", 150, |g: &mut Gen| {
+            let n = g.usize(1, 300);
+            let w_bits = g.usize(1, 8) as u32;
+            let lo = -(1i64 << (w_bits - 1));
+            let hi = (1i64 << (w_bits - 1)) - 1;
+            let w = g.vec_i64(n, lo, hi);
+            for i in 0..w_bits {
+                let p = PackedBits::from_bitslice(&w, i, w_bits);
+                assert_eq!(p.to_bits(), weight_bitslice(&w, i, w_bits));
+            }
+        });
+    }
+
+    #[test]
+    fn pack_bitplane_reuses_buffer_across_shapes() {
+        let mut p = PackedBits::zeros(0);
+        for &n in BOUNDARY_LENS {
+            let x: Vec<i64> = (0..n as i64).map(|i| i % 16).collect();
+            for j in 0..4 {
+                p.pack_bitplane(&x, j);
+                assert_eq!(p.to_bits(), input_bitplane(&x, j), "reuse at {n} bits, plane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn and_for_each_one_is_ascending_and_complete() {
+        check("and_for_each_one visits AND set-bits ascending", 120, |g: &mut Gen| {
+            let n = g.usize(1, 300);
+            let a: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let pa = PackedBits::from_bits(&a);
+            let pb = PackedBits::from_bits(&b);
+            let mut seen = Vec::new();
+            pa.and_for_each_one(&pb, |i| seen.push(i));
+            let expect: Vec<usize> =
+                (0..n).filter(|&i| a[i] & b[i] == 1).collect();
+            assert_eq!(seen, expect, "must visit exactly the AND bits, ascending");
+        });
+    }
+
+    #[test]
+    fn fault_mask_ops_match_scalar_semantics() {
+        check("or/andnot masks == scalar stuck-at application", 120, |g: &mut Gen| {
+            let n = g.usize(1, 300);
+            let bits: Vec<u8> = (0..n).map(|_| g.bool(0.5) as u8).collect();
+            let on: Vec<u8> = (0..n).map(|_| g.bool(0.1) as u8).collect();
+            let off: Vec<u8> = (0..n).map(|_| g.bool(0.1) as u8).collect();
+            let mut p = PackedBits::from_bits(&bits);
+            p.or_assign(&PackedBits::from_bits(&on));
+            p.andnot_assign(&PackedBits::from_bits(&off));
+            let expect: Vec<u8> =
+                (0..n).map(|i| (bits[i] | on[i]) & (1 - off[i])).collect();
+            assert_eq!(p.to_bits(), expect);
+            // tail invariant survives the mask ops
+            if n % 64 != 0 {
+                assert_eq!(p.words()[n / 64] >> (n % 64), 0);
+            }
+        });
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut p = PackedBits::zeros(130);
+        p.set(0, 1);
+        p.set(63, 1);
+        p.set(64, 1);
+        p.set(129, 1);
+        assert_eq!(p.count_ones(), 4);
+        assert_eq!(p.get(63), 1);
+        assert_eq!(p.get(65), 0);
+        p.set(63, 0);
+        assert_eq!(p.get(63), 0);
+        assert_eq!(p.count_ones(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn dot_rejects_length_mismatch() {
+        PackedBits::zeros(64).dot(&PackedBits::zeros(65));
     }
 }

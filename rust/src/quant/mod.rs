@@ -5,9 +5,13 @@
 //!
 //! * [`fixed`] — fixed-point quantization of floating-point tensors,
 //! * [`bits`] — weight bit-slicing and input bit-streaming (bit-slice = 1,
-//!   bit-stream = 1, as in the paper's evaluation),
+//!   bit-stream = 1, as in the paper's evaluation), plus the packed
+//!   multi-word bit-vector ([`bits::PackedBits`]) whose AND+popcount dot
+//!   kernel is the hot-path form of a crossbar column op,
 //! * [`psq`] — binary / ternary partial-sum quantization with trainable
-//!   scale factors (the algorithm of Fig. 2(a)) and the reference PSQ-MVM,
+//!   scale factors (the algorithm of Fig. 2(a)), the reference PSQ-MVM,
+//!   and the weight-stationary [`psq::PsqEngine`] (program once, evaluate
+//!   many, zero per-call allocation),
 //! * [`encode`] — the 2-bit ternary encoding (`00`→0, `01`→+1, `11`→−1)
 //!   used on the comparator→DCiM interface.
 //!

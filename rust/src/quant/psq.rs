@@ -14,7 +14,7 @@
 //! scale factors) are folded into batch-norm on the python side; the rust
 //! reference here works purely on integer codes plus one `f64` output step.
 
-use super::bits::{bit_dot, input_bitplane, weight_bitslice, Mat};
+use super::bits::{bit_dot, input_bitplane, weight_bitslice, Mat, PackedBits};
 use super::fixed::sat_add;
 use crate::util::rng::Rng;
 
@@ -149,13 +149,143 @@ pub struct PsqOutput {
     pub raw: Vec<i64>,
 }
 
+impl PsqOutput {
+    /// All-zero output for a `phys_cols`-column crossbar over `x_bits`
+    /// streams. Pass to [`PsqEngine::mvm_into`] and reuse across calls.
+    pub fn zeroed(phys_cols: usize, x_bits: u32) -> PsqOutput {
+        PsqOutput {
+            ps: vec![0; phys_cols],
+            p: vec![0; x_bits as usize * phys_cols],
+            raw: vec![0; x_bits as usize * phys_cols],
+        }
+    }
+
+    /// Resize to the given shape, zero-filled (keeps allocations when the
+    /// capacity suffices — the amortized path of the engines).
+    fn reset(&mut self, phys_cols: usize, x_bits: u32) {
+        let codes = x_bits as usize * phys_cols;
+        self.ps.clear();
+        self.ps.resize(phys_cols, 0);
+        self.p.clear();
+        self.p.resize(codes, 0);
+        self.raw.clear();
+        self.raw.resize(codes, 0);
+    }
+}
+
+/// A crossbar programmed once with packed bit-slice columns, serving
+/// repeated MVMs — the weight-stationary hot path.
+///
+/// [`PsqEngine::program`] pays the bit-slice extraction and packing cost a
+/// single time; every [`PsqEngine::mvm_into`] then runs the whole
+/// `x_bits × phys_cols` sweep as AND+popcount word kernels
+/// ([`PackedBits::dot`]) with **zero per-call heap allocation** (the input
+/// bit-plane scratch and the caller's output buffer are reused).
+/// Output is bit-identical to [`psq_mvm_scalar`], which is kept as the
+/// test oracle.
+#[derive(Clone, Debug)]
+pub struct PsqEngine {
+    params: PsqLayerParams,
+    rows: usize,
+    phys_cols: usize,
+    /// Packed physical bit-slice columns, `w_bits` per logical column.
+    cols: Vec<PackedBits>,
+    /// Input bit-plane scratch, repacked per stream.
+    plane: PackedBits,
+}
+
+impl PsqEngine {
+    /// Program the crossbar: expand each logical column of `w` into
+    /// `w_bits` packed physical bit-slice columns (the program-once cost
+    /// of the weight-stationary architecture).
+    pub fn program(w: &Mat, params: &PsqLayerParams) -> PsqEngine {
+        let phys_cols = w.cols * params.w_bits as usize;
+        assert_eq!(
+            params.scales.len(),
+            params.x_bits as usize * phys_cols,
+            "scale factor table shape mismatch"
+        );
+        let mut cols = Vec::with_capacity(phys_cols);
+        for lc in 0..w.cols {
+            let col = w.col(lc);
+            for i in 0..params.w_bits {
+                cols.push(PackedBits::from_bitslice(&col, i, params.w_bits));
+            }
+        }
+        PsqEngine {
+            params: params.clone(),
+            rows: w.rows,
+            phys_cols,
+            cols,
+            plane: PackedBits::zeros(w.rows),
+        }
+    }
+
+    /// Crossbar wordlines.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Physical (bit-slice) columns.
+    pub fn phys_cols(&self) -> usize {
+        self.phys_cols
+    }
+
+    /// The programmed PSQ parameters.
+    pub fn params(&self) -> &PsqLayerParams {
+        &self.params
+    }
+
+    /// One full MVM (allocates the output; see [`PsqEngine::mvm_into`] for
+    /// the zero-allocation path).
+    pub fn mvm(&mut self, x: &[i64]) -> PsqOutput {
+        let mut out = PsqOutput::zeroed(self.phys_cols, self.params.x_bits);
+        self.mvm_into(x, &mut out);
+        out
+    }
+
+    /// One full MVM into a reusable output buffer — no heap allocation
+    /// once `out` and the plane scratch have warmed up to this shape.
+    pub fn mvm_into(&mut self, x: &[i64], out: &mut PsqOutput) {
+        assert_eq!(x.len(), self.rows, "input/crossbar row mismatch");
+        out.reset(self.phys_cols, self.params.x_bits);
+        for j in 0..self.params.x_bits {
+            self.plane.pack_bitplane(x, j);
+            for c in 0..self.phys_cols {
+                let raw = self.cols[c].dot(&self.plane);
+                let p = quantize_ps(raw as f64 - self.params.theta, self.params.mode);
+                let idx = j as usize * self.phys_cols + c;
+                out.raw[idx] = raw;
+                out.p[idx] = p;
+                if p != 0 {
+                    let s = self.params.scales[idx];
+                    out.ps[c] = sat_add(out.ps[c], p as i64 * s, self.params.ps_bits);
+                }
+            }
+        }
+    }
+}
+
 /// Reference (bit-exact) PSQ matrix-vector product over one crossbar.
 ///
 /// `w` holds *signed weight codes* (`w_bits`-bit two's complement); each
 /// logical column is expanded to `w_bits` physical bit-slice columns, so the
 /// physical column count is `w.cols * w_bits` and must match
 /// `params.scales.len() / x_bits`.
+///
+/// Thin program-then-eval wrapper over [`PsqEngine`]; callers issuing many
+/// MVMs against the same weights should hold a `PsqEngine` instead and pay
+/// the programming cost once.
 pub fn psq_mvm(w: &Mat, x: &[i64], params: &PsqLayerParams) -> PsqOutput {
+    assert_eq!(w.rows, x.len(), "input/crossbar row mismatch");
+    PsqEngine::program(w, params).mvm(x)
+}
+
+/// The original byte-per-bit scalar implementation, kept verbatim as the
+/// bit-exact oracle for [`psq_mvm`] / [`PsqEngine`] (equivalence is
+/// property-tested; the scalar path also anchors the before/after speedup
+/// rows in `benches/hotpath.rs` and EXPERIMENTS.md §Perf).
+pub fn psq_mvm_scalar(w: &Mat, x: &[i64], params: &PsqLayerParams) -> PsqOutput {
     assert_eq!(w.rows, x.len(), "input/crossbar row mismatch");
     let phys_cols = w.cols * params.w_bits as usize;
     assert_eq!(
@@ -391,5 +521,102 @@ mod tests {
     fn comparator_counts() {
         assert_eq!(PsqMode::Binary.comparators(), 1);
         assert_eq!(PsqMode::Ternary { alpha: 1.0 }.comparators(), 2);
+    }
+
+    // ---- packed engine ⇄ scalar oracle equivalence -----------------------
+
+    fn assert_outputs_identical(a: &PsqOutput, b: &PsqOutput, ctx: &str) {
+        assert_eq!(a.ps, b.ps, "{ctx}: partial sums diverge");
+        assert_eq!(a.p, b.p, "{ctx}: comparator codes diverge");
+        assert_eq!(a.raw, b.raw, "{ctx}: raw popcounts diverge");
+    }
+
+    #[test]
+    fn packed_psq_mvm_matches_scalar_oracle() {
+        check("psq_mvm (packed) == psq_mvm_scalar", 120, |g: &mut Gen| {
+            let rows = g.usize(1, 300);
+            let cols = g.usize(1, 3);
+            let w_bits = g.usize(1, 8) as u32;
+            let x_bits = g.usize(1, 8) as u32;
+            let mode = if g.bool(0.5) {
+                PsqMode::Binary
+            } else {
+                PsqMode::Ternary { alpha: g.f64(0.0, 4.0) }
+            };
+            let w = rand_mat(g, rows, cols, w_bits);
+            let mut rng = crate::util::rng::Rng::new(g.seed ^ 0x77);
+            let params = PsqLayerParams::calibrated(&w, mode, w_bits, x_bits, 8, &mut rng);
+            let x = g.vec_i64(rows, 0, (1i64 << x_bits) - 1);
+            let packed = psq_mvm(&w, &x, &params);
+            let scalar = psq_mvm_scalar(&w, &x, &params);
+            assert_outputs_identical(&packed, &scalar, "random shape");
+        });
+    }
+
+    #[test]
+    fn packed_psq_mvm_matches_scalar_at_word_boundaries() {
+        // deterministic sweep over the row counts that stress the packed
+        // layout (non-multiples of 64 included)
+        for &rows in &[1usize, 63, 64, 65, 127, 128, 129, 192, 255, 256, 257, 300] {
+            let w = Mat::from_fn(rows, 2, |r, c| ((r * 3 + c * 5) as i64 % 15) - 7);
+            let mut rng = crate::util::rng::Rng::new(rows as u64);
+            let params = PsqLayerParams::calibrated(
+                &w,
+                PsqMode::Ternary { alpha: 1.0 },
+                4,
+                4,
+                8,
+                &mut rng,
+            );
+            let x: Vec<i64> = (0..rows as i64).map(|i| (i * 7) % 16).collect();
+            assert_outputs_identical(
+                &psq_mvm(&w, &x, &params),
+                &psq_mvm_scalar(&w, &x, &params),
+                &format!("rows = {rows}"),
+            );
+        }
+    }
+
+    #[test]
+    fn engine_is_weight_stationary_across_inputs() {
+        // one program, many inputs: every mvm_into must equal a fresh
+        // scalar run, and the reused buffer must not leak state between
+        // calls
+        let w = Mat::from_fn(100, 4, |r, c| ((r * 11 + c * 3) as i64 % 15) - 7);
+        let mut rng = crate::util::rng::Rng::new(21);
+        let params = PsqLayerParams::calibrated(
+            &w,
+            PsqMode::Ternary { alpha: 2.0 },
+            4,
+            4,
+            8,
+            &mut rng,
+        );
+        let mut engine = PsqEngine::program(&w, &params);
+        assert_eq!(engine.rows(), 100);
+        assert_eq!(engine.phys_cols(), 16);
+        let mut out = PsqOutput::zeroed(0, 0);
+        for s in 0..8u64 {
+            let mut xr = crate::util::rng::Rng::new(s);
+            let x: Vec<i64> = (0..100).map(|_| xr.range_i64(0, 15)).collect();
+            engine.mvm_into(&x, &mut out);
+            assert_outputs_identical(&out, &psq_mvm_scalar(&w, &x, &params), "stream reuse");
+        }
+    }
+
+    #[test]
+    fn output_buffer_reshapes_between_layers() {
+        // mvm_into into a buffer warmed up by a *different* layer shape
+        let mut rng = crate::util::rng::Rng::new(4);
+        let w1 = Mat::from_fn(64, 4, |r, c| ((r + c) as i64 % 15) - 7);
+        let p1 = PsqLayerParams::calibrated(&w1, PsqMode::Binary, 4, 4, 8, &mut rng);
+        let w2 = Mat::from_fn(130, 2, |r, c| ((r * 2 + c) as i64 % 15) - 7);
+        let p2 = PsqLayerParams::calibrated(&w2, PsqMode::Binary, 4, 6, 8, &mut rng);
+        let x1: Vec<i64> = (0..64).map(|i| i % 16).collect();
+        let x2: Vec<i64> = (0..130).map(|i| (i * 3) % 64).collect();
+        let mut out = PsqOutput::zeroed(0, 0);
+        PsqEngine::program(&w1, &p1).mvm_into(&x1, &mut out);
+        PsqEngine::program(&w2, &p2).mvm_into(&x2, &mut out);
+        assert_outputs_identical(&out, &psq_mvm_scalar(&w2, &x2, &p2), "reshape");
     }
 }

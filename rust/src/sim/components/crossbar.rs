@@ -14,22 +14,24 @@
 //! latency is one crossbar cycle per stream (pipelined with the column
 //! periphery downstream).
 
-use crate::quant::bits::{input_bitplane, weight_bitslice, Mat};
+use crate::quant::bits::{Mat, PackedBits};
 use crate::sim::energy::{Component, CostLedger};
 use crate::sim::params::CalibParams;
 
 /// A programmed crossbar holding bit-sliced weights (weight-stationary).
 ///
 /// Hot-path representation (EXPERIMENTS.md §Perf): each physical column's
-/// cell bits are packed into a `u128` mask over the (≤128) wordlines, so
-/// one analog column evaluation is `(col & plane).count_ones()` — the
-/// idealised popcount current in a single instruction.
+/// cell bits live in a shared multi-word [`PackedBits`] mask over the
+/// wordlines, so one analog column evaluation is `(col & plane)` popcount —
+/// the idealised popcount current in one or two word instructions per
+/// 64 rows. Tiles larger than 128 wordlines simply grow the word vector
+/// (the former `u128` representation capped rows at 128).
 #[derive(Clone, Debug)]
 pub struct Crossbar {
     pub rows: usize,
     pub cols: usize,
     /// Per physical column: bit r = cell (r, c).
-    cells: Vec<u128>,
+    cells: Vec<PackedBits>,
 }
 
 impl Crossbar {
@@ -37,12 +39,11 @@ impl Crossbar {
     /// logical-cols) expands each logical column into `w_bits` physical
     /// bit-slice columns.
     pub fn program(w: &Mat, w_bits: u32) -> Crossbar {
-        assert!(w.rows <= 128, "one crossbar has at most 128 wordlines");
         let mut cells = Vec::with_capacity(w.cols * w_bits as usize);
         for lc in 0..w.cols {
             let col = w.col(lc);
             for i in 0..w_bits {
-                cells.push(pack_bits(&weight_bitslice(&col, i, w_bits)));
+                cells.push(PackedBits::from_bitslice(&col, i, w_bits));
             }
         }
         Crossbar { rows: w.rows, cols: cells.len(), cells }
@@ -51,15 +52,16 @@ impl Crossbar {
     /// Program raw physical bits directly (for tests / tiling).
     pub fn from_bits(raw: Vec<Vec<u8>>) -> Crossbar {
         let rows = raw.first().map(|c| c.len()).unwrap_or(0);
-        assert!(rows <= 128, "one crossbar has at most 128 wordlines");
         assert!(raw.iter().all(|c| c.len() == rows), "ragged columns");
-        let cells: Vec<u128> = raw.iter().map(|c| pack_bits(c)).collect();
+        let cells: Vec<PackedBits> = raw.iter().map(|c| PackedBits::from_bits(c)).collect();
         Crossbar { rows, cols: cells.len(), cells }
     }
 
     /// One analog evaluation for input bit-plane `j` of activation codes
     /// `x`: returns the per-column popcount partial sums and books the
-    /// energy/latency of one crossbar cycle.
+    /// energy/latency of one crossbar cycle. Packs the plane on the fly;
+    /// callers issuing many streams should pack once into a scratch and
+    /// use [`Crossbar::evaluate_plane`].
     pub fn evaluate_stream(
         &self,
         x: &[i64],
@@ -68,7 +70,18 @@ impl Crossbar {
         ledger: &mut CostLedger,
     ) -> Vec<i64> {
         assert_eq!(x.len(), self.rows, "input length != crossbar rows");
-        let plane = pack_bits(&input_bitplane(x, j));
+        self.evaluate_plane(&PackedBits::from_bitplane(x, j), params, ledger)
+    }
+
+    /// [`Crossbar::evaluate_stream`] over an already-packed input plane
+    /// (the amortized per-stream path of [`crate::sim::tile::HcimTile`]).
+    pub fn evaluate_plane(
+        &self,
+        plane: &PackedBits,
+        params: &CalibParams,
+        ledger: &mut CostLedger,
+    ) -> Vec<i64> {
+        assert_eq!(plane.len(), self.rows, "plane length != crossbar rows");
         let active_rows = plane.count_ones() as usize;
         // wordline drivers fire only for set input bits
         ledger.add_energy_n(
@@ -83,36 +96,25 @@ impl Crossbar {
             self.cols as u64,
         );
         ledger.add_latency(params.xbar_cycle_ns);
-        self.cells
-            .iter()
-            .map(|col| (col & plane).count_ones() as i64)
-            .collect()
+        self.cells.iter().map(|col| col.dot(plane)).collect()
     }
 
     /// Pure functional evaluation (no cost booking) — used by oracles.
     pub fn evaluate_stream_pure(&self, x: &[i64], j: u32) -> Vec<i64> {
-        let plane = pack_bits(&input_bitplane(x, j));
-        self.cells
-            .iter()
-            .map(|col| (col & plane).count_ones() as i64)
-            .collect()
+        assert_eq!(x.len(), self.rows, "input length != crossbar rows");
+        self.evaluate_plane_pure(&PackedBits::from_bitplane(x, j))
+    }
+
+    /// Pure functional evaluation over a packed plane (no cost booking).
+    pub fn evaluate_plane_pure(&self, plane: &PackedBits) -> Vec<i64> {
+        assert_eq!(plane.len(), self.rows, "plane length != crossbar rows");
+        self.cells.iter().map(|col| col.dot(plane)).collect()
     }
 
     /// Crossbar silicon area.
     pub fn area_mm2(&self, params: &CalibParams) -> f64 {
         (self.rows * self.cols) as f64 * params.xbar_cell_area_mm2
     }
-}
-
-/// Pack a 0/1 byte vector into a `u128` mask (bit i = element i).
-#[inline]
-fn pack_bits(bits: &[u8]) -> u128 {
-    debug_assert!(bits.len() <= 128);
-    let mut m = 0u128;
-    for (i, &b) in bits.iter().enumerate() {
-        m |= (b as u128 & 1) << i;
-    }
-    m
 }
 
 #[cfg(test)]
@@ -156,6 +158,48 @@ mod tests {
             }
             assert_eq!(y, bitwise_mvm(&w, &x, w_bits, x_bits));
         });
+    }
+
+    #[test]
+    fn multiword_tiles_beyond_128_wordlines() {
+        // the former u128 representation asserted rows ≤ 128; the packed
+        // multi-word type must price arbitrarily tall tiles exactly
+        for rows in [129usize, 200, 300] {
+            let w = Mat::from_fn(rows, 2, |r, c| ((r * 3 + c) as i64 % 15) - 7);
+            let x: Vec<i64> = (0..rows as i64).map(|i| (i * 5) % 8).collect();
+            let xb = Crossbar::program(&w, 4);
+            assert_eq!(xb.rows, rows);
+            let mut y = vec![0i64; 2];
+            for j in 0..3u32 {
+                let ps = xb.evaluate_stream_pure(&x, j);
+                for lc in 0..2 {
+                    for i in 0..4usize {
+                        let sw = crate::quant::bits::slice_weight(i as u32, 4);
+                        y[lc] += sw * (1i64 << j) * ps[lc * 4 + i];
+                    }
+                }
+            }
+            assert_eq!(y, bitwise_mvm(&w, &x, 4, 3), "rows = {rows}");
+        }
+    }
+
+    #[test]
+    fn evaluate_plane_matches_evaluate_stream() {
+        let w = Mat::from_fn(70, 3, |r, c| ((r + 2 * c) as i64 % 15) - 7);
+        let xb = Crossbar::program(&w, 4);
+        let params = CalibParams::at_65nm();
+        let x: Vec<i64> = (0..70).map(|i| i % 16).collect();
+        for j in 0..4u32 {
+            let mut l1 = CostLedger::new();
+            let mut l2 = CostLedger::new();
+            let plane = crate::quant::bits::PackedBits::from_bitplane(&x, j);
+            assert_eq!(
+                xb.evaluate_stream(&x, j, &params, &mut l1),
+                xb.evaluate_plane(&plane, &params, &mut l2)
+            );
+            assert_eq!(l1.total_energy_pj(), l2.total_energy_pj());
+            assert_eq!(xb.evaluate_stream_pure(&x, j), xb.evaluate_plane_pure(&plane));
+        }
     }
 
     #[test]

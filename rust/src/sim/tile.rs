@@ -13,7 +13,7 @@
 //! and the equivalence tests).
 
 use crate::config::hardware::HcimConfig;
-use crate::quant::bits::Mat;
+use crate::quant::bits::{Mat, PackedBits};
 use crate::quant::encode::PCode;
 use crate::quant::psq::{PsqLayerParams, SparsityStats};
 use crate::sim::components::comparator::ComparatorBank;
@@ -167,6 +167,9 @@ pub struct HcimTile {
     crossbar: Crossbar,
     bank: ComparatorBank,
     dcim: DcimArray,
+    /// Input bit-plane scratch: packed once per stream, shared by every
+    /// column evaluation of that stream (EXPERIMENTS.md §Perf).
+    plane: PackedBits,
 }
 
 impl HcimTile {
@@ -186,7 +189,8 @@ impl HcimTile {
             let row = &psq.scales[j * phys_cols..(j + 1) * phys_cols];
             dcim.load_scales(j, row);
         }
-        HcimTile { cfg: cfg.clone(), crossbar, bank, dcim }
+        let plane = PackedBits::zeros(w.rows);
+        HcimTile { cfg: cfg.clone(), crossbar, bank, dcim, plane }
     }
 
     /// Execute one full MVM (all bit-streams) bit-exactly, booking costs.
@@ -194,7 +198,8 @@ impl HcimTile {
     pub fn mvm(&mut self, x: &[i64], params: &CalibParams, ledger: &mut CostLedger) -> Vec<i64> {
         self.dcim.clear_ps();
         for j in 0..self.cfg.x_bits {
-            let raw = self.crossbar.evaluate_stream(x, j, params, ledger);
+            self.plane.pack_bitplane(x, j);
+            let raw = self.crossbar.evaluate_plane(&self.plane, params, ledger);
             let codes: Vec<PCode> = self.bank.compare(&raw, params, ledger);
             self.dcim.accumulate(j as usize, &codes, params, ledger);
         }
@@ -211,7 +216,8 @@ impl HcimTile {
     pub fn probe_sparsity(&mut self, x: &[i64]) -> SparsityStats {
         let mut stats = SparsityStats::default();
         for j in 0..self.cfg.x_bits {
-            let raw = self.crossbar.evaluate_stream_pure(x, j);
+            self.plane.pack_bitplane(x, j);
+            let raw = self.crossbar.evaluate_plane_pure(&self.plane);
             let ps: Vec<i8> = self.bank.compare_pure(&raw).iter().map(|c| c.decode()).collect();
             stats.merge(&SparsityStats::from_codes(&ps));
         }

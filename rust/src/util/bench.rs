@@ -4,8 +4,11 @@
 //! Each benchmark warms up, then runs timed batches until a wall-clock
 //! budget is exhausted, and reports mean / p50 / p90 per-iteration times.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 use super::table::{fnum, Table};
 
@@ -51,8 +54,10 @@ impl Bencher {
     }
 
     /// Fast settings for CI-ish runs (set `HCIM_BENCH_FAST=1`).
+    /// `HCIM_BENCH_FAST=0` (or empty) keeps the full-budget defaults —
+    /// only a non-empty, non-`"0"` value enables fast mode.
     pub fn from_env() -> Bencher {
-        if std::env::var("HCIM_BENCH_FAST").is_ok() {
+        if fast_mode_enabled(std::env::var("HCIM_BENCH_FAST").ok().as_deref()) {
             Bencher::new(Duration::from_millis(30), Duration::from_millis(150))
         } else {
             Bencher::default()
@@ -118,6 +123,43 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// All collected results as JSON: `{"benchmarks": [{name, iters,
+    /// mean_ns, p50_ns, p90_ns, throughput_per_s}, ...]}` — the schema of
+    /// the `BENCH_hotpath.json` perf-trajectory artifact.
+    pub fn to_json(&self) -> Json {
+        let arr = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(r.name.clone()));
+                o.insert("iters".into(), Json::Num(r.iters as f64));
+                o.insert("mean_ns".into(), Json::Num(r.mean_ns));
+                o.insert("p50_ns".into(), Json::Num(r.p50_ns));
+                o.insert("p90_ns".into(), Json::Num(r.p90_ns));
+                o.insert("throughput_per_s".into(), Json::Num(r.throughput_per_s));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("benchmarks".into(), Json::Arr(arr));
+        Json::Obj(top)
+    }
+
+    /// Write the JSON report to `path` (trailing newline included so the
+    /// artifact diffs cleanly when checked in).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+}
+
+/// `HCIM_BENCH_FAST` semantics: unset, empty, and the usual falsy
+/// spellings (`0`, `false`, `no`, `off`, any case) are OFF; any other
+/// value is ON. (A plain `is_ok()` check would treat `=0` as enabled.)
+fn fast_mode_enabled(value: Option<&str>) -> bool {
+    let Some(v) = value else { return false };
+    !v.is_empty() && !matches!(v.to_ascii_lowercase().as_str(), "0" | "false" | "no" | "off")
 }
 
 /// Human-readable nanoseconds.
@@ -160,5 +202,58 @@ mod tests {
     fn black_box_returns_value() {
         assert_eq!(black_box(42), 42);
         assert_eq!(black_box(String::from("x")), "x");
+    }
+
+    #[test]
+    fn fast_mode_env_semantics() {
+        // the regression: `HCIM_BENCH_FAST=0` must NOT enable fast mode,
+        // and neither must the other common falsy spellings
+        assert!(!fast_mode_enabled(None));
+        assert!(!fast_mode_enabled(Some("")));
+        assert!(!fast_mode_enabled(Some("0")));
+        assert!(!fast_mode_enabled(Some("false")));
+        assert!(!fast_mode_enabled(Some("FALSE")));
+        assert!(!fast_mode_enabled(Some("no")));
+        assert!(!fast_mode_enabled(Some("off")));
+        assert!(fast_mode_enabled(Some("1")));
+        assert!(fast_mode_enabled(Some("true")));
+        assert!(fast_mode_enabled(Some("yes")));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut b = Bencher::new(Duration::from_millis(2), Duration::from_millis(8));
+        b.bench("alpha", || {
+            black_box(3u64 * 7);
+        });
+        b.bench("beta", || {
+            black_box(1u64 + 1);
+        });
+        let j = Json::parse(&b.to_json().to_string()).expect("self-emitted JSON must parse");
+        let benches = j.get("benchmarks").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].str_field("name").unwrap(), "alpha");
+        assert_eq!(benches[1].str_field("name").unwrap(), "beta");
+        for e in benches {
+            assert!(e.num_field("iters").unwrap() > 0.0);
+            assert!(e.num_field("mean_ns").unwrap() >= 0.0);
+            assert!(e.num_field("p50_ns").unwrap() >= 0.0);
+            assert!(e.num_field("p90_ns").unwrap() >= 0.0);
+            assert!(e.num_field("throughput_per_s").unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_report_writes_to_disk() {
+        let mut b = Bencher::new(Duration::from_millis(2), Duration::from_millis(8));
+        b.bench("gamma", || {
+            black_box(2u64 << 3);
+        });
+        let path = std::env::temp_dir().join("hcim_bench_json_test.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.ends_with('\n'));
+        assert!(Json::parse(body.trim_end()).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,150 @@
+//! Packed ⇄ scalar equivalence — the bit-exactness guard of the packed
+//! bit-plane PSQ engine rewrite.
+//!
+//! The scalar byte-per-bit implementations (`bit_dot`, `psq_mvm_scalar`,
+//! `psq_mvm_nonideal_scalar`, `run_trial_scalar`) are kept in-tree
+//! verbatim; these tests assert the packed hot paths reproduce them
+//! bit-for-bit — including `f64` analog summation order — across row
+//! counts straddling the 64-bit word boundaries, every `w_bits`/`x_bits`
+//! in 1..8, binary and ternary PSQ, and identity plus non-trivial
+//! perturbations. Because the oracles are the pre-rewrite code, packed ==
+//! scalar here implies the `hcim robustness` tables/JSON are byte-identical
+//! before and after the rewrite for any fixed seed.
+
+use hcim::config::hardware::HcimConfig;
+use hcim::model::zoo;
+use hcim::nonideal::{
+    psq_mvm_nonideal, psq_mvm_nonideal_scalar, run_monte_carlo, run_trial, run_trial_scalar,
+    CrossbarPerturbation, MonteCarloCfg, NonIdealityParams,
+};
+use hcim::quant::bits::{bit_dot, Mat, PackedBits};
+use hcim::quant::psq::{psq_mvm, psq_mvm_scalar, PsqLayerParams, PsqMode};
+use hcim::sim::tech::TechNode;
+use hcim::util::prop::{check, Gen};
+use hcim::util::rng::Rng;
+
+/// Row counts that straddle the packed word boundaries.
+const BOUNDARY_ROWS: &[usize] = &[1, 63, 64, 65, 127, 128, 129, 192, 256, 257, 300];
+
+#[test]
+fn packed_dot_matches_scalar_across_boundary_lengths() {
+    for &n in BOUNDARY_ROWS {
+        let a: Vec<u8> = (0..n).map(|i| ((i * 13 + 1) % 7 < 3) as u8).collect();
+        let b: Vec<u8> = (0..n).map(|i| ((i * 5 + 2) % 3 == 0) as u8).collect();
+        assert_eq!(
+            PackedBits::from_bits(&a).dot(&PackedBits::from_bits(&b)),
+            bit_dot(&a, &b),
+            "dot kernel diverges at {n} rows"
+        );
+    }
+}
+
+#[test]
+fn psq_mvm_matches_scalar_for_all_precisions() {
+    // every (w_bits, x_bits) in 1..8, both modes, boundary-adjacent rows
+    for w_bits in 1..=8u32 {
+        for x_bits in 1..=8u32 {
+            for (mode, tag) in [
+                (PsqMode::Binary, "binary"),
+                (PsqMode::Ternary { alpha: 1.0 }, "ternary"),
+            ] {
+                let rows = 60 + (w_bits as usize * 31 + x_bits as usize * 7) % 120;
+                let lo = -(1i64 << (w_bits - 1));
+                let hi = (1i64 << (w_bits - 1)) - 1;
+                let mut rng = Rng::new(((w_bits as u64) << 8) | x_bits as u64);
+                let w = Mat::from_fn(rows, 2, |_, _| rng.range_i64(lo, hi));
+                let params =
+                    PsqLayerParams::calibrated(&w, mode, w_bits, x_bits, 8, &mut rng);
+                let x: Vec<i64> =
+                    (0..rows).map(|_| rng.range_i64(0, (1i64 << x_bits) - 1)).collect();
+                let packed = psq_mvm(&w, &x, &params);
+                let scalar = psq_mvm_scalar(&w, &x, &params);
+                let ctx = format!("{tag} w{w_bits} x{x_bits} rows {rows}");
+                assert_eq!(packed.ps, scalar.ps, "{ctx}: PS");
+                assert_eq!(packed.p, scalar.p, "{ctx}: codes");
+                assert_eq!(packed.raw, scalar.raw, "{ctx}: raw popcounts");
+            }
+        }
+    }
+}
+
+#[test]
+fn nonideal_matches_scalar_for_all_precisions_and_perturbations() {
+    check("nonideal packed == scalar across shapes", 60, |g: &mut Gen| {
+        let rows = *g.choose(BOUNDARY_ROWS);
+        let cols = g.usize(1, 3);
+        let w_bits = g.usize(1, 8) as u32;
+        let x_bits = g.usize(1, 8) as u32;
+        let mode = if g.bool(0.5) {
+            PsqMode::Binary
+        } else {
+            PsqMode::Ternary { alpha: g.f64(0.0, 3.0) }
+        };
+        let lo = -(1i64 << (w_bits - 1));
+        let hi = (1i64 << (w_bits - 1)) - 1;
+        let w = Mat { rows, cols, data: g.vec_i64(rows * cols, lo, hi) };
+        let x = g.vec_i64(rows, 0, (1i64 << x_bits) - 1);
+        let mut rng = Rng::new(g.seed ^ 0xBEEF);
+        let params = PsqLayerParams::calibrated(&w, mode, w_bits, x_bits, 8, &mut rng);
+        let perts = [
+            CrossbarPerturbation::identity(rows, cols * w_bits as usize),
+            CrossbarPerturbation::sample(
+                rows,
+                cols * w_bits as usize,
+                &NonIdealityParams {
+                    sigma_g: 0.3,
+                    stuck_on: 0.03,
+                    stuck_off: 0.03,
+                    ir_drop: 0.15,
+                    sigma_cmp: 1.0,
+                },
+                &mut rng,
+            ),
+        ];
+        for pert in &perts {
+            let packed = psq_mvm_nonideal(&w, &x, &params, pert);
+            let scalar = psq_mvm_nonideal_scalar(&w, &x, &params, pert);
+            assert_eq!(packed.p, scalar.p, "codes diverge at {rows} rows");
+            assert_eq!(packed.ps, scalar.ps, "PS diverges at {rows} rows");
+            // f64 equality on purpose: summation order must be preserved
+            assert_eq!(packed.analog, scalar.analog, "analog sums diverge at {rows} rows");
+        }
+    });
+}
+
+#[test]
+fn full_geometry_trials_match_scalar_oracle() {
+    // the `hcim robustness` default geometry (config A, 128×128) plus the
+    // binary variant, several seeds each
+    let g = zoo::resnet20();
+    for cfg in [HcimConfig::config_a(), HcimConfig::config_a().binary()] {
+        let ni = NonIdealityParams::default_for(cfg.node);
+        for seed in [0u64, 42, 0xC0FFEE] {
+            assert_eq!(
+                run_trial(&g, &cfg, &ni, seed),
+                run_trial_scalar(&g, &cfg, &ni, seed),
+                "trial diverges (mode {}, seed {seed})",
+                cfg.mode.precision_label()
+            );
+        }
+    }
+}
+
+#[test]
+fn monte_carlo_reports_stay_byte_identical_across_worker_counts() {
+    // regression for the rewrite: the packed engines must not disturb the
+    // worker-count invariance of the aggregated artifacts
+    let g = zoo::vgg9();
+    let cfg = HcimConfig::config_a();
+    let ni = NonIdealityParams::default_for(TechNode::N32);
+    let reports: Vec<String> = [1usize, 2, 8]
+        .iter()
+        .map(|&workers| {
+            run_monte_carlo(&g, &cfg, &ni, &MonteCarloCfg { trials: 8, seed: 1234, workers })
+                .to_json()
+                .to_string()
+        })
+        .collect();
+    assert_eq!(reports[0], reports[1], "1 vs 2 workers");
+    assert_eq!(reports[0], reports[2], "1 vs 8 workers");
+}
