@@ -67,7 +67,7 @@ fn main() -> hcim::Result<()> {
     for img in &images {
         server.submit(img.clone());
     }
-    let responses = server.collect(requests);
+    let responses = server.collect_timeout(requests, Duration::from_secs(120))?;
     let metrics = server.shutdown();
     let mut class_hist = vec![0usize; m.classes];
     for r in &responses {
@@ -93,7 +93,7 @@ fn main() -> hcim::Result<()> {
         let gap = -2000.0 * (1.0 - arrival_rng.f64()).ln();
         std::thread::sleep(Duration::from_micros(gap as u64));
     }
-    let _ = server.collect(requests);
+    let _ = server.collect_timeout(requests, Duration::from_secs(120))?;
     let metrics = server.shutdown();
     println!("{}", metrics.snapshot());
     Ok(())

@@ -129,11 +129,12 @@ fn main() {
             std::time::Duration::from_micros(1),
         );
         for i in 0..64 {
-            batcher.submit(hcim::coordinator::batcher::Request {
+            let ok = batcher.submit(hcim::coordinator::batcher::Request {
                 id: i,
                 image: vec![0.0; 16],
                 enqueued: std::time::Instant::now(),
             });
+            assert!(ok);
         }
         batcher.close();
         while let Some(batch) = batcher.next_batch() {

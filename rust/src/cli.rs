@@ -99,6 +99,21 @@ COMMANDS:
   serve       batched inference over the AOT artifacts
                 --artifacts DIR  --requests N  --max-batch N  --workers N
                 --seed S         master seed for the synthetic request stream
+              multi-tenant (chip-sharded) mode:
+                --models resnet20,vgg9[,...]   comma-separated zoo tenants;
+                                 `model:weight` biases the tile split and the
+                                 round-robin dispatch (default weight 1)
+                --tiles N        chip crossbar-tile budget partitioned across
+                                 tenants (each floored at its largest layer)
+                --requests N     open-loop arrivals per tenant (default 64)
+                --gap-us F       mean exponential inter-arrival gap (default 500)
+                --queue-cap N    per-tenant admission bound (default 32)
+                --format table|json   json prints ONLY the seed-deterministic
+                                 metrics (byte-identical across runs/pool sizes)
+                --out FILE       also write the full report (incl. wall-clock)
+              admission, virtual latencies, and energy attribution are
+              deterministic from --seed; real execution on the shared pool
+              additionally runs when --artifacts has a manifest
   tables      print every paper table/figure reproduction
                 --artifacts DIR
   dse         parallel design-space exploration with Pareto extraction

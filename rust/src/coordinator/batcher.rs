@@ -39,12 +39,18 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a request.
-    pub fn submit(&self, req: Request) {
+    /// Enqueue a request. Returns `false` (dropping the request) once the
+    /// batcher is closed — a racing producer must not abort the whole
+    /// serving process just because shutdown won.
+    #[must_use = "a closed batcher drops the request"]
+    pub fn submit(&self, req: Request) -> bool {
         let mut g = self.inner.lock().unwrap();
-        assert!(!g.closed, "batcher already closed");
+        if g.closed {
+            return false;
+        }
         g.queue.push_back(req);
         self.notify.notify_one();
+        true
     }
 
     /// Close the queue: workers drain what's left, then get `None`.
@@ -61,7 +67,8 @@ impl Batcher {
     /// Block until a batch is available. Returns a full batch as soon as
     /// `max_batch` requests are queued, a partial batch once `window`
     /// elapses from the first waiting request, or `None` when closed and
-    /// drained.
+    /// drained. After `close()` the window timer no longer applies: any
+    /// remainder is flushed immediately (shutdown must not wait).
     pub fn next_batch(&self) -> Option<Vec<Request>> {
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -69,20 +76,26 @@ impl Batcher {
                 return Some(self.drain(&mut g));
             }
             if !g.queue.is_empty() {
+                if g.closed {
+                    // shutdown: flush the remainder immediately — close()
+                    // drains exactly the queue, never the window timer
+                    return Some(self.drain(&mut g));
+                }
                 // wait out the rest of the window of the OLDEST request
                 let oldest = g.queue.front().unwrap().enqueued;
                 let elapsed = oldest.elapsed();
                 if elapsed >= self.window {
                     return Some(self.drain(&mut g));
                 }
-                let (g2, timeout) = self
+                // re-evaluate from the top after any wakeup: another
+                // consumer may have drained the request whose window we
+                // were waiting out, and a younger request must get its own
+                // full window rather than being flushed on our stale timer
+                let (g2, _) = self
                     .notify
                     .wait_timeout(g, self.window - elapsed)
                     .unwrap();
                 g = g2;
-                if timeout.timed_out() && !g.queue.is_empty() {
-                    return Some(self.drain(&mut g));
-                }
                 continue;
             }
             if g.closed {
@@ -111,7 +124,7 @@ mod tests {
     fn full_batch_returned_immediately() {
         let b = Batcher::new(4, Duration::from_secs(10));
         for i in 0..4 {
-            b.submit(req(i));
+            assert!(b.submit(req(i)));
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 4);
@@ -121,7 +134,7 @@ mod tests {
     #[test]
     fn window_flushes_partial_batch() {
         let b = Batcher::new(64, Duration::from_millis(30));
-        b.submit(req(1));
+        assert!(b.submit(req(1)));
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
@@ -131,8 +144,8 @@ mod tests {
     #[test]
     fn close_drains_then_none() {
         let b = Batcher::new(4, Duration::from_millis(5));
-        b.submit(req(1));
-        b.submit(req(2));
+        assert!(b.submit(req(1)));
+        assert!(b.submit(req(2)));
         b.close();
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
@@ -146,7 +159,7 @@ mod tests {
             let b = Arc::clone(&b);
             handles.push(std::thread::spawn(move || {
                 for i in 0..25 {
-                    b.submit(req(t * 100 + i));
+                    assert!(b.submit(req(t * 100 + i)));
                 }
             }));
         }
@@ -166,7 +179,17 @@ mod tests {
     fn depth_reports_queue() {
         let b = Batcher::new(4, Duration::from_secs(1));
         assert_eq!(b.depth(), 0);
-        b.submit(req(1));
+        assert!(b.submit(req(1)));
         assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected_not_a_panic() {
+        let b = Batcher::new(4, Duration::from_millis(5));
+        assert!(b.submit(req(1)));
+        b.close();
+        assert!(!b.submit(req(2)), "closed batcher must drop the request");
+        assert_eq!(b.next_batch().unwrap().len(), 1, "pre-close request still drains");
+        assert!(b.next_batch().is_none());
     }
 }

@@ -1,9 +1,11 @@
 //! Serving metrics: request latencies, batch occupancy, throughput, and
 //! the co-simulated hardware cost per inference.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Aggregated serving metrics (thread-safe).
@@ -89,6 +91,36 @@ impl Metrics {
     }
 }
 
+impl Snapshot {
+    /// Wall-clock JSON (the `"wall"` section of the multi-tenant serving
+    /// report). These numbers vary run to run — they are deliberately NOT
+    /// part of the seed-deterministic report section.
+    pub fn to_json(&self) -> Json {
+        let mut lat = BTreeMap::new();
+        lat.insert("mean".to_string(), Json::Num(self.latency_us.mean));
+        lat.insert("p50".to_string(), Json::Num(self.latency_us.p50));
+        lat.insert("p90".to_string(), Json::Num(self.latency_us.p90));
+        lat.insert("p99".to_string(), Json::Num(self.latency_us.p99));
+        lat.insert("max".to_string(), Json::Num(self.latency_us.max));
+        let mut o = BTreeMap::new();
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("batches".to_string(), Json::Num(self.batches as f64));
+        o.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
+        o.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        o.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps));
+        o.insert("latency_us".to_string(), Json::Obj(lat));
+        o.insert(
+            "sim_energy_uj_per_inf".to_string(),
+            Json::Num(self.sim_energy_uj_per_inf),
+        );
+        o.insert(
+            "sim_latency_us_per_inf".to_string(),
+            Json::Num(self.sim_latency_us_per_inf),
+        );
+        Json::Obj(o)
+    }
+}
+
 impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
@@ -136,5 +168,21 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.sim_energy_uj_per_inf, 0.0);
         let _ = s.to_string();
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let m = Metrics::new();
+        m.record_batch(
+            &[Duration::from_micros(100), Duration::from_micros(300)],
+            4_000_000.0,
+            8_000.0,
+        );
+        let j = m.snapshot().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.num_field("requests").unwrap(), 2.0);
+        assert_eq!(parsed.num_field("batches").unwrap(), 1.0);
+        assert!(parsed.get("latency_us").and_then(|l| l.get("p50")).is_some());
+        assert!(parsed.num_field("sim_energy_uj_per_inf").unwrap() > 0.0);
     }
 }

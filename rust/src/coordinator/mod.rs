@@ -6,9 +6,23 @@
 //! HCiM cost estimate from the simulator (functional result from XLA,
 //! energy/latency from the architecture model — the co-simulation split),
 //! and record [`metrics::Metrics`].
+//!
+//! Two serving shapes:
+//!
+//! * [`server::Server`] — single-tenant: one model, one batcher, a private
+//!   worker set.
+//! * [`scheduler::Scheduler`] — multi-tenant: the chip's crossbar-tile
+//!   budget is partitioned across N model tenants
+//!   ([`scheduler::ShardPlan`]), each with its own batcher/engine/metrics,
+//!   fed by the seed-deterministic open-loop [`loadgen`] and dispatched in
+//!   weighted round-robin onto a shared thread pool (`hcim serve
+//!   --models ... --tiles ...`).
 
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
+pub mod scheduler;
 pub mod server;
 
+pub use scheduler::{Scheduler, SchedulerCfg, ServeReport, ShardPlan, TenantSpec};
 pub use server::{Server, ServerConfig};

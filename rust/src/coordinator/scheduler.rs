@@ -1,0 +1,963 @@
+//! Multi-tenant chip-sharded serving scheduler.
+//!
+//! HCiM's periphery savings buy *tiles*: the ADC-less PSQ columns and the
+//! digital CiM scale-factor array free area that a conventional design
+//! spends on converters, so one chip holds more crossbars than a single
+//! CIFAR model needs. This module spends that budget across N concurrent
+//! model tenants:
+//!
+//! * [`ShardPlan::partition`] splits a chip's crossbar-tile budget across
+//!   tenants — every tenant gets at least its largest layer
+//!   ([`ModelMapping::peak_layer_crossbars`], the smallest shard that can
+//!   hold any layer resident), and the remaining tiles are dealt out
+//!   proportionally to *weighted residency headroom* (weight × tiles still
+//!   missing toward full weight-stationary residency).
+//! * A shard smaller than the model's full demand time-multiplexes layers
+//!   onto its tiles (weight reprogramming), inflating per-inference service
+//!   time by `demand/shard` — the contention knob the
+//!   `serving_contention_sweep` experiment tables.
+//! * [`Scheduler::plan_admissions`] runs the open-loop arrival sequence
+//!   from [`super::loadgen`] through a **deterministic virtual-time queue**
+//!   per tenant: bounded queue (admission control / backpressure), FIFO
+//!   service at the shard's inflated service time. Admission decisions,
+//!   virtual latencies, and the per-tenant metrics JSON depend only on the
+//!   seed — never on wall-clock or thread interleaving.
+//! * [`Scheduler::execute`] then replays the admitted requests for real:
+//!   per-tenant [`Batcher`]s drained in weighted round-robin order onto a
+//!   shared [`ThreadPool`], each batch executed on the tenant's
+//!   [`Engine`], wall-clock latencies recorded in per-tenant
+//!   [`Metrics`]. Wall-clock numbers live in a separate `"wall"` section
+//!   of the report, excluded from determinism comparisons.
+//!
+//! Per-request energy attribution follows the existing `hw_estimate`
+//! co-simulation path: one [`Simulator`] run per tenant prices an
+//! inference (its [`crate::sim::energy::CostLedger`] total), and the
+//! report multiplies by admitted request counts.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::hardware::HcimConfig;
+use crate::model::zoo;
+use crate::runtime::Engine;
+use crate::sim::mapping::ModelMapping;
+use crate::sim::simulator::{Arch, Simulator};
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+use crate::util::table::Table;
+use crate::util::threadpool::ThreadPool;
+
+use super::batcher::{Batcher, Request};
+use super::loadgen::{self, Arrival};
+use super::metrics::{Metrics, Snapshot};
+
+/// One requested tenant: a zoo model plus a scheduling weight.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub model: String,
+    /// Round-robin weight (1..=[`MAX_TENANT_WEIGHT`]); also biases the
+    /// tile split.
+    pub weight: u32,
+}
+
+/// Upper bound on a tenant's scheduling weight. The weighted round-robin
+/// schedule materializes `Σ weight` slots per cycle, so an unbounded
+/// CLI-supplied weight would translate directly into memory.
+pub const MAX_TENANT_WEIGHT: u32 = 64;
+
+impl TenantSpec {
+    /// Parse `model` or `model:weight` (e.g. `resnet20:2`).
+    pub fn parse(s: &str) -> crate::Result<TenantSpec> {
+        let (model, weight) = match s.split_once(':') {
+            Some((m, w)) => {
+                let w: u32 = w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad tenant weight in `{s}`"))?;
+                (m, w)
+            }
+            None => (s, 1),
+        };
+        anyhow::ensure!(!model.is_empty(), "empty tenant model in `{s}`");
+        anyhow::ensure!(
+            (1..=MAX_TENANT_WEIGHT).contains(&weight),
+            "tenant weight must be in 1..={MAX_TENANT_WEIGHT} in `{s}`"
+        );
+        Ok(TenantSpec { model: model.to_string(), weight })
+    }
+}
+
+/// One tenant's slice of the chip.
+#[derive(Clone, Debug)]
+pub struct ShardAssignment {
+    pub model: String,
+    pub weight: u32,
+    /// Crossbar tiles for full weight-stationary residency
+    /// ([`ModelMapping::total_crossbars`]).
+    pub demand_tiles: usize,
+    /// Largest single layer — the minimum viable shard.
+    pub peak_tiles: usize,
+    /// Tiles actually granted.
+    pub shard_tiles: usize,
+}
+
+impl ShardAssignment {
+    /// Service-time inflation from time-multiplexing layers onto a shard
+    /// smaller than full residency (extra tiles beyond demand sit idle).
+    pub fn inflation(&self) -> f64 {
+        if self.shard_tiles == 0 {
+            return 1.0;
+        }
+        (self.demand_tiles as f64 / self.shard_tiles as f64).max(1.0)
+    }
+}
+
+/// The chip partition: tile budget and per-tenant grants.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub budget_tiles: usize,
+    pub assignments: Vec<ShardAssignment>,
+}
+
+impl ShardPlan {
+    /// Resolve each spec against the zoo and the mapper: tile demand
+    /// (full residency), peak (largest layer), zero grant. The single
+    /// home of the spec→tiles derivation — `partition` and [`Self::bounds`]
+    /// both build on it so the floor rule cannot diverge.
+    fn survey(specs: &[TenantSpec], cfg: &HcimConfig) -> crate::Result<Vec<ShardAssignment>> {
+        anyhow::ensure!(!specs.is_empty(), "no tenant models given");
+        let mut assignments = Vec::with_capacity(specs.len());
+        for s in specs {
+            let graph = zoo::by_name(&s.model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model `{}` (see `hcim help`)", s.model))?;
+            let mapping = ModelMapping::build(&graph, cfg);
+            assignments.push(ShardAssignment {
+                model: s.model.clone(),
+                weight: s.weight.max(1),
+                demand_tiles: mapping.total_crossbars(),
+                peak_tiles: mapping.peak_layer_crossbars(),
+                shard_tiles: 0,
+            });
+        }
+        Ok(assignments)
+    }
+
+    /// `(floor, full)` tile bounds of a tenant mix: the minimum viable
+    /// budget (Σ largest layers) and the full weight-stationary demand
+    /// (Σ total crossbars).
+    pub fn bounds(specs: &[TenantSpec], cfg: &HcimConfig) -> crate::Result<(usize, usize)> {
+        let a = Self::survey(specs, cfg)?;
+        Ok((
+            a.iter().map(|x| x.peak_tiles).sum(),
+            a.iter().map(|x| x.demand_tiles).sum(),
+        ))
+    }
+
+    /// Partition `budget_tiles` across `specs` under hardware config `cfg`.
+    ///
+    /// Every tenant is floored at its largest layer's tile count; the rest
+    /// of the budget is dealt proportionally to `weight × residency
+    /// headroom` with a deterministic largest-remainder fallback, capped at
+    /// each tenant's full demand. The grant total never exceeds the budget.
+    pub fn partition(
+        specs: &[TenantSpec],
+        cfg: &HcimConfig,
+        budget_tiles: usize,
+    ) -> crate::Result<ShardPlan> {
+        let mut assignments = Self::survey(specs, cfg)?;
+        let floor: usize = assignments.iter().map(|a| a.peak_tiles).sum();
+        anyhow::ensure!(
+            budget_tiles >= floor,
+            "tile budget {budget_tiles} below the minimum {floor} \
+             (sum of each tenant's largest layer; a smaller shard cannot hold any layer resident)"
+        );
+        for a in &mut assignments {
+            a.shard_tiles = a.peak_tiles;
+        }
+        let mut slack = budget_tiles - floor;
+        while slack > 0 {
+            let total_score: u128 = assignments
+                .iter()
+                .map(|a| a.weight as u128 * a.demand_tiles.saturating_sub(a.shard_tiles) as u128)
+                .sum();
+            if total_score == 0 {
+                break; // every tenant fully resident; surplus tiles stay free
+            }
+            let mut given = 0usize;
+            for a in assignments.iter_mut() {
+                let head = a.demand_tiles.saturating_sub(a.shard_tiles);
+                if head == 0 {
+                    continue;
+                }
+                let score = a.weight as u128 * head as u128;
+                let grant = ((slack as u128 * score) / total_score) as usize;
+                let grant = grant.min(head).min(slack - given);
+                a.shard_tiles += grant;
+                given += grant;
+            }
+            if given == 0 {
+                // integer shares all rounded to zero: hand one tile to the
+                // largest weighted headroom (ties break to the lowest index)
+                let next = assignments
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| a.demand_tiles > a.shard_tiles)
+                    .max_by_key(|(i, a)| {
+                        (
+                            a.weight as u128 * (a.demand_tiles - a.shard_tiles) as u128,
+                            usize::MAX - i,
+                        )
+                    })
+                    .map(|(i, _)| i);
+                match next {
+                    Some(i) => {
+                        assignments[i].shard_tiles += 1;
+                        given = 1;
+                    }
+                    None => break,
+                }
+            }
+            slack -= given;
+        }
+        Ok(ShardPlan { budget_tiles, assignments })
+    }
+
+    /// Tiles actually granted (≤ `budget_tiles` by construction).
+    pub fn total_shard_tiles(&self) -> usize {
+        self.assignments.iter().map(|a| a.shard_tiles).sum()
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerCfg {
+    /// Per-tenant admission bound: queued + in-service requests beyond
+    /// this are rejected (backpressure when the shard is saturated).
+    pub queue_cap: usize,
+    /// Shared execution thread-pool size.
+    pub workers: usize,
+    /// Dynamic-batching bound per tenant (clamped to the engine's largest
+    /// exported executable when one is attached).
+    pub max_batch: usize,
+    pub batch_window: Duration,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            queue_cap: 32,
+            workers: 2,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Deterministic (virtual-time) per-tenant serving outcome.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    /// Per-request service time on this shard, virtual µs.
+    pub svc_us: u64,
+    pub queue_cap: usize,
+    /// Virtual end-to-end latency (queue wait + service) per admitted
+    /// request, arrival order.
+    pub virt_latencies_us: Vec<u64>,
+    /// Virtual completion time of the last admitted request.
+    pub makespan_us: u64,
+    /// Co-simulated cost of one inference (CostLedger totals).
+    pub energy_pj_per_inf: f64,
+    pub latency_ns_per_inf: f64,
+}
+
+/// One tenant: its shard, deterministic stats, and the real serving lane
+/// (batcher + engine + wall-clock metrics).
+pub struct Tenant {
+    pub assignment: ShardAssignment,
+    pub stats: TenantStats,
+    pub batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    pub engine: Option<Arc<Engine>>,
+}
+
+impl Tenant {
+    fn build(
+        assignment: ShardAssignment,
+        energy_pj: f64,
+        latency_ns: f64,
+        cfg: &SchedulerCfg,
+    ) -> Tenant {
+        let svc_us = ((latency_ns * assignment.inflation()) / 1000.0).ceil().max(1.0) as u64;
+        let stats = TenantStats {
+            svc_us,
+            queue_cap: cfg.queue_cap.max(1),
+            energy_pj_per_inf: energy_pj,
+            latency_ns_per_inf: latency_ns,
+            ..TenantStats::default()
+        };
+        Tenant {
+            assignment,
+            stats,
+            batcher: Arc::new(Batcher::new(cfg.max_batch.max(1), cfg.batch_window)),
+            metrics: Arc::new(Metrics::new()),
+            engine: None,
+        }
+    }
+}
+
+/// The multi-tenant scheduler.
+pub struct Scheduler {
+    pub cfg: SchedulerCfg,
+    pub seed: u64,
+    pub budget_tiles: usize,
+    pub tenants: Vec<Tenant>,
+}
+
+impl Scheduler {
+    /// Build from a shard plan, pricing each tenant's inference through the
+    /// co-simulation path (one [`Simulator`] run per tenant on `hw`).
+    pub fn new(plan: ShardPlan, hw: &HcimConfig, cfg: SchedulerCfg, seed: u64) -> Scheduler {
+        let sim = Simulator::new(hw.node);
+        let costs: Vec<(f64, f64)> = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                zoo::by_name(&a.model)
+                    .map(|g| {
+                        let r = sim.run(&g, &Arch::Hcim(hw.clone()));
+                        (r.energy_pj(), r.latency_ns())
+                    })
+                    .unwrap_or((0.0, 0.0))
+            })
+            .collect();
+        Scheduler::with_costs(plan, &costs, cfg, seed)
+    }
+
+    /// Build with per-inference `(energy_pj, latency_ns)` costs injected
+    /// directly — the hook the golden-file and unit tests use to keep
+    /// numbers hand-checkable.
+    pub fn with_costs(
+        plan: ShardPlan,
+        costs: &[(f64, f64)],
+        cfg: SchedulerCfg,
+        seed: u64,
+    ) -> Scheduler {
+        assert_eq!(plan.assignments.len(), costs.len(), "one cost pair per tenant");
+        let budget_tiles = plan.budget_tiles;
+        let tenants = plan
+            .assignments
+            .into_iter()
+            .zip(costs)
+            .map(|(a, &(e_pj, l_ns))| Tenant::build(a, e_pj, l_ns, &cfg))
+            .collect();
+        Scheduler { cfg, seed, budget_tiles, tenants }
+    }
+
+    /// Attach a loaded engine to tenant `i`, rebuilding its batcher so the
+    /// batch bound respects the engine's largest exported executable.
+    pub fn attach_engine(&mut self, i: usize, engine: Arc<Engine>) {
+        let max_batch = self.cfg.max_batch.min(engine.manifest.max_batch()).max(1);
+        let t = &mut self.tenants[i];
+        t.batcher = Arc::new(Batcher::new(max_batch, self.cfg.batch_window));
+        t.engine = Some(engine);
+    }
+
+    /// Run the arrival sequence through each tenant's deterministic
+    /// virtual-time queue: bounded admission, FIFO service at the shard's
+    /// inflated service time. Fills [`TenantStats`] and returns the
+    /// admitted arrivals in arrival order.
+    ///
+    /// Everything here is a pure function of the arrivals and the plan —
+    /// no wall clock, no threads — which is what makes the metrics JSON
+    /// byte-identical across runs and pool sizes.
+    pub fn plan_admissions(&mut self, arrivals: &[Arrival]) -> Vec<Arrival> {
+        let n = self.tenants.len();
+        let mut inflight: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
+        let mut free_at: Vec<u64> = vec![0; n];
+        let mut admitted = Vec::with_capacity(arrivals.len());
+        for arr in arrivals {
+            assert!(arr.tenant < n, "arrival for unknown tenant {}", arr.tenant);
+            let t = &mut self.tenants[arr.tenant];
+            t.stats.offered += 1;
+            let q = &mut inflight[arr.tenant];
+            while q.front().is_some_and(|&done| done <= arr.t_us) {
+                q.pop_front();
+            }
+            if q.len() >= t.stats.queue_cap {
+                t.stats.rejected += 1;
+                continue;
+            }
+            let start = arr.t_us.max(free_at[arr.tenant]);
+            let done = start + t.stats.svc_us;
+            free_at[arr.tenant] = done;
+            q.push_back(done);
+            t.stats.admitted += 1;
+            t.stats.virt_latencies_us.push(done - arr.t_us);
+            t.stats.makespan_us = t.stats.makespan_us.max(done);
+            admitted.push(arr.clone());
+        }
+        admitted
+    }
+
+    /// Weighted round-robin tenant order: `max(weight)` interleaved rounds,
+    /// tenant `i` appearing in the first `weight_i` of them. Weights are
+    /// clamped to [`MAX_TENANT_WEIGHT`] so the materialized schedule stays
+    /// small even for hand-built assignments.
+    fn wrr_order(&self) -> Vec<usize> {
+        let w = |t: &Tenant| t.assignment.weight.clamp(1, MAX_TENANT_WEIGHT);
+        let max_w = self.tenants.iter().map(&w).max().unwrap_or(1);
+        let mut order = Vec::new();
+        for round in 0..max_w {
+            for (i, t) in self.tenants.iter().enumerate() {
+                if round < w(t) {
+                    order.push(i);
+                }
+            }
+        }
+        order
+    }
+
+    /// Execute the admitted requests for real: enqueue each into its
+    /// tenant's batcher, then drain batches in weighted round-robin order
+    /// onto the shared thread pool. Wall-clock latencies land in each
+    /// tenant's [`Metrics`] and measure **dispatch → completion** (pool
+    /// queueing + batch execution) — open-loop queue wait is the
+    /// virtual-time section's job. Returns the number of requests executed
+    /// (0 when no tenant has an engine attached — the virtual-only mode
+    /// used when `artifacts/` is absent).
+    pub fn execute(&mut self, admitted: &[Arrival]) -> crate::Result<usize> {
+        if self.tenants.iter().all(|t| t.engine.is_none()) {
+            return Ok(0);
+        }
+        for (k, arr) in admitted.iter().enumerate() {
+            let t = &self.tenants[arr.tenant];
+            let Some(engine) = &t.engine else { continue };
+            let elems = engine.manifest.input_elems();
+            let accepted = t.batcher.submit(Request {
+                id: k as u64,
+                image: loadgen::synth_image(arr.image_seed, elems),
+                enqueued: Instant::now(),
+            });
+            assert!(accepted, "tenant batcher closed before dispatch");
+        }
+        for t in &self.tenants {
+            t.batcher.close(); // drain without blocking below
+        }
+
+        let pool = ThreadPool::new(self.cfg.workers.max(1));
+        let (done_tx, done_rx) = channel::<crate::Result<usize>>();
+        let order = self.wrr_order();
+        let mut exhausted: Vec<bool> = self.tenants.iter().map(|t| t.engine.is_none()).collect();
+        let mut batches = 0usize;
+        let mut expected = 0usize;
+        while exhausted.iter().any(|&e| !e) {
+            for &i in &order {
+                if exhausted[i] {
+                    continue;
+                }
+                let t = &self.tenants[i];
+                match t.batcher.next_batch() {
+                    None => exhausted[i] = true,
+                    Some(mut batch) => {
+                        // wall latency measures dispatch → completion (pool
+                        // queueing + batch execution); the open-loop queue
+                        // wait is modeled by the virtual-time section, so
+                        // re-stamp here rather than reporting how long a
+                        // request sat in the replay backlog
+                        let dispatched = Instant::now();
+                        for r in &mut batch {
+                            r.enqueued = dispatched;
+                        }
+                        expected += batch.len();
+                        batches += 1;
+                        let engine = Arc::clone(t.engine.as_ref().expect("engine checked above"));
+                        let metrics = Arc::clone(&t.metrics);
+                        let per_inf = (t.stats.energy_pj_per_inf, t.stats.latency_ns_per_inf);
+                        let done_tx = done_tx.clone();
+                        pool.execute(move || {
+                            let n = batch.len();
+                            let elems = engine.manifest.input_elems();
+                            let mut flat = Vec::with_capacity(n * elems);
+                            for r in &batch {
+                                flat.extend_from_slice(&r.image);
+                            }
+                            let out = match engine.infer(&flat, n) {
+                                Ok(_logits) => {
+                                    let done = Instant::now();
+                                    let lats: Vec<Duration> =
+                                        batch.iter().map(|r| done - r.enqueued).collect();
+                                    metrics.record_batch(
+                                        &lats,
+                                        per_inf.0 * n as f64,
+                                        per_inf.1 * n as f64,
+                                    );
+                                    Ok(n)
+                                }
+                                Err(e) => Err(anyhow::anyhow!("batch of {n} failed: {e}")),
+                            };
+                            let _ = done_tx.send(out);
+                        });
+                    }
+                }
+            }
+        }
+        drop(done_tx);
+
+        let mut completed = 0usize;
+        for _ in 0..batches {
+            match done_rx.recv() {
+                Ok(Ok(n)) => completed += n,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => anyhow::bail!(
+                    "scheduler pool workers died after {completed} of {expected} requests"
+                ),
+            }
+        }
+        pool.wait_idle();
+        Ok(completed)
+    }
+
+    /// Build the per-tenant metrics report (deterministic section from
+    /// [`TenantStats`], wall section from each tenant's [`Metrics`]).
+    pub fn report(&self) -> ServeReport {
+        let tenants: Vec<TenantReport> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut lat: Vec<f64> =
+                    t.stats.virt_latencies_us.iter().map(|&x| x as f64).collect();
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let (mean, p50, p95, p99, max) = if lat.is_empty() {
+                    (0.0, 0.0, 0.0, 0.0, 0.0)
+                } else {
+                    (
+                        lat.iter().sum::<f64>() / lat.len() as f64,
+                        percentile_sorted(&lat, 50.0),
+                        percentile_sorted(&lat, 95.0),
+                        percentile_sorted(&lat, 99.0),
+                        lat[lat.len() - 1],
+                    )
+                };
+                let virt_throughput_rps = if t.stats.makespan_us > 0 {
+                    t.stats.admitted as f64 / (t.stats.makespan_us as f64 / 1e6)
+                } else {
+                    0.0
+                };
+                let energy_per_inf_uj = t.stats.energy_pj_per_inf / 1e6;
+                let wall = t.metrics.snapshot();
+                TenantReport {
+                    name: t.assignment.model.clone(),
+                    weight: t.assignment.weight,
+                    demand_tiles: t.assignment.demand_tiles,
+                    peak_tiles: t.assignment.peak_tiles,
+                    shard_tiles: t.assignment.shard_tiles,
+                    queue_cap: t.stats.queue_cap,
+                    svc_us: t.stats.svc_us,
+                    offered: t.stats.offered,
+                    admitted: t.stats.admitted,
+                    rejected: t.stats.rejected,
+                    makespan_us: t.stats.makespan_us,
+                    lat_mean_us: mean,
+                    lat_p50_us: p50,
+                    lat_p95_us: p95,
+                    lat_p99_us: p99,
+                    lat_max_us: max,
+                    virt_throughput_rps,
+                    energy_per_inf_uj,
+                    energy_total_uj: t.stats.admitted as f64 * energy_per_inf_uj,
+                    wall: if wall.requests > 0 { Some(wall) } else { None },
+                }
+            })
+            .collect();
+        ServeReport { schema: 1, seed: self.seed, budget_tiles: self.budget_tiles, tenants }
+    }
+}
+
+/// One tenant's row in the serving report.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub weight: u32,
+    pub demand_tiles: usize,
+    pub peak_tiles: usize,
+    pub shard_tiles: usize,
+    pub queue_cap: usize,
+    pub svc_us: u64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub makespan_us: u64,
+    pub lat_mean_us: f64,
+    pub lat_p50_us: f64,
+    pub lat_p95_us: f64,
+    pub lat_p99_us: f64,
+    pub lat_max_us: f64,
+    pub virt_throughput_rps: f64,
+    pub energy_per_inf_uj: f64,
+    pub energy_total_uj: f64,
+    /// Wall-clock snapshot from the real execution pass (None when the run
+    /// was virtual-only). Excluded from the deterministic JSON.
+    pub wall: Option<Snapshot>,
+}
+
+/// The multi-tenant serving report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Metrics JSON schema version (golden-file compatibility gate).
+    pub schema: u32,
+    pub seed: u64,
+    pub budget_tiles: usize,
+    pub tenants: Vec<TenantReport>,
+}
+
+/// Fixed 3-decimal rounding before serialization so derived floats
+/// (percentiles, rates, energies) print byte-stably and stay
+/// hand-checkable in the golden file.
+fn num3(x: f64) -> Json {
+    Json::Num((x * 1000.0).round() / 1000.0)
+}
+
+impl ServeReport {
+    fn tenant_json(t: &TenantReport) -> Json {
+        let mut lat = BTreeMap::new();
+        lat.insert("max".to_string(), num3(t.lat_max_us));
+        lat.insert("mean".to_string(), num3(t.lat_mean_us));
+        lat.insert("p50".to_string(), num3(t.lat_p50_us));
+        lat.insert("p95".to_string(), num3(t.lat_p95_us));
+        lat.insert("p99".to_string(), num3(t.lat_p99_us));
+        let mut energy = BTreeMap::new();
+        energy.insert("per_inf_uj".to_string(), num3(t.energy_per_inf_uj));
+        energy.insert("total_uj".to_string(), num3(t.energy_total_uj));
+        let mut o = BTreeMap::new();
+        o.insert("admitted".to_string(), Json::Num(t.admitted as f64));
+        o.insert("demand_tiles".to_string(), Json::Num(t.demand_tiles as f64));
+        o.insert("energy".to_string(), Json::Obj(energy));
+        o.insert("makespan_us".to_string(), Json::Num(t.makespan_us as f64));
+        o.insert("name".to_string(), Json::Str(t.name.clone()));
+        o.insert("offered".to_string(), Json::Num(t.offered as f64));
+        o.insert("peak_tiles".to_string(), Json::Num(t.peak_tiles as f64));
+        o.insert("queue_cap".to_string(), Json::Num(t.queue_cap as f64));
+        o.insert("rejected".to_string(), Json::Num(t.rejected as f64));
+        o.insert("shard_tiles".to_string(), Json::Num(t.shard_tiles as f64));
+        o.insert("svc_us".to_string(), Json::Num(t.svc_us as f64));
+        o.insert("virt_latency_us".to_string(), Json::Obj(lat));
+        o.insert("virt_throughput_rps".to_string(), num3(t.virt_throughput_rps));
+        o.insert("weight".to_string(), Json::Num(t.weight as f64));
+        Json::Obj(o)
+    }
+
+    /// The seed-deterministic section only: byte-identical for a fixed
+    /// seed across repeated runs and across thread-pool sizes (this is
+    /// what `hcim serve --format json` prints and CI diffs).
+    pub fn deterministic_json(&self) -> Json {
+        let offered: u64 = self.tenants.iter().map(|t| t.offered).sum();
+        let admitted: u64 = self.tenants.iter().map(|t| t.admitted).sum();
+        let rejected: u64 = self.tenants.iter().map(|t| t.rejected).sum();
+        let shard: usize = self.tenants.iter().map(|t| t.shard_tiles).sum();
+        let makespan: u64 = self.tenants.iter().map(|t| t.makespan_us).max().unwrap_or(0);
+        let throughput = if makespan > 0 {
+            admitted as f64 / (makespan as f64 / 1e6)
+        } else {
+            0.0
+        };
+        let mut totals = BTreeMap::new();
+        totals.insert("admitted".to_string(), Json::Num(admitted as f64));
+        totals.insert("makespan_us".to_string(), Json::Num(makespan as f64));
+        totals.insert("offered".to_string(), Json::Num(offered as f64));
+        totals.insert("rejected".to_string(), Json::Num(rejected as f64));
+        totals.insert("shard_tiles".to_string(), Json::Num(shard as f64));
+        totals.insert("virt_throughput_rps".to_string(), num3(throughput));
+        let mut top = BTreeMap::new();
+        top.insert("budget_tiles".to_string(), Json::Num(self.budget_tiles as f64));
+        top.insert("schema".to_string(), Json::Num(self.schema as f64));
+        top.insert("seed".to_string(), Json::Str(format!("{:#018x}", self.seed)));
+        top.insert(
+            "tenants".to_string(),
+            Json::Arr(self.tenants.iter().map(Self::tenant_json).collect()),
+        );
+        top.insert("totals".to_string(), Json::Obj(totals));
+        Json::Obj(top)
+    }
+
+    /// Full report: deterministic section plus the wall-clock `"wall"`
+    /// section (per-tenant execution snapshots — timestamps, real
+    /// latencies — which vary run to run and are excluded from
+    /// determinism comparisons).
+    pub fn to_json(&self) -> Json {
+        let mut top = match self.deterministic_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("deterministic_json returns an object"),
+        };
+        let wall: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| match &t.wall {
+                Some(s) => {
+                    let mut o = match s.to_json() {
+                        Json::Obj(m) => m,
+                        _ => unreachable!("snapshot json is an object"),
+                    };
+                    o.insert("name".to_string(), Json::Str(t.name.clone()));
+                    Json::Obj(o)
+                }
+                None => Json::Null,
+            })
+            .collect();
+        top.insert("wall".to_string(), Json::Arr(wall));
+        Json::Obj(top)
+    }
+
+    /// Human-readable per-tenant table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "multi-tenant serving — {} tiles budget, {} granted",
+                self.budget_tiles,
+                self.tenants.iter().map(|x| x.shard_tiles).sum::<usize>()
+            ),
+            &[
+                "tenant", "w", "tiles (shard/demand)", "svc µs", "offered", "admitted",
+                "rejected", "p50 µs", "p95 µs", "p99 µs", "virt req/s", "µJ/inf",
+            ],
+        );
+        for r in &self.tenants {
+            t.row(&[
+                r.name.clone(),
+                r.weight.to_string(),
+                format!("{}/{}", r.shard_tiles, r.demand_tiles),
+                r.svc_us.to_string(),
+                r.offered.to_string(),
+                r.admitted.to_string(),
+                r.rejected.to_string(),
+                format!("{:.0}", r.lat_p50_us),
+                format!("{:.0}", r.lat_p95_us),
+                format!("{:.0}", r.lat_p99_us),
+                format!("{:.1}", r.virt_throughput_rps),
+                format!("{:.3}", r.energy_per_inf_uj),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(models: &[(&str, u32)]) -> Vec<TenantSpec> {
+        models
+            .iter()
+            .map(|&(m, w)| TenantSpec { model: m.to_string(), weight: w })
+            .collect()
+    }
+
+    fn hand_plan(shards: &[(usize, usize, usize)]) -> ShardPlan {
+        // (demand, peak, shard) triples with synthetic names
+        ShardPlan {
+            budget_tiles: shards.iter().map(|&(_, _, s)| s).sum::<usize>() + 8,
+            assignments: shards
+                .iter()
+                .enumerate()
+                .map(|(i, &(demand, peak, shard))| ShardAssignment {
+                    model: format!("m{i}"),
+                    weight: 1,
+                    demand_tiles: demand,
+                    peak_tiles: peak,
+                    shard_tiles: shard,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn tenant_spec_parses_weight_suffix() {
+        let t = TenantSpec::parse("resnet20:3").unwrap();
+        assert_eq!(t.model, "resnet20");
+        assert_eq!(t.weight, 3);
+        let t = TenantSpec::parse("vgg9").unwrap();
+        assert_eq!(t.weight, 1);
+        assert!(TenantSpec::parse("resnet20:x").is_err());
+        assert!(TenantSpec::parse(":2").is_err());
+        assert!(TenantSpec::parse("resnet20:0").is_err());
+        assert!(TenantSpec::parse("resnet20:65").is_err(), "weight above the WRR cap");
+        assert!(TenantSpec::parse("resnet20:64").is_ok());
+    }
+
+    #[test]
+    fn partition_invariants_hold_across_budgets() {
+        let cfg = HcimConfig::config_a();
+        let sp = specs(&[("resnet20", 1), ("vgg9", 2)]);
+        let min: usize = sp
+            .iter()
+            .map(|s| {
+                let g = zoo::by_name(&s.model).unwrap();
+                ModelMapping::build(&g, &cfg).peak_layer_crossbars()
+            })
+            .sum();
+        let full: usize = sp
+            .iter()
+            .map(|s| {
+                let g = zoo::by_name(&s.model).unwrap();
+                ModelMapping::build(&g, &cfg).total_crossbars()
+            })
+            .sum();
+        for budget in [min, min + 7, (min + full) / 2, full, full + 100] {
+            let plan = ShardPlan::partition(&sp, &cfg, budget).unwrap();
+            assert!(plan.total_shard_tiles() <= budget, "budget {budget} overcommitted");
+            for a in &plan.assignments {
+                assert!(a.shard_tiles >= a.peak_tiles, "{}: below peak floor", a.model);
+                assert!(a.shard_tiles <= a.demand_tiles, "{}: above demand", a.model);
+            }
+        }
+        // at or above full demand, everyone is fully resident
+        let plan = ShardPlan::partition(&sp, &cfg, full + 100).unwrap();
+        for a in &plan.assignments {
+            assert_eq!(a.shard_tiles, a.demand_tiles);
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_weight_sensitive() {
+        let cfg = HcimConfig::config_a();
+        let sp = specs(&[("resnet20", 1), ("resnet20", 1)]);
+        let g = zoo::by_name("resnet20").unwrap();
+        let m = ModelMapping::build(&g, &cfg);
+        let budget = m.peak_layer_crossbars() * 2 + m.total_crossbars();
+        let a = ShardPlan::partition(&sp, &cfg, budget).unwrap();
+        let b = ShardPlan::partition(&sp, &cfg, budget).unwrap();
+        assert_eq!(
+            a.assignments.iter().map(|x| x.shard_tiles).collect::<Vec<_>>(),
+            b.assignments.iter().map(|x| x.shard_tiles).collect::<Vec<_>>()
+        );
+        // equal demand, equal weight → equal-ish shards (within 1 tile)
+        let d = a.assignments[0].shard_tiles as i64 - a.assignments[1].shard_tiles as i64;
+        assert!(d.abs() <= 1, "symmetric tenants diverged: {d}");
+        // raise one tenant's weight → it gets at least as many tiles
+        let sp_w = specs(&[("resnet20", 3), ("resnet20", 1)]);
+        let w = ShardPlan::partition(&sp_w, &cfg, budget).unwrap();
+        assert!(
+            w.assignments[0].shard_tiles >= w.assignments[1].shard_tiles,
+            "heavier tenant got fewer tiles"
+        );
+    }
+
+    #[test]
+    fn partition_rejects_budget_below_peak_floor() {
+        let cfg = HcimConfig::config_a();
+        let sp = specs(&[("resnet20", 1), ("vgg9", 1)]);
+        let err = ShardPlan::partition(&sp, &cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("below the minimum"), "{err}");
+        assert!(ShardPlan::partition(&specs(&[("nope", 1)]), &cfg, 100).is_err());
+    }
+
+    #[test]
+    fn admission_respects_queue_cap_and_conserves_requests() {
+        // one tenant, svc 1000 µs, cap 2: a burst of 5 at t=0..4 keeps the
+        // queue saturated after the first two
+        let plan = hand_plan(&[(10, 2, 10)]);
+        let cfg = SchedulerCfg { queue_cap: 2, ..Default::default() };
+        let mut s = Scheduler::with_costs(plan, &[(1e6, 1_000_000.0)], cfg, 1);
+        assert_eq!(s.tenants[0].stats.svc_us, 1000);
+        let arrivals: Vec<Arrival> = (0..5)
+            .map(|k| Arrival { tenant: 0, seq: k, t_us: k, image_seed: k })
+            .collect();
+        let admitted = s.plan_admissions(&arrivals);
+        let st = &s.tenants[0].stats;
+        assert_eq!(st.offered, 5);
+        assert_eq!(st.admitted + st.rejected, st.offered);
+        assert_eq!(st.admitted, 2, "cap 2 admits exactly the first two of the burst");
+        assert_eq!(admitted.len(), 2);
+        // first request: no wait; second: queued behind it
+        assert_eq!(st.virt_latencies_us[0], 1000);
+        assert_eq!(st.virt_latencies_us[1], 1000 + 999);
+        assert_eq!(st.makespan_us, 2000);
+    }
+
+    #[test]
+    fn admission_is_a_pure_function_of_arrivals() {
+        let mk = || {
+            let plan = hand_plan(&[(20, 4, 10), (8, 2, 8)]);
+            Scheduler::with_costs(
+                plan,
+                &[(2e6, 500_000.0), (1e6, 250_000.0)],
+                SchedulerCfg { queue_cap: 3, ..Default::default() },
+                9,
+            )
+        };
+        let arrivals = loadgen::generate(
+            &loadgen::LoadGenCfg { seed: 9, requests_per_tenant: 200, mean_gap_us: 400.0 },
+            2,
+        );
+        let mut a = mk();
+        let mut b = mk();
+        let adm_a = a.plan_admissions(&arrivals);
+        let adm_b = b.plan_admissions(&arrivals);
+        assert_eq!(adm_a, adm_b);
+        assert_eq!(
+            a.report().deterministic_json().to_string(),
+            b.report().deterministic_json().to_string()
+        );
+    }
+
+    #[test]
+    fn wrr_order_interleaves_by_weight() {
+        let plan = hand_plan(&[(4, 1, 2), (4, 1, 2), (4, 1, 2)]);
+        let mut s = Scheduler::with_costs(
+            plan,
+            &[(0.0, 1000.0), (0.0, 1000.0), (0.0, 1000.0)],
+            SchedulerCfg::default(),
+            0,
+        );
+        s.tenants[0].assignment.weight = 3;
+        s.tenants[1].assignment.weight = 1;
+        s.tenants[2].assignment.weight = 2;
+        assert_eq!(s.wrr_order(), vec![0, 1, 2, 0, 2, 0]);
+    }
+
+    #[test]
+    fn report_json_is_schema_stable_and_round_trips() {
+        let plan = hand_plan(&[(10, 2, 5)]);
+        let mut s = Scheduler::with_costs(
+            plan,
+            &[(1.5e6, 2_000_000.0)],
+            SchedulerCfg { queue_cap: 4, ..Default::default() },
+            3,
+        );
+        let arrivals: Vec<Arrival> = (0..6)
+            .map(|k| Arrival { tenant: 0, seq: k, t_us: 1000 * k, image_seed: k })
+            .collect();
+        s.plan_admissions(&arrivals);
+        let rep = s.report();
+        let j = rep.deterministic_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.num_field("schema").unwrap(), 1.0);
+        assert_eq!(parsed.num_field("budget_tiles").unwrap(), rep.budget_tiles as f64);
+        let tenants = parsed.get("tenants").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(tenants.len(), 1);
+        for key in [
+            "admitted", "demand_tiles", "energy", "makespan_us", "name", "offered",
+            "peak_tiles", "queue_cap", "rejected", "shard_tiles", "svc_us",
+            "virt_latency_us", "virt_throughput_rps", "weight",
+        ] {
+            assert!(tenants[0].get(key).is_some(), "tenant json missing `{key}`");
+        }
+        let totals = parsed.get("totals").unwrap();
+        assert!(totals.num_field("admitted").unwrap() > 0.0);
+        // full JSON additionally carries the wall section (null: virtual run)
+        let full = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(full.get("wall").and_then(|w| w.as_arr()).unwrap().len(), 1);
+        // table renders without panicking
+        let _ = rep.table().render();
+    }
+
+    #[test]
+    fn num3_prints_stably() {
+        assert_eq!(num3(6550.000000000001).to_string(), "6550");
+        assert_eq!(num3(166.66666666666666).to_string(), "166.667");
+        assert_eq!(num3(1.5).to_string(), "1.5");
+        assert_eq!(num3(0.0).to_string(), "0");
+    }
+}

@@ -148,15 +148,53 @@ impl Server {
     pub fn submit(&mut self, image: Vec<f32>) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.submit(Request { id, image, enqueued: Instant::now() });
+        if !self.batcher.submit(Request { id, image, enqueued: Instant::now() }) {
+            crate::log_error!("request {id} dropped: server batcher already closed");
+        }
         id
     }
 
     /// Collect exactly `n` responses (blocking).
-    pub fn collect(&self, n: usize) -> Vec<Response> {
-        (0..n)
-            .map(|_| self.resp_rx.recv().expect("workers died"))
-            .collect()
+    ///
+    /// If the worker threads die before `n` responses arrive (e.g. a
+    /// panicking batch), the error reports how many responses were drained
+    /// instead of aborting the process.
+    pub fn collect(&self, n: usize) -> crate::Result<Vec<Response>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.resp_rx.recv() {
+                Ok(r) => out.push(r),
+                Err(_) => anyhow::bail!(
+                    "serving workers died after {} of {n} responses",
+                    out.len()
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Like [`Server::collect`], but bounded by a total `timeout`: a lost
+    /// request (worker error without a response) surfaces as an error
+    /// instead of blocking forever.
+    pub fn collect_timeout(&self, n: usize, timeout: Duration) -> crate::Result<Vec<Response>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.resp_rx.recv_timeout(left) {
+                Ok(r) => out.push(r),
+                Err(RecvTimeoutError::Timeout) => anyhow::bail!(
+                    "timed out after {timeout:?} with {} of {n} responses",
+                    out.len()
+                ),
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!(
+                    "serving workers died after {} of {n} responses",
+                    out.len()
+                ),
+            }
+        }
+        Ok(out)
     }
 
     /// Queue depth (backpressure signal).
@@ -182,8 +220,10 @@ fn argmax(xs: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-/// Map the slim trained model names to zoo entries for co-simulation.
-fn zoo_name_for(name: &str) -> Option<&'static str> {
+/// Map the slim trained model names (what an artifact manifest carries)
+/// to canonical zoo entries — used for co-simulation here and for the
+/// tenant↔artifact match in the multi-tenant `serve` path.
+pub fn zoo_name_for(name: &str) -> Option<&'static str> {
     match name {
         n if n.starts_with("resnet20") => Some("resnet20"),
         n if n.starts_with("wide-resnet20") => Some("wide_resnet20"),

@@ -482,6 +482,115 @@ pub fn ablation_variation_robustness() -> Table {
     t
 }
 
+/// One row of the serving-contention sweep: a tile budget and the
+/// multi-tenant outcome under the fixed reference load.
+#[derive(Clone, Debug)]
+pub struct ServingSweepRow {
+    pub budget_tiles: usize,
+    /// Per-tenant `(model, shard_tiles)` grants.
+    pub shards: Vec<(String, usize)>,
+    pub admitted: u64,
+    pub rejected: u64,
+    /// Worst per-tenant virtual p95 latency (µs).
+    pub p95_us: f64,
+    /// Aggregate virtual throughput (admitted / makespan).
+    pub throughput_rps: f64,
+}
+
+/// Multi-tenant serving contention: throughput vs. chip tile budget for a
+/// fixed two-tenant CIFAR mix (ResNet-20 + VGG-9, config A) under the
+/// seed-42 open-loop load. Entirely virtual-time, so the numbers are
+/// seed-deterministic — EXPERIMENTS.md §Serving tables this, and
+/// `hcim serve --models resnet20,vgg9 --tiles N --requests 256
+/// --gap-us 150 --queue-cap 8 --seed 42` reproduces any row live (the
+/// sweep's knobs differ from the CLI defaults).
+pub fn serving_contention_sweep_rows() -> Vec<ServingSweepRow> {
+    use crate::coordinator::loadgen::{self, LoadGenCfg};
+    use crate::coordinator::{Scheduler, SchedulerCfg, ShardPlan, TenantSpec};
+
+    let cfg = HcimConfig::config_a();
+    let specs = vec![
+        TenantSpec { model: "resnet20".into(), weight: 1 },
+        TenantSpec { model: "vgg9".into(), weight: 1 },
+    ];
+    let (floor, full) = ShardPlan::bounds(&specs, &cfg).expect("sweep models are in the zoo");
+    // price each tenant ONCE — per-inference cost depends only on
+    // (model, config), never on the tile budget being swept
+    let sim = Simulator::new(cfg.node);
+    let costs: Vec<(f64, f64)> = specs
+        .iter()
+        .map(|s| {
+            let g = zoo::by_name(&s.model).expect("sweep models are in the zoo");
+            let r = sim.run(&g, &Arch::Hcim(cfg.clone()));
+            (r.energy_pj(), r.latency_ns())
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let budget = ((full as f64 * frac) as usize).max(floor);
+        let plan = ShardPlan::partition(&specs, &cfg, budget)
+            .expect("budget is floored at the minimum");
+        let mut sched = Scheduler::with_costs(
+            plan,
+            &costs,
+            SchedulerCfg { queue_cap: 8, ..SchedulerCfg::default() },
+            42,
+        );
+        let arrivals = loadgen::generate(
+            &LoadGenCfg { seed: 42, requests_per_tenant: 256, mean_gap_us: 150.0 },
+            sched.tenants.len(),
+        );
+        sched.plan_admissions(&arrivals);
+        let rep = sched.report();
+        let admitted: u64 = rep.tenants.iter().map(|t| t.admitted).sum();
+        let rejected: u64 = rep.tenants.iter().map(|t| t.rejected).sum();
+        let makespan = rep.tenants.iter().map(|t| t.makespan_us).max().unwrap_or(0);
+        rows.push(ServingSweepRow {
+            budget_tiles: budget,
+            shards: rep
+                .tenants
+                .iter()
+                .map(|t| (t.name.clone(), t.shard_tiles))
+                .collect(),
+            admitted,
+            rejected,
+            p95_us: rep.tenants.iter().map(|t| t.lat_p95_us).fold(0.0, f64::max),
+            throughput_rps: if makespan > 0 {
+                admitted as f64 / (makespan as f64 / 1e6)
+            } else {
+                0.0
+            },
+        });
+    }
+    rows
+}
+
+/// Tabled form of [`serving_contention_sweep_rows`].
+pub fn serving_contention_sweep() -> Table {
+    let mut t = Table::new(
+        "Serving contention — throughput vs chip tile budget (ResNet-20 + VGG-9, seed 42)",
+        &["Tile budget", "Shards", "Admitted", "Rejected", "worst p95 (µs)", "Virt req/s"],
+    );
+    for r in serving_contention_sweep_rows() {
+        let shards = r
+            .shards
+            .iter()
+            .map(|(m, s)| format!("{m}={s}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(&[
+            r.budget_tiles.to_string(),
+            shards,
+            r.admitted.to_string(),
+            r.rejected.to_string(),
+            format!("{:.0}", r.p95_us),
+            format!("{:.1}", r.throughput_rps),
+        ]);
+    }
+    t
+}
+
 /// Reports used by EXPERIMENTS.md: run everything and also return the raw
 /// SimReports for the headline claims.
 pub fn headline_reports(sim: &Simulator) -> Vec<SimReport> {
@@ -601,6 +710,32 @@ mod tests {
         }
         // no 7-bit rows at config B (paper's Table-2/figure convention)
         assert!(!rows.iter().any(|r| r.arch.contains("7b")));
+    }
+
+    #[test]
+    fn serving_contention_sweep_shape() {
+        let rows = serving_contention_sweep_rows();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            let granted: usize = r.shards.iter().map(|(_, s)| s).sum();
+            assert!(granted <= r.budget_tiles, "budget {} overcommitted", r.budget_tiles);
+            assert!(r.admitted > 0, "budget {} admitted nothing", r.budget_tiles);
+            assert_eq!(r.shards.len(), 2);
+        }
+        // budgets grow monotonically and the largest budget never rejects
+        // more than the smallest (shards only grow with budget)
+        assert!(rows.windows(2).all(|w| w[0].budget_tiles <= w[1].budget_tiles));
+        assert!(
+            rows.last().unwrap().rejected <= rows.first().unwrap().rejected,
+            "more tiles must not reject more requests"
+        );
+        // determinism: a second sweep reproduces the same counters
+        let again = serving_contention_sweep_rows();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.admitted, b.admitted);
+            assert_eq!(a.rejected, b.rejected);
+        }
+        assert!(serving_contention_sweep().render().contains("resnet20"));
     }
 
     #[test]

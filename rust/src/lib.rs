@@ -19,6 +19,12 @@
 //!   hardware configuration and collect a [`sim::energy::CostLedger`].
 //! * [`coordinator::server::Server`] — batched inference serving over the
 //!   compiled artifacts.
+//! * [`coordinator::scheduler::Scheduler`] — multi-tenant chip-sharded
+//!   serving: the chip's crossbar-tile budget partitioned across N model
+//!   tenants, seed-deterministic open-loop load
+//!   ([`coordinator::loadgen`]), bounded admission with backpressure, and
+//!   weighted round-robin dispatch onto a shared pool (`hcim serve
+//!   --models ... --tiles ...`).
 //! * [`experiments`] — one runner per paper table/figure (shared by
 //!   `cargo bench` and `examples/paper_figures.rs`).
 //! * [`dse`] — parallel design-space exploration: sweep crossbar geometry ×

@@ -11,7 +11,8 @@ use std::time::Instant;
 
 use hcim::cli::{Args, USAGE};
 use hcim::config::hardware::{BaselineKind, HcimConfig};
-use hcim::coordinator::{Server, ServerConfig};
+use hcim::coordinator::loadgen::{self, LoadGenCfg};
+use hcim::coordinator::{Scheduler, SchedulerCfg, Server, ServerConfig, ShardPlan, TenantSpec};
 use hcim::dse::{DesignSpace, ResultCache, RobustnessCfg, SweepReport, SweepRunner};
 use hcim::experiments;
 use hcim::model::zoo;
@@ -106,6 +107,9 @@ fn cmd_simulate(args: &Args) -> hcim::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> hcim::Result<()> {
+    if args.flag("models").is_some() {
+        return cmd_serve_multi(args);
+    }
     let dir = args.flag_or("artifacts", "artifacts");
     let engine = Arc::new(Engine::load(Path::new(dir))?);
     let m = engine.manifest.clone();
@@ -136,10 +140,110 @@ fn cmd_serve(args: &Args) -> hcim::Result<()> {
         let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
         server.submit(img);
     }
-    let responses = server.collect(requests);
+    // bounded collect: a worker-side batch failure must surface as an
+    // error, not hang the CLI waiting for responses that will never come
+    let responses =
+        server.collect_timeout(requests, std::time::Duration::from_secs(120))?;
     let metrics = server.shutdown();
     println!("first classes: {:?}", &responses.iter().map(|r| r.class).take(8).collect::<Vec<_>>());
     println!("{}", metrics.snapshot());
+    Ok(())
+}
+
+/// Multi-tenant chip-sharded serving: partition `--tiles` across
+/// `--models`, run the seeded open-loop load through deterministic
+/// admission, execute admitted requests when artifacts exist, and report
+/// per-tenant metrics (stdout JSON carries only the seed-deterministic
+/// section; timing goes to stderr).
+fn cmd_serve_multi(args: &Args) -> hcim::Result<()> {
+    let specs: Vec<TenantSpec> = args
+        .flag_or("models", "")
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(TenantSpec::parse)
+        .collect::<hcim::Result<Vec<_>>>()?;
+    anyhow::ensure!(!specs.is_empty(), "pass --models model[,model:weight,...]");
+    let budget = args.usize_or("tiles", 0);
+    anyhow::ensure!(budget > 0, "pass --tiles <chip crossbar-tile budget>");
+    let hw = config_from(args);
+    let seed = args.u64_or("seed", 42);
+
+    let plan = ShardPlan::partition(&specs, &hw, budget)?;
+    let scfg = SchedulerCfg {
+        queue_cap: args.usize_or("queue-cap", 32),
+        workers: args.usize_or("workers", 2),
+        max_batch: args.usize_or("max-batch", 8),
+        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000) as u64),
+    };
+    let mut sched = Scheduler::new(plan, &hw, scfg, seed);
+
+    // real execution is optional: without artifacts the run is virtual-only.
+    // The artifact directory holds ONE exported model, so only tenants of
+    // that model get the engine — executing tenant B's requests through
+    // tenant A's weights would mis-attribute every wall metric.
+    let dir = Path::new(args.flag_or("artifacts", "artifacts"));
+    if dir.join("manifest.json").exists() {
+        let engine = Arc::new(Engine::load(dir)?);
+        // canonicalize both sides through the zoo so aliases (`wrn20`) and
+        // manifest spellings (`wide-resnet20-slim`, `tiny`) match correctly
+        let exported = hcim::coordinator::server::zoo_name_for(&engine.manifest.model);
+        for i in 0..sched.tenants.len() {
+            let tenant_zoo = zoo::by_name(&sched.tenants[i].assignment.model).map(|g| g.name);
+            if exported.is_some() && tenant_zoo.as_deref() == exported {
+                sched.attach_engine(i, Arc::clone(&engine));
+            } else {
+                eprintln!(
+                    "(tenant {} has no matching artifact — {} exports `{}`; virtual-time only)",
+                    sched.tenants[i].assignment.model,
+                    dir.display(),
+                    engine.manifest.model
+                );
+            }
+        }
+    } else {
+        eprintln!(
+            "({} not built — virtual-time run only; `make artifacts` enables execution)",
+            dir.display()
+        );
+    }
+
+    let lg = LoadGenCfg {
+        seed,
+        requests_per_tenant: args.usize_or("requests", 64),
+        mean_gap_us: args.f64_or("gap-us", 500.0),
+    };
+    let arrivals = loadgen::generate(&lg, sched.tenants.len());
+    let t0 = Instant::now();
+    let admitted = sched.plan_admissions(&arrivals);
+    let executed = sched.execute(&admitted)?;
+    let report = sched.report();
+
+    // stdout carries only seed-deterministic content in json mode, so the
+    // output is byte-identical for any --workers value; timing → stderr
+    match args.flag_or("format", "table") {
+        "json" => println!("{}", report.deterministic_json()),
+        _ => {
+            report.table().print();
+            for t in &report.tenants {
+                if let Some(w) = &t.wall {
+                    println!("wall [{}]: {w}", t.name);
+                }
+            }
+        }
+    }
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("report: {path}");
+    }
+    eprintln!(
+        "{} offered / {} admitted across {} tenants; executed {executed} on the shared pool in {:.2}s",
+        arrivals.len(),
+        admitted.len(),
+        report.tenants.len(),
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -164,6 +268,7 @@ fn cmd_tables(args: &Args) -> hcim::Result<()> {
     experiments::ablation_phase_sharing().print();
     experiments::ablation_adc_precision_sweep(&sim).print();
     experiments::ablation_variation_robustness().print();
+    experiments::serving_contention_sweep().print();
     Ok(())
 }
 

@@ -96,6 +96,14 @@ impl ModelMapping {
         self.layers.iter().map(|l| l.crossbars()).sum()
     }
 
+    /// Crossbars of the largest single layer — the smallest shard the
+    /// model can run in when layers are time-multiplexed onto shared
+    /// tiles (weight reprogramming) instead of being fully resident. The
+    /// multi-tenant scheduler uses this as each tenant's tile floor.
+    pub fn peak_layer_crossbars(&self) -> usize {
+        self.layers.iter().map(|l| l.crossbars()).max().unwrap_or(0)
+    }
+
     pub fn total_scale_factors(&self, cfg: &HcimConfig) -> usize {
         self.layers.iter().map(|l| l.scale_factors(cfg)).sum()
     }
@@ -182,6 +190,23 @@ mod tests {
     }
 
     #[test]
+    fn peak_layer_bounds_total() {
+        let cfg = HcimConfig::config_a();
+        for g in zoo::cifar_suite() {
+            let m = ModelMapping::build(&g, &cfg);
+            let peak = m.peak_layer_crossbars();
+            assert!(peak >= 1, "{}: peak must be positive", g.name);
+            assert!(peak <= m.total_crossbars(), "{}: peak exceeds total", g.name);
+            assert_eq!(
+                peak,
+                m.layers.iter().map(|l| l.crossbars()).max().unwrap(),
+                "{}: peak must be the max layer allocation",
+                g.name
+            );
+        }
+    }
+
+    #[test]
     fn no_mvm_layers_no_mappings() {
         use crate::model::graph::Graph;
         use crate::model::layer::{Chw, Layer};
@@ -194,5 +219,6 @@ mod tests {
         let m = ModelMapping::build(&g, &HcimConfig::config_a());
         assert!(m.layers.is_empty());
         assert_eq!(m.total_crossbars(), 0);
+        assert_eq!(m.peak_layer_crossbars(), 0);
     }
 }

@@ -1,0 +1,217 @@
+//! Hardened concurrency/property tests for the dynamic `Batcher` — the
+//! shared queue under every serving lane. Each scenario runs across
+//! consumer counts {1, 2, 8}:
+//!
+//! * conservation — across many producers and consumers, no request is
+//!   lost or duplicated;
+//! * FIFO — ids within any drained batch are contiguous and increasing
+//!   when a single producer submits in order;
+//! * window — a partial batch is only released once `window` has elapsed
+//!   from the OLDEST queued request;
+//! * close — `close()` drains exactly the remaining queue, then every
+//!   consumer gets `None`.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use hcim::coordinator::batcher::{Batcher, Request};
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn req(id: u64) -> Request {
+    Request { id, image: vec![0.0; 4], enqueued: Instant::now() }
+}
+
+/// Spawn `n` consumer threads that drain `b` until `None`, pushing every
+/// drained batch into a shared list.
+fn spawn_consumers(
+    b: &Arc<Batcher>,
+    n: usize,
+    sink: &Arc<Mutex<Vec<Vec<u64>>>>,
+) -> Vec<thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let b = Arc::clone(b);
+            let sink = Arc::clone(sink);
+            thread::spawn(move || {
+                while let Some(batch) = b.next_batch() {
+                    let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+                    sink.lock().unwrap().push(ids);
+                }
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn no_request_lost_or_duplicated_under_contention() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 200;
+    for &wc in &WORKER_COUNTS {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(2)));
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let consumers = spawn_consumers(&b, wc, &sink);
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        assert!(b.submit(req(p * 1_000 + i)));
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        b.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        let drained: Vec<u64> =
+            sink.lock().unwrap().iter().flat_map(|b| b.iter().copied()).collect();
+        assert_eq!(
+            drained.len(),
+            (PRODUCERS * PER_PRODUCER) as usize,
+            "{wc} consumers: requests lost or duplicated"
+        );
+        let unique: HashSet<u64> = drained.iter().copied().collect();
+        assert_eq!(unique.len(), drained.len(), "{wc} consumers: duplicate ids");
+        let expected: HashSet<u64> = (0..PRODUCERS)
+            .flat_map(|p| (0..PER_PRODUCER).map(move |i| p * 1_000 + i))
+            .collect();
+        assert_eq!(unique, expected, "{wc} consumers: wrong id set");
+    }
+}
+
+#[test]
+fn fifo_within_every_batch_for_an_ordered_producer() {
+    const TOTAL: u64 = 500;
+    for &wc in &WORKER_COUNTS {
+        let b = Arc::new(Batcher::new(16, Duration::from_millis(2)));
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let consumers = spawn_consumers(&b, wc, &sink);
+        for i in 0..TOTAL {
+            assert!(b.submit(req(i)));
+        }
+        b.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        let batches = sink.lock().unwrap().clone();
+        let mut count = 0usize;
+        for ids in &batches {
+            assert!(!ids.is_empty());
+            assert!(ids.len() <= 16);
+            // the queue is FIFO and a drain takes a contiguous prefix under
+            // one lock, so each batch must be consecutive increasing ids
+            assert!(
+                ids.windows(2).all(|w| w[1] == w[0] + 1),
+                "{wc} consumers: non-FIFO batch {ids:?}"
+            );
+            count += ids.len();
+        }
+        assert_eq!(count, TOTAL as usize);
+    }
+}
+
+#[test]
+fn partial_batch_waits_for_the_window_of_the_oldest_request() {
+    const WINDOW: Duration = Duration::from_millis(60);
+    for &wc in &WORKER_COUNTS {
+        let b = Arc::new(Batcher::new(64, WINDOW));
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let got = Arc::new(Mutex::new(Vec::<Duration>::new()));
+        let consumers: Vec<_> = (0..wc)
+            .map(|_| {
+                let b = Arc::clone(&b);
+                let sink = Arc::clone(&sink);
+                let got = Arc::clone(&got);
+                thread::spawn(move || {
+                    while let Some(batch) = b.next_batch() {
+                        let released = batch[0].enqueued.elapsed();
+                        got.lock().unwrap().push(released);
+                        sink.lock().unwrap().push(batch.len() as u64);
+                    }
+                })
+            })
+            .collect();
+        // a lone request must sit the full window before release
+        assert!(b.submit(req(1)));
+        // wait for it to come out, then shut down the rest
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while got.lock().unwrap().is_empty() {
+            assert!(Instant::now() < deadline, "{wc} consumers: batch never released");
+            thread::sleep(Duration::from_millis(1));
+        }
+        b.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        let got = got.lock().unwrap();
+        assert_eq!(got.len(), 1, "{wc} consumers: exactly one partial batch");
+        assert!(
+            got[0] >= WINDOW,
+            "{wc} consumers: partial batch released after {:?}, window is {WINDOW:?}",
+            got[0]
+        );
+        assert_eq!(*sink.lock().unwrap(), vec![1], "partial batch holds the lone request");
+    }
+}
+
+#[test]
+fn full_batch_does_not_wait_for_the_window() {
+    for &wc in &WORKER_COUNTS {
+        let b = Arc::new(Batcher::new(4, Duration::from_secs(30)));
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let consumers = spawn_consumers(&b, wc, &sink);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            assert!(b.submit(req(i)));
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while sink.lock().unwrap().is_empty() {
+            assert!(Instant::now() < deadline, "{wc} consumers: full batch never released");
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{wc} consumers: full batch must not wait for the 30s window"
+        );
+        b.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        let batches = sink.lock().unwrap().clone();
+        assert_eq!(batches, vec![vec![0, 1, 2, 3]]);
+    }
+}
+
+#[test]
+fn close_drains_exactly_the_remaining_queue() {
+    const REMAINING: u64 = 10;
+    for &wc in &WORKER_COUNTS {
+        // huge window: nothing is released until close()
+        let b = Arc::new(Batcher::new(4, Duration::from_secs(30)));
+        for i in 0..REMAINING {
+            assert!(b.submit(req(i)));
+        }
+        // 10 queued with max_batch 4: two full batches left already; close
+        // must hand out the remainder too, then None for everyone
+        b.close();
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let consumers = spawn_consumers(&b, wc, &sink);
+        for h in consumers {
+            h.join().unwrap(); // exits only via None
+        }
+        let drained: Vec<u64> =
+            sink.lock().unwrap().iter().flat_map(|b| b.iter().copied()).collect();
+        let mut sorted = drained.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..REMAINING).collect::<Vec<u64>>(), "{wc} consumers");
+        assert!(b.next_batch().is_none(), "{wc} consumers: drained batcher must stay empty");
+        assert_eq!(b.depth(), 0);
+    }
+}

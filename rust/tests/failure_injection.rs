@@ -167,7 +167,7 @@ fn batcher_survives_worker_panic_isolation() {
     let b2 = Arc::clone(&b);
     let producer = std::thread::spawn(move || {
         for i in 0..20 {
-            b2.submit(Request { id: i, image: vec![0.0], enqueued: Instant::now() });
+            assert!(b2.submit(Request { id: i, image: vec![0.0], enqueued: Instant::now() }));
         }
         b2.close();
     });

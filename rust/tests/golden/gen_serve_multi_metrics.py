@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Generator for serve_multi_metrics.json — the golden file of
+tests/serve_scheduler.rs::report_matches_golden_file.
+
+Mirrors, with exact IEEE-754 double semantics, what
+`ServeReport::deterministic_json().to_string()` emits for the hand-built
+two-tenant scenario in that test:
+
+* tenant 0 "alpha": demand 100, peak 10, shard 50, weight 1, queue cap 2,
+  cost (1.5e6 pJ, 2e6 ns)  → svc = ceil(2000 µs × 100/50) = 4000 µs,
+  arrivals at t = 0, 1000, 2000, 3000, 10000, 20000 µs;
+* tenant 1 "beta": demand 40, peak 4, shard 40, weight 2, queue cap 2,
+  cost (5e5 pJ, 8e5 ns)   → svc = 800 µs,
+  arrivals at t = 0, 100, 200, 300, 400, 500 µs;
+* budget 96 tiles, seed 7.
+
+The queue model, percentile interpolation (util::stats::percentile_sorted),
+3-decimal rounding (f64::round = half away from zero), and the compact
+Json serializer (integral floats print as integers, others as the shortest
+round-trip decimal — identical to Python's repr for these magnitudes) are
+all replicated 1:1. Regenerate with:  python3 gen_serve_multi_metrics.py
+"""
+import math
+import os
+
+
+def svc_us(latency_ns: float, demand: int, shard: int) -> int:
+    inflation = max(demand / shard, 1.0)
+    return max(int(math.ceil(latency_ns * inflation / 1000.0)), 1)
+
+
+def queue(arrivals, svc, cap):
+    inflight, free_at = [], 0
+    admitted, rejected, lats, makespan = 0, 0, [], 0
+    for t in arrivals:
+        inflight = [d for d in inflight if d > t]
+        if len(inflight) >= cap:
+            rejected += 1
+            continue
+        start = max(t, free_at)
+        done = start + svc
+        free_at = done
+        inflight.append(done)
+        admitted += 1
+        lats.append(done - t)
+        makespan = max(makespan, done)
+    return admitted, rejected, lats, makespan
+
+
+def percentile_sorted(sorted_xs, pct):
+    if len(sorted_xs) == 1:
+        return sorted_xs[0]
+    rank = pct / 100.0 * (len(sorted_xs) - 1)
+    lo, hi = math.floor(rank), math.ceil(rank)
+    frac = rank - lo
+    return sorted_xs[lo] + (sorted_xs[hi] - sorted_xs[lo]) * frac
+
+
+def num3(x: float) -> float:
+    # f64::round rounds half away from zero; all our values are >= 0
+    return math.floor(x * 1000.0 + 0.5) / 1000.0
+
+
+def jnum(x: float) -> str:
+    if math.modf(x)[0] == 0.0 and abs(x) < 1e15:
+        return str(int(x))
+    return repr(x)
+
+
+def jstr(s: str) -> str:
+    return '"%s"' % s  # no escapes needed in this scenario
+
+
+def ser(v) -> str:
+    if isinstance(v, str):
+        return jstr(v)
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return jnum(float(v))
+    if isinstance(v, list):
+        return "[" + ",".join(ser(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            f"{jstr(k)}:{ser(v[k])}" for k in sorted(v)
+        ) + "}"
+    raise TypeError(v)
+
+
+def tenant_json(name, weight, demand, peak, shard, cap, energy_pj, latency_ns, arrivals):
+    svc = svc_us(latency_ns, demand, shard)
+    admitted, rejected, lats, makespan = queue(arrivals, svc, cap)
+    s = sorted(float(x) for x in lats)
+    mean = sum(s) / len(s)
+    per_inf_uj = energy_pj / 1e6
+    throughput = admitted / (makespan / 1e6) if makespan > 0 else 0.0
+    return {
+        "admitted": admitted,
+        "demand_tiles": demand,
+        "energy": {"per_inf_uj": num3(per_inf_uj), "total_uj": num3(admitted * per_inf_uj)},
+        "makespan_us": makespan,
+        "name": name,
+        "offered": len(arrivals),
+        "peak_tiles": peak,
+        "queue_cap": cap,
+        "rejected": rejected,
+        "shard_tiles": shard,
+        "svc_us": svc,
+        "virt_latency_us": {
+            "max": num3(s[-1]),
+            "mean": num3(mean),
+            "p50": num3(percentile_sorted(s, 50.0)),
+            "p95": num3(percentile_sorted(s, 95.0)),
+            "p99": num3(percentile_sorted(s, 99.0)),
+        },
+        "virt_throughput_rps": num3(throughput),
+        "weight": weight,
+    }
+
+
+def main():
+    t0 = tenant_json("alpha", 1, 100, 10, 50, 2, 1_500_000.0, 2_000_000.0,
+                     [0, 1000, 2000, 3000, 10000, 20000])
+    t1 = tenant_json("beta", 2, 40, 4, 40, 2, 500_000.0, 800_000.0,
+                     [0, 100, 200, 300, 400, 500])
+    tenants = [t0, t1]
+    admitted = sum(t["admitted"] for t in tenants)
+    makespan = max(t["makespan_us"] for t in tenants)
+    top = {
+        "budget_tiles": 96,
+        "schema": 1,
+        "seed": "0x0000000000000007",
+        "tenants": tenants,
+        "totals": {
+            "admitted": admitted,
+            "makespan_us": makespan,
+            "offered": sum(t["offered"] for t in tenants),
+            "rejected": sum(t["rejected"] for t in tenants),
+            "shard_tiles": sum(t["shard_tiles"] for t in tenants),
+            "virt_throughput_rps": num3(admitted / (makespan / 1e6)),
+        },
+    }
+    out = ser(top) + "\n"
+    path = os.path.join(os.path.dirname(__file__), "serve_multi_metrics.json")
+    with open(path, "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

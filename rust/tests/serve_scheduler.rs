@@ -1,0 +1,239 @@
+//! Multi-tenant serving scheduler integration: shard partitioning over
+//! real zoo mappings, seed-determinism of the load generator and the
+//! per-tenant metrics JSON (across repeated runs AND across thread-pool
+//! sizes, mirroring the Monte Carlo byte-identity guarantee of
+//! `tests/packed_equivalence.rs`), backpressure under a starved tile
+//! budget, and the golden-file schema check for the metrics report.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hcim::config::hardware::HcimConfig;
+use hcim::coordinator::loadgen::{self, LoadGenCfg};
+use hcim::coordinator::scheduler::ShardAssignment;
+use hcim::coordinator::{Scheduler, SchedulerCfg, ShardPlan, TenantSpec};
+use hcim::runtime::Engine;
+use hcim::util::json::Json;
+
+fn specs() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec { model: "resnet20".into(), weight: 1 },
+        TenantSpec { model: "vgg9".into(), weight: 2 },
+    ]
+}
+
+fn tile_floor_and_full(cfg: &HcimConfig) -> (usize, usize) {
+    ShardPlan::bounds(&specs(), cfg).unwrap()
+}
+
+/// Offline stub-engine artifacts (no `make artifacts` needed). Only valid
+/// without the `pjrt` feature — the real backend would try to compile the
+/// (absent) HLO files.
+fn stub_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hcim_serve_scheduler_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"model": "tiny", "mode": "ternary", "image": 4, "classes": 10,
+            "w_bits": 4, "x_bits": 4, "sf_bits": 4, "ps_bits": 8,
+            "xbar_rows": 128, "test_acc": 0.5,
+            "batches": {"1": "model_b1.hlo.txt", "4": "model_b4.hlo.txt"}}"#,
+    )
+    .unwrap();
+    dir
+}
+
+/// One full serving run: partition → cosim pricing → seeded load →
+/// deterministic admission → (optionally) real execution on `workers`
+/// threads → deterministic metrics JSON.
+fn run_once(seed: u64, workers: usize, with_engines: bool) -> String {
+    let cfg = HcimConfig::config_a();
+    let (floor, full) = tile_floor_and_full(&cfg);
+    let budget = floor + (full - floor) / 2;
+    let plan = ShardPlan::partition(&specs(), &cfg, budget).unwrap();
+    let mut sched = Scheduler::new(
+        plan,
+        &cfg,
+        SchedulerCfg { queue_cap: 4, workers, ..SchedulerCfg::default() },
+        seed,
+    );
+    if with_engines {
+        let dir = stub_artifacts("det");
+        for i in 0..sched.tenants.len() {
+            sched.attach_engine(i, Arc::new(Engine::load(&dir).unwrap()));
+        }
+    }
+    let arrivals = loadgen::generate(
+        &LoadGenCfg { seed, requests_per_tenant: 120, mean_gap_us: 120.0 },
+        sched.tenants.len(),
+    );
+    let admitted = sched.plan_admissions(&arrivals);
+    let executed = sched.execute(&admitted).expect("execution must not fail");
+    if with_engines {
+        assert_eq!(executed, admitted.len(), "every admitted request must execute");
+    } else {
+        assert_eq!(executed, 0, "virtual-only run executes nothing");
+    }
+    sched.report().deterministic_json().to_string()
+}
+
+#[test]
+fn metrics_json_is_byte_identical_across_runs_and_pool_sizes() {
+    let with_engines = cfg!(not(feature = "pjrt"));
+    let reference = run_once(1234, 1, with_engines);
+    for workers in [1usize, 2, 8] {
+        let again = run_once(1234, workers, with_engines);
+        assert_eq!(
+            reference, again,
+            "metrics JSON drifted with {workers} pool workers"
+        );
+    }
+    // a different seed must actually change the outcome
+    assert_ne!(reference, run_once(4321, 2, with_engines));
+}
+
+#[test]
+fn loadgen_arrival_sequence_is_seed_deterministic() {
+    let cfg = LoadGenCfg { seed: 77, requests_per_tenant: 300, mean_gap_us: 90.0 };
+    let a = loadgen::generate(&cfg, 3);
+    let b = loadgen::generate(&cfg, 3);
+    assert_eq!(a, b, "same seed must replay the exact arrival sequence");
+    assert_eq!(loadgen::fingerprint(&a), loadgen::fingerprint(&b));
+    let c = loadgen::generate(&LoadGenCfg { seed: 78, ..cfg }, 3);
+    assert_ne!(loadgen::fingerprint(&a), loadgen::fingerprint(&c));
+}
+
+#[test]
+fn two_tenants_make_progress_within_the_tile_budget() {
+    let cfg = HcimConfig::config_a();
+    let (_, full) = tile_floor_and_full(&cfg);
+    let budget = full; // comfortable budget
+    let plan = ShardPlan::partition(&specs(), &cfg, budget).unwrap();
+    assert!(plan.total_shard_tiles() <= budget);
+    let mut sched = Scheduler::new(plan, &cfg, SchedulerCfg::default(), 42);
+    let arrivals = loadgen::generate(
+        &LoadGenCfg { seed: 42, requests_per_tenant: 64, mean_gap_us: 500.0 },
+        2,
+    );
+    sched.plan_admissions(&arrivals);
+    let rep = sched.report();
+    let shard_sum: usize = rep.tenants.iter().map(|t| t.shard_tiles).sum();
+    assert!(shard_sum <= budget, "shards ({shard_sum}) exceed budget ({budget})");
+    for t in &rep.tenants {
+        assert!(t.admitted > 0, "tenant {} admitted nothing", t.name);
+        assert_eq!(t.offered, 64);
+        assert_eq!(t.admitted + t.rejected, t.offered);
+        assert!(t.energy_total_uj > 0.0, "tenant {} booked no energy", t.name);
+    }
+}
+
+#[test]
+fn starved_budget_triggers_backpressure() {
+    let cfg = HcimConfig::config_a();
+    let (floor, full) = tile_floor_and_full(&cfg);
+    let run = |budget: usize| -> (u64, u64) {
+        let plan = ShardPlan::partition(&specs(), &cfg, budget).unwrap();
+        let mut sched = Scheduler::new(
+            plan,
+            &cfg,
+            SchedulerCfg { queue_cap: 2, ..SchedulerCfg::default() },
+            5,
+        );
+        let arrivals = loadgen::generate(
+            // aggressive open-loop load: tiny inter-arrival gap
+            &LoadGenCfg { seed: 5, requests_per_tenant: 200, mean_gap_us: 10.0 },
+            2,
+        );
+        sched.plan_admissions(&arrivals);
+        let rep = sched.report();
+        (
+            rep.tenants.iter().map(|t| t.admitted).sum(),
+            rep.tenants.iter().map(|t| t.rejected).sum(),
+        )
+    };
+    let (adm_floor, rej_floor) = run(floor);
+    let (adm_full, rej_full) = run(full);
+    assert!(rej_floor > 0, "a floor-sized chip under burst load must shed requests");
+    assert!(adm_floor > 0, "backpressure must not starve the tenant entirely");
+    assert!(
+        rej_full <= rej_floor,
+        "more tiles ({rej_full} rejected) must not shed more than the floor ({rej_floor})"
+    );
+    assert!(adm_full >= adm_floor);
+}
+
+/// Golden-file check: the deterministic per-tenant metrics report for a
+/// hand-built two-tenant scenario (fixed shards, fixed per-inference
+/// costs, fixed arrival times — every number checkable by hand; see
+/// tests/golden/gen_serve_multi_metrics.py). Guards the JSON schema:
+/// shard assignment, admission counters, and latency percentile fields
+/// must serialize byte-stably.
+#[test]
+fn report_matches_golden_file() {
+    let plan = ShardPlan {
+        budget_tiles: 96,
+        assignments: vec![
+            ShardAssignment {
+                model: "alpha".into(),
+                weight: 1,
+                demand_tiles: 100,
+                peak_tiles: 10,
+                shard_tiles: 50,
+            },
+            ShardAssignment {
+                model: "beta".into(),
+                weight: 2,
+                demand_tiles: 40,
+                peak_tiles: 4,
+                shard_tiles: 40,
+            },
+        ],
+    };
+    let mut sched = Scheduler::with_costs(
+        plan,
+        &[(1_500_000.0, 2_000_000.0), (500_000.0, 800_000.0)],
+        SchedulerCfg { queue_cap: 2, ..SchedulerCfg::default() },
+        7,
+    );
+    assert_eq!(sched.tenants[0].stats.svc_us, 4000, "2 ms × (100/50) time-multiplex");
+    assert_eq!(sched.tenants[1].stats.svc_us, 800);
+    let mk = |tenant: usize, seq: u64, t_us: u64| loadgen::Arrival {
+        tenant,
+        seq,
+        t_us,
+        image_seed: 1000 * tenant as u64 + seq,
+    };
+    let arrivals = vec![
+        mk(0, 0, 0),
+        mk(1, 0, 0),
+        mk(1, 1, 100),
+        mk(1, 2, 200),
+        mk(1, 3, 300),
+        mk(1, 4, 400),
+        mk(1, 5, 500),
+        mk(0, 1, 1000),
+        mk(0, 2, 2000),
+        mk(0, 3, 3000),
+        mk(0, 4, 10000),
+        mk(0, 5, 20000),
+    ];
+    sched.plan_admissions(&arrivals);
+    let got = format!("{}\n", sched.report().deterministic_json());
+    let golden = include_str!("golden/serve_multi_metrics.json");
+    assert_eq!(
+        got, golden,
+        "metrics JSON drifted from tests/golden/serve_multi_metrics.json \
+         (schema change? regenerate deliberately with gen_serve_multi_metrics.py)"
+    );
+    // and the golden file itself must stay parseable with the key fields
+    let parsed = Json::parse(golden.trim_end()).unwrap();
+    assert_eq!(parsed.num_field("schema").unwrap(), 1.0);
+    let tenants = parsed.get("tenants").and_then(|t| t.as_arr()).unwrap();
+    assert_eq!(tenants[0].num_field("shard_tiles").unwrap(), 50.0);
+    assert_eq!(tenants[0].num_field("admitted").unwrap(), 4.0);
+    assert_eq!(tenants[0].num_field("rejected").unwrap(), 2.0);
+    let lat = tenants[0].get("virt_latency_us").unwrap();
+    assert_eq!(lat.num_field("p50").unwrap(), 4000.0);
+    assert_eq!(lat.num_field("p95").unwrap(), 6550.0);
+    assert_eq!(lat.num_field("p99").unwrap(), 6910.0);
+}

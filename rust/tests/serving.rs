@@ -122,7 +122,7 @@ fn server_round_trip_with_cosim() {
         let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
         server.submit(img);
     }
-    let responses = server.collect(n);
+    let responses = server.collect(n).expect("workers must stay alive");
     assert_eq!(responses.len(), n);
     for r in &responses {
         assert!(r.class < classes);
@@ -132,4 +132,47 @@ fn server_round_trip_with_cosim() {
     let snap = metrics.snapshot();
     assert_eq!(snap.requests as usize, n);
     assert!(snap.sim_energy_uj_per_inf > 0.0, "co-sim energy must be booked");
+}
+
+/// A worker dying (or dropping a request) mid-flight must surface as a
+/// clean `Err` from `collect`, never the old `expect("workers died")`
+/// process abort. Uses the offline stub engine so no artifacts are
+/// needed: a wrong-length image either panics the worker (debug asserts)
+/// or makes the engine reject the batch without a response (release) —
+/// both must resolve to an error within the timeout.
+#[test]
+fn dead_or_silent_worker_is_an_error_not_a_panic() {
+    if cfg!(feature = "pjrt") {
+        eprintln!("(skipping: stub-engine scenario)");
+        return;
+    }
+    let dir = std::env::temp_dir().join("hcim_serving_worker_death");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"model": "tiny", "mode": "ternary", "image": 4, "classes": 10,
+            "w_bits": 4, "x_bits": 4, "sf_bits": 4, "ps_bits": 8,
+            "xbar_rows": 128, "test_acc": 0.5,
+            "batches": {"1": "model_b1.hlo.txt", "4": "model_b4.hlo.txt"}}"#,
+    )
+    .unwrap();
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let elems = engine.manifest.input_elems();
+    let mut server = Server::start(
+        engine,
+        ServerConfig {
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            workers: 1,
+        },
+    );
+    server.submit(vec![0.5f32; elems + 3]); // malformed request
+    let err = server
+        .collect_timeout(1, Duration::from_millis(800))
+        .expect_err("a lost request must not hang or abort");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("workers died") || msg.contains("timed out"),
+        "unexpected error: {msg}"
+    );
 }
