@@ -27,6 +27,7 @@ use hcim::sim::params::CalibParams;
 use hcim::sim::simulator::{Arch, Simulator};
 use hcim::sim::tech::TechNode;
 use hcim::sim::tile::dcim_geometry;
+use hcim::timeline::{TimelineCfg, TimelineModel};
 use hcim::util::bench::{black_box, Bencher};
 use hcim::util::json::Json;
 use hcim::util::rng::Rng;
@@ -120,6 +121,20 @@ fn main() {
     let g18 = zoo::resnet18();
     b.bench("simulate resnet18 (HCiM, imagenet cfg)", || {
         black_box(sim.run(&g18, &Arch::Hcim(HcimConfig::imagenet())));
+    });
+
+    // ---- discrete-event timeline schedule (the `hcim timeline` unit) ----
+    let tl_model = TimelineModel::from_graph(
+        &g,
+        &Arch::Hcim(cfg.clone()),
+        &sim.params,
+        &sim.sparsity,
+        None,
+    )
+    .expect("unbudgeted timeline build cannot fail");
+    let tl_cfg = TimelineCfg { batch: 4, chunks: 8, trace: false };
+    b.bench("timeline_schedule resnet20 (batch 4, DES)", || {
+        black_box(hcim::timeline::simulate(&tl_model, &tl_cfg).makespan_ns);
     });
 
     // ---- coordinator: batcher throughput ----

@@ -52,4 +52,7 @@ fn main() {
     timed("ablation: ADC precision sweep", || {
         experiments::ablation_adc_precision_sweep(&sim).render()
     });
+    timed("timeline: utilization vs batch", || {
+        experiments::timeline_utilization_sweep().render()
+    });
 }

@@ -54,29 +54,40 @@ impl Args {
         self.flag(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.flag(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// `--name` as usize, `default` when absent. A present-but-malformed
+    /// value is an **error**, never a silent fallback — `--workers x`
+    /// must not quietly become `--workers 2`.
+    pub fn usize_or(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: invalid value `{v}` (expected an unsigned integer)")
+            }),
+        }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.flag(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// `--name` as f64, `default` when absent; malformed values error.
+    pub fn f64_or(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: invalid value `{v}` (expected a number)")
+            }),
+        }
     }
 
-    /// Seed-style flag: decimal or `0x`-prefixed hex.
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.flag(name)
-            .and_then(|v| {
-                if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
-                    u64::from_str_radix(hex, 16).ok()
-                } else {
-                    v.parse().ok()
-                }
-            })
-            .unwrap_or(default)
+    /// Seed-style flag: decimal or `0x`-prefixed hex, `default` when
+    /// absent; malformed values error.
+    pub fn u64_or(&self, name: &str, default: u64) -> crate::Result<u64> {
+        let Some(v) = self.flag(name) else { return Ok(default) };
+        let parsed = if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+            u64::from_str_radix(hex, 16).ok()
+        } else {
+            v.parse().ok()
+        };
+        parsed.ok_or_else(|| {
+            anyhow::anyhow!("--{name}: invalid value `{v}` (expected decimal or 0x-hex u64)")
+        })
     }
 
     pub fn has(&self, switch: &str) -> bool {
@@ -111,6 +122,11 @@ COMMANDS:
                 --format table|json   json prints ONLY the seed-deterministic
                                  metrics (byte-identical across runs/pool sizes)
                 --out FILE       also write the full report (incl. wall-clock)
+                --timeline       price each tenant's service time with the
+                                 discrete-event timeline on its shard (weight-
+                                 reprogramming rounds replace the analytical
+                                 demand/shard inflation) and report per-
+                                 component utilization in the metrics JSON
               admission, virtual latencies, and energy attribution are
               deterministic from --seed; real execution on the shared pool
               additionally runs when --artifacts has a manifest
@@ -146,6 +162,22 @@ COMMANDS:
                                  measured flip rate must be exactly 0)
                 --format table|json|csv   stdout format (default table)
                 --out DIR        also write robustness.{json,csv}
+  timeline    deterministic discrete-event chip timeline: per-layer tile
+              tasks pipelined onto crossbar tiles, the DCiM array, and the
+              mesh NoC (makespan, utilization, link contention)
+                --model NAME     zoo model (default resnet20)
+                --config A|B|imagenet   --node 65nm|32nm|22nm
+                --arch hcim|binary|adc7|adc6|adc4|quarry1|quarry4|bitsplit
+                --batch N        images scheduled concurrently (default 1)
+                --chunks N       pipelining chunks per layer (default 8)
+                --tiles N        optional crossbar-tile budget: layers time-
+                                 multiplex in weight-reprogramming rounds
+                --sparsity FILE  measured sparsity table
+                --format table|json|csv   stdout format (default table);
+                                 json/csv are byte-identical across runs
+                --out DIR        also write timeline.{json,csv}
+                --vcd FILE       Gantt-style VCD trace (one signal per
+                                 resource; open in GTKWave)
   info        show a model's crossbar mapping (Eq. 2 bookkeeping)
                 --model NAME --config A|B
   help        this message
@@ -172,21 +204,39 @@ mod tests {
     #[test]
     fn typed_accessors_with_defaults() {
         let a = parse(&["serve", "--requests", "64", "--rate", "1.5"]);
-        assert_eq!(a.usize_or("requests", 1), 64);
-        assert_eq!(a.usize_or("missing", 7), 7);
-        assert!((a.f64_or("rate", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(a.usize_or("requests", 1).unwrap(), 64);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("rate", 0.0).unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(a.f64_or("absent", 2.5).unwrap(), 2.5);
     }
 
     #[test]
     fn seed_flag_accepts_decimal_and_hex() {
         let a = parse(&["robustness", "--seed", "12345"]);
-        assert_eq!(a.u64_or("seed", 0), 12345);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 12345);
         let b = parse(&["robustness", "--seed", "0xDEADBEEF"]);
-        assert_eq!(b.u64_or("seed", 0), 0xDEADBEEF);
+        assert_eq!(b.u64_or("seed", 0).unwrap(), 0xDEADBEEF);
         let c = parse(&["robustness"]);
-        assert_eq!(c.u64_or("seed", 42), 42);
-        let d = parse(&["robustness", "--seed", "not-a-number"]);
-        assert_eq!(d.u64_or("seed", 42), 42);
+        assert_eq!(c.u64_or("seed", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn malformed_numeric_flags_are_errors_not_defaults() {
+        // the regression: `--seed not-a-number` used to silently fall
+        // back to the default, hiding the typo from the user
+        let a = parse(&["robustness", "--seed", "not-a-number"]);
+        let err = a.u64_or("seed", 42).unwrap_err().to_string();
+        assert!(err.contains("--seed") && err.contains("not-a-number"), "{err}");
+
+        let b = parse(&["serve", "--requests", "12x", "--gap-us", "fast", "--tiles", "-3"]);
+        assert!(b.usize_or("requests", 64).is_err());
+        assert!(b.f64_or("gap-us", 500.0).is_err());
+        assert!(b.usize_or("tiles", 0).is_err(), "negative values must not parse as usize");
+
+        let c = parse(&["robustness", "--seed", "0xZZ"]);
+        assert!(c.u64_or("seed", 42).is_err(), "bad hex digits must error");
+        let d = parse(&["serve", "--rate", "1.5.2"]);
+        assert!(d.f64_or("rate", 0.0).is_err());
     }
 
     #[test]

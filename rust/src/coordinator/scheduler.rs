@@ -44,7 +44,8 @@ use crate::model::zoo;
 use crate::runtime::Engine;
 use crate::sim::mapping::ModelMapping;
 use crate::sim::simulator::{Arch, Simulator};
-use crate::util::json::Json;
+use crate::timeline::{self, ClassUtil, TimelineCfg, TimelineModel};
+use crate::util::json::{num3, Json};
 use crate::util::stats::percentile_sorted;
 use crate::util::table::Table;
 use crate::util::threadpool::ThreadPool;
@@ -271,6 +272,9 @@ pub struct TenantStats {
     /// Co-simulated cost of one inference (CostLedger totals).
     pub energy_pj_per_inf: f64,
     pub latency_ns_per_inf: f64,
+    /// Per-component shard utilization from the discrete-event timeline
+    /// run that priced the service time (None = analytic mode).
+    pub util: Option<ClassUtil>,
 }
 
 /// One tenant: its shard, deterministic stats, and the real serving lane
@@ -284,18 +288,36 @@ pub struct Tenant {
 }
 
 impl Tenant {
+    /// Analytic pricing: the service time is the co-simulated inference
+    /// latency inflated by `demand/shard` (layer time-multiplexing).
     fn build(
         assignment: ShardAssignment,
         energy_pj: f64,
         latency_ns: f64,
         cfg: &SchedulerCfg,
     ) -> Tenant {
-        let svc_us = ((latency_ns * assignment.inflation()) / 1000.0).ceil().max(1.0) as u64;
+        let svc_ns = latency_ns * assignment.inflation();
+        Tenant::build_priced(assignment, energy_pj, latency_ns, svc_ns, cfg, None)
+    }
+
+    /// Direct pricing: `svc_ns` is already the shard's end-to-end service
+    /// time (the timeline makespan includes reprogramming rounds, so no
+    /// further inflation applies).
+    fn build_priced(
+        assignment: ShardAssignment,
+        energy_pj: f64,
+        latency_ns: f64,
+        svc_ns: f64,
+        cfg: &SchedulerCfg,
+        util: Option<ClassUtil>,
+    ) -> Tenant {
+        let svc_us = (svc_ns / 1000.0).ceil().max(1.0) as u64;
         let stats = TenantStats {
             svc_us,
             queue_cap: cfg.queue_cap.max(1),
             energy_pj_per_inf: energy_pj,
             latency_ns_per_inf: latency_ns,
+            util,
             ..TenantStats::default()
         };
         Tenant {
@@ -334,6 +356,49 @@ impl Scheduler {
             })
             .collect();
         Scheduler::with_costs(plan, &costs, cfg, seed)
+    }
+
+    /// Build with the discrete-event timeline as the service-time source:
+    /// each tenant's per-inference service time is the scheduled makespan
+    /// of one image on its *shard* (tile budget = `shard_tiles`, so a
+    /// shard below full residency pays weight-reprogramming rounds
+    /// instead of the analytical `demand/shard` inflation), its energy is
+    /// the timeline's event ledger, and the per-component utilization of
+    /// the pricing run lands in the metrics JSON. Deterministic: the
+    /// timeline is a pure function of the plan and the hardware config.
+    pub fn new_with_timeline(
+        plan: ShardPlan,
+        hw: &HcimConfig,
+        cfg: SchedulerCfg,
+        seed: u64,
+    ) -> crate::Result<Scheduler> {
+        let sim = Simulator::new(hw.node);
+        let budget_tiles = plan.budget_tiles;
+        let tl_cfg = TimelineCfg { batch: 1, chunks: 8, trace: false };
+        let mut tenants = Vec::with_capacity(plan.assignments.len());
+        for a in plan.assignments {
+            let graph = zoo::by_name(&a.model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model `{}`", a.model))?;
+            // shard_tiles ≥ peak_tiles by ShardPlan construction, so the
+            // budgeted model build cannot reject the shard
+            let model = TimelineModel::from_graph(
+                &graph,
+                &Arch::Hcim(hw.clone()),
+                &sim.params,
+                &sim.sparsity,
+                Some(a.shard_tiles.max(a.peak_tiles.max(1))),
+            )?;
+            let rep = timeline::simulate(&model, &tl_cfg);
+            tenants.push(Tenant::build_priced(
+                a,
+                rep.ledger.total_energy_pj(),
+                rep.makespan_ns,
+                rep.makespan_ns,
+                &cfg,
+                Some(rep.util),
+            ));
+        }
+        Ok(Scheduler { cfg, seed, budget_tiles, tenants })
     }
 
     /// Build with per-inference `(energy_pj, latency_ns)` costs injected
@@ -568,6 +633,7 @@ impl Scheduler {
                     virt_throughput_rps,
                     energy_per_inf_uj,
                     energy_total_uj: t.stats.admitted as f64 * energy_per_inf_uj,
+                    util: t.stats.util,
                     wall: if wall.requests > 0 { Some(wall) } else { None },
                 }
             })
@@ -598,6 +664,10 @@ pub struct TenantReport {
     pub virt_throughput_rps: f64,
     pub energy_per_inf_uj: f64,
     pub energy_total_uj: f64,
+    /// Per-component shard utilization from the timeline pricing run
+    /// (None in analytic mode). Deterministic, so it joins the metrics
+    /// JSON.
+    pub util: Option<ClassUtil>,
     /// Wall-clock snapshot from the real execution pass (None when the run
     /// was virtual-only). Excluded from the deterministic JSON.
     pub wall: Option<Snapshot>,
@@ -611,13 +681,6 @@ pub struct ServeReport {
     pub seed: u64,
     pub budget_tiles: usize,
     pub tenants: Vec<TenantReport>,
-}
-
-/// Fixed 3-decimal rounding before serialization so derived floats
-/// (percentiles, rates, energies) print byte-stably and stay
-/// hand-checkable in the golden file.
-fn num3(x: f64) -> Json {
-    Json::Num((x * 1000.0).round() / 1000.0)
 }
 
 impl ServeReport {
@@ -643,6 +706,14 @@ impl ServeReport {
         o.insert("rejected".to_string(), Json::Num(t.rejected as f64));
         o.insert("shard_tiles".to_string(), Json::Num(t.shard_tiles as f64));
         o.insert("svc_us".to_string(), Json::Num(t.svc_us as f64));
+        if let Some(u) = &t.util {
+            let mut util = BTreeMap::new();
+            util.insert("dcim".to_string(), num3(u.dcim));
+            util.insert("noc".to_string(), num3(u.noc));
+            util.insert("offchip".to_string(), num3(u.offchip));
+            util.insert("xbar".to_string(), num3(u.xbar));
+            o.insert("util".to_string(), Json::Obj(util));
+        }
         o.insert("virt_latency_us".to_string(), Json::Obj(lat));
         o.insert("virt_throughput_rps".to_string(), num3(t.virt_throughput_rps));
         o.insert("weight".to_string(), Json::Num(t.weight as f64));
@@ -951,6 +1022,43 @@ mod tests {
         assert_eq!(full.get("wall").and_then(|w| w.as_arr()).unwrap().len(), 1);
         // table renders without panicking
         let _ = rep.table().render();
+    }
+
+    #[test]
+    fn timeline_service_model_is_deterministic_and_reports_util() {
+        let cfg = HcimConfig::config_a();
+        let sp = specs(&[("resnet20", 1), ("vgg9", 1)]);
+        let (floor, full) = ShardPlan::bounds(&sp, &cfg).unwrap();
+        let budget = floor + (full - floor) / 2;
+        let mk = || {
+            let plan = ShardPlan::partition(&sp, &cfg, budget).unwrap();
+            Scheduler::new_with_timeline(plan, &cfg, SchedulerCfg::default(), 7).unwrap()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.stats.svc_us, tb.stats.svc_us, "timeline pricing must be pure");
+            assert!(ta.stats.svc_us >= 1);
+            let u = ta.stats.util.expect("timeline mode must report utilization");
+            assert!(u.xbar > 0.0 && u.xbar <= 1.0, "xbar util {} out of range", u.xbar);
+            assert!((0.0..=1.0).contains(&u.dcim));
+            assert!((0.0..=1.0).contains(&u.noc));
+        }
+        let arrivals = loadgen::generate(
+            &loadgen::LoadGenCfg { seed: 7, requests_per_tenant: 64, mean_gap_us: 200.0 },
+            2,
+        );
+        a.plan_admissions(&arrivals);
+        b.plan_admissions(&arrivals);
+        let ja = a.report().deterministic_json().to_string();
+        assert_eq!(ja, b.report().deterministic_json().to_string());
+        assert!(ja.contains("\"util\""), "metrics JSON must carry the utilization block");
+
+        // analytic mode must NOT gain the util key (golden-file stability)
+        let plan = ShardPlan::partition(&sp, &cfg, budget).unwrap();
+        let mut c = Scheduler::new(plan, &cfg, SchedulerCfg::default(), 7);
+        c.plan_admissions(&arrivals);
+        assert!(!c.report().deterministic_json().to_string().contains("\"util\""));
     }
 
     #[test]

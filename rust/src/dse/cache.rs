@@ -13,17 +13,28 @@ use std::path::{Path, PathBuf};
 use crate::util::json::Json;
 
 /// Bump when the cost model changes in a way that invalidates old entries.
-/// (v2: entries optionally carry a robustness objective.)
-pub const CACHE_SCHEMA: &str = "hcim-dse-v2";
+/// (v2: entries optionally carry a robustness objective. v3: every entry
+/// carries the discrete-event timeline columns — batch-4 throughput and
+/// peak component utilization.)
+pub const CACHE_SCHEMA: &str = "hcim-dse-v3";
 
 pub use crate::util::hash::fnv1a64;
 
-/// The simulated metrics of one design point (the Pareto objectives).
+/// The simulated metrics of one design point (the Pareto objectives plus
+/// the timeline report columns).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PointMetrics {
     pub energy_pj: f64,
     pub latency_ns: f64,
     pub area_mm2: f64,
+    /// Scheduled-timeline throughput (images/s at the runner's reference
+    /// batch) — how fast the point actually runs once pipelining, batch
+    /// overlap, and NoC contention are modeled.
+    pub throughput_ips: f64,
+    /// Peak component utilization of the same timeline run (the
+    /// bottleneck class: crossbar tiles, DCiM arrays, mesh links, or the
+    /// off-chip channel).
+    pub peak_util: f64,
     /// Mean Monte Carlo PSQ-code flip rate under the node's default
     /// non-ideality magnitudes; present only when the sweep ran with
     /// robustness enabled.
@@ -100,11 +111,13 @@ impl ResultCache {
         }
         let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) else { return };
         for e in entries {
-            let (Some(key), Ok(energy), Ok(latency), Ok(area)) = (
+            let (Some(key), Ok(energy), Ok(latency), Ok(area), Ok(throughput), Ok(peak)) = (
                 e.get("key").and_then(|k| k.as_str()),
                 e.num_field("energy_pj"),
                 e.num_field("latency_ns"),
                 e.num_field("area_mm2"),
+                e.num_field("throughput_ips"),
+                e.num_field("peak_util"),
             ) else {
                 continue;
             };
@@ -117,6 +130,8 @@ impl ResultCache {
                         energy_pj: energy,
                         latency_ns: latency,
                         area_mm2: area,
+                        throughput_ips: throughput,
+                        peak_util: peak,
                         robustness,
                     },
                 },
@@ -166,6 +181,8 @@ impl ResultCache {
                 m.insert("energy_pj".to_string(), Json::Num(e.metrics.energy_pj));
                 m.insert("latency_ns".to_string(), Json::Num(e.metrics.latency_ns));
                 m.insert("area_mm2".to_string(), Json::Num(e.metrics.area_mm2));
+                m.insert("throughput_ips".to_string(), Json::Num(e.metrics.throughput_ips));
+                m.insert("peak_util".to_string(), Json::Num(e.metrics.peak_util));
                 if let Some(r) = e.metrics.robustness {
                     m.insert("robustness".to_string(), Json::Num(r));
                 }
@@ -198,7 +215,14 @@ mod tests {
     use super::*;
 
     fn metrics(e: f64) -> PointMetrics {
-        PointMetrics { energy_pj: e, latency_ns: 2.0 * e, area_mm2: 0.5, robustness: None }
+        PointMetrics {
+            energy_pj: e,
+            latency_ns: 2.0 * e,
+            area_mm2: 0.5,
+            throughput_ips: 100.0 * e,
+            peak_util: 0.75,
+            robustness: None,
+        }
     }
 
     #[test]
@@ -250,8 +274,34 @@ mod tests {
     }
 
     #[test]
+    fn entries_without_timeline_columns_are_skipped() {
+        // a pre-v3 style entry (no throughput/peak-util) must not load —
+        // its slot re-simulates instead of reporting zeros
+        let dir = std::env::temp_dir().join("hcim_dse_cache_no_timeline");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"schema":"{CACHE_SCHEMA}","entries":[{{"key":"p1","energy_pj":1,"latency_ns":2,"area_mm2":3}}]}}"#
+            ),
+        )
+        .unwrap();
+        let mut c = ResultCache::at_path(&path);
+        assert!(c.lookup("p1").is_none(), "column-stripped entry must miss");
+    }
+
+    #[test]
     fn metrics_derived_quantities() {
-        let m = PointMetrics { energy_pj: 2.0, latency_ns: 3.0, area_mm2: 4.0, robustness: None };
+        let m = PointMetrics {
+            energy_pj: 2.0,
+            latency_ns: 3.0,
+            area_mm2: 4.0,
+            throughput_ips: 50.0,
+            peak_util: 0.9,
+            robustness: None,
+        };
         assert_eq!(m.latency_area(), 12.0);
         assert_eq!(m.edap(), 24.0);
         assert_eq!(m.objectives(), [2.0, 3.0, 4.0]);

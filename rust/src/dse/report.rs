@@ -93,7 +93,7 @@ impl SweepReport {
         let with_rob = self.has_robustness();
         let mut headers = vec![
             "Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
-            "Latency (µs)", "Area (mm²)", "EDAP",
+            "Latency (µs)", "Area (mm²)", "EDAP", "img/s", "Peak util",
         ];
         if with_rob {
             headers.push("Flip rate");
@@ -113,6 +113,8 @@ impl SweepReport {
                 fnum(m.latency_ns / 1e3),
                 format!("{:.4}", m.area_mm2),
                 format!("{:.3e}", m.edap()),
+                fnum(m.throughput_ips),
+                format!("{:.2}", m.peak_util),
             ];
             if with_rob {
                 cells.push(Self::fmt_robustness(m));
@@ -181,6 +183,8 @@ impl SweepReport {
                 o.insert("latency_ns".into(), Json::Num(m.latency_ns));
                 o.insert("area_mm2".into(), Json::Num(m.area_mm2));
                 o.insert("edap".into(), Json::Num(m.edap()));
+                o.insert("throughput_ips".into(), Json::Num(m.throughput_ips));
+                o.insert("peak_util".into(), Json::Num(m.peak_util));
                 if let Some(r) = m.robustness {
                     o.insert("robustness".into(), Json::Num(r));
                 }
@@ -212,13 +216,14 @@ impl SweepReport {
     /// did not measure it).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,robustness,pareto,cached\n",
+            "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,\
+             throughput_ips,peak_util,robustness,pareto,cached\n",
         );
         for row in &self.rows {
             let p = &row.result.point;
             let m = &row.result.metrics;
             out.push_str(&format!(
-                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{},{},{}\n",
+                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{:.3},{:.6},{},{},{}\n",
                 p.workload,
                 p.arch.key(),
                 p.xbar.rows,
@@ -228,6 +233,8 @@ impl SweepReport {
                 m.latency_ns,
                 m.area_mm2,
                 m.edap(),
+                m.throughput_ips,
+                m.peak_util,
                 m.robustness.map(|r| format!("{r:.6}")).unwrap_or_default(),
                 row.pareto,
                 row.result.cached,
@@ -266,7 +273,14 @@ mod tests {
                 node: TechNode::N32,
                 arch,
             },
-            metrics: PointMetrics { energy_pj: e, latency_ns: l, area_mm2: a, robustness: rob },
+            metrics: PointMetrics {
+                energy_pj: e,
+                latency_ns: l,
+                area_mm2: a,
+                throughput_ips: 1000.0 / l,
+                peak_util: 0.8,
+                robustness: rob,
+            },
             cached: false,
         }
     }

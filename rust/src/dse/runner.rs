@@ -14,7 +14,13 @@ use crate::dse::space::{DesignPoint, DesignSpace};
 use crate::model::zoo;
 use crate::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
 use crate::sim::simulator::{Simulator, SparsityTable};
+use crate::timeline::{self, TimelineCfg, TimelineModel};
 use crate::util::threadpool::ThreadPool;
+
+/// Reference batch size for the timeline throughput/utilization columns
+/// every design point carries (images scheduled concurrently by the
+/// discrete-event engine when pricing the point's real-world throughput).
+pub const TIMELINE_BATCH: usize = 4;
 
 /// Configuration of the optional robustness objective: when attached to a
 /// [`SweepRunner`], every design point additionally runs a small Monte
@@ -202,6 +208,17 @@ fn simulate_point(
     let graph = zoo::by_name(&point.workload).expect("workload validated before dispatch");
     let sim = Simulator::new(point.node).with_sparsity(sparsity.clone());
     let report = sim.run(&graph, &point.arch());
+    // every point also runs the discrete-event timeline once (a few
+    // hundred chunk tasks — negligible next to the analytic pricing) so
+    // the sweep reports scheduled throughput and the bottleneck
+    // component's utilization, not just the serial-latency abstraction
+    let tl_model =
+        TimelineModel::from_graph(&graph, &point.arch(), &sim.params, &sim.sparsity, None)
+            .expect("unbudgeted timeline build cannot fail");
+    let tl = timeline::simulate(
+        &tl_model,
+        &TimelineCfg { batch: TIMELINE_BATCH, chunks: 8, trace: false },
+    );
     let robustness = robustness.map(|rc| {
         let cfg = point.arch().config().clone();
         let mut ni = NonIdealityParams::default_for(point.node);
@@ -217,6 +234,8 @@ fn simulate_point(
         energy_pj: report.energy_pj(),
         latency_ns: report.latency_ns(),
         area_mm2: report.area_mm2(),
+        throughput_ips: tl.throughput_ips,
+        peak_util: tl.peak_util(),
         robustness,
     }
 }
@@ -249,6 +268,12 @@ mod tests {
             assert!(p.metrics.energy_pj > 0.0);
             assert!(p.metrics.latency_ns > 0.0);
             assert!(p.metrics.area_mm2 > 0.0);
+            assert!(p.metrics.throughput_ips > 0.0, "timeline throughput column missing");
+            assert!(
+                p.metrics.peak_util > 0.0 && p.metrics.peak_util <= 1.0 + 1e-9,
+                "peak util {} out of range",
+                p.metrics.peak_util
+            );
         }
         // the ADC baseline costs more energy than ternary HCiM (Fig. 6)
         assert!(r.points[1].metrics.energy_pj > r.points[0].metrics.energy_pj);

@@ -591,6 +591,77 @@ pub fn serving_contention_sweep() -> Table {
     t
 }
 
+/// One row of the timeline utilization sweep.
+#[derive(Clone, Debug)]
+pub struct TimelineSweepRow {
+    pub model: String,
+    pub batch: usize,
+    pub makespan_us: f64,
+    pub serial_us: f64,
+    pub throughput_ips: f64,
+    pub xbar_util: f64,
+    pub dcim_util: f64,
+    pub noc_util: f64,
+    pub speedup: f64,
+}
+
+/// Discrete-event timeline across the CIFAR zoo at batch {1, 4, 16}
+/// (config A, 32 nm): scheduled makespan, throughput, and per-component
+/// utilization — the numbers the analytical simulator cannot see
+/// (EXPERIMENTS.md §Timeline). Entirely virtual-time and deterministic.
+pub fn timeline_utilization_sweep_rows() -> Vec<TimelineSweepRow> {
+    use crate::timeline::{simulate, TimelineCfg, TimelineModel};
+
+    let arch = Arch::Hcim(HcimConfig::config_a());
+    let params = CalibParams::at_65nm().rescaled(TechNode::N32);
+    let sparsity = SparsityTable::paper_default();
+    let mut rows = Vec::new();
+    for g in zoo::cifar_suite() {
+        let model = TimelineModel::from_graph(&g, &arch, &params, &sparsity, None)
+            .expect("unbudgeted timeline build cannot fail");
+        for batch in [1usize, 4, 16] {
+            let rep = simulate(&model, &TimelineCfg { batch, chunks: 8, trace: false });
+            rows.push(TimelineSweepRow {
+                model: g.name.clone(),
+                batch,
+                makespan_us: rep.makespan_ns / 1e3,
+                serial_us: rep.serial_ns / 1e3,
+                throughput_ips: rep.throughput_ips,
+                xbar_util: rep.util.xbar,
+                dcim_util: rep.util.dcim,
+                noc_util: rep.util.noc,
+                speedup: rep.speedup,
+            });
+        }
+    }
+    rows
+}
+
+/// Tabled form of [`timeline_utilization_sweep_rows`].
+pub fn timeline_utilization_sweep() -> Table {
+    let mut t = Table::new(
+        "Timeline — scheduled makespan & utilization vs batch (config A, 32 nm)",
+        &[
+            "Model", "Batch", "Makespan (µs)", "Serial (µs)", "img/s", "Xbar util",
+            "DCiM util", "NoC util", "Speedup",
+        ],
+    );
+    for r in timeline_utilization_sweep_rows() {
+        t.row(&[
+            r.model,
+            r.batch.to_string(),
+            fnum(r.makespan_us),
+            fnum(r.serial_us),
+            fnum(r.throughput_ips),
+            format!("{:.1}%", 100.0 * r.xbar_util),
+            format!("{:.1}%", 100.0 * r.dcim_util),
+            format!("{:.1}%", 100.0 * r.noc_util),
+            format!("{:.2}×", r.speedup),
+        ]);
+    }
+    t
+}
+
 /// Reports used by EXPERIMENTS.md: run everything and also return the raw
 /// SimReports for the headline claims.
 pub fn headline_reports(sim: &Simulator) -> Vec<SimReport> {
@@ -736,6 +807,46 @@ mod tests {
             assert_eq!(a.rejected, b.rejected);
         }
         assert!(serving_contention_sweep().render().contains("resnet20"));
+    }
+
+    #[test]
+    fn timeline_sweep_shape() {
+        let rows = timeline_utilization_sweep_rows();
+        assert_eq!(rows.len(), zoo::cifar_suite().len() * 3);
+        for r in &rows {
+            assert!(r.makespan_us > 0.0, "{} b{}: empty makespan", r.model, r.batch);
+            assert!(
+                r.makespan_us <= r.serial_us + 1e-9,
+                "{} b{}: pipelined {} exceeds serial {}",
+                r.model,
+                r.batch,
+                r.makespan_us,
+                r.serial_us
+            );
+            for u in [r.xbar_util, r.dcim_util, r.noc_util] {
+                assert!((0.0..=1.0 + 1e-9).contains(&u), "{}: util {u}", r.model);
+            }
+        }
+        // batching amortizes: for every model, batch 16 beats batch 1 on
+        // throughput and tile utilization
+        for chunk in rows.chunks(3) {
+            let (b1, b16) = (&chunk[0], &chunk[2]);
+            assert_eq!(b1.batch, 1);
+            assert_eq!(b16.batch, 16);
+            assert!(
+                b16.throughput_ips > b1.throughput_ips,
+                "{}: batch 16 must outrun batch 1",
+                b1.model
+            );
+            assert!(b16.xbar_util >= b1.xbar_util, "{}: util must not drop", b1.model);
+        }
+        // determinism: a second sweep reproduces the same numbers
+        let again = timeline_utilization_sweep_rows();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+            assert_eq!(a.throughput_ips.to_bits(), b.throughput_ips.to_bits());
+        }
+        assert!(timeline_utilization_sweep().render().contains("resnet20"));
     }
 
     #[test]

@@ -35,12 +35,17 @@
 //!   stuck-at faults, IR drop, comparator offset) injected into the
 //!   functional PSQ path, with a parallel Monte Carlo robustness harness
 //!   (`hcim robustness`).
+//! * [`timeline`] — deterministic discrete-event chip timeline: per-layer
+//!   tile tasks scheduled onto finite crossbar/DCiM/mesh resources with
+//!   pipelining, batch overlap, and link contention (`hcim timeline`,
+//!   the DSE throughput/utilization columns, `hcim serve --timeline`).
 
 pub mod util;
 pub mod config;
 pub mod quant;
 pub mod model;
 pub mod sim;
+pub mod timeline;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;

@@ -20,6 +20,7 @@ use hcim::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
 use hcim::runtime::Engine;
 use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
 use hcim::sim::tech::TechNode;
+use hcim::timeline::{self, TimelineCfg, TimelineModel};
 use hcim::util::rng::Rng;
 
 fn main() {
@@ -36,6 +37,7 @@ fn main() {
         "tables" => cmd_tables(&args),
         "dse" => cmd_dse(&args),
         "robustness" => cmd_robustness(&args),
+        "timeline" => cmd_timeline(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -71,6 +73,22 @@ fn config_from(args: &Args) -> HcimConfig {
     }
 }
 
+/// Resolve the `--arch` flag against a hardware config (shared by
+/// `simulate` and `timeline`).
+fn arch_from(args: &Args, cfg: HcimConfig) -> hcim::Result<Arch> {
+    Ok(match args.flag_or("arch", "hcim") {
+        "hcim" | "ternary" => Arch::Hcim(cfg),
+        "binary" => Arch::Hcim(cfg.binary()),
+        "adc7" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar7),
+        "adc6" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar6),
+        "adc4" => Arch::AdcBaseline(cfg, BaselineKind::AdcFlash4),
+        "quarry1" => Arch::Quarry(cfg, 1),
+        "quarry4" => Arch::Quarry(cfg, 4),
+        "bitsplit" => Arch::BitSplitNet(cfg),
+        other => anyhow::bail!("unknown arch `{other}`"),
+    })
+}
+
 fn cmd_simulate(args: &Args) -> hcim::Result<()> {
     let model = args.flag_or("model", "resnet20");
     let graph = zoo::by_name(model)
@@ -82,17 +100,7 @@ fn cmd_simulate(args: &Args) -> hcim::Result<()> {
     if let Some(path) = args.flag("sparsity") {
         sim = sim.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
     }
-    let arch = match args.flag_or("arch", "hcim") {
-        "hcim" | "ternary" => Arch::Hcim(cfg),
-        "binary" => Arch::Hcim(cfg.binary()),
-        "adc7" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar7),
-        "adc6" => Arch::AdcBaseline(cfg, BaselineKind::AdcSar6),
-        "adc4" => Arch::AdcBaseline(cfg, BaselineKind::AdcFlash4),
-        "quarry1" => Arch::Quarry(cfg, 1),
-        "quarry4" => Arch::Quarry(cfg, 4),
-        "bitsplit" => Arch::BitSplitNet(cfg),
-        other => anyhow::bail!("unknown arch `{other}`"),
-    };
+    let arch = arch_from(args, cfg)?;
     let report = sim.run(&graph, &arch);
     println!("model={} arch={}", report.model, report.arch);
     println!("{}", report.ledger);
@@ -117,11 +125,11 @@ fn cmd_serve(args: &Args) -> hcim::Result<()> {
         "serving {} ({}, {}x{}x3, {} classes, exported acc {:.3})",
         m.model, m.mode, m.image, m.image, m.classes, m.test_acc
     );
-    let requests = args.usize_or("requests", 64);
+    let requests = args.usize_or("requests", 64)?;
     let scfg = ServerConfig {
-        max_batch: args.usize_or("max-batch", 8),
-        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000) as u64),
-        workers: args.usize_or("workers", 2),
+        max_batch: args.usize_or("max-batch", 8)?,
+        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000)? as u64),
+        workers: args.usize_or("workers", 2)?,
     };
     let mut server = Server::start(engine, scfg);
     if let Some(hw) = &server.hw_estimate {
@@ -134,7 +142,7 @@ fn cmd_serve(args: &Args) -> hcim::Result<()> {
         );
     }
     // single CLI-provided master seed for every stochastic path
-    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let mut rng = Rng::new(args.u64_or("seed", 42)?);
     let elems = m.input_elems();
     for _ in 0..requests {
         let img: Vec<f32> = (0..elems).map(|_| rng.f64() as f32).collect();
@@ -164,19 +172,26 @@ fn cmd_serve_multi(args: &Args) -> hcim::Result<()> {
         .map(TenantSpec::parse)
         .collect::<hcim::Result<Vec<_>>>()?;
     anyhow::ensure!(!specs.is_empty(), "pass --models model[,model:weight,...]");
-    let budget = args.usize_or("tiles", 0);
+    let budget = args.usize_or("tiles", 0)?;
     anyhow::ensure!(budget > 0, "pass --tiles <chip crossbar-tile budget>");
     let hw = config_from(args);
-    let seed = args.u64_or("seed", 42);
+    let seed = args.u64_or("seed", 42)?;
 
     let plan = ShardPlan::partition(&specs, &hw, budget)?;
     let scfg = SchedulerCfg {
-        queue_cap: args.usize_or("queue-cap", 32),
-        workers: args.usize_or("workers", 2),
-        max_batch: args.usize_or("max-batch", 8),
-        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000) as u64),
+        queue_cap: args.usize_or("queue-cap", 32)?,
+        workers: args.usize_or("workers", 2)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000)? as u64),
     };
-    let mut sched = Scheduler::new(plan, &hw, scfg, seed);
+    // --timeline prices each tenant's service time with the discrete-event
+    // engine on its shard (reprogramming rounds) instead of the analytical
+    // demand/shard inflation, and attaches per-component utilization
+    let mut sched = if args.has("timeline") {
+        Scheduler::new_with_timeline(plan, &hw, scfg, seed)?
+    } else {
+        Scheduler::new(plan, &hw, scfg, seed)
+    };
 
     // real execution is optional: without artifacts the run is virtual-only.
     // The artifact directory holds ONE exported model, so only tenants of
@@ -210,8 +225,8 @@ fn cmd_serve_multi(args: &Args) -> hcim::Result<()> {
 
     let lg = LoadGenCfg {
         seed,
-        requests_per_tenant: args.usize_or("requests", 64),
-        mean_gap_us: args.f64_or("gap-us", 500.0),
+        requests_per_tenant: args.usize_or("requests", 64)?,
+        mean_gap_us: args.f64_or("gap-us", 500.0)?,
     };
     let arrivals = loadgen::generate(&lg, sched.tenants.len());
     let t0 = Instant::now();
@@ -269,6 +284,7 @@ fn cmd_tables(args: &Args) -> hcim::Result<()> {
     experiments::ablation_adc_precision_sweep(&sim).print();
     experiments::ablation_variation_robustness().print();
     experiments::serving_contention_sweep().print();
+    experiments::timeline_utilization_sweep().print();
     Ok(())
 }
 
@@ -292,7 +308,7 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
         space.archs.len()
     );
 
-    let mut runner = SweepRunner::new(space).with_workers(args.usize_or("workers", 0));
+    let mut runner = SweepRunner::new(space).with_workers(args.usize_or("workers", 0)?);
     if !args.has("no-cache") {
         runner = runner.with_cache(ResultCache::at_path(&out_dir.join("cache.json")));
     }
@@ -301,8 +317,8 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
     }
     if args.has("robustness") {
         runner = runner.with_robustness(RobustnessCfg {
-            trials: args.usize_or("trials", 8).max(1),
-            seed: args.u64_or("seed", 42),
+            trials: args.usize_or("trials", 8)?.max(1),
+            seed: args.u64_or("seed", 42)?,
         });
     }
 
@@ -338,17 +354,17 @@ fn cmd_robustness(args: &Args) -> hcim::Result<()> {
     } else {
         NonIdealityParams::default_for(node)
     };
-    ni.sigma_g = args.f64_or("sigma-g", ni.sigma_g);
-    ni.stuck_on = args.f64_or("stuck-on", ni.stuck_on);
-    ni.stuck_off = args.f64_or("stuck-off", ni.stuck_off);
-    ni.ir_drop = args.f64_or("ir-drop", ni.ir_drop);
-    ni.sigma_cmp = args.f64_or("sigma-cmp", ni.sigma_cmp);
+    ni.sigma_g = args.f64_or("sigma-g", ni.sigma_g)?;
+    ni.stuck_on = args.f64_or("stuck-on", ni.stuck_on)?;
+    ni.stuck_off = args.f64_or("stuck-off", ni.stuck_off)?;
+    ni.ir_drop = args.f64_or("ir-drop", ni.ir_drop)?;
+    ni.sigma_cmp = args.f64_or("sigma-cmp", ni.sigma_cmp)?;
     ni.validate()?;
 
     let mc = MonteCarloCfg {
-        trials: args.usize_or("trials", 32).max(1),
-        seed: args.u64_or("seed", 42),
-        workers: args.usize_or("workers", 0),
+        trials: args.usize_or("trials", 32)?.max(1),
+        seed: args.u64_or("seed", 42)?,
+        workers: args.usize_or("workers", 0)?,
     };
     let t0 = Instant::now();
     let report = run_monte_carlo(&graph, &cfg, &ni, &mc);
@@ -373,6 +389,67 @@ fn cmd_robustness(args: &Args) -> hcim::Result<()> {
         mc.trials,
         elapsed.as_secs_f64(),
         if mc.workers == 0 { "auto".to_string() } else { mc.workers.to_string() }
+    );
+    Ok(())
+}
+
+/// Discrete-event chip timeline: expand the model's mapping into tile
+/// tasks, schedule them onto crossbar tiles / the DCiM array / the mesh
+/// NoC, and report makespan + utilization + link contention. Everything
+/// is virtual-time, so json/csv output is byte-identical across runs.
+fn cmd_timeline(args: &Args) -> hcim::Result<()> {
+    let model = args.flag_or("model", "resnet20");
+    let graph = zoo::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}` (see `hcim help`)"))?;
+    let node = TechNode::by_name(args.flag_or("node", "32nm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown node"))?;
+    let mut cfg = config_from(args);
+    cfg.node = node;
+    let arch = arch_from(args, cfg)?;
+    let mut sim = Simulator::new(node);
+    if let Some(path) = args.flag("sparsity") {
+        sim = sim.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
+    }
+    let budget = match args.usize_or("tiles", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let tl_model =
+        TimelineModel::from_graph(&graph, &arch, &sim.params, &sim.sparsity, budget)?;
+    let tl_cfg = TimelineCfg {
+        batch: args.usize_or("batch", 1)?.max(1),
+        chunks: args.usize_or("chunks", 8)?.max(1),
+        trace: args.flag("vcd").is_some(),
+    };
+    let t0 = Instant::now();
+    let report = timeline::simulate(&tl_model, &tl_cfg);
+    let elapsed = t0.elapsed();
+
+    // stdout carries only virtual-time content, so json/csv are
+    // byte-identical across runs; timing goes to stderr
+    match args.flag_or("format", "table") {
+        "json" => println!("{}", report.to_json()),
+        "csv" => print!("{}", report.to_csv()),
+        _ => {
+            report.summary_table().print();
+            report.resources_table().print();
+        }
+    }
+    if let Some(dir) = args.flag("out") {
+        let (json_path, csv_path) = report.write(Path::new(dir))?;
+        eprintln!("report: {}  {}", json_path.display(), csv_path.display());
+    }
+    if let Some(path) = args.flag("vcd") {
+        report.write_vcd(Path::new(path))?;
+        eprintln!("trace: {path}");
+    }
+    eprintln!(
+        "scheduled {} on {} (batch {}, {} rounds) in {:.3}s",
+        report.model,
+        arch.name(),
+        report.batch,
+        report.rounds,
+        elapsed.as_secs_f64()
     );
     Ok(())
 }

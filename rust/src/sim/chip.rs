@@ -11,11 +11,16 @@ use crate::config::hardware::HcimConfig;
 use crate::sim::components::memory::{Buffer, Noc};
 use crate::sim::energy::{Component, CostLedger};
 use crate::sim::mapping::LayerMapping;
+use crate::sim::noc::Mesh;
 use crate::sim::params::CalibParams;
 
-/// Data-movement cost of ONE invocation of one mapped layer (excluding
-/// the in-tile MVM itself).
-pub fn layer_movement_cost(
+/// Tile-local data movement of ONE invocation of one mapped layer:
+/// buffer read + input broadcast, the digital accumulation of gathered
+/// partials, and the output write-back — everything **except** the
+/// inter-crossbar partial-sum transit itself, which rides the mesh
+/// ([`layer_movement_cost`] books it per-hop with link queueing; the
+/// timeline engine books it live, with cross-layer contention).
+pub fn layer_local_movement_cost(
     lm: &LayerMapping,
     cfg: &HcimConfig,
     params: &CalibParams,
@@ -28,11 +33,8 @@ pub fn layer_movement_cost(
     buffer.read(in_bytes, params, &mut l);
     Noc.transfer(in_bytes, 1, params, &mut l);
 
-    // inter-crossbar partial-sum gather + accumulate (row tiling)
-    let psum_bytes = lm.psum_traffic_bytes(cfg);
-    if psum_bytes > 0 {
-        Noc.transfer(psum_bytes, 1, params, &mut l);
-        // digital accumulation of gathered partials
+    // digital accumulation of gathered partials (row tiling)
+    if lm.row_tiles > 1 {
         let adds = (lm.row_tiles - 1) * lm.mvm.cols * cfg.w_bits as usize;
         l.add_energy_n(
             Component::ShiftAdd,
@@ -44,6 +46,34 @@ pub fn layer_movement_cost(
     // outputs written back to the buffer
     let out_bytes = lm.mvm.cols * (cfg.x_bits as usize).div_ceil(8).max(1);
     buffer.write(out_bytes, params, &mut l);
+    l
+}
+
+/// Data-movement cost of ONE invocation of one mapped layer (excluding
+/// the in-tile MVM itself). The partial-sum gather is routed through a
+/// [`Mesh`] sized for the layer's crossbars — each source row-tile group
+/// sends its share toward the accumulating tile concurrently, so shared
+/// links near the destination queue (XY routing, per-hop energy) instead
+/// of the old flat one-hop bus charge.
+pub fn layer_movement_cost(
+    lm: &LayerMapping,
+    cfg: &HcimConfig,
+    params: &CalibParams,
+) -> CostLedger {
+    let mut l = layer_local_movement_cost(lm, cfg, params);
+
+    let psum_bytes = lm.psum_traffic_bytes(cfg);
+    if psum_bytes > 0 {
+        let mut mesh = Mesh::for_tiles(lm.crossbars(), params);
+        let per_src = psum_bytes / (lm.row_tiles - 1);
+        let mut gather_ns = 0.0f64;
+        for src in 1..lm.row_tiles {
+            let from = src * lm.col_tiles; // first tile of the row group
+            let t = mesh.transfer(from, 0, per_src, 0.0, params, &mut l);
+            gather_ns = gather_ns.max(t.latency_ns);
+        }
+        l.add_latency(gather_ns);
+    }
     l
 }
 
@@ -100,5 +130,34 @@ mod tests {
         let params = CalibParams::at_65nm();
         let l = input_load_cost(3 * 32 * 32, &params);
         assert!(l.energy(Component::OffChip) > 0.0);
+    }
+
+    #[test]
+    fn psum_gather_is_mesh_routed_with_hops() {
+        // the mesh gather books per-hop energy, so a row-tiled layer must
+        // cost MORE interconnect than the old flat one-hop bus charge of
+        // (input + psum) bytes — and the gather adds latency
+        let cfg = HcimConfig::config_a();
+        let params = CalibParams::at_65nm();
+        let g = zoo::resnet20();
+        let m = ModelMapping::build(&g, &cfg);
+        let lm = m.layers.iter().find(|l| l.row_tiles > 1).unwrap();
+        let cost = layer_movement_cost(lm, &cfg, &params);
+        let in_bytes = lm.mvm.rows * (cfg.x_bits as usize).div_ceil(8).max(1);
+        let flat_pj = (in_bytes + lm.psum_traffic_bytes(&cfg)) as f64 * params.noc_byte_pj;
+        assert!(
+            cost.energy(Component::Interconnect) >= flat_pj,
+            "mesh routing must book at least one hop per byte: {} < {flat_pj}",
+            cost.energy(Component::Interconnect)
+        );
+        assert!(cost.latency_ns > 0.0, "gather must take time");
+
+        // the local-only split carries everything except the mesh transit
+        let local = layer_local_movement_cost(lm, &cfg, &params);
+        assert!(local.energy(Component::ShiftAdd) > 0.0);
+        assert!(
+            local.energy(Component::Interconnect) < cost.energy(Component::Interconnect),
+            "psum transit must live in the mesh-routed path only"
+        );
     }
 }

@@ -85,6 +85,14 @@ impl Mesh {
         steps
     }
 
+    /// Directed links that can actually carry traffic: interior edges
+    /// only — the `links[node][dir]` storage reserves 4 slots per node,
+    /// but boundary directions exit the mesh and are never routed.
+    /// (`2·(w·(h−1) + h·(w−1))`; the utilization denominator.)
+    pub fn routable_links(&self) -> usize {
+        2 * (self.w * (self.h - 1) + self.h * (self.w - 1))
+    }
+
     /// Manhattan hop count.
     pub fn hops(&self, from: usize, to: usize) -> usize {
         let (a, b) = (self.coord(from), self.coord(to));
@@ -206,6 +214,17 @@ mod tests {
             let r = m.route(m.coord(a), m.coord(b));
             assert_eq!(r.len(), m.hops(a, b));
         });
+    }
+
+    #[test]
+    fn routable_links_count_interior_edges_only() {
+        assert_eq!(mesh(1, 1).routable_links(), 0);
+        assert_eq!(mesh(2, 1).routable_links(), 2); // one edge, both directions
+        assert_eq!(mesh(2, 2).routable_links(), 8);
+        assert_eq!(mesh(4, 4).routable_links(), 2 * (4 * 3 + 4 * 3));
+        // always below the 4-per-node storage reservation
+        let m = mesh(5, 3);
+        assert!(m.routable_links() < 4 * m.w * m.h);
     }
 
     #[test]

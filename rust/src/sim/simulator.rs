@@ -182,6 +182,23 @@ impl SimReport {
     }
 }
 
+/// Cost of ONE representative crossbar MVM on `arch`'s column periphery
+/// under the given workload statistics. The single home of the per-arch
+/// dispatch — [`Simulator::run`] replicates this over invocations and
+/// crossbars analytically, and [`crate::timeline`] schedules it as
+/// per-chunk tasks on the discrete-event engine.
+pub fn per_mvm_cost(arch: &Arch, params: &CalibParams, stats: &MvmStats) -> CostLedger {
+    match arch {
+        Arch::Hcim(c) => hcim_mvm_cost(c, params, stats),
+        Arch::AdcBaseline(c, kind) => {
+            let adc = params.adc_at_node(kind.adc());
+            baseline_mvm_cost(c, &adc, params, stats)
+        }
+        Arch::Quarry(c, bits) => crate::baselines::quarry_mvm_cost(c, *bits, params, stats),
+        Arch::BitSplitNet(c) => crate::baselines::bitsplit_mvm_cost(c, params, stats),
+    }
+}
+
 /// The simulation engine.
 #[derive(Clone, Debug)]
 pub struct Simulator {
@@ -221,19 +238,7 @@ impl Simulator {
                 input_density: 0.30,
                 row_utilization: lm.row_utilization(cfg),
             };
-            let per_mvm = match arch {
-                Arch::Hcim(c) => hcim_mvm_cost(c, &self.params, &stats),
-                Arch::AdcBaseline(c, kind) => {
-                    let adc = self.params.adc_at_node(kind.adc());
-                    baseline_mvm_cost(c, &adc, &self.params, &stats)
-                }
-                Arch::Quarry(c, bits) => {
-                    crate::baselines::quarry_mvm_cost(c, *bits, &self.params, &stats)
-                }
-                Arch::BitSplitNet(c) => {
-                    crate::baselines::bitsplit_mvm_cost(c, &self.params, &stats)
-                }
-            };
+            let per_mvm = per_mvm_cost(arch, &self.params, &stats);
             // crossbars of the layer run in parallel; invocations serialise
             let layer_mvms =
                 per_mvm.replicate(lm.mvm.invocations as u64, lm.crossbars() as u64);

@@ -1,0 +1,146 @@
+//! Deterministic discrete-event queue on a virtual-nanosecond clock.
+//!
+//! A binary heap ordered by `(time, sequence)`: ties on the (f64) virtual
+//! time break on the monotone insertion sequence number, so the pop order
+//! — and with it every downstream scheduling decision — is a pure
+//! function of the push order. The engine pushes in a deterministic
+//! order and never consults wall clock or threads, which is what makes
+//! a [`crate::timeline::report::TimelineReport`] byte-identical across
+//! runs and across thread-pool sizes (concurrent engines on a pool are
+//! fully independent).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What a popped event means to the scheduler loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A task's dependencies are satisfied; it may claim its resource.
+    Ready { task: usize },
+    /// A task (compute + gather) finished; notify dependents.
+    Done { task: usize },
+    /// A weight-reprogramming round boundary opened.
+    Gate { round: usize },
+}
+
+/// One scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Virtual time in nanoseconds (always finite).
+    pub t_ns: f64,
+    /// Monotone insertion sequence — the stable tie-break.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    /// Reversed so the std max-heap pops the *earliest* `(t_ns, seq)`.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t_ns
+            .total_cmp(&self.t_ns)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue: a binary heap plus the sequence counter.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at virtual time `t_ns`.
+    pub fn push(&mut self, t_ns: f64, kind: EventKind) {
+        debug_assert!(t_ns.is_finite(), "event time must be finite");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { t_ns, seq, kind });
+    }
+
+    /// Pop the earliest event (stable `(t_ns, seq)` order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30.0, EventKind::Ready { task: 3 });
+        q.push(10.0, EventKind::Ready { task: 1 });
+        q.push(20.0, EventKind::Ready { task: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.t_ns)).collect();
+        assert_eq!(order, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn ties_break_on_insertion_sequence() {
+        let mut q = EventQueue::new();
+        for task in 0..16 {
+            q.push(5.0, EventKind::Ready { task });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.kind {
+                EventKind::Ready { task } => task,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, (0..16).collect::<Vec<usize>>(), "FIFO among equal times");
+    }
+
+    #[test]
+    fn interleaved_push_pop_is_stable() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::Done { task: 0 });
+        q.push(1.0, EventKind::Done { task: 1 });
+        assert!(matches!(q.pop().unwrap().kind, EventKind::Done { task: 1 }));
+        q.push(1.5, EventKind::Gate { round: 1 });
+        assert!(matches!(q.pop().unwrap().kind, EventKind::Gate { round: 1 }));
+        assert!(matches!(q.pop().unwrap().kind, EventKind::Done { task: 0 }));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn len_tracks_contents() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(1.0, EventKind::Gate { round: 0 });
+        q.push(2.0, EventKind::Gate { round: 1 });
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

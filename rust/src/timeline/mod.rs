@@ -1,0 +1,62 @@
+//! Discrete-event chip timeline engine.
+//!
+//! The analytical simulator ([`crate::sim::simulator::Simulator`]) prices
+//! one representative MVM per layer and multiplies it out — pipelining,
+//! buffer stalls, and NoC contention are invisible to it. This subsystem
+//! is the execution model that makes them first-class: a deterministic
+//! discrete-event simulator (binary-heap event queue on a virtual-ns
+//! clock, stable `(time, seq)` tie-breaking so results are byte-identical
+//! across runs and thread-pool sizes) that expands a
+//! [`crate::sim::mapping::ModelMapping`] into per-layer tile-chunk tasks
+//! and schedules them onto finite resources:
+//!
+//! * each layer's **analog crossbar tile group** (FIFO, double-buffered
+//!   against the next chunk's gather);
+//! * the **DCiM scale-factor array** occupancy inside every chunk (the
+//!   Read–Compute–Store pipeline of [`crate::sim::dcim::pipeline`]);
+//! * the **XY-mesh NoC** ([`crate::sim::noc::Mesh`]) carrying partial-sum
+//!   gather traffic, with per-link queueing;
+//! * an optional **tile budget** that time-multiplexes layers in
+//!   weight-reprogramming rounds (the serving scheduler's `--timeline`
+//!   service-time source).
+//!
+//! Every event charges into the shared [`crate::sim::energy::CostLedger`];
+//! the output is a [`report::TimelineReport`] — makespan, per-component
+//! busy/idle utilization, critical-path breakdown, link-contention
+//! histogram — rendered as table/JSON/CSV like the DSE and robustness
+//! reports, plus a Gantt-style VCD trace (one signal per resource).
+//!
+//! Entry points: the `hcim timeline` CLI subcommand, the DSE runner's
+//! throughput/peak-utilization objective columns, and
+//! `hcim serve --timeline`. Programmatically:
+//!
+//! ```no_run
+//! use hcim::config::hardware::HcimConfig;
+//! use hcim::model::zoo;
+//! use hcim::sim::params::CalibParams;
+//! use hcim::sim::simulator::{Arch, SparsityTable};
+//! use hcim::timeline::{simulate, TimelineCfg, TimelineModel};
+//! let g = zoo::resnet20();
+//! let params = CalibParams::at_65nm();
+//! let model = TimelineModel::from_graph(
+//!     &g,
+//!     &Arch::Hcim(HcimConfig::config_a()),
+//!     &params,
+//!     &SparsityTable::paper_default(),
+//!     None,
+//! )
+//! .unwrap();
+//! let report = simulate(&model, &TimelineCfg { batch: 4, chunks: 8, trace: false });
+//! report.summary_table().print();
+//! ```
+//! (`no_run` for the same reason as `util::prop`: doctest binaries cannot
+//! resolve their rpath in this offline image.)
+
+pub mod event;
+pub mod resource;
+pub mod schedule;
+pub mod report;
+
+pub use report::{ClassUtil, ResourceUsage, TimelineReport, TIMELINE_SCHEMA};
+pub use resource::{NocStats, WAIT_BUCKETS};
+pub use schedule::{simulate, LayerSpec, TimelineCfg, TimelineModel};

@@ -1,0 +1,337 @@
+//! Timeline reporting: makespan / utilization / contention summary as
+//! ASCII tables, deterministic JSON and CSV (same artifact conventions
+//! as the DSE and robustness reports), and the Gantt-style VCD export.
+//!
+//! Every number in the JSON is either an integer-valued f64 or rounded
+//! to three decimals before serialization, so the document is
+//! byte-identical across runs and thread-pool sizes (the engine itself
+//! is a pure function of its inputs; the rounding pins the printing).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::sim::energy::CostLedger;
+use crate::sim::trace::Tracer;
+use crate::util::json::{num3, Json};
+use crate::util::table::{fnum, Table};
+
+use super::resource::NocStats;
+
+/// Report schema version (golden-file compatibility gate).
+pub const TIMELINE_SCHEMA: u32 = 1;
+
+/// One resource's occupancy row.
+#[derive(Clone, Debug)]
+pub struct ResourceUsage {
+    pub name: String,
+    pub busy_ns: f64,
+    /// `busy / makespan` (0 when the makespan is empty).
+    pub util: f64,
+}
+
+/// Utilization rolled up by resource class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassUtil {
+    /// Crossbar tile groups, weighted by each layer's tile count.
+    pub xbar: f64,
+    /// DCiM scale-factor arrays, same weighting.
+    pub dcim: f64,
+    /// Mesh links (mean over all directed links).
+    pub noc: f64,
+    /// Off-chip channel (input streaming + weight reprogramming).
+    pub offchip: f64,
+}
+
+impl ClassUtil {
+    /// The busiest class — the DSE's peak-utilization objective column.
+    pub fn peak(&self) -> f64 {
+        self.xbar.max(self.dcim).max(self.noc).max(self.offchip)
+    }
+}
+
+/// The scheduled-timeline report.
+#[derive(Clone, Debug)]
+pub struct TimelineReport {
+    pub schema: u32,
+    pub model: String,
+    pub config: String,
+    pub batch: usize,
+    pub chunks: usize,
+    /// Weight-reprogramming rounds (1 = fully resident).
+    pub rounds: usize,
+    /// Scheduled end-to-end virtual time for the whole batch.
+    pub makespan_ns: f64,
+    /// Unpipelined, contention-free, full-residency reference latency.
+    pub serial_ns: f64,
+    /// Busiest-resource lower bound (every resource is FIFO-serial).
+    pub lower_bound_ns: f64,
+    pub throughput_ips: f64,
+    /// `serial / makespan` (may drop below 1 under a tile budget — the
+    /// serial reference never pays reprogramming).
+    pub speedup: f64,
+    pub bottleneck: ResourceUsage,
+    /// Per-resource rows in registry order (offchip, per-layer
+    /// xbar/dcim, program).
+    pub resources: Vec<ResourceUsage>,
+    pub util: ClassUtil,
+    pub noc: NocStats,
+    /// Energy of every scheduled event; `latency_ns` holds the makespan.
+    pub ledger: CostLedger,
+    /// Busy-interval trace (present when the engine ran with tracing).
+    pub trace: Option<Tracer>,
+}
+
+impl TimelineReport {
+    /// The busiest class utilization (DSE objective column).
+    pub fn peak_util(&self) -> f64 {
+        self.util.peak()
+    }
+
+    /// Deterministic JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut bottleneck = BTreeMap::new();
+        bottleneck.insert("busy_ns".to_string(), num3(self.bottleneck.busy_ns));
+        bottleneck.insert("resource".to_string(), Json::Str(self.bottleneck.name.clone()));
+
+        let mut components = BTreeMap::new();
+        for (c, pj) in self.ledger.breakdown() {
+            components.insert(c.name().to_string(), num3(pj));
+        }
+        let mut energy = BTreeMap::new();
+        energy.insert("components".to_string(), Json::Obj(components));
+        energy.insert("total_pj".to_string(), num3(self.ledger.total_energy_pj()));
+
+        let mut noc = BTreeMap::new();
+        noc.insert("busy_link_ns".to_string(), num3(self.noc.busy_link_ns));
+        noc.insert("links".to_string(), Json::Num(self.noc.links as f64));
+        noc.insert("transfers".to_string(), Json::Num(self.noc.transfers as f64));
+        noc.insert("util".to_string(), num3(self.noc.util(self.makespan_ns)));
+        noc.insert(
+            "wait_hist".to_string(),
+            Json::Arr(self.noc.wait_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        noc.insert("wait_ns_total".to_string(), num3(self.noc.wait_ns_total));
+
+        let resources: Vec<Json> = self
+            .resources
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("busy_ns".to_string(), num3(r.busy_ns));
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("util".to_string(), num3(r.util));
+                Json::Obj(o)
+            })
+            .collect();
+
+        let mut util = BTreeMap::new();
+        util.insert("dcim".to_string(), num3(self.util.dcim));
+        util.insert("noc".to_string(), num3(self.util.noc));
+        util.insert("offchip".to_string(), num3(self.util.offchip));
+        util.insert("xbar".to_string(), num3(self.util.xbar));
+
+        let mut top = BTreeMap::new();
+        top.insert("batch".to_string(), Json::Num(self.batch as f64));
+        top.insert("bottleneck".to_string(), Json::Obj(bottleneck));
+        top.insert("chunks".to_string(), Json::Num(self.chunks as f64));
+        top.insert("config".to_string(), Json::Str(self.config.clone()));
+        top.insert("energy".to_string(), Json::Obj(energy));
+        top.insert("lower_bound_ns".to_string(), num3(self.lower_bound_ns));
+        top.insert("makespan_ns".to_string(), num3(self.makespan_ns));
+        top.insert("model".to_string(), Json::Str(self.model.clone()));
+        top.insert("noc".to_string(), Json::Obj(noc));
+        top.insert("resources".to_string(), Json::Arr(resources));
+        top.insert("rounds".to_string(), Json::Num(self.rounds as f64));
+        top.insert("schema".to_string(), Json::Num(self.schema as f64));
+        top.insert("serial_ns".to_string(), num3(self.serial_ns));
+        top.insert("speedup".to_string(), num3(self.speedup));
+        top.insert("throughput_ips".to_string(), num3(self.throughput_ips));
+        top.insert("util".to_string(), Json::Obj(util));
+        Json::Obj(top)
+    }
+
+    /// Per-resource CSV (one row per resource, registry order).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("resource,busy_ns,util\n");
+        for r in &self.resources {
+            out.push_str(&format!("{},{:.3},{:.6}\n", r.name, r.busy_ns, r.util));
+        }
+        out
+    }
+
+    /// Headline summary table.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Timeline — {} on config {} (batch {}, {} chunks/layer)",
+                self.model, self.config, self.batch, self.chunks
+            ),
+            &["metric", "value"],
+        );
+        t.row(&["makespan (µs)".into(), fnum(self.makespan_ns / 1e3)]);
+        t.row(&["serial reference (µs)".into(), fnum(self.serial_ns / 1e3)]);
+        t.row(&["pipeline speedup".into(), format!("{:.2}×", self.speedup)]);
+        t.row(&["throughput (img/s)".into(), fnum(self.throughput_ips)]);
+        t.row(&["reprogramming rounds".into(), self.rounds.to_string()]);
+        t.row(&[
+            "bottleneck".into(),
+            format!("{} ({:.0}% busy)", self.bottleneck.name, 100.0 * self.bottleneck.util),
+        ]);
+        t.row(&["crossbar tile util".into(), format!("{:.1}%", 100.0 * self.util.xbar)]);
+        t.row(&["DCiM array util".into(), format!("{:.1}%", 100.0 * self.util.dcim)]);
+        t.row(&["mesh link util".into(), format!("{:.1}%", 100.0 * self.util.noc)]);
+        t.row(&[
+            "NoC transfers / queued".into(),
+            format!(
+                "{} / {}",
+                self.noc.transfers,
+                self.noc.transfers - self.noc.wait_hist[0]
+            ),
+        ]);
+        t.row(&["energy (µJ)".into(), fnum(self.ledger.total_energy_pj() / 1e6)]);
+        t
+    }
+
+    /// Per-resource occupancy table (the textual Gantt rollup).
+    pub fn resources_table(&self) -> Table {
+        let mut t = Table::new(
+            "Timeline — per-resource occupancy",
+            &["resource", "busy (µs)", "utilization"],
+        );
+        for r in &self.resources {
+            t.row(&[
+                r.name.clone(),
+                fnum(r.busy_ns / 1e3),
+                format!("{:.1}%", 100.0 * r.util),
+            ]);
+        }
+        t
+    }
+
+    /// Write `timeline.json` and `timeline.csv` under `dir`.
+    pub fn write(&self, dir: &Path) -> crate::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        let json_path = dir.join("timeline.json");
+        let csv_path = dir.join("timeline.csv");
+        std::fs::write(&json_path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+
+    /// Export the busy-interval trace as a VCD (1 ns timescale; one
+    /// 1-bit signal per resource plus the NoC activity counter).
+    /// Errors when the engine ran without tracing.
+    pub fn write_vcd(&self, path: &Path) -> crate::Result<()> {
+        let tracer = self
+            .trace
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("timeline was scheduled without --vcd tracing"))?;
+        tracer.write_vcd(path, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::Component;
+
+    fn report() -> TimelineReport {
+        let mut ledger = CostLedger::new();
+        ledger.add_energy_n(Component::Crossbar, 160.0, 16);
+        ledger.latency_ns = 950.0;
+        TimelineReport {
+            schema: TIMELINE_SCHEMA,
+            model: "demo".into(),
+            config: "A".into(),
+            batch: 2,
+            chunks: 2,
+            rounds: 1,
+            makespan_ns: 950.0,
+            serial_ns: 1300.0,
+            lower_bound_ns: 800.0,
+            throughput_ips: 2.0 / 950.0 * 1e9,
+            speedup: 1300.0 / 950.0,
+            bottleneck: ResourceUsage {
+                name: "xbar.l00".into(),
+                busy_ns: 800.0,
+                util: 800.0 / 950.0,
+            },
+            resources: vec![
+                ResourceUsage { name: "offchip".into(), busy_ns: 100.0, util: 100.0 / 950.0 },
+                ResourceUsage { name: "xbar.l00".into(), busy_ns: 800.0, util: 800.0 / 950.0 },
+            ],
+            util: ClassUtil { xbar: 0.63, dcim: 0.25, noc: 0.0, offchip: 0.105 },
+            noc: NocStats { links: 8, ..NocStats::default() },
+            ledger,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_with_sorted_keys() {
+        let r = report();
+        let text = r.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.num_field("schema").unwrap(), 1.0);
+        assert_eq!(parsed.num_field("makespan_ns").unwrap(), 950.0);
+        assert_eq!(parsed.str_field("model").unwrap(), "demo");
+        assert_eq!(
+            parsed.get("bottleneck").unwrap().str_field("resource").unwrap(),
+            "xbar.l00"
+        );
+        let res = parsed.get("resources").unwrap().as_arr().unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].str_field("name").unwrap(), "offchip");
+        let hist = parsed.get("noc").unwrap().get("wait_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), super::super::resource::WAIT_BUCKETS);
+        // serialization is stable across repeated calls
+        assert_eq!(text, r.to_json().to_string());
+    }
+
+    #[test]
+    fn csv_lists_every_resource() {
+        let csv = report().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("resource,"));
+        assert!(lines[1].starts_with("offchip,"));
+        assert!(lines[2].starts_with("xbar.l00,"));
+    }
+
+    #[test]
+    fn tables_render() {
+        let r = report();
+        let s = r.summary_table().render();
+        assert!(s.contains("makespan"));
+        assert!(s.contains("bottleneck"));
+        let rt = r.resources_table().render();
+        assert!(rt.contains("xbar.l00"));
+    }
+
+    #[test]
+    fn vcd_without_trace_is_an_error() {
+        let r = report();
+        let path = std::env::temp_dir().join("hcim_timeline_no_trace.vcd");
+        assert!(r.write_vcd(&path).is_err());
+    }
+
+    #[test]
+    fn write_emits_both_files() {
+        let dir = std::env::temp_dir().join("hcim_timeline_report_write");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (j, c) = report().write(&dir).unwrap();
+        assert!(j.exists() && c.exists());
+        let body = std::fs::read_to_string(j).unwrap();
+        assert!(body.ends_with('\n'));
+        assert!(Json::parse(body.trim_end()).is_ok());
+    }
+
+    #[test]
+    fn peak_util_is_the_max_class() {
+        let r = report();
+        assert!((r.peak_util() - 0.63).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,177 @@
+//! Finite chip resources and their occupancy accounting.
+//!
+//! Every schedulable unit — the off-chip input channel, each layer's
+//! crossbar tile group, each layer's DCiM scale-factor array slice, the
+//! weight-reprogramming channel — is a [`BusyTrack`]: a `free_at` horizon
+//! for FIFO serialization plus accumulated busy time. With tracing
+//! enabled the track also keeps its merged busy *intervals*, which the
+//! report flushes into a [`crate::sim::trace::Tracer`] as one 1-bit
+//! signal per resource (the Gantt-style VCD export).
+
+/// Coarse resource classes for the utilization rollup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResourceClass {
+    /// Off-chip input streaming (and weight reprogramming).
+    OffChip,
+    /// A layer's analog crossbar tile group.
+    Crossbar,
+    /// A layer's DCiM scale-factor array occupancy.
+    Dcim,
+}
+
+/// One serialized resource with busy-time accounting.
+#[derive(Clone, Debug)]
+pub struct BusyTrack {
+    /// Signal-style name (`offchip`, `xbar.l03`, `dcim.l03`, `program`).
+    pub name: String,
+    pub class: ResourceClass,
+    /// Earliest virtual time the next occupancy may start.
+    pub free_at: f64,
+    /// Total occupied virtual time.
+    pub busy_ns: f64,
+    /// Merged `[start, end)` busy intervals (kept only when tracing).
+    intervals: Vec<(f64, f64)>,
+    trace: bool,
+}
+
+impl BusyTrack {
+    pub fn new(name: &str, class: ResourceClass, trace: bool) -> BusyTrack {
+        BusyTrack {
+            name: name.to_string(),
+            class,
+            free_at: 0.0,
+            busy_ns: 0.0,
+            intervals: Vec::new(),
+            trace,
+        }
+    }
+
+    /// Record an occupancy `[start, end)`. Contiguous intervals (the next
+    /// start equals the previous end bit-for-bit, which is exactly how
+    /// back-to-back FIFO slots are computed) merge into one, so the VCD
+    /// shows a single busy pulse for a saturated resource.
+    pub fn occupy(&mut self, start: f64, end: f64) {
+        debug_assert!(end >= start, "negative occupancy on {}", self.name);
+        self.busy_ns += end - start;
+        if self.trace {
+            if let Some(last) = self.intervals.last_mut() {
+                if last.1 == start {
+                    last.1 = end;
+                    return;
+                }
+            }
+            self.intervals.push((start, end));
+        }
+    }
+
+    /// The merged busy intervals (empty unless tracing was enabled).
+    pub fn intervals(&self) -> &[(f64, f64)] {
+        &self.intervals
+    }
+}
+
+/// Histogram of per-transfer NoC queueing delays (latency − ideal), in
+/// fixed log-decade buckets: `0`, `(0, 10]`, `(10, 100]`, `(100, 1e3]`,
+/// `(1e3, 1e4]`, `> 1e4` ns.
+pub const WAIT_BUCKETS: usize = 6;
+
+/// Bucket index for one transfer's queueing delay.
+pub fn wait_bucket(wait_ns: f64) -> usize {
+    if wait_ns <= 0.0 {
+        0
+    } else if wait_ns <= 10.0 {
+        1
+    } else if wait_ns <= 100.0 {
+        2
+    } else if wait_ns <= 1e3 {
+        3
+    } else if wait_ns <= 1e4 {
+        4
+    } else {
+        5
+    }
+}
+
+/// Aggregated mesh-NoC statistics for the report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NocStats {
+    /// Directed links in the mesh (capacity denominator).
+    pub links: usize,
+    /// Gather transfers routed.
+    pub transfers: u64,
+    /// Σ per-link serialization time booked (link-occupancy total).
+    pub busy_link_ns: f64,
+    /// Σ queueing delay across transfers.
+    pub wait_ns_total: f64,
+    /// Link-contention histogram ([`wait_bucket`] buckets).
+    pub wait_hist: [u64; WAIT_BUCKETS],
+}
+
+impl NocStats {
+    /// Record one routed transfer. `ideal_ns` is the contention-free
+    /// latency (`hops × serialization`), which is exactly the total link
+    /// occupancy the message books across its path.
+    pub fn record(&mut self, latency_ns: f64, ideal_ns: f64) {
+        self.transfers += 1;
+        self.busy_link_ns += ideal_ns;
+        let wait = (latency_ns - ideal_ns).max(0.0);
+        self.wait_ns_total += wait;
+        self.wait_hist[wait_bucket(wait)] += 1;
+    }
+
+    /// Mean link utilization over `makespan_ns`.
+    pub fn util(&self, makespan_ns: f64) -> f64 {
+        if self.links == 0 || makespan_ns <= 0.0 {
+            return 0.0;
+        }
+        self.busy_link_ns / (self.links as f64 * makespan_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_accumulates_and_merges() {
+        let mut t = BusyTrack::new("xbar.l00", ResourceClass::Crossbar, true);
+        t.occupy(50.0, 250.0);
+        t.occupy(250.0, 450.0); // contiguous → merges
+        t.occupy(650.0, 850.0); // gap → new interval
+        assert_eq!(t.busy_ns, 600.0);
+        assert_eq!(t.intervals().to_vec(), vec![(50.0, 450.0), (650.0, 850.0)]);
+    }
+
+    #[test]
+    fn untraced_track_keeps_no_intervals() {
+        let mut t = BusyTrack::new("offchip", ResourceClass::OffChip, false);
+        t.occupy(0.0, 100.0);
+        assert_eq!(t.busy_ns, 100.0);
+        assert!(t.intervals().is_empty());
+    }
+
+    #[test]
+    fn wait_buckets_partition_the_axis() {
+        assert_eq!(wait_bucket(0.0), 0);
+        assert_eq!(wait_bucket(5.0), 1);
+        assert_eq!(wait_bucket(10.0), 1);
+        assert_eq!(wait_bucket(50.0), 2);
+        assert_eq!(wait_bucket(500.0), 3);
+        assert_eq!(wait_bucket(5_000.0), 4);
+        assert_eq!(wait_bucket(50_000.0), 5);
+    }
+
+    #[test]
+    fn noc_stats_record_and_util() {
+        let mut n = NocStats { links: 8, ..Default::default() };
+        n.record(12.0, 10.0); // 2 ns queueing
+        n.record(5.0, 5.0); // no queueing
+        assert_eq!(n.transfers, 2);
+        assert_eq!(n.wait_hist[0], 1);
+        assert_eq!(n.wait_hist[1], 1);
+        assert!((n.wait_ns_total - 2.0).abs() < 1e-12);
+        assert!((n.busy_link_ns - 15.0).abs() < 1e-12);
+        assert!((n.util(100.0) - 15.0 / 800.0).abs() < 1e-12);
+        assert_eq!(n.util(0.0), 0.0);
+    }
+}

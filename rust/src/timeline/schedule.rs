@@ -1,0 +1,733 @@
+//! The timeline model and the discrete-event scheduling engine.
+//!
+//! [`TimelineModel`] is the priced task structure of one model on one
+//! chip configuration: per MVM layer a crossbar tile group (one chunk in
+//! flight at a time — the group's crossbars work one invocation in
+//! parallel), the DCiM scale-factor array occupancy inside each chunk,
+//! and the partial-sum gather traffic its row tiles push through the
+//! [`Mesh`]. [`simulate`] expands it into `(image, layer, chunk)` tasks
+//! and plays them through the event queue:
+//!
+//! * **inter-layer double buffering** — a layer's tile group frees as
+//!   soon as its compute finishes; the partial-sum gather rides the mesh
+//!   while the next chunk computes;
+//! * **wavefront pipelining** — chunk `c` of layer `l` only needs the
+//!   upstream chunk covering the same output fraction, so deep layers
+//!   start long before shallow layers finish;
+//! * **multi-image batch overlap** — images share every resource and
+//!   interleave on the FIFO `free_at` horizons;
+//! * **link contention** — gathers from different layers/images queue on
+//!   shared XY-mesh links ([`Mesh::transfer`] busy-until accounting);
+//! * **tile-budget rounds** — with `tile_budget` below the model's full
+//!   residency, layers partition into rounds that fit the budget; a
+//!   round boundary is a weight-reprogramming barrier (all images finish
+//!   round `r` before the `r+1` weights load), the time-multiplexing the
+//!   serving scheduler's `--timeline` mode prices.
+//!
+//! Everything runs on one thread in `(time, seq)` order: the report is a
+//! pure function of the model and the config. Transfers are booked in
+//! event-processing order, so a transfer issued later in pop order can
+//! queue behind one booked earlier with a later start — a first-come
+//! approximation of the wormhole router, deterministic by construction.
+
+use crate::config::hardware::HcimConfig;
+use crate::model::graph::Graph;
+use crate::sim::chip::layer_local_movement_cost;
+use crate::sim::components::memory::OffChip;
+use crate::sim::dcim::pipeline::{PipelineCfg, PipelineSchedule};
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::mapping::ModelMapping;
+use crate::sim::noc::Mesh;
+use crate::sim::params::CalibParams;
+use crate::sim::simulator::{per_mvm_cost, Arch, SparsityTable};
+use crate::sim::tile::MvmStats;
+use crate::sim::trace::Tracer;
+
+use super::event::{EventKind, EventQueue};
+use super::report::{ClassUtil, ResourceUsage, TimelineReport};
+use super::resource::{BusyTrack, NocStats, ResourceClass};
+
+/// One MVM layer's priced timeline footprint.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    /// Index into the graph's layer list (display only).
+    pub layer_index: usize,
+    /// Crossbar tiles allocated to the layer (work one MVM in parallel).
+    pub crossbars: usize,
+    /// Row tiles — sources of the partial-sum gather.
+    pub row_tiles: usize,
+    /// Column tiles — the stride between row-tile groups on the mesh.
+    pub col_tiles: usize,
+    /// MVM invocations per inference (spatial positions).
+    pub invocations: usize,
+    /// Latency of one MVM on the tile group (ns).
+    pub mvm_ns: f64,
+    /// DCiM scale-factor array occupancy inside one MVM (ns, ≤ `mvm_ns`).
+    pub dcim_ns_per_mvm: f64,
+    /// Partial-sum gather bytes per *source row tile* per MVM.
+    pub psum_bytes_per_src_mvm: usize,
+    /// Weight bytes to reprogram this layer's tiles (round switches).
+    pub weight_bytes: usize,
+    /// Energy of one MVM across the layer's crossbars (latency ignored).
+    pub mvm_energy: CostLedger,
+    /// Buffer/accumulate energy per invocation (mesh gather excluded —
+    /// the engine books that live, with contention).
+    pub move_energy: CostLedger,
+}
+
+/// A whole model's priced timeline structure.
+#[derive(Clone, Debug)]
+pub struct TimelineModel {
+    pub model: String,
+    pub config: String,
+    /// Calibration table (node-rescaled) for mesh timing/energy.
+    pub params: CalibParams,
+    /// One-time per-image input stream: duration and energy.
+    pub input_ns: f64,
+    pub input_energy: CostLedger,
+    pub layers: Vec<LayerSpec>,
+    /// `Some(budget)` time-multiplexes layers onto at most `budget`
+    /// crossbar tiles (reprogramming rounds); `None` is full residency.
+    pub tile_budget: Option<usize>,
+}
+
+/// Scheduling knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineCfg {
+    /// Images scheduled concurrently (batch overlap).
+    pub batch: usize,
+    /// Pipelining granularity: chunks per layer (clamped to the layer's
+    /// invocation count).
+    pub chunks: usize,
+    /// Record busy intervals for the Gantt-style VCD export.
+    pub trace: bool,
+}
+
+impl Default for TimelineCfg {
+    fn default() -> Self {
+        TimelineCfg { batch: 1, chunks: 8, trace: false }
+    }
+}
+
+impl TimelineModel {
+    /// Price `graph` on `arch` into a timeline model: one tile group per
+    /// mapped layer, per-MVM latency/energy from the same cost models the
+    /// analytical simulator uses, DCiM occupancy from the
+    /// Read–Compute–Store pipeline, and gather traffic from the mapping.
+    pub fn from_graph(
+        graph: &Graph,
+        arch: &Arch,
+        params: &CalibParams,
+        sparsity: &SparsityTable,
+        tile_budget: Option<usize>,
+    ) -> crate::Result<TimelineModel> {
+        let cfg = arch.config();
+        let mapping = ModelMapping::build(graph, cfg);
+        if let Some(budget) = tile_budget {
+            let peak = mapping.peak_layer_crossbars().max(1);
+            anyhow::ensure!(
+                budget >= peak,
+                "tile budget {budget} below the largest layer ({peak} tiles): \
+                 no round can hold it resident"
+            );
+        }
+
+        let in_bytes = graph.input.numel() * (cfg.x_bits as usize).div_ceil(8).max(1);
+        let mut input_energy = CostLedger::new();
+        OffChip.read(in_bytes, params, &mut input_energy);
+        let input_ns = in_bytes as f64 * params.noc_byte_ns;
+
+        let dcim_ns = match arch {
+            Arch::Hcim(_) => dcim_occupancy_ns(cfg, params),
+            _ => 0.0, // ADC peripheries have no scale-factor array
+        };
+
+        let mut layers = Vec::with_capacity(mapping.layers.len());
+        for (mvm_idx, lm) in mapping.layers.iter().enumerate() {
+            let stats = MvmStats {
+                sparsity: sparsity.lookup(&graph.name, mvm_idx, cfg.mode),
+                input_density: 0.30,
+                row_utilization: lm.row_utilization(cfg),
+            };
+            let per_mvm = per_mvm_cost(arch, params, &stats);
+            let mvm_ns = per_mvm.latency_ns;
+            let psum_bytes_per_src_mvm = if lm.row_tiles > 1 {
+                lm.psum_traffic_bytes(cfg) / (lm.row_tiles - 1)
+            } else {
+                0
+            };
+            layers.push(LayerSpec {
+                layer_index: lm.layer_index,
+                crossbars: lm.crossbars(),
+                row_tiles: lm.row_tiles,
+                col_tiles: lm.col_tiles,
+                invocations: lm.mvm.invocations.max(1),
+                mvm_ns,
+                dcim_ns_per_mvm: dcim_ns.min(mvm_ns),
+                psum_bytes_per_src_mvm,
+                weight_bytes: lm.crossbars() * cfg.xbar.cells().div_ceil(8),
+                mvm_energy: per_mvm.replicate(1, lm.crossbars() as u64),
+                move_energy: layer_local_movement_cost(lm, cfg, params),
+            });
+        }
+
+        Ok(TimelineModel {
+            model: graph.name.clone(),
+            config: cfg.name.clone(),
+            params: params.clone(),
+            input_ns,
+            input_energy,
+            layers,
+            tile_budget,
+        })
+    }
+
+    /// Full weight-stationary tile demand.
+    pub fn total_crossbars(&self) -> usize {
+        self.layers.iter().map(|l| l.crossbars.max(1)).sum()
+    }
+}
+
+/// DCiM array occupancy of one MVM: one word-op per bit-stream through
+/// the Read–Compute–Store pipeline, odd/even phase expansion included.
+fn dcim_occupancy_ns(cfg: &HcimConfig, params: &CalibParams) -> f64 {
+    let pipe = PipelineCfg { cycle_ns: params.dcim_cycle_ns, ..PipelineCfg::default() };
+    let mut sched = PipelineSchedule::default();
+    for _ in 0..cfg.x_bits {
+        sched.issue(pipe.phase_factor);
+    }
+    sched.latency_ns(&pipe)
+}
+
+/// One schedulable task.
+struct Task {
+    /// Track index (0 = offchip input; otherwise the layer's xbar track).
+    res: usize,
+    /// MVM-layer ordinal (`None` = per-image input load).
+    layer: Option<usize>,
+    /// Invocations covered by this chunk.
+    invocs: u64,
+    duration_ns: f64,
+    dcim_ns: f64,
+    /// Unsatisfied dependencies (upstream chunk / input / round gate).
+    deps: u32,
+    /// Task ids notified when this task completes.
+    dependents: Vec<usize>,
+}
+
+/// Run the discrete-event schedule and produce the report.
+pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
+    let batch = cfg.batch.max(1);
+    let chunks_req = cfg.chunks.max(1);
+    let params = &model.params;
+    let nl = model.layers.len();
+
+    // ---- rounds (tile-budget time multiplexing) and mesh placement ----
+    let round_of: Vec<usize> = partition_rounds(&model.layers, model.tile_budget);
+    let n_rounds = round_of.last().map(|r| r + 1).unwrap_or(1);
+    let mut footprint = vec![0usize; n_rounds];
+    let mut tile_base = vec![0usize; nl];
+    for (l, spec) in model.layers.iter().enumerate() {
+        tile_base[l] = footprint[round_of[l]];
+        footprint[round_of[l]] += spec.crossbars.max(1);
+    }
+    let max_footprint = footprint.iter().copied().max().unwrap_or(0).max(1);
+    let mut mesh = Mesh::for_tiles(max_footprint, params);
+    let round_bytes: Vec<usize> = (0..n_rounds)
+        .map(|r| {
+            model
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(l, _)| round_of[*l] == r)
+                .map(|(_, s)| s.weight_bytes)
+                .sum()
+        })
+        .collect();
+
+    // ---- per-layer chunk counts ----
+    let chunk_counts: Vec<usize> = model
+        .layers
+        .iter()
+        .map(|l| chunks_req.min(l.invocations.max(1)))
+        .collect();
+
+    // ---- resource tracks (registry order = report & VCD order) ----
+    let mut tracks = vec![BusyTrack::new("offchip", ResourceClass::OffChip, cfg.trace)];
+    for l in 0..nl {
+        tracks.push(BusyTrack::new(&format!("xbar.l{l:02}"), ResourceClass::Crossbar, cfg.trace));
+        tracks.push(BusyTrack::new(&format!("dcim.l{l:02}"), ResourceClass::Dcim, cfg.trace));
+    }
+    let program_track = if n_rounds > 1 {
+        tracks.push(BusyTrack::new("program", ResourceClass::OffChip, cfg.trace));
+        Some(tracks.len() - 1)
+    } else {
+        None
+    };
+    let xbar_track = |l: usize| 1 + 2 * l;
+    let dcim_track = |l: usize| 2 + 2 * l;
+
+    // ---- task graph ----
+    let total_chunks: usize = chunk_counts.iter().sum();
+    let mut tasks: Vec<Task> = Vec::with_capacity(batch * (1 + total_chunks));
+    for _img in 0..batch {
+        tasks.push(Task {
+            res: 0,
+            layer: None,
+            invocs: 1,
+            duration_ns: model.input_ns,
+            dcim_ns: 0.0,
+            deps: 0,
+            dependents: Vec::new(),
+        });
+    }
+    // id of chunk 0 for (image, layer)
+    let mut first_id = vec![vec![0usize; nl]; batch];
+    for ids in first_id.iter_mut() {
+        for (l, spec) in model.layers.iter().enumerate() {
+            ids[l] = tasks.len();
+            let inv = spec.invocations.max(1);
+            let c_n = chunk_counts[l];
+            let gated = round_of[l] > 0 && (l == 0 || round_of[l - 1] != round_of[l]);
+            for c in 0..c_n {
+                let chunk_inv = inv / c_n + usize::from(c < inv % c_n);
+                tasks.push(Task {
+                    res: xbar_track(l),
+                    layer: Some(l),
+                    invocs: chunk_inv as u64,
+                    duration_ns: spec.mvm_ns * chunk_inv as f64,
+                    dcim_ns: spec.dcim_ns_per_mvm * chunk_inv as f64,
+                    deps: 1 + u32::from(gated),
+                    dependents: Vec::new(),
+                });
+            }
+        }
+    }
+    // dependency edges: input → layer-0 chunks; upstream chunk → consumer
+    for img in 0..batch {
+        for l in 0..nl {
+            let c_n = chunk_counts[l];
+            for c in 0..c_n {
+                let id = first_id[img][l] + c;
+                if l == 0 {
+                    tasks[img].dependents.push(id);
+                } else {
+                    // the upstream chunk covering this chunk's output span
+                    let up_chunk = ((c + 1) * chunk_counts[l - 1]).div_ceil(c_n) - 1;
+                    let up = first_id[img][l - 1] + up_chunk;
+                    tasks[up].dependents.push(id);
+                }
+            }
+        }
+    }
+    // round bookkeeping
+    let mut round_remaining = vec![0u64; n_rounds];
+    let mut gated: Vec<Vec<usize>> = vec![Vec::new(); n_rounds];
+    for img in 0..batch {
+        for l in 0..nl {
+            round_remaining[round_of[l]] += chunk_counts[l] as u64;
+            if round_of[l] > 0 && (l == 0 || round_of[l - 1] != round_of[l]) {
+                for c in 0..chunk_counts[l] {
+                    gated[round_of[l]].push(first_id[img][l] + c);
+                }
+            }
+        }
+    }
+
+    // ---- the event loop ----
+    let mut q = EventQueue::new();
+    for img in 0..batch {
+        q.push(0.0, EventKind::Ready { task: img });
+    }
+    let mut ledger = CostLedger::new();
+    let mut noc = NocStats { links: mesh.routable_links(), ..NocStats::default() };
+    let mut noc_deltas: Vec<(f64, i64)> = Vec::new();
+    let mut makespan = 0.0f64;
+    while let Some(ev) = q.pop() {
+        match ev.kind {
+            EventKind::Ready { task } => {
+                let (res, layer, invocs, duration, dcim_ns) = {
+                    let t = &tasks[task];
+                    (t.res, t.layer, t.invocs, t.duration_ns, t.dcim_ns)
+                };
+                let start = ev.t_ns.max(tracks[res].free_at);
+                let end = start + duration;
+                tracks[res].free_at = end;
+                tracks[res].occupy(start, end);
+                let mut done = end;
+                match layer {
+                    None => ledger.merge_serial(&model.input_energy),
+                    Some(l) => {
+                        let spec = &model.layers[l];
+                        if dcim_ns > 0.0 {
+                            tracks[dcim_track(l)].occupy(start, start + dcim_ns.min(duration));
+                        }
+                        ledger.merge_serial(&spec.mvm_energy.replicate(invocs, 1));
+                        ledger.merge_serial(&spec.move_energy.replicate(invocs, 1));
+                        if spec.psum_bytes_per_src_mvm > 0 && spec.row_tiles > 1 {
+                            let bytes = spec.psum_bytes_per_src_mvm * invocs as usize;
+                            for src in 1..spec.row_tiles {
+                                let from = tile_base[l] + src * spec.col_tiles;
+                                let tr = mesh
+                                    .transfer(from, tile_base[l], bytes, end, params, &mut ledger);
+                                noc.record(tr.latency_ns, tr.ideal_ns);
+                                let fin = end + tr.latency_ns;
+                                if cfg.trace {
+                                    noc_deltas.push((end, 1));
+                                    noc_deltas.push((fin, -1));
+                                }
+                                done = done.max(fin);
+                            }
+                        }
+                    }
+                }
+                q.push(done, EventKind::Done { task });
+            }
+            EventKind::Done { task } => {
+                makespan = makespan.max(ev.t_ns);
+                let dependents = std::mem::take(&mut tasks[task].dependents);
+                for d in dependents {
+                    tasks[d].deps -= 1;
+                    if tasks[d].deps == 0 {
+                        q.push(ev.t_ns, EventKind::Ready { task: d });
+                    }
+                }
+                if let Some(l) = tasks[task].layer {
+                    let r = round_of[l];
+                    round_remaining[r] -= 1;
+                    if round_remaining[r] == 0 && r + 1 < n_rounds {
+                        // weight-reprogramming barrier into the next round
+                        let bytes = round_bytes[r + 1];
+                        let delay = bytes as f64 * params.noc_byte_ns;
+                        ledger.add_energy_n(
+                            Component::Buffer,
+                            params.buffer_byte_pj * bytes as f64,
+                            bytes as u64,
+                        );
+                        if let Some(p) = program_track {
+                            tracks[p].free_at = ev.t_ns + delay;
+                            tracks[p].occupy(ev.t_ns, ev.t_ns + delay);
+                        }
+                        q.push(ev.t_ns + delay, EventKind::Gate { round: r + 1 });
+                    }
+                }
+            }
+            EventKind::Gate { round } => {
+                for &d in &gated[round] {
+                    tasks[d].deps -= 1;
+                    if tasks[d].deps == 0 {
+                        q.push(ev.t_ns, EventKind::Ready { task: d });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- analytical references ----
+    // fully-serial (unpipelined, contention-free, full-residency) latency
+    let mut serial_image = model.input_ns;
+    for (l, spec) in model.layers.iter().enumerate() {
+        let mut gather = 0.0;
+        if spec.row_tiles > 1 && spec.psum_bytes_per_src_mvm > 0 {
+            for src in 1..spec.row_tiles {
+                let hops = mesh.hops(tile_base[l] + src * spec.col_tiles, tile_base[l]).max(1);
+                gather +=
+                    hops as f64 * spec.psum_bytes_per_src_mvm as f64 * params.noc_byte_ns;
+            }
+        }
+        serial_image += spec.invocations as f64 * (spec.mvm_ns + gather);
+    }
+    let serial_ns = batch as f64 * serial_image;
+    // every track is FIFO-serial, so its busy time lower-bounds the makespan
+    let lower_bound_ns = tracks.iter().map(|t| t.busy_ns).fold(0.0, f64::max);
+
+    // ---- trace flush (registry order, then the NoC activity counter) ----
+    let tracer = if cfg.trace {
+        let mut t = Tracer::new(true);
+        for track in &tracks {
+            t.declare(&track.name, 1);
+        }
+        let has_noc = model
+            .layers
+            .iter()
+            .any(|l| l.row_tiles > 1 && l.psum_bytes_per_src_mvm > 0);
+        if has_noc {
+            t.declare("noc.active", 16);
+        }
+        for track in &tracks {
+            for &(s, e) in track.intervals() {
+                t.record(s.round() as u64, &track.name, 1);
+                t.record(e.round() as u64, &track.name, 0);
+            }
+        }
+        if has_noc {
+            noc_deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let mut active: i64 = 0;
+            let mut i = 0;
+            while i < noc_deltas.len() {
+                let t_ns = noc_deltas[i].0;
+                while i < noc_deltas.len() && noc_deltas[i].0 == t_ns {
+                    active += noc_deltas[i].1;
+                    i += 1;
+                }
+                t.record(t_ns.round() as u64, "noc.active", active.max(0) as u128);
+            }
+        }
+        Some(t)
+    } else {
+        None
+    };
+
+    // ---- utilization rollup ----
+    let total_xbars = model.total_crossbars().max(1);
+    let class_weighted = |class: ResourceClass| -> f64 {
+        if makespan <= 0.0 {
+            return 0.0;
+        }
+        match class {
+            ResourceClass::Crossbar | ResourceClass::Dcim => {
+                let busy: f64 = tracks
+                    .iter()
+                    .zip(track_weights(&model.layers, &tracks))
+                    .filter(|(t, _)| t.class == class)
+                    .map(|(t, w)| t.busy_ns * w as f64)
+                    .sum();
+                busy / (total_xbars as f64 * makespan)
+            }
+            ResourceClass::OffChip => {
+                let (busy, n) = tracks
+                    .iter()
+                    .filter(|t| t.class == ResourceClass::OffChip)
+                    .fold((0.0, 0usize), |(b, n), t| (b + t.busy_ns, n + 1));
+                busy / (n.max(1) as f64 * makespan)
+            }
+        }
+    };
+    let util = ClassUtil {
+        xbar: class_weighted(ResourceClass::Crossbar),
+        dcim: class_weighted(ResourceClass::Dcim),
+        noc: noc.util(makespan),
+        offchip: class_weighted(ResourceClass::OffChip),
+    };
+
+    let resources: Vec<ResourceUsage> = tracks
+        .iter()
+        .map(|t| ResourceUsage {
+            name: t.name.clone(),
+            busy_ns: t.busy_ns,
+            util: if makespan > 0.0 { t.busy_ns / makespan } else { 0.0 },
+        })
+        .collect();
+    let bottleneck = resources
+        .iter()
+        .max_by(|a, b| a.busy_ns.total_cmp(&b.busy_ns))
+        .cloned()
+        .unwrap_or_else(|| ResourceUsage { name: "none".into(), busy_ns: 0.0, util: 0.0 });
+
+    ledger.latency_ns = makespan;
+    TimelineReport {
+        schema: super::report::TIMELINE_SCHEMA,
+        model: model.model.clone(),
+        config: model.config.clone(),
+        batch,
+        chunks: chunks_req,
+        rounds: n_rounds,
+        makespan_ns: makespan,
+        serial_ns,
+        lower_bound_ns,
+        throughput_ips: if makespan > 0.0 { batch as f64 / makespan * 1e9 } else { 0.0 },
+        speedup: if makespan > 0.0 { serial_ns / makespan } else { 0.0 },
+        bottleneck,
+        resources,
+        util,
+        noc,
+        ledger,
+        trace: tracer,
+    }
+}
+
+/// Per-track crossbar weight (layer tile count for xbar/dcim tracks).
+fn track_weights(layers: &[LayerSpec], tracks: &[BusyTrack]) -> Vec<usize> {
+    tracks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| match t.class {
+            ResourceClass::Crossbar | ResourceClass::Dcim => {
+                let l = (i - 1) / 2;
+                layers[l].crossbars.max(1)
+            }
+            ResourceClass::OffChip => 1,
+        })
+        .collect()
+}
+
+/// Greedy round partition under a tile budget (`None` → one round).
+fn partition_rounds(layers: &[LayerSpec], budget: Option<usize>) -> Vec<usize> {
+    let Some(budget) = budget else { return vec![0; layers.len()] };
+    let mut rounds = Vec::with_capacity(layers.len());
+    let mut round = 0usize;
+    let mut acc = 0usize;
+    for l in layers {
+        let xb = l.crossbars.max(1);
+        if acc > 0 && acc + xb > budget {
+            round += 1;
+            acc = 0;
+        }
+        acc += xb;
+        rounds.push(round);
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::sim::tech::TechNode;
+
+    fn model(budget: Option<usize>) -> TimelineModel {
+        let g = zoo::resnet20();
+        let arch = Arch::Hcim(HcimConfig::config_a());
+        let params = CalibParams::at_65nm().rescaled(TechNode::N32);
+        TimelineModel::from_graph(&g, &arch, &params, &SparsityTable::paper_default(), budget)
+            .unwrap()
+    }
+
+    #[test]
+    fn from_graph_prices_every_mvm_layer() {
+        let m = model(None);
+        let g = zoo::resnet20();
+        assert_eq!(m.layers.len(), g.mvm_layers());
+        for l in &m.layers {
+            assert!(l.mvm_ns > 0.0, "layer {} has no latency", l.layer_index);
+            assert!(l.dcim_ns_per_mvm > 0.0 && l.dcim_ns_per_mvm <= l.mvm_ns);
+            assert!(l.mvm_energy.total_energy_pj() > 0.0);
+            assert!(l.weight_bytes > 0);
+        }
+        assert!(m.input_ns > 0.0);
+    }
+
+    #[test]
+    fn makespan_between_bounds_and_pipelining_wins() {
+        let m = model(None);
+        let rep = simulate(&m, &TimelineCfg { batch: 4, chunks: 8, trace: false });
+        assert!(rep.makespan_ns > 0.0);
+        assert!(
+            rep.makespan_ns <= rep.serial_ns,
+            "pipelined makespan {} must not exceed serial {}",
+            rep.makespan_ns,
+            rep.serial_ns
+        );
+        assert!(
+            rep.makespan_ns >= rep.lower_bound_ns,
+            "makespan {} below the busiest-resource bound {}",
+            rep.makespan_ns,
+            rep.lower_bound_ns
+        );
+        assert!(rep.speedup > 1.0, "batch-4 pipelining must beat serial execution");
+        assert!(rep.throughput_ips > 0.0);
+        for u in [rep.util.xbar, rep.util.dcim, rep.util.noc, rep.util.offchip] {
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u} out of range");
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_into_higher_throughput() {
+        let m = model(None);
+        let t1 = simulate(&m, &TimelineCfg { batch: 1, chunks: 8, trace: false });
+        let t16 = simulate(&m, &TimelineCfg { batch: 16, chunks: 8, trace: false });
+        assert!(
+            t16.throughput_ips > t1.throughput_ips,
+            "batch 16 {} img/s must beat batch 1 {} img/s",
+            t16.throughput_ips,
+            t1.throughput_ips
+        );
+        assert!(t16.util.xbar > t1.util.xbar, "batching must raise tile utilization");
+    }
+
+    #[test]
+    fn tile_budget_adds_rounds_and_latency() {
+        let full = model(None);
+        let full_rep = simulate(&full, &TimelineCfg::default());
+        assert_eq!(full_rep.rounds, 1);
+
+        let peak = full.layers.iter().map(|l| l.crossbars).max().unwrap();
+        let budget = (full.total_crossbars() / 3).max(peak);
+        let tight = model(Some(budget));
+        let tight_rep = simulate(&tight, &TimelineCfg::default());
+        assert!(tight_rep.rounds > 1, "a third of the demand must force rounds");
+        assert!(
+            tight_rep.makespan_ns > full_rep.makespan_ns,
+            "time multiplexing must cost latency: {} vs {}",
+            tight_rep.makespan_ns,
+            full_rep.makespan_ns
+        );
+        // reprogramming energy is booked under Buffer
+        assert!(
+            tight_rep.ledger.energy(Component::Buffer)
+                > full_rep.ledger.energy(Component::Buffer)
+        );
+    }
+
+    #[test]
+    fn budget_below_peak_is_an_error() {
+        let g = zoo::resnet20();
+        let arch = Arch::Hcim(HcimConfig::config_a());
+        let params = CalibParams::at_65nm();
+        let err = TimelineModel::from_graph(
+            &g,
+            &arch,
+            &params,
+            &SparsityTable::paper_default(),
+            Some(1),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_across_runs() {
+        let m = model(None);
+        let cfg = TimelineCfg { batch: 4, chunks: 8, trace: false };
+        let a = simulate(&m, &cfg);
+        let b = simulate(&m, &cfg);
+        assert_eq!(a.makespan_ns.to_bits(), b.makespan_ns.to_bits());
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn gather_traffic_reaches_the_mesh() {
+        let m = model(None);
+        assert!(
+            m.layers.iter().any(|l| l.row_tiles > 1 && l.psum_bytes_per_src_mvm > 0),
+            "resnet20 config A must have row-tiled layers"
+        );
+        let rep = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: false });
+        assert!(rep.noc.transfers > 0, "gathers must route through the mesh");
+        assert!(rep.ledger.energy(Component::Interconnect) > 0.0);
+        assert_eq!(
+            rep.noc.wait_hist.iter().sum::<u64>(),
+            rep.noc.transfers,
+            "histogram must cover every transfer"
+        );
+    }
+
+    #[test]
+    fn rounds_partition_respects_budget() {
+        let m = model(None);
+        let budget = m.layers.iter().map(|l| l.crossbars).max().unwrap();
+        let rounds = partition_rounds(&m.layers, Some(budget));
+        // every round's footprint fits the budget
+        let n_rounds = rounds.last().unwrap() + 1;
+        for r in 0..n_rounds {
+            let fp: usize = m
+                .layers
+                .iter()
+                .zip(&rounds)
+                .filter(|(_, &lr)| lr == r)
+                .map(|(l, _)| l.crossbars.max(1))
+                .sum();
+            assert!(fp <= budget, "round {r} footprint {fp} exceeds budget {budget}");
+        }
+        assert_eq!(partition_rounds(&m.layers, None), vec![0; m.layers.len()]);
+    }
+}

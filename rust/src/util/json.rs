@@ -92,6 +92,14 @@ impl Json {
     }
 }
 
+/// Fixed 3-decimal rounding before serialization, shared by the
+/// deterministic report writers (serving metrics, timeline): derived
+/// floats (percentiles, rates, utilizations) print byte-stably and stay
+/// hand-checkable in the golden files.
+pub fn num3(x: f64) -> Json {
+    Json::Num((x * 1000.0).round() / 1000.0)
+}
+
 /// Parse / access error.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JsonError(pub String);

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Regenerate tests/golden/timeline_small.json (deliberately).
+
+Mirror of the hand-checkable two-layer injected-duration timeline spec in
+rust/tests/timeline.rs (`golden_model`): batch 2, 2 chunks/layer,
+input 50 ns, layer0 4 x 100 ns (DCiM 40), layer1 4 x 50 ns (DCiM 20),
+no partial-sum traffic. The wavefront schedule is computed here exactly
+as the discrete-event engine plays it, so every golden number is
+auditable without running the Rust side:
+
+  input: img0 0-50, img1 50-100 (off-chip channel is serial)
+  xbar.l00 chunks (200 ns each, FIFO): 50-250, 250-450, 450-650, 650-850
+  xbar.l01 chunks (100 ns each, each after its upstream chunk):
+           250-350, 450-550, 650-750, 850-950  ->  makespan 950 ns
+
+Rounding mirrors the Rust num3 (3 decimals) + JSON integer printing.
+"""
+import json
+
+MAKESPAN = 950.0
+SERIAL = 2 * (50.0 + 4 * 100.0 + 4 * 50.0)  # 1300
+BUSY = {  # registry order
+    "offchip": 100.0,
+    "xbar.l00": 4 * 200.0,
+    "dcim.l00": 4 * 80.0,
+    "xbar.l01": 4 * 100.0,
+    "dcim.l01": 4 * 40.0,
+}
+
+
+def num3(x):
+    v = round(x * 1000.0) / 1000.0
+    return int(v) if float(v).is_integer() else v
+
+
+doc = {
+    "batch": 2,
+    "bottleneck": {"busy_ns": num3(800.0), "resource": "xbar.l00"},
+    "chunks": 2,
+    "config": "spec",
+    "energy": {
+        # 16 chunk-invocations x (crossbar 10 + buffer 1) + 2 images x off-chip 5
+        "components": {"buffer": num3(16.0), "crossbar": num3(160.0), "off-chip": num3(10.0)},
+        "total_pj": num3(186.0),
+    },
+    "lower_bound_ns": num3(800.0),
+    "makespan_ns": num3(MAKESPAN),
+    "model": "golden",
+    "noc": {
+        "busy_link_ns": 0,
+        "links": 2,  # Mesh::for_tiles(2) = 2x1: one interior edge, both directions
+        "transfers": 0,
+        "util": 0,
+        "wait_hist": [0, 0, 0, 0, 0, 0],
+        "wait_ns_total": 0,
+    },
+    "resources": [
+        {"busy_ns": num3(b), "name": n, "util": num3(b / MAKESPAN)} for n, b in BUSY.items()
+    ],
+    "rounds": 1,
+    "schema": 1,
+    "serial_ns": num3(SERIAL),
+    "speedup": num3(SERIAL / MAKESPAN),
+    "throughput_ips": num3(2 / MAKESPAN * 1e9),
+    "util": {
+        "dcim": num3((BUSY["dcim.l00"] + BUSY["dcim.l01"]) / (2 * MAKESPAN)),
+        "noc": 0,
+        "offchip": num3(BUSY["offchip"] / MAKESPAN),
+        "xbar": num3((BUSY["xbar.l00"] + BUSY["xbar.l01"]) / (2 * MAKESPAN)),
+    },
+}
+
+print(json.dumps(doc, sort_keys=True, separators=(",", ":")))
