@@ -102,6 +102,18 @@ hcim — ADC-Less Hybrid Analog-Digital CiM accelerator (paper reproduction)
 USAGE:
   hcim <command> [options]
 
+TELEMETRY (serve | dse | robustness | timeline):
+  --trace FILE    write a Chrome trace_event JSON (open in Perfetto or
+                  chrome://tracing). `timeline` exports the virtual-clock
+                  span journal (crossbar groups, DCiM occupancy, NoC
+                  activity); the other commands export wall-clock spans.
+                  Also embeds the instrument-registry snapshot. Never
+                  changes the deterministic report JSONs.
+  --progress      stream `{done,total,rate,eta_s}` progress lines for
+                  fan-out work (DSE points, Monte Carlo trials, serve
+                  batches) to stderr at info level; without it the same
+                  lines still appear under HCIM_LOG=debug
+
 COMMANDS:
   simulate    run the cycle-accurate simulator on a model
                 --model resnet20|resnet32|resnet44|wrn20|vgg9|vgg11|resnet18
@@ -178,6 +190,8 @@ COMMANDS:
                 --out DIR        also write timeline.{json,csv}
                 --vcd FILE       Gantt-style VCD trace (one signal per
                                  resource; open in GTKWave)
+                --trace FILE     Chrome trace_event JSON of the same busy
+                                 intervals on the virtual clock (Perfetto)
   info        show a model's crossbar mapping (Eq. 2 bookkeeping)
                 --model NAME --config A|B
   help        this message

@@ -6,6 +6,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::instrument;
+
 /// One inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -49,6 +51,7 @@ impl Batcher {
             return false;
         }
         g.queue.push_back(req);
+        depth_peak().set_max(g.queue.len() as u64);
         self.notify.notify_one();
         true
     }
@@ -109,6 +112,13 @@ impl Batcher {
         let n = g.queue.len().min(self.max_batch);
         g.queue.drain(..n).collect()
     }
+}
+
+/// Global queue-depth high-water-mark gauge, resolved once per process.
+fn depth_peak() -> &'static std::sync::Arc<instrument::Gauge> {
+    static GAUGE: std::sync::OnceLock<std::sync::Arc<instrument::Gauge>> =
+        std::sync::OnceLock::new();
+    GAUGE.get_or_init(|| instrument::global().gauge("serve.batcher.depth_peak"))
 }
 
 #[cfg(test)]
@@ -181,6 +191,16 @@ mod tests {
         assert_eq!(b.depth(), 0);
         assert!(b.submit(req(1)));
         assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn submit_bumps_the_depth_gauge() {
+        let b = Batcher::new(8, Duration::from_secs(1));
+        for i in 0..3 {
+            assert!(b.submit(req(i)));
+        }
+        // the gauge is a process-global high-water mark: only ≥ is safe
+        assert!(instrument::global().gauge("serve.batcher.depth_peak").get() >= 3);
     }
 
     #[test]

@@ -100,6 +100,7 @@ impl Snapshot {
         lat.insert("mean".to_string(), Json::Num(self.latency_us.mean));
         lat.insert("p50".to_string(), Json::Num(self.latency_us.p50));
         lat.insert("p90".to_string(), Json::Num(self.latency_us.p90));
+        lat.insert("p95".to_string(), Json::Num(self.latency_us.p95));
         lat.insert("p99".to_string(), Json::Num(self.latency_us.p99));
         lat.insert("max".to_string(), Json::Num(self.latency_us.max));
         let mut o = BTreeMap::new();
@@ -130,8 +131,12 @@ impl std::fmt::Display for Snapshot {
         )?;
         writeln!(
             f,
-            "latency p50={:.0}µs p90={:.0}µs p99={:.0}µs max={:.0}µs",
-            self.latency_us.p50, self.latency_us.p90, self.latency_us.p99, self.latency_us.max
+            "latency p50={:.0}µs p90={:.0}µs p95={:.0}µs p99={:.0}µs max={:.0}µs",
+            self.latency_us.p50,
+            self.latency_us.p90,
+            self.latency_us.p95,
+            self.latency_us.p99,
+            self.latency_us.max
         )?;
         write!(
             f,
@@ -182,7 +187,14 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.num_field("requests").unwrap(), 2.0);
         assert_eq!(parsed.num_field("batches").unwrap(), 1.0);
-        assert!(parsed.get("latency_us").and_then(|l| l.get("p50")).is_some());
+        let lat = parsed.get("latency_us").unwrap();
+        assert!(lat.get("p50").is_some());
+        // the full percentile set the deterministic serve report uses —
+        // p95 included — must round-trip through the wall JSON too
+        let p90 = lat.num_field("p90").unwrap();
+        let p95 = lat.num_field("p95").unwrap();
+        let p99 = lat.num_field("p99").unwrap();
+        assert!(p90 <= p95 && p95 <= p99);
         assert!(parsed.num_field("sim_energy_uj_per_inf").unwrap() > 0.0);
     }
 }

@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::hardware::HcimConfig;
 use crate::model::zoo;
+use crate::obs::{self, Progress};
 use crate::runtime::Engine;
 use crate::sim::mapping::ModelMapping;
 use crate::sim::simulator::{Arch, Simulator};
@@ -439,6 +440,7 @@ impl Scheduler {
     /// no wall clock, no threads — which is what makes the metrics JSON
     /// byte-identical across runs and pool sizes.
     pub fn plan_admissions(&mut self, arrivals: &[Arrival]) -> Vec<Arrival> {
+        let _span = obs::wall_span("serve.plan_admissions");
         let n = self.tenants.len();
         let mut inflight: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
         let mut free_at: Vec<u64> = vec![0; n];
@@ -497,6 +499,7 @@ impl Scheduler {
         if self.tenants.iter().all(|t| t.engine.is_none()) {
             return Ok(0);
         }
+        let _span = obs::wall_span("serve.execute");
         for (k, arr) in admitted.iter().enumerate() {
             let t = &self.tenants[arr.tenant];
             let Some(engine) = &t.engine else { continue };
@@ -572,9 +575,13 @@ impl Scheduler {
         drop(done_tx);
 
         let mut completed = 0usize;
+        let progress = Progress::new("serve.batches", batches as u64);
         for _ in 0..batches {
             match done_rx.recv() {
-                Ok(Ok(n)) => completed += n,
+                Ok(Ok(n)) => {
+                    completed += n;
+                    progress.tick();
+                }
                 Ok(Err(e)) => return Err(e),
                 Err(_) => anyhow::bail!(
                     "scheduler pool workers died after {completed} of {expected} requests"

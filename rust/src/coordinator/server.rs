@@ -7,6 +7,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::model::zoo;
+use crate::obs::instrument;
 use crate::runtime::Engine;
 use crate::sim::simulator::{Arch, SimReport, Simulator};
 use crate::sim::tech::TechNode;
@@ -96,8 +97,12 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("hcim-serve-{wid}"))
                     .spawn(move || {
+                        let batches_ctr = instrument::global().counter("serve.batches");
+                        let reqs_ctr = instrument::global().counter("serve.requests");
                         while let Some(batch) = batcher.next_batch() {
                             let n = batch.len();
+                            batches_ctr.incr();
+                            reqs_ctr.add(n as u64);
                             let elems = engine.manifest.input_elems();
                             let mut flat = Vec::with_capacity(n * elems);
                             for r in &batch {

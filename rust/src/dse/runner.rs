@@ -13,6 +13,7 @@ use crate::dse::cache::{PointMetrics, ResultCache, CACHE_SCHEMA};
 use crate::dse::space::{DesignPoint, DesignSpace};
 use crate::model::zoo;
 use crate::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
+use crate::obs::{self, instrument, Progress};
 use crate::sim::simulator::{Simulator, SparsityTable};
 use crate::timeline::{self, TimelineCfg, TimelineModel};
 use crate::util::threadpool::ThreadPool;
@@ -141,6 +142,7 @@ impl SweepRunner {
     /// uncached points in parallel, merge in enumeration order, and
     /// persist the cache.
     pub fn run(&mut self) -> crate::Result<SweepResult> {
+        let _span = obs::wall_span("dse.sweep");
         self.space.validate()?;
         let points = self.space.enumerate();
 
@@ -164,13 +166,18 @@ impl SweepRunner {
         }
         let cache_hits = results.iter().filter(|r| r.is_some()).count();
         let simulated = pending.len();
+        let inst = instrument::global();
+        inst.counter("dse.cache.hit").add(cache_hits as u64);
+        inst.counter("dse.cache.miss").add(simulated as u64);
 
         if !pending.is_empty() {
             let table = Arc::new(self.sparsity.clone());
             let robustness = self.robustness;
             let pool = ThreadPool::new(self.workers.min(pending.len()).max(1));
+            let progress = Arc::new(Progress::new("dse.points", pending.len() as u64));
             let fresh = pool.map(pending, move |(i, p)| {
                 let metrics = simulate_point(&p, &table, robustness);
+                progress.tick();
                 (i, p, metrics)
             });
             for (i, p, metrics) in fresh {

@@ -39,6 +39,10 @@
 //!   tile tasks scheduled onto finite crossbar/DCiM/mesh resources with
 //!   pipelining, batch overlap, and link contention (`hcim timeline`,
 //!   the DSE throughput/utilization columns, `hcim serve --timeline`).
+//! * [`obs`] — unified telemetry: virtual-clock span journals (same
+//!   byte-identity contract as the reports), wall-clock RAII spans, a
+//!   named instrument registry, Chrome `trace_event` export (`--trace`),
+//!   and a progress/ETA stderr stream for fan-out sweeps (`--progress`).
 
 pub mod util;
 pub mod config;
@@ -52,6 +56,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod dse;
 pub mod nonideal;
+pub mod obs;
 pub mod cli;
 
 /// Crate version (mirrors `Cargo.toml`).

@@ -17,6 +17,7 @@ use hcim::dse::{DesignSpace, ResultCache, RobustnessCfg, SweepReport, SweepRunne
 use hcim::experiments;
 use hcim::model::zoo;
 use hcim::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
+use hcim::obs;
 use hcim::runtime::Engine;
 use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
 use hcim::sim::tech::TechNode;
@@ -31,6 +32,12 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // `--progress` normally parses as a switch, but the hand-rolled
+    // grammar turns it into a flag when a positional token follows it —
+    // accept both spellings rather than silently dropping the request
+    if args.has("progress") || args.flag("progress").is_some() {
+        obs::progress::set_stream_enabled(true);
+    }
     let code = match args.subcommand.as_str() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
@@ -87,6 +94,19 @@ fn arch_from(args: &Args, cfg: HcimConfig) -> hcim::Result<Arch> {
         "bitsplit" => Arch::BitSplitNet(cfg),
         other => anyhow::bail!("unknown arch `{other}`"),
     })
+}
+
+/// `--trace` for the wall-clock commands (`serve`, `dse`, `robustness`):
+/// dump every recorded wall span plus the instrument-registry snapshot
+/// as a Chrome trace_event document. The `timeline` command has its own
+/// richer export on the virtual clock ([`TimelineReport::chrome_trace`]).
+fn write_wall_trace_if_asked(args: &Args) -> hcim::Result<()> {
+    let Some(path) = args.flag("trace") else { return Ok(()) };
+    let mut t = obs::ChromeTrace::new();
+    t.push_wall_spans(1, &obs::span::wall_spans());
+    t.write(Path::new(path), Some(obs::instrument::global()))?;
+    eprintln!("trace: {path}");
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> hcim::Result<()> {
@@ -155,6 +175,7 @@ fn cmd_serve(args: &Args) -> hcim::Result<()> {
     let metrics = server.shutdown();
     println!("first classes: {:?}", &responses.iter().map(|r| r.class).take(8).collect::<Vec<_>>());
     println!("{}", metrics.snapshot());
+    write_wall_trace_if_asked(args)?;
     Ok(())
 }
 
@@ -259,6 +280,7 @@ fn cmd_serve_multi(args: &Args) -> hcim::Result<()> {
         report.tenants.len(),
         t0.elapsed().as_secs_f64()
     );
+    write_wall_trace_if_asked(args)?;
     Ok(())
 }
 
@@ -337,6 +359,7 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
         result.cache_hits
     );
     println!("report: {}  {}", json_path.display(), csv_path.display());
+    write_wall_trace_if_asked(args)?;
     Ok(())
 }
 
@@ -390,6 +413,7 @@ fn cmd_robustness(args: &Args) -> hcim::Result<()> {
         elapsed.as_secs_f64(),
         if mc.workers == 0 { "auto".to_string() } else { mc.workers.to_string() }
     );
+    write_wall_trace_if_asked(args)?;
     Ok(())
 }
 
@@ -419,7 +443,8 @@ fn cmd_timeline(args: &Args) -> hcim::Result<()> {
     let tl_cfg = TimelineCfg {
         batch: args.usize_or("batch", 1)?.max(1),
         chunks: args.usize_or("chunks", 8)?.max(1),
-        trace: args.flag("vcd").is_some(),
+        // both exports read the same busy intervals, recorded only on demand
+        trace: args.flag("vcd").is_some() || args.flag("trace").is_some(),
     };
     let t0 = Instant::now();
     let report = timeline::simulate(&tl_model, &tl_cfg);
@@ -442,6 +467,14 @@ fn cmd_timeline(args: &Args) -> hcim::Result<()> {
     if let Some(path) = args.flag("vcd") {
         report.write_vcd(Path::new(path))?;
         eprintln!("trace: {path}");
+    }
+    if let Some(path) = args.flag("trace") {
+        // virtual-clock journal → Perfetto, with the instrument snapshot
+        // riding along as an extra (viewer-ignored) top-level key
+        report
+            .chrome_trace()?
+            .write(Path::new(path), Some(obs::instrument::global()))?;
+        eprintln!("chrome trace: {path}");
     }
     eprintln!(
         "scheduled {} on {} (batch {}, {} rounds) in {:.3}s",

@@ -15,6 +15,7 @@ use crate::model::graph::Graph;
 use crate::nonideal::inject::run_trial;
 use crate::nonideal::models::NonIdealityParams;
 use crate::nonideal::report::RobustnessReport;
+use crate::obs::{self, instrument, Progress};
 use crate::util::rng::splitmix64;
 use crate::util::threadpool::ThreadPool;
 
@@ -66,12 +67,22 @@ pub fn run_monte_carlo(
     mc: &MonteCarloCfg,
 ) -> RobustnessReport {
     assert!(mc.trials >= 1, "monte carlo needs at least one trial");
+    let _span = obs::wall_span("mc.run");
+    let t0 = std::time::Instant::now();
     let seeds = trial_seeds(mc.seed, mc.trials);
     let ctx = Arc::new((graph.clone(), cfg.clone(), *ni));
+    let progress = Arc::new(Progress::new("mc.trials", mc.trials as u64));
     let trials: Vec<TrialMetrics> = if mc.trials == 1 || mc.workers == 1 {
         // serial path: also used when a trial runs inside another pool's
         // worker (e.g. the DSE sweep), avoiding nested pool spawns
-        seeds.into_iter().map(|s| run_one(&ctx, s)).collect()
+        seeds
+            .into_iter()
+            .map(|s| {
+                let t = run_one(&ctx, s);
+                progress.tick();
+                t
+            })
+            .collect()
     } else {
         let workers = if mc.workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -80,8 +91,17 @@ pub fn run_monte_carlo(
         };
         let pool = ThreadPool::new(workers.min(mc.trials).max(1));
         let ctx = Arc::clone(&ctx);
-        pool.map(seeds, move |s| run_one(&ctx, s))
+        let progress = Arc::clone(&progress);
+        pool.map(seeds, move |s| {
+            let t = run_one(&ctx, s);
+            progress.tick();
+            t
+        })
     };
+    let inst = instrument::global();
+    inst.counter("mc.trials").add(mc.trials as u64);
+    inst.gauge("mc.trial_rate_per_s")
+        .set_max((mc.trials as f64 / t0.elapsed().as_secs_f64().max(1e-9)) as u64);
     RobustnessReport::build(&ctx.0.name, &ctx.1, ni, mc.seed, trials)
 }
 

@@ -1,0 +1,184 @@
+//! Chrome `trace_event`-format JSON export.
+//!
+//! The emitted document (`{"displayTimeUnit":"ns","traceEvents":[..]}`)
+//! loads directly in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`, complementing the GTKWave VCD path of
+//! `sim/trace.rs`. Timestamps and durations are in **microseconds**
+//! (the trace_event unit) rounded through `num3`, i.e. ns resolution.
+//!
+//! Events are serialized in push order; push each track's complete
+//! events in time order so `ts` stays monotone per `(pid, tid)` — the
+//! CI smoke validates exactly that invariant.
+
+use std::collections::BTreeMap;
+
+use crate::obs::instrument::Instruments;
+use crate::obs::span::{SpanJournal, WallSpan};
+use crate::util::json::{num3, Json};
+
+/// Builder for a `trace_event` JSON document.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeTrace {
+    events: Vec<Json>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> ChromeTrace {
+        ChromeTrace::default()
+    }
+
+    fn base(ph: &str, pid: u64, tid: u64, name: &str) -> BTreeMap<String, Json> {
+        let mut o = BTreeMap::new();
+        o.insert("ph".to_string(), Json::Str(ph.to_string()));
+        o.insert("pid".to_string(), Json::Num(pid as f64));
+        o.insert("tid".to_string(), Json::Num(tid as f64));
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o
+    }
+
+    /// `thread_name` metadata ("M") event labelling `(pid, tid)`.
+    pub fn thread_meta(&mut self, pid: u64, tid: u64, label: &str) {
+        let mut o = Self::base("M", pid, tid, "thread_name");
+        o.insert("ts".to_string(), Json::Num(0.0));
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(label.to_string()));
+        o.insert("args".to_string(), Json::Obj(args));
+        self.events.push(Json::Obj(o));
+    }
+
+    /// Complete ("X") event; `ts_us`/`dur_us` in microseconds.
+    pub fn complete(&mut self, pid: u64, tid: u64, name: &str, ts_us: f64, dur_us: f64) {
+        let mut o = Self::base("X", pid, tid, name);
+        o.insert("ts".to_string(), num3(ts_us));
+        o.insert("dur".to_string(), num3(dur_us));
+        self.events.push(Json::Obj(o));
+    }
+
+    /// Counter ("C") event: one `series = value` sample at `ts_us`.
+    pub fn counter(&mut self, pid: u64, tid: u64, name: &str, ts_us: f64, series: &str, value: f64) {
+        let mut o = Self::base("C", pid, tid, name);
+        o.insert("ts".to_string(), num3(ts_us));
+        let mut args = BTreeMap::new();
+        args.insert(series.to_string(), num3(value));
+        o.insert("args".to_string(), Json::Obj(args));
+        self.events.push(Json::Obj(o));
+    }
+
+    /// Render a virtual-clock journal: one tid per track (first-seen
+    /// order, 1-based), a `thread_name` label, then that track's spans
+    /// as complete events in journal order (already time-sorted per
+    /// track by construction).
+    pub fn push_journal(&mut self, pid: u64, journal: &SpanJournal) {
+        for (i, track) in journal.tracks().iter().enumerate() {
+            let tid = i as u64 + 1;
+            self.thread_meta(pid, tid, track);
+            for s in journal.spans().iter().filter(|s| &s.track == track) {
+                self.complete(pid, tid, &s.name, s.start_ns / 1e3, (s.end_ns - s.start_ns) / 1e3);
+            }
+        }
+    }
+
+    /// Render wall-clock spans on a dedicated `wall` track (tid 0),
+    /// sorted by start time.
+    pub fn push_wall_spans(&mut self, pid: u64, spans: &[WallSpan]) {
+        if spans.is_empty() {
+            return;
+        }
+        self.thread_meta(pid, 0, "wall");
+        let mut sorted: Vec<&WallSpan> = spans.iter().collect();
+        sorted.sort_by(|a, b| a.start_us.partial_cmp(&b.start_us).unwrap());
+        for s in sorted {
+            self.complete(pid, 0, &s.name, s.start_us, s.dur_us);
+        }
+    }
+
+    /// The bare trace document (no process-global state): deterministic
+    /// for a given event sequence, hence golden-testable.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("displayTimeUnit".to_string(), Json::Str("ns".to_string()));
+        o.insert("traceEvents".to_string(), Json::Arr(self.events.clone()));
+        Json::Obj(o)
+    }
+
+    /// Trace document plus a top-level `"instruments"` snapshot — extra
+    /// top-level keys are ignored by trace viewers but keep the run's
+    /// counters next to its spans for post-processing.
+    pub fn to_json_with_instruments(&self, instruments: &Instruments) -> Json {
+        let mut o = match self.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("instruments".to_string(), instruments.snapshot_json());
+        Json::Obj(o)
+    }
+
+    /// Write the document (newline-terminated) to `path`.
+    pub fn write(&self, path: &std::path::Path, instruments: Option<&Instruments>) -> crate::Result<()> {
+        let doc = match instruments {
+            Some(i) => self.to_json_with_instruments(i),
+            None => self.to_json(),
+        };
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_carry_required_keys() {
+        let mut t = ChromeTrace::new();
+        t.thread_meta(1, 1, "xbar.l00");
+        t.complete(1, 1, "busy", 0.05, 0.2);
+        t.counter(1, 0, "noc.active", 0.25, "active", 3.0);
+        let doc = t.to_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            for key in ["ph", "pid", "tid", "name"] {
+                assert!(e.get(key).is_some(), "missing {key}");
+            }
+        }
+        let x = &events[1];
+        assert_eq!(x.str_field("ph").unwrap(), "X");
+        assert_eq!(x.num_field("ts").unwrap(), 0.05);
+        assert_eq!(x.num_field("dur").unwrap(), 0.2);
+    }
+
+    #[test]
+    fn journal_render_is_monotone_per_tid() {
+        let mut j = SpanJournal::new();
+        j.push("offchip", "input", 0.0, 50.0);
+        j.push("offchip", "input", 50.0, 100.0);
+        j.push("xbar.l00", "busy", 50.0, 850.0);
+        let mut t = ChromeTrace::new();
+        t.push_journal(1, &j);
+        let doc = t.to_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+        for e in events {
+            if e.str_field("ph").unwrap() != "X" {
+                continue;
+            }
+            let tid = e.num_field("tid").unwrap() as i64;
+            let ts = e.num_field("ts").unwrap();
+            assert!(*last_ts.get(&tid).unwrap_or(&f64::NEG_INFINITY) <= ts);
+            last_ts.insert(tid, ts);
+        }
+        assert_eq!(last_ts.len(), 2); // two tracks → two tids
+    }
+
+    #[test]
+    fn instruments_ride_along_as_extra_key() {
+        let reg = Instruments::new();
+        reg.counter("psq.mvm").add(9);
+        let t = ChromeTrace::new();
+        let doc = t.to_json_with_instruments(&reg);
+        let counters = doc.get("instruments").unwrap().get("counters").unwrap();
+        assert_eq!(counters.num_field("psq.mvm").unwrap(), 9.0);
+        assert!(doc.get("traceEvents").is_some());
+    }
+}

@@ -1,0 +1,221 @@
+//! Named instrument registry: counters, gauges, and histograms that hot
+//! subsystems bump and report writers snapshot.
+//!
+//! Instruments are cheap atomics behind `Arc`s: a call site resolves the
+//! `Arc` once (outside its loop, or through a `OnceLock` for free
+//! functions) and then updates with relaxed atomic ops, so the hot paths
+//! pay one `fetch_add` per event. Names are dotted `subsystem.metric`
+//! paths (`timeline.queue_peak`, `noc.wait_ns`, `dse.cache.hit`,
+//! `psq.mvm`); the snapshot serializes as a sorted JSON object so its
+//! byte layout is stable for a given set of recorded values.
+//!
+//! Snapshots feed the Chrome trace exporter and stderr logs only — the
+//! registry is process-global and its contents depend on what else ran
+//! in the process, so it must never be embedded in a seed-deterministic
+//! report JSON (the wall-vs-virtual split of `coordinator/metrics.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Integer-valued gauge: last value or high watermark.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if it exceeds the current value (peak
+    /// tracking, e.g. queue depth high-water marks).
+    pub fn set_max(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (exclusive) of the histogram's finite buckets; samples
+/// at or above the last bound land in the overflow bucket.
+pub const HIST_BOUNDS: [u64; 6] = [10, 100, 1_000, 10_000, 100_000, 1_000_000];
+
+/// Bucket count: one per finite bound plus the overflow bucket.
+pub const HIST_BUCKETS: usize = HIST_BOUNDS.len() + 1;
+
+/// Decade-bucketed histogram of `u64` samples (wait times in ns, queue
+/// depths): `<10, <100, <1e3, <1e4, <1e5, <1e6, ≥1e6`.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let idx = HIST_BOUNDS.iter().position(|&b| v < b).unwrap_or(HIST_BOUNDS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn buckets(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Registry of named instruments. `counter`/`gauge`/`histogram` create on
+/// first use and hand back a shared `Arc`, so hot loops hoist the lookup.
+#[derive(Debug, Default)]
+pub struct Instruments {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Instruments {
+    pub fn new() -> Instruments {
+        Instruments::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(self.counters.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(self.gauges.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(self.histograms.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Sorted-key JSON snapshot:
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{buckets,count,sum}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::Num(v.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(k.clone(), Json::Num(v.get() as f64));
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, v) in self.histograms.lock().unwrap().iter() {
+            let mut h = BTreeMap::new();
+            h.insert(
+                "buckets".to_string(),
+                Json::Arr(v.buckets().iter().map(|&b| Json::Num(b as f64)).collect()),
+            );
+            h.insert("count".to_string(), Json::Num(v.count() as f64));
+            h.insert("sum".to_string(), Json::Num(v.sum() as f64));
+            histograms.insert(k.clone(), Json::Obj(h));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("counters".to_string(), Json::Obj(counters));
+        o.insert("gauges".to_string(), Json::Obj(gauges));
+        o.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(o)
+    }
+}
+
+/// The process-wide registry the CLI subsystem hooks record into.
+pub fn global() -> &'static Instruments {
+    static GLOBAL: OnceLock<Instruments> = OnceLock::new();
+    GLOBAL.get_or_init(Instruments::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_hands_back_the_same_instrument() {
+        let reg = Instruments::new();
+        let a = reg.counter("x.events");
+        let b = reg.counter("x.events");
+        a.add(3);
+        b.incr();
+        assert_eq!(reg.counter("x.events").get(), 4);
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let reg = Instruments::new();
+        let g = reg.gauge("q.depth");
+        g.set_max(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5);
+        g.set(1);
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_by_decade() {
+        let h = Histogram::default();
+        for v in [0u64, 9, 10, 99, 1_000_000, 7] {
+            h.observe(v);
+        }
+        let b = h.buckets();
+        assert_eq!(b[0], 3); // 0, 9, 7
+        assert_eq!(b[1], 2); // 10, 99
+        assert_eq!(b[HIST_BUCKETS - 1], 1); // 1e6 overflows
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1_000_125);
+    }
+
+    #[test]
+    fn snapshot_json_is_sorted_and_stable() {
+        let reg = Instruments::new();
+        reg.counter("b.count").add(2);
+        reg.counter("a.count").incr();
+        reg.gauge("g.depth").set(7);
+        reg.histogram("h.wait").observe(42);
+        let s = reg.snapshot_json().to_string();
+        assert_eq!(s, reg.snapshot_json().to_string());
+        let parsed = Json::parse(&s).unwrap();
+        let counters = parsed.get("counters").unwrap();
+        assert_eq!(counters.num_field("a.count").unwrap(), 1.0);
+        assert_eq!(counters.num_field("b.count").unwrap(), 2.0);
+        assert_eq!(parsed.get("gauges").unwrap().num_field("g.depth").unwrap(), 7.0);
+        let h = parsed.get("histograms").unwrap().get("h.wait").unwrap();
+        assert_eq!(h.num_field("count").unwrap(), 1.0);
+        assert_eq!(h.num_field("sum").unwrap(), 42.0);
+    }
+}

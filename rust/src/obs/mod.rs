@@ -1,0 +1,29 @@
+//! Crate-wide telemetry: span journals on virtual and wall clocks, a
+//! named instrument registry, Chrome `trace_event` export, and a
+//! progress/ETA stream for fan-out workloads.
+//!
+//! The subsystem is split along the determinism contract the report
+//! writers already honor (PR 4/5):
+//!
+//! * **Virtual-clock data is deterministic.** [`span::SpanJournal`]s are
+//!   built single-threadedly in resource-registry order; for fixed
+//!   inputs their `deterministic_json` is byte-identical across runs
+//!   and thread-pool sizes.
+//! * **Wall-clock data is segregated.** RAII [`span::wall_span`] guards,
+//!   [`instrument::Instruments`] snapshots, and [`progress::Progress`]
+//!   lines surface only in `"wall"` sections, the `--trace` Chrome
+//!   trace file, or stderr — never inside a deterministic report JSON.
+//!
+//! Instrument naming convention: dotted `subsystem.metric` paths, e.g.
+//! `timeline.queue_peak`, `noc.wait_ns`, `serve.batcher.depth_peak`,
+//! `dse.cache.hit`, `mc.trials`, `psq.mvm`.
+
+pub mod chrome;
+pub mod instrument;
+pub mod progress;
+pub mod span;
+
+pub use chrome::ChromeTrace;
+pub use instrument::{Counter, Gauge, Histogram, Instruments};
+pub use progress::Progress;
+pub use span::{wall_span, SpanGuard, SpanJournal, VirtSpan, WallSpan};

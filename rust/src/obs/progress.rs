@@ -1,0 +1,130 @@
+//! Progress/ETA stream for fan-out workloads.
+//!
+//! A shared [`Progress`] meter is ticked from worker threads and emits
+//! throttled `progress <name> {"done":..,"total":..,"rate":..,"eta_s":..}`
+//! lines to **stderr** through the crate logger — Debug level by
+//! default, promoted to Info when the CLI `--progress` switch enables
+//! the stream. stdout, and every deterministic report, is never touched:
+//! progress is wall-clock telemetry and varies run to run by design.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::logging::{emit, Level};
+
+static STREAM: AtomicBool = AtomicBool::new(false);
+
+/// Promote progress lines from Debug to Info (the `--progress` switch).
+pub fn set_stream_enabled(on: bool) {
+    STREAM.store(on, Ordering::Relaxed);
+}
+
+pub fn stream_enabled() -> bool {
+    STREAM.load(Ordering::Relaxed)
+}
+
+/// Thread-safe progress meter over a known unit count.
+pub struct Progress {
+    name: String,
+    total: u64,
+    done: AtomicU64,
+    t0: Instant,
+    last_emit_ms: AtomicU64,
+    every_ms: u64,
+}
+
+impl Progress {
+    /// Meter over `total` units, emitting at most once per 200 ms plus a
+    /// guaranteed final line when the last unit completes.
+    pub fn new(name: &str, total: u64) -> Progress {
+        Progress {
+            name: name.to_string(),
+            total,
+            done: AtomicU64::new(0),
+            t0: Instant::now(),
+            last_emit_ms: AtomicU64::new(0),
+            every_ms: 200,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn done(&self) -> u64 {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed unit.
+    pub fn tick(&self) {
+        self.tick_n(1);
+    }
+
+    /// Record `n` completed units; emits if the throttle window elapsed
+    /// or this tick finished the run.
+    pub fn tick_n(&self, n: u64) {
+        let done = self.done.fetch_add(n, Ordering::Relaxed) + n;
+        let finished = done >= self.total;
+        if !finished && !self.emission_due() {
+            return;
+        }
+        let elapsed = self.t0.elapsed().as_secs_f64();
+        let rate = done as f64 / elapsed.max(1e-9);
+        let eta_s = if rate > 0.0 { self.total.saturating_sub(done) as f64 / rate } else { 0.0 };
+        let lvl = if stream_enabled() { Level::Info } else { Level::Debug };
+        emit(
+            lvl,
+            "hcim::obs::progress",
+            format_args!(
+                "progress {} {{\"done\":{},\"total\":{},\"rate\":{:.1},\"eta_s\":{:.1}}}",
+                self.name, done, self.total, rate, eta_s
+            ),
+        );
+    }
+
+    /// Throttle: true for at most one caller per `every_ms` window (CAS
+    /// on the last-emit timestamp, so racing workers never double-emit).
+    fn emission_due(&self) -> bool {
+        let now_ms = self.t0.elapsed().as_millis() as u64;
+        let last = self.last_emit_ms.load(Ordering::Relaxed);
+        now_ms >= last.saturating_add(self.every_ms)
+            && self
+                .last_emit_ms
+                .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_ticks_across_threads() {
+        let p = Arc::new(Progress::new("test", 64));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let p = Arc::clone(&p);
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        p.tick();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.done(), 64);
+        assert_eq!(p.total(), 64);
+    }
+
+    #[test]
+    fn stream_flag_round_trips() {
+        set_stream_enabled(true);
+        assert!(stream_enabled());
+        set_stream_enabled(false);
+        assert!(!stream_enabled());
+    }
+}

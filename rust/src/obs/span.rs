@@ -1,0 +1,216 @@
+//! Scoped spans on two clocks.
+//!
+//! **Virtual spans** ([`SpanJournal`]) live on a subsystem's virtual
+//! clock (the timeline engine's ns clock, the serving scheduler's µs
+//! clock). Journals are built single-threadedly in resource-registry
+//! order with insertion-index span ids, so for fixed inputs the journal
+//! — and its `deterministic_json` — is byte-identical across runs and
+//! thread-pool sizes, the same contract the report JSONs honor.
+//!
+//! **Wall spans** ([`wall_span`] / [`SpanGuard`]) measure real elapsed
+//! time: an RAII guard records `{name, start_us, dur_us}` into a
+//! process-global thread-safe registry on drop. Wall spans vary run to
+//! run, so they surface only in segregated `"wall"` sections and the
+//! Chrome trace file, exactly like `coordinator/metrics.rs::Snapshot`.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{num3, Json};
+
+/// One closed span on a subsystem's virtual clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VirtSpan {
+    /// Stable id: the span's insertion index in its journal.
+    pub id: u64,
+    /// Resource/track the span ran on (e.g. `xbar.l00`).
+    pub track: String,
+    /// Span class (e.g. `busy`, `input`, `program`).
+    pub name: String,
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+/// Ordered collection of virtual-clock spans.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanJournal {
+    spans: Vec<VirtSpan>,
+}
+
+impl SpanJournal {
+    pub fn new() -> SpanJournal {
+        SpanJournal::default()
+    }
+
+    /// Append a span; its id is the current journal length.
+    pub fn push(&mut self, track: &str, name: &str, start_ns: f64, end_ns: f64) {
+        self.spans.push(VirtSpan {
+            id: self.spans.len() as u64,
+            track: track.to_string(),
+            name: name.to_string(),
+            start_ns,
+            end_ns,
+        });
+    }
+
+    pub fn spans(&self) -> &[VirtSpan] {
+        &self.spans
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Track names in first-seen order (the Chrome exporter's tid order).
+    pub fn tracks(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in &self.spans {
+            if !out.contains(&s.track) {
+                out.push(s.track.clone());
+            }
+        }
+        out
+    }
+
+    /// Virtual-time-only JSON: a pure function of the run inputs,
+    /// byte-identical across runs and pool sizes.
+    pub fn deterministic_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("id".to_string(), Json::Num(s.id as f64));
+                o.insert("track".to_string(), Json::Str(s.track.clone()));
+                o.insert("name".to_string(), Json::Str(s.name.clone()));
+                o.insert("start_ns".to_string(), num3(s.start_ns));
+                o.insert("end_ns".to_string(), num3(s.end_ns));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("schema".to_string(), Json::Num(1.0));
+        o.insert("spans".to_string(), Json::Arr(spans));
+        Json::Obj(o)
+    }
+
+    /// Full JSON: the deterministic section plus the wall-clock spans
+    /// recorded so far, segregated under `"wall"` (excluded from
+    /// [`SpanJournal::deterministic_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = match self.deterministic_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert(
+            "wall".to_string(),
+            Json::Arr(wall_spans().iter().map(WallSpan::to_json).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// One closed wall-clock span, in µs since the wall-span epoch (first
+/// `wall_span` call in the process).
+#[derive(Clone, Debug)]
+pub struct WallSpan {
+    pub name: String,
+    pub start_us: f64,
+    pub dur_us: f64,
+}
+
+impl WallSpan {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("start_us".to_string(), num3(self.start_us));
+        o.insert("dur_us".to_string(), num3(self.dur_us));
+        Json::Obj(o)
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<WallSpan>> {
+    static REGISTRY: OnceLock<Mutex<Vec<WallSpan>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// RAII wall-clock span: records into the global registry on drop.
+pub struct SpanGuard {
+    name: String,
+    start: Instant,
+}
+
+/// Open a wall-clock span; it closes (and records) when the guard drops.
+pub fn wall_span(name: &str) -> SpanGuard {
+    let _ = epoch(); // pin the epoch no later than this span's start
+    SpanGuard { name: name.to_string(), start: Instant::now() }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let start_us = self.start.duration_since(epoch()).as_secs_f64() * 1e6;
+        let dur_us = self.start.elapsed().as_secs_f64() * 1e6;
+        registry().lock().unwrap().push(WallSpan {
+            name: std::mem::take(&mut self.name),
+            start_us,
+            dur_us,
+        });
+    }
+}
+
+/// Snapshot of every wall span recorded so far in this process.
+pub fn wall_spans() -> Vec<WallSpan> {
+    registry().lock().unwrap().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_ids_are_insertion_indices() {
+        let mut j = SpanJournal::new();
+        j.push("xbar.l00", "busy", 50.0, 250.0);
+        j.push("xbar.l00", "busy", 250.0, 450.0);
+        j.push("dcim.l00", "busy", 50.0, 130.0);
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.spans()[2].id, 2);
+        assert_eq!(j.tracks(), vec!["xbar.l00".to_string(), "dcim.l00".to_string()]);
+    }
+
+    #[test]
+    fn deterministic_json_has_no_wall_section() {
+        let mut j = SpanJournal::new();
+        j.push("offchip", "input", 0.0, 50.0);
+        let det = j.deterministic_json();
+        assert!(det.get("wall").is_none());
+        assert_eq!(det.to_string(), j.deterministic_json().to_string());
+        let full = j.to_json();
+        assert!(full.get("wall").is_some());
+    }
+
+    #[test]
+    fn wall_guard_records_on_drop() {
+        // other tests in this binary may record spans concurrently, so
+        // assert on growth and on our own span, not on exact counts
+        let before = wall_spans().len();
+        {
+            let _g = wall_span("test.scope");
+        }
+        let after = wall_spans();
+        assert!(after.len() > before);
+        let ours = after.iter().rev().find(|s| s.name == "test.scope").unwrap();
+        assert!(ours.dur_us >= 0.0);
+        assert!(ours.start_us >= 0.0);
+    }
+}

@@ -247,6 +247,7 @@ impl PsqEngine {
     /// One full MVM into a reusable output buffer — no heap allocation
     /// once `out` and the plane scratch have warmed up to this shape.
     pub fn mvm_into(&mut self, x: &[i64], out: &mut PsqOutput) {
+        psq_mvm_count().incr();
         assert_eq!(x.len(), self.rows, "input/crossbar row mismatch");
         out.reset(self.phys_cols, self.params.x_bits);
         for j in 0..self.params.x_bits {
@@ -264,6 +265,15 @@ impl PsqEngine {
             }
         }
     }
+}
+
+/// Global PSQ MVM counter, resolved once per process: `mvm_into` is the
+/// packed hot path, so the instrument lookup must not take a map lock
+/// per call — one relaxed atomic increment is all it costs.
+fn psq_mvm_count() -> &'static std::sync::Arc<crate::obs::instrument::Counter> {
+    static CTR: std::sync::OnceLock<std::sync::Arc<crate::obs::instrument::Counter>> =
+        std::sync::OnceLock::new();
+    CTR.get_or_init(|| crate::obs::instrument::global().counter("psq.mvm"))
 }
 
 /// Reference (bit-exact) PSQ matrix-vector product over one crossbar.

@@ -14,6 +14,7 @@
 
 use crate::config::hardware::{BaselineKind, HcimConfig};
 use crate::model::graph::Graph;
+use crate::obs::instrument;
 use crate::quant::psq::PsqMode;
 use crate::sim::energy::CostLedger;
 use crate::sim::mapping::ModelMapping;
@@ -223,6 +224,7 @@ impl Simulator {
 
     /// Simulate one inference of `graph` on `arch`.
     pub fn run(&self, graph: &Graph, arch: &Arch) -> SimReport {
+        sim_runs().incr();
         let cfg = arch.config();
         let mapping = ModelMapping::build(graph, cfg);
         let mut total = CostLedger::new();
@@ -276,6 +278,13 @@ impl Simulator {
             layers,
         }
     }
+}
+
+/// Global count of analytic simulator runs, resolved once per process.
+fn sim_runs() -> &'static std::sync::Arc<instrument::Counter> {
+    static CTR: std::sync::OnceLock<std::sync::Arc<instrument::Counter>> =
+        std::sync::OnceLock::new();
+    CTR.get_or_init(|| instrument::global().counter("sim.runs"))
 }
 
 #[cfg(test)]

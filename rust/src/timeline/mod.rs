@@ -24,7 +24,9 @@
 //! the output is a [`report::TimelineReport`] — makespan, per-component
 //! busy/idle utilization, critical-path breakdown, link-contention
 //! histogram — rendered as table/JSON/CSV like the DSE and robustness
-//! reports, plus a Gantt-style VCD trace (one signal per resource).
+//! reports, plus a Gantt-style VCD trace (one signal per resource) and,
+//! through [`crate::obs`], a virtual-clock span journal with a Chrome
+//! `trace_event` export (`hcim timeline --trace out.trace.json`).
 //!
 //! Entry points: the `hcim timeline` CLI subcommand, the DSE runner's
 //! throughput/peak-utilization objective columns, and

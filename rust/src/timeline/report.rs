@@ -79,6 +79,12 @@ pub struct TimelineReport {
     pub ledger: CostLedger,
     /// Busy-interval trace (present when the engine ran with tracing).
     pub trace: Option<Tracer>,
+    /// Virtual-clock span journal (present when the engine ran with
+    /// tracing). Deliberately NOT serialized by [`TimelineReport::to_json`]:
+    /// the report JSON is golden-pinned and must stay byte-identical
+    /// with tracing on and off. Export via [`TimelineReport::chrome_trace`]
+    /// or the journal's own `deterministic_json`.
+    pub spans: Option<crate::obs::SpanJournal>,
 }
 
 impl TimelineReport {
@@ -221,6 +227,33 @@ impl TimelineReport {
         Ok((json_path, csv_path))
     }
 
+    /// Build the Chrome `trace_event` export: one track (tid) per
+    /// resource in registry order with the journal's spans as complete
+    /// events, plus the NoC activity counter track when gather traffic
+    /// was traced. Deterministic for fixed inputs — the CLI layers the
+    /// (non-deterministic) instrument snapshot on top at write time.
+    /// Errors when the engine ran without tracing.
+    pub fn chrome_trace(&self) -> crate::Result<crate::obs::ChromeTrace> {
+        let spans = self
+            .spans
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("timeline was scheduled without tracing"))?;
+        let mut t = crate::obs::ChromeTrace::new();
+        t.push_journal(1, spans);
+        if let Some(tracer) = &self.trace {
+            let noc_tid = spans.tracks().len() as u64 + 1;
+            let mut declared = false;
+            for e in tracer.events().iter().filter(|e| e.signal == "noc.active") {
+                if !declared {
+                    t.thread_meta(1, noc_tid, "noc.active");
+                    declared = true;
+                }
+                t.counter(1, noc_tid, "noc.active", e.cycle as f64 / 1e3, "active", e.value as f64);
+            }
+        }
+        Ok(t)
+    }
+
     /// Export the busy-interval trace as a VCD (1 ns timescale; one
     /// 1-bit signal per resource plus the NoC activity counter).
     /// Errors when the engine ran without tracing.
@@ -267,6 +300,7 @@ mod tests {
             noc: NocStats { links: 8, ..NocStats::default() },
             ledger,
             trace: None,
+            spans: None,
         }
     }
 
@@ -309,6 +343,11 @@ mod tests {
         assert!(s.contains("bottleneck"));
         let rt = r.resources_table().render();
         assert!(rt.contains("xbar.l00"));
+    }
+
+    #[test]
+    fn chrome_trace_without_spans_is_an_error() {
+        assert!(report().chrome_trace().is_err());
     }
 
     #[test]

@@ -32,6 +32,8 @@
 
 use crate::config::hardware::HcimConfig;
 use crate::model::graph::Graph;
+use crate::obs::instrument;
+use crate::obs::span::SpanJournal;
 use crate::sim::chip::layer_local_movement_cost;
 use crate::sim::components::memory::OffChip;
 use crate::sim::dcim::pipeline::{PipelineCfg, PipelineSchedule};
@@ -99,7 +101,8 @@ pub struct TimelineCfg {
     /// Pipelining granularity: chunks per layer (clamped to the layer's
     /// invocation count).
     pub chunks: usize,
-    /// Record busy intervals for the Gantt-style VCD export.
+    /// Record busy intervals, feeding both the Gantt-style VCD export
+    /// and the virtual-clock span journal / Chrome trace.
     pub trace: bool,
 }
 
@@ -343,7 +346,15 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
     let mut noc = NocStats { links: mesh.routable_links(), ..NocStats::default() };
     let mut noc_deltas: Vec<(f64, i64)> = Vec::new();
     let mut makespan = 0.0f64;
+    // global instruments (wall-side telemetry; never enters the report
+    // JSON) — Arcs hoisted out of the loop, peaks tracked locally
+    let inst = instrument::global();
+    let noc_wait_hist = inst.histogram("noc.wait_ns");
+    let mut q_peak = 0usize;
+    let mut n_events = 0u64;
     while let Some(ev) = q.pop() {
+        n_events += 1;
+        q_peak = q_peak.max(q.len() + 1);
         match ev.kind {
             EventKind::Ready { task } => {
                 let (res, layer, invocs, duration, dcim_ns) = {
@@ -371,6 +382,8 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
                                 let tr = mesh
                                     .transfer(from, tile_base[l], bytes, end, params, &mut ledger);
                                 noc.record(tr.latency_ns, tr.ideal_ns);
+                                noc_wait_hist
+                                    .observe((tr.latency_ns - tr.ideal_ns).max(0.0) as u64);
                                 let fin = end + tr.latency_ns;
                                 if cfg.trace {
                                     noc_deltas.push((end, 1));
@@ -423,6 +436,16 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
         }
     }
 
+    inst.counter("timeline.events").add(n_events);
+    inst.gauge("timeline.queue_peak").set_max(q_peak as u64);
+    inst.counter("noc.transfers").add(noc.transfers);
+    let dcim_busy: f64 = tracks
+        .iter()
+        .filter(|t| t.class == ResourceClass::Dcim)
+        .map(|t| t.busy_ns)
+        .sum();
+    inst.counter("timeline.dcim_busy_ns").add(dcim_busy as u64);
+
     // ---- analytical references ----
     // fully-serial (unpipelined, contention-free, full-residency) latency
     let mut serial_image = model.input_ns;
@@ -474,6 +497,31 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
             }
         }
         Some(t)
+    } else {
+        None
+    };
+
+    // ---- virtual-clock span journal (single-threaded, registry order →
+    // ids and bytes are deterministic for fixed inputs) ----
+    let spans = if cfg.trace {
+        let mut j = SpanJournal::new();
+        for track in &tracks {
+            let class = match track.class {
+                ResourceClass::Crossbar => "mvm",
+                ResourceClass::Dcim => "dcim",
+                ResourceClass::OffChip => {
+                    if track.name == "program" {
+                        "program"
+                    } else {
+                        "input"
+                    }
+                }
+            };
+            for &(s, e) in track.intervals() {
+                j.push(&track.name, class, s, e);
+            }
+        }
+        Some(j)
     } else {
         None
     };
@@ -543,6 +591,7 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
         noc,
         ledger,
         trace: tracer,
+        spans,
     }
 }
 
@@ -692,6 +741,21 @@ mod tests {
         let b = simulate(&m, &cfg);
         assert_eq!(a.makespan_ns.to_bits(), b.makespan_ns.to_bits());
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn span_journal_follows_registry_order_and_tracing() {
+        let m = model(None);
+        let untraced = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: false });
+        assert!(untraced.spans.is_none());
+        let traced = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: true });
+        let j = traced.spans.as_ref().unwrap();
+        assert!(!j.is_empty());
+        assert_eq!(j.tracks()[0], "offchip");
+        assert!(j.tracks().iter().any(|t| t.starts_with("xbar.")));
+        assert!(j.tracks().iter().any(|t| t.starts_with("dcim.")));
+        // tracing must not perturb the deterministic report
+        assert_eq!(traced.to_json().to_string(), untraced.to_json().to_string());
     }
 
     #[test]

@@ -28,6 +28,19 @@ impl Level {
         }
     }
 
+    /// Inverse of `lvl as u8`; `None` for out-of-range values (including
+    /// the `u8::MAX` "uninitialised" sentinel).
+    fn from_raw(raw: u8) -> Option<Level> {
+        match raw {
+            0 => Some(Level::Error),
+            1 => Some(Level::Warn),
+            2 => Some(Level::Info),
+            3 => Some(Level::Debug),
+            4 => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -44,16 +57,19 @@ static START: OnceLock<std::time::Instant> = OnceLock::new();
 
 /// Current level (lazily initialised from `HCIM_LOG`).
 pub fn level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw != u8::MAX {
-        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    if let Some(lvl) = Level::from_raw(LEVEL.load(Ordering::Relaxed)) {
+        return lvl;
     }
     let lvl = std::env::var("HCIM_LOG")
         .ok()
         .and_then(|s| Level::parse(&s))
         .unwrap_or(Level::Info);
-    LEVEL.store(lvl as u8, Ordering::Relaxed);
-    lvl
+    // CAS so a racing `set_level` (or a concurrent first call) wins over
+    // this lazy env read instead of being clobbered
+    match LEVEL.compare_exchange(u8::MAX, lvl as u8, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => lvl,
+        Err(raw) => Level::from_raw(raw).unwrap_or(Level::Info),
+    }
 }
 
 /// Override the level programmatically (CLI `--log-level`).
@@ -102,6 +118,15 @@ mod tests {
     fn ordering() {
         assert!(Level::Error < Level::Trace);
         assert!(Level::Info <= Level::Debug);
+    }
+
+    #[test]
+    fn from_raw_inverts_discriminants_and_rejects_garbage() {
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::from_raw(lvl as u8), Some(lvl));
+        }
+        assert_eq!(Level::from_raw(5), None);
+        assert_eq!(Level::from_raw(u8::MAX), None);
     }
 
     #[test]

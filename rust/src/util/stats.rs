@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -18,7 +19,7 @@ impl Summary {
     /// Compute a summary over `xs` (empty input yields all-zero summary).
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std_dev: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+            return Summary { n: 0, mean: 0.0, std_dev: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
         }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
@@ -36,6 +37,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
+            p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
             max: sorted[n - 1],
         }
@@ -109,6 +111,9 @@ mod tests {
         assert_eq!(s.n, 5);
         assert!((s.mean - 3.0).abs() < 1e-12);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        // rank 0.95 * 4 = 3.8 → 4 + 0.8 * (5 - 4)
+        assert!((s.p95 - 4.8).abs() < 1e-12);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
     }

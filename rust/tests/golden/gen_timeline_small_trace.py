@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Regenerate tests/golden/timeline_small.trace.json (deliberately).
+
+Chrome trace_event mirror of the same hand-checkable two-layer
+injected-duration spec as gen_timeline_small.py (batch 2, 2 chunks per
+layer, no partial-sum traffic).  The span journal holds each resource's
+merged busy intervals in registry order; the exporter assigns tids in
+first-seen track order (1-based), emits a `thread_name` metadata event
+per track, then that track's spans as complete ("X") events with ts/dur
+in microseconds (virtual ns / 1000).  The schedule, on paper:
+
+  offchip    0-100          (img0 0-50, img1 50-100, merged: contiguous)
+  xbar.l00   50-850         (four 200 ns chunks back-to-back, merged)
+  dcim.l00   50-130, 250-330, 450-530, 650-730   (80 ns per chunk)
+  xbar.l01   250-350, 450-550, 650-750, 850-950  (100 ns per chunk)
+  dcim.l01   250-290, 450-490, 650-690, 850-890  (40 ns per chunk)
+
+No partial sums -> no NoC activity counter.  Rounding mirrors the Rust
+num3 (3 decimals) + JSON integer printing.
+"""
+import json
+
+TRACKS = [  # (track, span class, merged busy intervals in ns)
+    ("offchip", "input", [(0.0, 100.0)]),
+    ("xbar.l00", "mvm", [(50.0, 850.0)]),
+    ("dcim.l00", "dcim", [(50.0, 130.0), (250.0, 330.0), (450.0, 530.0), (650.0, 730.0)]),
+    ("xbar.l01", "mvm", [(250.0, 350.0), (450.0, 550.0), (650.0, 750.0), (850.0, 950.0)]),
+    ("dcim.l01", "dcim", [(250.0, 290.0), (450.0, 490.0), (650.0, 690.0), (850.0, 890.0)]),
+]
+
+
+def num3(x):
+    v = round(x * 1000.0) / 1000.0
+    return int(v) if float(v).is_integer() else v
+
+
+events = []
+for i, (track, cls, intervals) in enumerate(TRACKS):
+    tid = i + 1
+    events.append(
+        {"args": {"name": track}, "name": "thread_name", "ph": "M", "pid": 1, "tid": tid, "ts": 0}
+    )
+    for start_ns, end_ns in intervals:
+        events.append(
+            {
+                "dur": num3((end_ns - start_ns) / 1e3),
+                "name": cls,
+                "ph": "X",
+                "pid": 1,
+                "tid": tid,
+                "ts": num3(start_ns / 1e3),
+            }
+        )
+
+doc = {"displayTimeUnit": "ns", "traceEvents": events}
+print(json.dumps(doc, sort_keys=True, separators=(",", ":")))

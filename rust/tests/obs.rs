@@ -1,0 +1,137 @@
+//! Telemetry integration: the virtual-clock span journal must be
+//! byte-identical across repeated runs and thread-pool sizes {1, 2, 8}
+//! (the same contract the report JSONs honor), concurrent instrument
+//! updates must lose no counts, and the Chrome trace_event export of the
+//! hand-checkable injected-duration timeline spec must match its golden
+//! file (mirrored by tests/golden/gen_timeline_small_trace.py).
+
+use hcim::config::hardware::HcimConfig;
+use hcim::model::zoo;
+use hcim::obs::Instruments;
+use hcim::sim::energy::{Component, CostLedger};
+use hcim::sim::params::CalibParams;
+use hcim::sim::simulator::{Arch, SparsityTable};
+use hcim::sim::tech::TechNode;
+use hcim::timeline::{simulate, LayerSpec, TimelineCfg, TimelineModel};
+use hcim::util::threadpool::ThreadPool;
+
+fn resnet20_model() -> TimelineModel {
+    let g = zoo::resnet20();
+    let params = CalibParams::at_65nm().rescaled(TechNode::N32);
+    TimelineModel::from_graph(
+        &g,
+        &Arch::Hcim(HcimConfig::config_a()),
+        &params,
+        &SparsityTable::paper_default(),
+        None,
+    )
+    .unwrap()
+}
+
+/// One traced run's span journal, serialized (virtual-time section only).
+fn resnet20_journal_json() -> String {
+    let rep = simulate(&resnet20_model(), &TimelineCfg { batch: 4, chunks: 8, trace: true });
+    format!("{}\n", rep.spans.as_ref().expect("traced run").deterministic_json())
+}
+
+#[test]
+fn span_journal_is_byte_identical_across_runs_and_pool_sizes() {
+    let reference = resnet20_journal_json();
+    assert!(reference.contains("\"track\":\"xbar.l00\""));
+    assert_eq!(reference, resnet20_journal_json(), "repeated runs must agree byte-for-byte");
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        let outs = pool.map(vec![(); 4], |_| resnet20_journal_json());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(&reference, o, "replica {i} drifted on a {workers}-worker pool");
+        }
+    }
+}
+
+#[test]
+fn concurrent_instrument_updates_lose_nothing() {
+    // a fresh registry (not the process-global one) so other tests in
+    // this binary cannot perturb the expected totals
+    let reg = std::sync::Arc::new(Instruments::new());
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let reg = std::sync::Arc::clone(&reg);
+        handles.push(std::thread::spawn(move || {
+            let ctr = reg.counter("test.count");
+            let gauge = reg.gauge("test.peak");
+            let hist = reg.histogram("test.lat");
+            for i in 0..PER_THREAD {
+                ctr.incr();
+                gauge.set_max(t as u64 * PER_THREAD + i);
+                hist.observe(i);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(reg.counter("test.count").get(), THREADS as u64 * PER_THREAD);
+    assert_eq!(reg.gauge("test.peak").get(), THREADS as u64 * PER_THREAD - 1);
+    let snap = reg.snapshot_json();
+    let hist = snap.get("histograms").unwrap().get("test.lat").unwrap();
+    assert_eq!(hist.num_field("count").unwrap(), (THREADS as u64 * PER_THREAD) as f64);
+}
+
+/// Same injected-duration spec as rust/tests/timeline.rs `golden_model`
+/// (batch 2, 2 chunks/layer, no partial-sum traffic): every golden trace
+/// number derives on paper.
+fn golden_model() -> TimelineModel {
+    let params = CalibParams::at_65nm();
+    let mut input_energy = CostLedger::new();
+    input_energy.add_energy_n(Component::OffChip, 5.0, 1);
+    let layer = |layer_index: usize, mvm_ns: f64, dcim_ns: f64| {
+        let mut mvm_energy = CostLedger::new();
+        mvm_energy.add_energy_n(Component::Crossbar, 10.0, 1);
+        let mut move_energy = CostLedger::new();
+        move_energy.add_energy_n(Component::Buffer, 1.0, 1);
+        LayerSpec {
+            layer_index,
+            crossbars: 1,
+            row_tiles: 1,
+            col_tiles: 1,
+            invocations: 4,
+            mvm_ns,
+            dcim_ns_per_mvm: dcim_ns,
+            psum_bytes_per_src_mvm: 0,
+            weight_bytes: 16,
+            mvm_energy,
+            move_energy,
+        }
+    };
+    TimelineModel {
+        model: "golden".into(),
+        config: "spec".into(),
+        params,
+        input_ns: 50.0,
+        input_energy,
+        layers: vec![layer(0, 100.0, 40.0), layer(1, 50.0, 20.0)],
+        tile_budget: None,
+    }
+}
+
+#[test]
+fn injected_spec_matches_golden_chrome_trace() {
+    let rep = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
+    let got = format!("{}\n", rep.chrome_trace().unwrap().to_json());
+    let golden = include_str!("golden/timeline_small.trace.json");
+    assert_eq!(
+        got, golden,
+        "Chrome trace drifted from tests/golden/timeline_small.trace.json \
+         (schema change? regenerate deliberately with gen_timeline_small_trace.py)"
+    );
+}
+
+#[test]
+fn tracing_does_not_perturb_the_deterministic_report() {
+    let traced = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
+    let untraced = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: false });
+    assert_eq!(traced.to_json().to_string(), untraced.to_json().to_string());
+    assert!(untraced.chrome_trace().is_err(), "untraced run has no journal to export");
+}
