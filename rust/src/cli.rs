@@ -144,11 +144,17 @@ COMMANDS:
               additionally runs when --artifacts has a manifest
   tables      print every paper table/figure reproduction
                 --artifacts DIR
+                --journal DIR    journal the timeline-utilization sweep's
+                                 cells and resume completed ones
   dse         parallel design-space exploration with Pareto extraction
                 --workload resnet20[,vgg9,...]   comma-separated zoo models
                 --out DIR        report/cache directory (default dse_out)
                 --workers N      worker threads (default: all cores)
                 --no-cache       ignore and do not write the result cache
+                --journal DIR    durable flight recorder: fsync each finished
+                                 point as a JSONL trial record; a killed sweep
+                                 resumes from DIR with a byte-identical report
+                                 (supersedes the whole-file cache.json)
                 --sparsity FILE  measured sparsity table (artifacts/sparsity.json)
                 --robustness     also Monte Carlo each point's PSQ flip rate
                                  and extend the Pareto frontier to 4 objectives
@@ -174,6 +180,8 @@ COMMANDS:
                                  measured flip rate must be exactly 0)
                 --format table|json|csv   stdout format (default table)
                 --out DIR        also write robustness.{json,csv}
+                --journal DIR    journal every finished trial; a killed run
+                                 resumes from DIR (same final report bytes)
   timeline    deterministic discrete-event chip timeline: per-layer tile
               tasks pipelined onto crossbar tiles, the DCiM array, and the
               mesh NoC (makespan, utilization, link contention)
@@ -192,6 +200,18 @@ COMMANDS:
                                  resource; open in GTKWave)
                 --trace FILE     Chrome trace_event JSON of the same busy
                                  intervals on the virtual clock (Perfetto)
+  journal     inspect a --journal directory (schema hcim-journal-v1)
+                summarize [DIR]  per-sweep rollup: trials/ok/failed/keys,
+                                 last heartbeat progress, stall detection
+                  --stall-s F    heartbeat-silence threshold before an
+                                 incomplete sweep reads STALLED (default 30)
+                  --format table|json
+                tail [DIR]       print the last raw records
+                  --lines N      how many (default 20)
+                  --follow       keep polling for new complete lines
+                diff DIR_A DIR_B compare latest records per trial key;
+                                 exits non-zero unless the journals agree
+                the directory may also be passed as --journal DIR
   info        show a model's crossbar mapping (Eq. 2 bookkeeping)
                 --model NAME --config A|B
   help        this message

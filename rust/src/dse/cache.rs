@@ -3,13 +3,25 @@
 //! Every simulated point is stored under the FNV-1a hash of its canonical
 //! key (point identity + sparsity-table fingerprint + model version), so a
 //! repeated sweep — or a new sweep whose space overlaps an earlier one —
-//! skips the points already priced. The cache optionally persists as a
-//! JSON file (written with [`crate::util::json`]) and loads tolerantly:
-//! a malformed file is ignored rather than failing the sweep.
+//! skips the points already priced. Two persistent backends exist behind
+//! the same API:
+//!
+//! - **whole-file JSON** ([`ResultCache::at_path`]): the original format,
+//!   rewritten atomically on every save. An unreadable or non-JSON file
+//!   loads tolerantly as empty; a *parseable* file with a stale schema
+//!   version is a hard error naming both versions, because silently
+//!   discarding (or worse, misreading) priced points is how wrong
+//!   frontiers happen.
+//! - **journal shards** ([`ResultCache::journaled`]): entries are loaded
+//!   from an append-only [`crate::journal`] directory and new points are
+//!   appended durably as trial records the moment they are inserted —
+//!   `save` is a no-op because nothing is ever batched in memory.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::journal::{self, JournalSink, JournalWriter, TrialRecord, TrialStatus};
+use crate::obs::progress::Progress;
 use crate::util::json::Json;
 
 /// Bump when the cost model changes in a way that invalidates old entries.
@@ -64,6 +76,36 @@ impl PointMetrics {
         }
         objs
     }
+
+    /// Serialize the metric columns (shared by the file cache's entry
+    /// array and the journal's per-trial metrics payload).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("energy_pj".to_string(), Json::Num(self.energy_pj));
+        m.insert("latency_ns".to_string(), Json::Num(self.latency_ns));
+        m.insert("area_mm2".to_string(), Json::Num(self.area_mm2));
+        m.insert("throughput_ips".to_string(), Json::Num(self.throughput_ips));
+        m.insert("peak_util".to_string(), Json::Num(self.peak_util));
+        if let Some(r) = self.robustness {
+            m.insert("robustness".to_string(), Json::Num(r));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse [`to_json`] output; `None` when any required column is
+    /// missing (a partial record re-simulates rather than reporting zeros).
+    ///
+    /// [`to_json`]: PointMetrics::to_json
+    pub fn from_json(j: &Json) -> Option<PointMetrics> {
+        Some(PointMetrics {
+            energy_pj: j.num_field("energy_pj").ok()?,
+            latency_ns: j.num_field("latency_ns").ok()?,
+            area_mm2: j.num_field("area_mm2").ok()?,
+            throughput_ips: j.num_field("throughput_ips").ok()?,
+            peak_util: j.num_field("peak_util").ok()?,
+            robustness: j.get("robustness").and_then(|r| r.as_f64()),
+        })
+    }
 }
 
 /// One stored entry: readable key kept alongside the hash for debugging.
@@ -73,11 +115,26 @@ struct Entry {
     metrics: PointMetrics,
 }
 
-/// In-memory cache with optional file persistence.
+/// Persistence backend behind the cache API.
+#[derive(Debug, Default)]
+enum Backend {
+    /// No persistence (tests, one-shot sweeps).
+    #[default]
+    Memory,
+    /// Whole-file JSON rewritten on `save`.
+    File(PathBuf),
+    /// Append-only journal shards; inserts are durable immediately.
+    Journal {
+        dir: PathBuf,
+        sink: Option<JournalSink>,
+    },
+}
+
+/// In-memory cache with optional file or journal persistence.
 #[derive(Debug, Default)]
 pub struct ResultCache {
     entries: BTreeMap<u64, Entry>,
-    path: Option<PathBuf>,
+    backend: Backend,
     /// Lookups answered from the cache during this process.
     pub hits: u64,
     /// Lookups that missed.
@@ -90,52 +147,95 @@ impl ResultCache {
         ResultCache::default()
     }
 
-    /// Cache backed by `path`: existing entries are loaded if the file
-    /// parses, otherwise the cache starts empty (and will overwrite the
-    /// file on the next save).
-    pub fn at_path(path: &Path) -> ResultCache {
-        let mut cache = ResultCache { path: Some(path.to_path_buf()), ..Default::default() };
+    /// Cache backed by a single JSON file. An unreadable or non-JSON file
+    /// loads tolerantly as empty (and is overwritten on the next save),
+    /// but a parseable cache written under a different schema version is
+    /// rejected with an error naming found-vs-expected versions.
+    pub fn at_path(path: &Path) -> crate::Result<ResultCache> {
+        let mut cache = ResultCache {
+            backend: Backend::File(path.to_path_buf()),
+            ..Default::default()
+        };
         if let Ok(src) = std::fs::read_to_string(path) {
             match Json::parse(&src) {
-                Ok(j) => cache.absorb_json(&j),
+                Ok(j) => {
+                    let found = j.get("schema").and_then(|s| s.as_str()).unwrap_or("<missing>");
+                    if found != CACHE_SCHEMA {
+                        anyhow::bail!(
+                            "stale result cache {}: schema `{found}`, expected `{CACHE_SCHEMA}` \
+                             — delete the file or rerun with --no-cache",
+                            path.display()
+                        );
+                    }
+                    cache.absorb_entries(&j);
+                }
                 Err(e) => crate::log_warn!("ignoring malformed cache {}: {e}", path.display()),
             }
         }
-        cache
+        Ok(cache)
     }
 
-    fn absorb_json(&mut self, j: &Json) {
-        if j.get("schema").and_then(|s| s.as_str()) != Some(CACHE_SCHEMA) {
-            crate::log_warn!("cache schema mismatch: discarding old entries");
-            return;
-        }
-        let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) else { return };
-        for e in entries {
-            let (Some(key), Ok(energy), Ok(latency), Ok(area), Ok(throughput), Ok(peak)) = (
-                e.get("key").and_then(|k| k.as_str()),
-                e.num_field("energy_pj"),
-                e.num_field("latency_ns"),
-                e.num_field("area_mm2"),
-                e.num_field("throughput_ips"),
-                e.num_field("peak_util"),
-            ) else {
+    /// Cache backed by an append-only journal directory: every successful
+    /// DSE trial record already on disk becomes an entry (later records
+    /// win), and fresh inserts are appended durably via the sweep's sink.
+    pub fn journaled(dir: &Path) -> crate::Result<ResultCache> {
+        let mut cache = ResultCache {
+            backend: Backend::Journal {
+                dir: dir.to_path_buf(),
+                sink: None,
+            },
+            ..Default::default()
+        };
+        let contents = journal::read_dir(dir)?;
+        for rec in &contents.trials {
+            if rec.status != TrialStatus::Ok {
                 continue;
-            };
-            let robustness = e.get("robustness").and_then(|r| r.as_f64());
-            self.entries.insert(
-                fnv1a64(key.as_bytes()),
-                Entry {
-                    key: key.to_string(),
-                    metrics: PointMetrics {
-                        energy_pj: energy,
-                        latency_ns: latency,
-                        area_mm2: area,
-                        throughput_ips: throughput,
-                        peak_util: peak,
-                        robustness,
+            }
+            // Records from other sweep families sharing the directory
+            // (robustness, timeline) lack the metric columns and skip here.
+            if let Some(metrics) = PointMetrics::from_json(&rec.metrics) {
+                cache.entries.insert(
+                    fnv1a64(rec.key.as_bytes()),
+                    Entry {
+                        key: rec.key.clone(),
+                        metrics,
                     },
-                },
-            );
+                );
+            }
+        }
+        Ok(cache)
+    }
+
+    /// For a journal-backed cache, open this run's shard and hand back the
+    /// shared sink (heartbeats enabled, progress owned by the journal).
+    /// Returns `None` for memory/file backends.
+    pub fn journal_sink(
+        &mut self,
+        sweep: &str,
+        total: u64,
+        progress: Option<Progress>,
+    ) -> crate::Result<Option<JournalSink>> {
+        let Backend::Journal { dir, sink } = &mut self.backend else {
+            return Ok(None);
+        };
+        if sink.is_none() {
+            let writer = JournalWriter::create(dir, sweep)?;
+            *sink = Some(JournalSink::new(
+                writer,
+                sweep,
+                total,
+                progress,
+                Some(journal::HEARTBEAT_EVERY_MS),
+            ));
+        }
+        Ok(sink.clone())
+    }
+
+    /// The journal directory, when this cache is journal-backed.
+    pub fn journal_dir(&self) -> Option<&Path> {
+        match &self.backend {
+            Backend::Journal { dir, .. } => Some(dir.as_path()),
+            _ => None,
         }
     }
 
@@ -155,12 +255,55 @@ impl ResultCache {
         }
     }
 
-    /// Insert a freshly simulated point.
+    /// Insert a freshly simulated point. On a journal backend the entry is
+    /// appended durably right away — unless the sweep's sink already wrote
+    /// a full trial record under this key (the runner's path).
     pub fn insert(&mut self, key: &str, metrics: PointMetrics) {
         self.entries.insert(
             fnv1a64(key.as_bytes()),
-            Entry { key: key.to_string(), metrics },
+            Entry {
+                key: key.to_string(),
+                metrics,
+            },
         );
+        if let Backend::Journal { dir, sink } = &mut self.backend {
+            if sink.is_none() {
+                match JournalWriter::create(dir, "dse") {
+                    Ok(writer) => {
+                        *sink = Some(JournalSink::new(
+                            writer,
+                            "dse",
+                            0,
+                            None,
+                            Some(journal::HEARTBEAT_EVERY_MS),
+                        ))
+                    }
+                    Err(e) => {
+                        crate::log_warn!("journal cache insert dropped: {e}");
+                        return;
+                    }
+                }
+            }
+            let sink = sink.as_ref().expect("sink was just created");
+            if sink.has_appended(key) {
+                return;
+            }
+            let rec = TrialRecord {
+                sweep: "dse".to_string(),
+                key: key.to_string(),
+                fingerprint: 0,
+                seed: 0,
+                status: TrialStatus::Ok,
+                metrics: metrics.to_json(),
+                virt_ns: None,
+                wall_ms: 0.0,
+                unix_ms: journal::now_unix_ms(),
+                instruments: BTreeMap::new(),
+            };
+            if let Err(e) = sink.append_trial(&rec) {
+                crate::log_warn!("journal cache insert dropped: {e}");
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -176,16 +319,8 @@ impl ResultCache {
             .entries
             .values()
             .map(|e| {
-                let mut m = BTreeMap::new();
+                let Json::Obj(mut m) = e.metrics.to_json() else { unreachable!() };
                 m.insert("key".to_string(), Json::Str(e.key.clone()));
-                m.insert("energy_pj".to_string(), Json::Num(e.metrics.energy_pj));
-                m.insert("latency_ns".to_string(), Json::Num(e.metrics.latency_ns));
-                m.insert("area_mm2".to_string(), Json::Num(e.metrics.area_mm2));
-                m.insert("throughput_ips".to_string(), Json::Num(e.metrics.throughput_ips));
-                m.insert("peak_util".to_string(), Json::Num(e.metrics.peak_util));
-                if let Some(r) = e.metrics.robustness {
-                    m.insert("robustness".to_string(), Json::Num(r));
-                }
                 Json::Obj(m)
             })
             .collect();
@@ -195,9 +330,29 @@ impl ResultCache {
         Json::Obj(top)
     }
 
-    /// Persist to the backing file (no-op for in-memory caches).
+    fn absorb_entries(&mut self, j: &Json) {
+        let Some(entries) = j.get("entries").and_then(|e| e.as_arr()) else { return };
+        for e in entries {
+            let (Some(key), Some(metrics)) = (
+                e.get("key").and_then(|k| k.as_str()),
+                PointMetrics::from_json(e),
+            ) else {
+                continue;
+            };
+            self.entries.insert(
+                fnv1a64(key.as_bytes()),
+                Entry {
+                    key: key.to_string(),
+                    metrics,
+                },
+            );
+        }
+    }
+
+    /// Persist to the backing file. A no-op for in-memory caches and for
+    /// journal backends, whose inserts are already durable.
     pub fn save(&self) -> crate::Result<()> {
-        let Some(path) = &self.path else { return Ok(()) };
+        let Backend::File(path) = &self.backend else { return Ok(()) };
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)
@@ -247,13 +402,13 @@ mod tests {
         let dir = std::env::temp_dir().join("hcim_dse_cache_roundtrip");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
-        let mut c = ResultCache::at_path(&path);
+        let mut c = ResultCache::at_path(&path).unwrap();
         assert!(c.is_empty());
         c.insert("p1", metrics(3.0));
         c.insert("p2", metrics(4.0));
         c.save().unwrap();
 
-        let mut reloaded = ResultCache::at_path(&path);
+        let mut reloaded = ResultCache::at_path(&path).unwrap();
         assert_eq!(reloaded.len(), 2);
         assert_eq!(reloaded.lookup("p1"), Some(metrics(3.0)));
         assert_eq!(reloaded.lookup("p2"), Some(metrics(4.0)));
@@ -261,16 +416,29 @@ mod tests {
     }
 
     #[test]
-    fn malformed_or_mismatched_files_start_empty() {
+    fn malformed_files_start_empty_but_stale_schemas_error() {
         let dir = std::env::temp_dir().join("hcim_dse_cache_bad");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
+        // Non-JSON garbage: tolerated (the next save overwrites it).
         let garbage = dir.join("garbage.json");
         std::fs::write(&garbage, "{not json").unwrap();
-        assert!(ResultCache::at_path(&garbage).is_empty());
-        let old_schema = dir.join("old.json");
-        std::fs::write(&old_schema, r#"{"schema":"v0","entries":[]}"#).unwrap();
-        assert!(ResultCache::at_path(&old_schema).is_empty());
+        assert!(ResultCache::at_path(&garbage).unwrap().is_empty());
+        // A valid cache from an older (or missing) schema: hard error
+        // naming both versions, never silent discard or misread defaults.
+        for (name, body) in [
+            ("old.json", r#"{"schema":"hcim-dse-v2","entries":[]}"#.to_string()),
+            ("unversioned.json", r#"{"entries":[]}"#.to_string()),
+        ] {
+            let path = dir.join(name);
+            std::fs::write(&path, body).unwrap();
+            let err = ResultCache::at_path(&path).unwrap_err().to_string();
+            assert!(err.contains(CACHE_SCHEMA), "{err}");
+            assert!(
+                err.contains("hcim-dse-v2") || err.contains("<missing>"),
+                "{err}"
+            );
+        }
     }
 
     #[test]
@@ -288,7 +456,7 @@ mod tests {
             ),
         )
         .unwrap();
-        let mut c = ResultCache::at_path(&path);
+        let mut c = ResultCache::at_path(&path).unwrap();
         assert!(c.lookup("p1").is_none(), "column-stripped entry must miss");
     }
 
@@ -315,13 +483,100 @@ mod tests {
         let dir = std::env::temp_dir().join("hcim_dse_cache_rob");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
-        let mut c = ResultCache::at_path(&path);
+        let mut c = ResultCache::at_path(&path).unwrap();
         let with_rob = PointMetrics { robustness: Some(0.0125), ..metrics(1.0) };
         c.insert("rob", with_rob);
         c.insert("plain", metrics(2.0));
         c.save().unwrap();
-        let mut reloaded = ResultCache::at_path(&path);
+        let mut reloaded = ResultCache::at_path(&path).unwrap();
         assert_eq!(reloaded.lookup("rob"), Some(with_rob));
         assert_eq!(reloaded.lookup("plain"), Some(metrics(2.0)));
+    }
+
+    #[test]
+    fn journaled_cache_roundtrips_and_skips_duplicate_appends() {
+        let dir = std::env::temp_dir().join("hcim_dse_cache_journaled");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut c = ResultCache::journaled(&dir).unwrap();
+            assert!(c.is_empty());
+            assert_eq!(c.journal_dir(), Some(dir.as_path()));
+            c.insert("p1", metrics(3.0));
+            c.insert("p2", PointMetrics { robustness: Some(0.25), ..metrics(4.0) });
+            c.save().unwrap(); // no-op, nothing to flush
+        }
+        let mut reloaded = ResultCache::journaled(&dir).unwrap();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded.lookup("p1"), Some(metrics(3.0)));
+        assert_eq!(
+            reloaded.lookup("p2"),
+            Some(PointMetrics { robustness: Some(0.25), ..metrics(4.0) })
+        );
+        // A record appended through the sweep sink is not re-appended by
+        // the insert path: still exactly one record for its key.
+        let mut c2 = ResultCache::journaled(&dir).unwrap();
+        let sink = c2.journal_sink("dse", 1, None).unwrap().unwrap();
+        let rec = crate::journal::TrialRecord {
+            sweep: "dse".to_string(),
+            key: "p3".to_string(),
+            fingerprint: 1,
+            seed: 0,
+            status: TrialStatus::Ok,
+            metrics: metrics(5.0).to_json(),
+            virt_ns: Some(1.0),
+            wall_ms: 1.0,
+            unix_ms: 1,
+            instruments: BTreeMap::new(),
+        };
+        sink.append_trial(&rec).unwrap();
+        c2.insert("p3", metrics(5.0));
+        drop(c2);
+        let contents = crate::journal::read_dir(&dir).unwrap();
+        let p3 = contents.trials.iter().filter(|r| r.key == "p3").count();
+        assert_eq!(p3, 1, "runner-journaled key must not be double-appended");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journaled_cache_ignores_failed_and_foreign_records() {
+        let dir = std::env::temp_dir().join("hcim_dse_cache_foreign");
+        let _ = std::fs::remove_dir_all(&dir);
+        let writer = JournalWriter::create(&dir, "robustness").unwrap();
+        let sink = JournalSink::new(writer, "robustness", 2, None, None);
+        // A Monte Carlo record: wrong metric columns, must not become an entry.
+        let mut mc_metrics = BTreeMap::new();
+        mc_metrics.insert("flip_rate".to_string(), Json::Num(0.01));
+        sink.append_trial(&crate::journal::TrialRecord {
+            sweep: "robustness".to_string(),
+            key: "mc-key".to_string(),
+            fingerprint: 1,
+            seed: 7,
+            status: TrialStatus::Ok,
+            metrics: Json::Obj(mc_metrics),
+            virt_ns: None,
+            wall_ms: 1.0,
+            unix_ms: 1,
+            instruments: BTreeMap::new(),
+        })
+        .unwrap();
+        // A failed DSE record: right columns, wrong status.
+        sink.append_trial(&crate::journal::TrialRecord {
+            sweep: "dse".to_string(),
+            key: "failed-key".to_string(),
+            fingerprint: 1,
+            seed: 0,
+            status: TrialStatus::Failed,
+            metrics: metrics(1.0).to_json(),
+            virt_ns: None,
+            wall_ms: 1.0,
+            unix_ms: 1,
+            instruments: BTreeMap::new(),
+        })
+        .unwrap();
+        drop(sink);
+        let mut c = ResultCache::journaled(&dir).unwrap();
+        assert!(c.lookup("mc-key").is_none());
+        assert!(c.lookup("failed-key").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

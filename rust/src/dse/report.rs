@@ -165,6 +165,12 @@ impl SweepReport {
     }
 
     /// JSON document (point list + per-workload frontier indices).
+    ///
+    /// Run provenance — which points were cache hits, how many were
+    /// simulated fresh — is deliberately absent (it lives in the stdout
+    /// summary and the journal): the written report must be byte-identical
+    /// whether the sweep ran cold, warm, or resumed after a crash.
+    /// Version 2 dropped the `cached`/`simulated`/`cache_hits` fields.
     pub fn to_json(&self) -> Json {
         let points: Vec<Json> = self
             .rows
@@ -189,7 +195,6 @@ impl SweepReport {
                     o.insert("robustness".into(), Json::Num(r));
                 }
                 o.insert("pareto".into(), Json::Bool(row.pareto));
-                o.insert("cached".into(), Json::Bool(row.result.cached));
                 Json::Obj(o)
             })
             .collect();
@@ -204,26 +209,25 @@ impl SweepReport {
             })
             .collect();
         let mut top = BTreeMap::new();
-        top.insert("version".into(), Json::Num(1.0));
-        top.insert("simulated".into(), Json::Num(self.simulated as f64));
-        top.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        top.insert("version".into(), Json::Num(2.0));
         top.insert("points".into(), Json::Arr(points));
         top.insert("pareto".into(), Json::Obj(frontier));
         Json::Obj(top)
     }
 
     /// CSV export (one row per point; `robustness` empty when the sweep
-    /// did not measure it).
+    /// did not measure it). Like the JSON form, free of run provenance —
+    /// no cached-vs-fresh column — so resumed runs emit identical bytes.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,\
-             throughput_ips,peak_util,robustness,pareto,cached\n",
+             throughput_ips,peak_util,robustness,pareto\n",
         );
         for row in &self.rows {
             let p = &row.result.point;
             let m = &row.result.metrics;
             out.push_str(&format!(
-                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{:.3},{:.6},{},{},{}\n",
+                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{:.3},{:.6},{},{}\n",
                 p.workload,
                 p.arch.key(),
                 p.xbar.rows,
@@ -237,7 +241,6 @@ impl SweepReport {
                 m.peak_util,
                 m.robustness.map(|r| format!("{r:.6}")).unwrap_or_default(),
                 row.pareto,
-                row.result.cached,
             ));
         }
         out
@@ -354,7 +357,28 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("workload,arch"));
         assert!(lines[1].contains("hcim-ternary"));
-        assert!(lines[1].ends_with("true,false"));
+        assert!(lines[1].ends_with(",true"));
+        assert!(lines[3].ends_with(",false"));
+    }
+
+    #[test]
+    fn written_artifacts_carry_no_run_provenance() {
+        // the byte-identity contract for resumed sweeps: cached-vs-fresh
+        // and hit counts must never reach sweep.json / sweep.csv
+        let mut warm = synthetic_result();
+        warm.points[0].cached = true;
+        warm.simulated = 1;
+        warm.cache_hits = 2;
+        let cold_report = SweepReport::build(&synthetic_result());
+        let warm_report = SweepReport::build(&warm);
+        assert_eq!(
+            cold_report.to_json().to_string(),
+            warm_report.to_json().to_string()
+        );
+        assert_eq!(cold_report.to_csv(), warm_report.to_csv());
+        let json = cold_report.to_json().to_string();
+        assert!(!json.contains("cached"), "{json}");
+        assert!(!json.contains("simulated"), "{json}");
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! scheduling, which makes whole-sweep output deterministic.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::dse::cache::{PointMetrics, ResultCache, CACHE_SCHEMA};
 use crate::dse::space::{DesignPoint, DesignSpace};
+use crate::journal::{self, TrialRecord, TrialStatus};
 use crate::model::zoo;
 use crate::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
 use crate::obs::{self, instrument, Progress};
@@ -146,10 +148,11 @@ impl SweepRunner {
         self.space.validate()?;
         let points = self.space.enumerate();
 
-        // Partition against the cache, remembering each point's slot so
-        // fresh results can be scattered back into enumeration order.
+        // Partition against the cache, remembering each point's slot (and
+        // its precomputed key) so fresh results can be scattered back into
+        // enumeration order.
         let mut results: Vec<Option<PointResult>> = vec![None; points.len()];
-        let mut pending: Vec<(usize, DesignPoint)> = Vec::new();
+        let mut pending: Vec<(usize, DesignPoint, String)> = Vec::new();
         for (i, p) in points.into_iter().enumerate() {
             let key = self.cache_key(&p);
             match self.cache.lookup(&key) {
@@ -161,7 +164,7 @@ impl SweepRunner {
                 Some(metrics) if metrics.robustness.is_some() == self.robustness.is_some() => {
                     results[i] = Some(PointResult { point: p, metrics, cached: true })
                 }
-                _ => pending.push((i, p)),
+                _ => pending.push((i, p, key)),
             }
         }
         let cache_hits = results.iter().filter(|r| r.is_some()).count();
@@ -173,20 +176,58 @@ impl SweepRunner {
         if !pending.is_empty() {
             let table = Arc::new(self.sparsity.clone());
             let robustness = self.robustness;
+            let fingerprint = self.sparsity.fingerprint();
+            let seed = robustness.map(|r| r.seed).unwrap_or(0);
             let pool = ThreadPool::new(self.workers.min(pending.len()).max(1));
-            let progress = Arc::new(Progress::new("dse.points", pending.len() as u64));
-            let fresh = pool.map(pending, move |(i, p)| {
-                let metrics = simulate_point(&p, &table, robustness);
-                progress.tick();
-                (i, p, metrics)
+            // With a journal backend, the progress meter is owned by the
+            // sink: it ticks when a trial record becomes durable, so what
+            // the meter reports is exactly what a crash would preserve.
+            let sink = self.cache.journal_sink(
+                "dse",
+                pending.len() as u64,
+                Some(Progress::new("dse.points", pending.len() as u64)),
+            )?;
+            let progress = sink
+                .is_none()
+                .then(|| Arc::new(Progress::new("dse.points", pending.len() as u64)));
+            let worker_sink = sink.clone();
+            let fresh = pool.map(pending, move |(i, p, key)| {
+                let before = instrument::global().counter_values();
+                let t0 = Instant::now();
+                let (metrics, makespan_ns) = simulate_point(&p, &table, robustness);
+                if let Some(sink) = &worker_sink {
+                    let rec = TrialRecord {
+                        sweep: "dse".to_string(),
+                        key: key.clone(),
+                        fingerprint,
+                        seed,
+                        status: TrialStatus::Ok,
+                        metrics: metrics.to_json(),
+                        virt_ns: Some(makespan_ns),
+                        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        unix_ms: journal::now_unix_ms(),
+                        instruments: journal::counter_delta(
+                            &before,
+                            &instrument::global().counter_values(),
+                        ),
+                    };
+                    if let Err(e) = sink.append_trial(&rec) {
+                        crate::log_warn!("journal append failed for {key}: {e}");
+                    }
+                } else if let Some(progress) = &progress {
+                    progress.tick();
+                }
+                (i, p, key, metrics)
             });
-            for (i, p, metrics) in fresh {
-                let key = self.cache_key(&p);
+            for (i, p, key, metrics) in fresh {
                 self.cache.insert(&key, metrics);
                 results[i] = Some(PointResult { point: p, metrics, cached: false });
             }
             if let Err(e) = self.cache.save() {
                 crate::log_warn!("could not persist sweep cache: {e}");
+            }
+            if let Some(sink) = &sink {
+                sink.finish();
             }
         }
 
@@ -211,7 +252,7 @@ fn simulate_point(
     point: &DesignPoint,
     sparsity: &SparsityTable,
     robustness: Option<RobustnessCfg>,
-) -> PointMetrics {
+) -> (PointMetrics, f64) {
     let graph = zoo::by_name(&point.workload).expect("workload validated before dispatch");
     let sim = Simulator::new(point.node).with_sparsity(sparsity.clone());
     let report = sim.run(&graph, &point.arch());
@@ -237,14 +278,17 @@ fn simulate_point(
         let mc = MonteCarloCfg { trials: rc.trials.max(1), seed: rc.seed, workers: 1 };
         run_monte_carlo(&graph, &cfg, &ni, &mc).flip.mean
     });
-    PointMetrics {
+    let metrics = PointMetrics {
         energy_pj: report.energy_pj(),
         latency_ns: report.latency_ns(),
         area_mm2: report.area_mm2(),
         throughput_ips: tl.throughput_ips,
         peak_util: tl.peak_util(),
         robustness,
-    }
+    };
+    // the scheduled makespan doubles as the trial's virtual-time column
+    // in journal records
+    (metrics, tl.makespan_ns)
 }
 
 #[cfg(test)]
@@ -311,13 +355,13 @@ mod tests {
         let path = dir.join("cache.json");
 
         let first = SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(first.simulated, 2);
 
         let second = SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(second.simulated, 0, "everything should come from the cache");
@@ -351,21 +395,21 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
         let plain = SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(plain.simulated, 2);
         // a robustness sweep must not reuse the 3-objective entries…
         let rob = SweepRunner::new(tiny_space())
             .with_robustness(RobustnessCfg { trials: 2, seed: 7 })
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(rob.simulated, 2, "plain entries must not satisfy a robustness sweep");
         // …but a repeated robustness sweep hits, robustness value intact
         let again = SweepRunner::new(tiny_space())
             .with_robustness(RobustnessCfg { trials: 2, seed: 7 })
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(again.cache_hits, 2);
@@ -387,7 +431,7 @@ mod tests {
         let rob = RobustnessCfg { trials: 2, seed: 7 };
         let first = SweepRunner::new(tiny_space())
             .with_robustness(rob)
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(first.simulated, 2);
@@ -409,7 +453,7 @@ mod tests {
 
         let second = SweepRunner::new(tiny_space())
             .with_robustness(rob)
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(second.simulated, 2, "stripped entries must be re-simulated");
@@ -426,7 +470,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
         SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         // graft a robustness field onto every cached entry
@@ -436,7 +480,7 @@ mod tests {
         std::fs::write(&path, grafted).unwrap();
 
         let second = SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(second.simulated, 2, "grafted entries must be re-simulated");
@@ -449,7 +493,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
         SweepRunner::new(tiny_space())
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         let custom = {
@@ -461,7 +505,7 @@ mod tests {
         };
         let second = SweepRunner::new(tiny_space())
             .with_sparsity(custom)
-            .with_cache(ResultCache::at_path(&path))
+            .with_cache(ResultCache::at_path(&path).unwrap())
             .run()
             .unwrap();
         assert_eq!(second.simulated, 2, "different sparsity must not reuse entries");

@@ -610,18 +610,109 @@ pub struct TimelineSweepRow {
 /// utilization — the numbers the analytical simulator cannot see
 /// (EXPERIMENTS.md §Timeline). Entirely virtual-time and deterministic.
 pub fn timeline_utilization_sweep_rows() -> Vec<TimelineSweepRow> {
+    timeline_utilization_sweep_rows_journaled(None)
+        .expect("journal-less timeline sweep cannot fail")
+}
+
+/// Batch sizes swept per model (one journal trial per model × batch cell).
+const TIMELINE_SWEEP_BATCHES: [usize; 3] = [1, 4, 16];
+
+/// Stable journal key of one timeline sweep cell. The fixed configuration
+/// (config A, 32 nm, paper sparsity, 8 chunks) is spelled out so changing
+/// it invalidates old records by key rather than silently reusing them.
+fn timeline_trial_key(model: &str, batch: usize) -> String {
+    format!("tl-v1|{model}|configA|32nm|sp-paper|c8|b{batch}")
+}
+
+fn timeline_row_to_json(r: &TimelineSweepRow) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("model".to_string(), Json::Str(r.model.clone()));
+    m.insert("batch".to_string(), Json::Num(r.batch as f64));
+    m.insert("makespan_us".to_string(), Json::Num(r.makespan_us));
+    m.insert("serial_us".to_string(), Json::Num(r.serial_us));
+    m.insert("throughput_ips".to_string(), Json::Num(r.throughput_ips));
+    m.insert("xbar_util".to_string(), Json::Num(r.xbar_util));
+    m.insert("dcim_util".to_string(), Json::Num(r.dcim_util));
+    m.insert("noc_util".to_string(), Json::Num(r.noc_util));
+    m.insert("speedup".to_string(), Json::Num(r.speedup));
+    Json::Obj(m)
+}
+
+fn timeline_row_from_json(j: &crate::util::json::Json) -> Option<TimelineSweepRow> {
+    Some(TimelineSweepRow {
+        model: j.str_field("model").ok()?.to_string(),
+        batch: j.num_field("batch").ok()? as usize,
+        makespan_us: j.num_field("makespan_us").ok()?,
+        serial_us: j.num_field("serial_us").ok()?,
+        throughput_ips: j.num_field("throughput_ips").ok()?,
+        xbar_util: j.num_field("xbar_util").ok()?,
+        dcim_util: j.num_field("dcim_util").ok()?,
+        noc_util: j.num_field("noc_util").ok()?,
+        speedup: j.num_field("speedup").ok()?,
+    })
+}
+
+/// [`timeline_utilization_sweep_rows`] with optional journal durability
+/// and resume: each (model, batch) cell is one trial record, cells whose
+/// key already has a successful record are parsed back instead of
+/// re-simulated, and the assembled rows are bit-identical either way
+/// (metric f64s round-trip through the JSON writer exactly).
+pub fn timeline_utilization_sweep_rows_journaled(
+    journal_dir: Option<&Path>,
+) -> crate::Result<Vec<TimelineSweepRow>> {
+    use crate::journal::{self, TrialRecord, TrialStatus};
+    use crate::obs::{instrument, Progress};
     use crate::timeline::{simulate, TimelineCfg, TimelineModel};
 
     let arch = Arch::Hcim(HcimConfig::config_a());
     let params = CalibParams::at_65nm().rescaled(TechNode::N32);
     let sparsity = SparsityTable::paper_default();
-    let mut rows = Vec::new();
-    for g in zoo::cifar_suite() {
-        let model = TimelineModel::from_graph(&g, &arch, &params, &sparsity, None)
+    let fingerprint = sparsity.fingerprint();
+    let suite = zoo::cifar_suite();
+    let n_batches = TIMELINE_SWEEP_BATCHES.len();
+    let mut rows: Vec<Option<TimelineSweepRow>> = vec![None; suite.len() * n_batches];
+
+    let mut sink = None;
+    if let Some(dir) = journal_dir {
+        let contents = journal::read_dir(dir)?;
+        let completed = contents.latest_ok_by_key();
+        for (gi, g) in suite.iter().enumerate() {
+            for (bi, &batch) in TIMELINE_SWEEP_BATCHES.iter().enumerate() {
+                let key = timeline_trial_key(&g.name, batch);
+                if let Some(rec) = completed.get(key.as_str()) {
+                    rows[gi * n_batches + bi] = timeline_row_from_json(&rec.metrics);
+                }
+            }
+        }
+        let pending = rows.iter().filter(|r| r.is_none()).count() as u64;
+        let writer = journal::JournalWriter::create(dir, "timeline")?;
+        sink = Some(journal::JournalSink::new(
+            writer,
+            "timeline",
+            pending,
+            Some(Progress::new("timeline.cells", pending)),
+            Some(journal::HEARTBEAT_EVERY_MS),
+        ));
+    }
+
+    for (gi, g) in suite.iter().enumerate() {
+        // build the timeline model only when some batch cell of this
+        // graph still needs simulating
+        if (0..n_batches).all(|bi| rows[gi * n_batches + bi].is_some()) {
+            continue;
+        }
+        let model = TimelineModel::from_graph(g, &arch, &params, &sparsity, None)
             .expect("unbudgeted timeline build cannot fail");
-        for batch in [1usize, 4, 16] {
+        for (bi, &batch) in TIMELINE_SWEEP_BATCHES.iter().enumerate() {
+            let slot = gi * n_batches + bi;
+            if rows[slot].is_some() {
+                continue;
+            }
+            let before = instrument::global().counter_values();
+            let t0 = std::time::Instant::now();
             let rep = simulate(&model, &TimelineCfg { batch, chunks: 8, trace: false });
-            rows.push(TimelineSweepRow {
+            let row = TimelineSweepRow {
                 model: g.name.clone(),
                 batch,
                 makespan_us: rep.makespan_ns / 1e3,
@@ -631,14 +722,45 @@ pub fn timeline_utilization_sweep_rows() -> Vec<TimelineSweepRow> {
                 dcim_util: rep.util.dcim,
                 noc_util: rep.util.noc,
                 speedup: rep.speedup,
-            });
+            };
+            if let Some(sink) = &sink {
+                let key = timeline_trial_key(&g.name, batch);
+                let rec = TrialRecord {
+                    sweep: "timeline".to_string(),
+                    key: key.clone(),
+                    fingerprint,
+                    seed: 0,
+                    status: TrialStatus::Ok,
+                    metrics: timeline_row_to_json(&row),
+                    virt_ns: Some(rep.makespan_ns),
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    unix_ms: journal::now_unix_ms(),
+                    instruments: journal::counter_delta(
+                        &before,
+                        &instrument::global().counter_values(),
+                    ),
+                };
+                if let Err(e) = sink.append_trial(&rec) {
+                    crate::log_warn!("journal append failed for {key}: {e}");
+                }
+            }
+            rows[slot] = Some(row);
         }
     }
-    rows
+    if let Some(sink) = &sink {
+        sink.finish();
+    }
+    Ok(rows.into_iter().map(|r| r.expect("all cells filled")).collect())
 }
 
 /// Tabled form of [`timeline_utilization_sweep_rows`].
 pub fn timeline_utilization_sweep() -> Table {
+    timeline_utilization_sweep_journaled(None)
+        .expect("journal-less timeline sweep cannot fail")
+}
+
+/// [`timeline_utilization_sweep`] with optional journal durability/resume.
+pub fn timeline_utilization_sweep_journaled(journal_dir: Option<&Path>) -> crate::Result<Table> {
     let mut t = Table::new(
         "Timeline — scheduled makespan & utilization vs batch (config A, 32 nm)",
         &[
@@ -646,7 +768,7 @@ pub fn timeline_utilization_sweep() -> Table {
             "DCiM util", "NoC util", "Speedup",
         ],
     );
-    for r in timeline_utilization_sweep_rows() {
+    for r in timeline_utilization_sweep_rows_journaled(journal_dir)? {
         t.row(&[
             r.model,
             r.batch.to_string(),
@@ -659,7 +781,7 @@ pub fn timeline_utilization_sweep() -> Table {
             format!("{:.2}×", r.speedup),
         ]);
     }
-    t
+    Ok(t)
 }
 
 /// Reports used by EXPERIMENTS.md: run everything and also return the raw

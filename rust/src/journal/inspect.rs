@@ -1,0 +1,464 @@
+//! Read-side tooling behind `hcim journal summarize|tail|diff`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::journal::record::TrialStatus;
+use crate::journal::store::read_dir;
+use crate::util::json::Json;
+use crate::util::table::{Align, Table};
+
+/// Per-sweep rollup inside a [`JournalSummary`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSummary {
+    /// Sweep family name.
+    pub sweep: String,
+    /// Total trial records (including superseded and failed ones).
+    pub trials: usize,
+    /// Records with status `ok`.
+    pub ok: usize,
+    /// Records with status `failed`.
+    pub failed: usize,
+    /// Distinct trial keys seen.
+    pub distinct_keys: usize,
+    /// Heartbeat records seen.
+    pub heartbeats: usize,
+    /// `done` of the most recent heartbeat (0 when none).
+    pub done: u64,
+    /// `total` of the most recent heartbeat (0 when none).
+    pub total: u64,
+    /// Timestamp of the most recent record or heartbeat (ms since epoch).
+    pub last_unix_ms: u64,
+    /// True when the sweep looks incomplete *and* its last beacon is older
+    /// than the stall threshold — "stalled", as opposed to merely slow.
+    pub stalled: bool,
+}
+
+/// What `hcim journal summarize` reports for a directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalSummary {
+    /// Journal directory (display form).
+    pub dir: String,
+    /// Number of shard files read.
+    pub shards: usize,
+    /// Torn final lines skipped across shards.
+    pub truncated: usize,
+    /// Interior malformed lines skipped across shards.
+    pub malformed: usize,
+    /// One rollup per sweep family, name-sorted.
+    pub sweeps: Vec<SweepSummary>,
+}
+
+impl JournalSummary {
+    /// Machine-readable form (sorted keys, stable layout).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("dir".to_string(), Json::Str(self.dir.clone()));
+        obj.insert("shards".to_string(), Json::Num(self.shards as f64));
+        obj.insert("truncated".to_string(), Json::Num(self.truncated as f64));
+        obj.insert("malformed".to_string(), Json::Num(self.malformed as f64));
+        let sweeps = self
+            .sweeps
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("sweep".to_string(), Json::Str(s.sweep.clone()));
+                o.insert("trials".to_string(), Json::Num(s.trials as f64));
+                o.insert("ok".to_string(), Json::Num(s.ok as f64));
+                o.insert("failed".to_string(), Json::Num(s.failed as f64));
+                o.insert(
+                    "distinct_keys".to_string(),
+                    Json::Num(s.distinct_keys as f64),
+                );
+                o.insert("heartbeats".to_string(), Json::Num(s.heartbeats as f64));
+                o.insert("done".to_string(), Json::Num(s.done as f64));
+                o.insert("total".to_string(), Json::Num(s.total as f64));
+                o.insert("last_unix_ms".to_string(), Json::Num(s.last_unix_ms as f64));
+                o.insert("stalled".to_string(), Json::Bool(s.stalled));
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("sweeps".to_string(), Json::Arr(sweeps));
+        Json::Obj(obj)
+    }
+
+    /// Human-readable table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "journal {} ({} shards, {} torn, {} malformed)",
+                self.dir, self.shards, self.truncated, self.malformed
+            ),
+            &[
+                "Sweep", "Trials", "Ok", "Failed", "Keys", "Beats", "Done", "Total", "State",
+            ],
+        )
+        .align(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Left,
+        ]);
+        for s in &self.sweeps {
+            let state = if s.stalled {
+                "STALLED"
+            } else if s.total > 0 && s.done >= s.total {
+                "done"
+            } else {
+                "live"
+            };
+            t.row(&[
+                s.sweep.clone(),
+                s.trials.to_string(),
+                s.ok.to_string(),
+                s.failed.to_string(),
+                s.distinct_keys.to_string(),
+                s.heartbeats.to_string(),
+                s.done.to_string(),
+                s.total.to_string(),
+                state.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Summarize a journal directory. `stall_s` is the heartbeat-silence
+/// threshold after which an incomplete sweep is flagged as stalled;
+/// `now_unix_ms` is injected so tests are clock-free.
+pub fn summarize(dir: &Path, stall_s: f64, now_unix_ms: u64) -> crate::Result<JournalSummary> {
+    let contents = read_dir(dir)?;
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    names.extend(contents.sweeps.iter().map(String::as_str));
+    let mut sweeps = Vec::new();
+    for name in names {
+        let mut s = SweepSummary {
+            sweep: name.to_string(),
+            trials: 0,
+            ok: 0,
+            failed: 0,
+            distinct_keys: 0,
+            heartbeats: 0,
+            done: 0,
+            total: 0,
+            last_unix_ms: 0,
+            stalled: false,
+        };
+        let mut keys = BTreeSet::new();
+        for rec in contents.trials.iter().filter(|r| r.sweep == name) {
+            s.trials += 1;
+            match rec.status {
+                TrialStatus::Ok => s.ok += 1,
+                TrialStatus::Failed => s.failed += 1,
+            }
+            keys.insert(rec.key.as_str());
+            s.last_unix_ms = s.last_unix_ms.max(rec.unix_ms);
+        }
+        s.distinct_keys = keys.len();
+        for hb in contents.heartbeats.iter().filter(|h| h.sweep == name) {
+            s.heartbeats += 1;
+            if hb.unix_ms >= s.last_unix_ms {
+                s.last_unix_ms = hb.unix_ms;
+                s.done = hb.done;
+                s.total = hb.total;
+            }
+        }
+        let incomplete = s.total > 0 && s.done < s.total;
+        let silent_ms = now_unix_ms.saturating_sub(s.last_unix_ms) as f64;
+        s.stalled = incomplete && silent_ms > stall_s * 1e3;
+        sweeps.push(s);
+    }
+    Ok(JournalSummary {
+        dir: dir.display().to_string(),
+        shards: contents.shards.len(),
+        truncated: contents.truncated,
+        malformed: contents.malformed,
+        sweeps,
+    })
+}
+
+/// Key-level comparison of two journal directories.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalDiff {
+    /// Trial keys present only in A.
+    pub only_a: Vec<String>,
+    /// Trial keys present only in B.
+    pub only_b: Vec<String>,
+    /// Keys in both whose latest status or metrics payload differ.
+    pub differing: Vec<String>,
+    /// Keys in both with identical latest status + metrics.
+    pub matching: usize,
+}
+
+impl JournalDiff {
+    /// True when both journals agree on every shared and unshared key.
+    pub fn is_clean(&self) -> bool {
+        self.only_a.is_empty() && self.only_b.is_empty() && self.differing.is_empty()
+    }
+
+    /// Machine-readable form.
+    pub fn to_json(&self) -> Json {
+        let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
+        let mut obj = BTreeMap::new();
+        obj.insert("only_a".to_string(), strs(&self.only_a));
+        obj.insert("only_b".to_string(), strs(&self.only_b));
+        obj.insert("differing".to_string(), strs(&self.differing));
+        obj.insert("matching".to_string(), Json::Num(self.matching as f64));
+        obj.insert("clean".to_string(), Json::Bool(self.is_clean()));
+        Json::Obj(obj)
+    }
+}
+
+/// Compare the latest record per key across two journals. Records match
+/// when their status and serialized metrics payload are identical — the
+/// same criterion the resume path's byte-identity contract rests on.
+pub fn diff(a: &Path, b: &Path) -> crate::Result<JournalDiff> {
+    let ca = read_dir(a)?;
+    let cb = read_dir(b)?;
+    let ma = ca.latest_by_key();
+    let mb = cb.latest_by_key();
+    let mut out = JournalDiff {
+        only_a: Vec::new(),
+        only_b: Vec::new(),
+        differing: Vec::new(),
+        matching: 0,
+    };
+    for (key, ra) in &ma {
+        match mb.get(key) {
+            None => out.only_a.push((*key).to_string()),
+            Some(rb) => {
+                if ra.status == rb.status
+                    && ra.metrics.to_string() == rb.metrics.to_string()
+                {
+                    out.matching += 1;
+                } else {
+                    out.differing.push((*key).to_string());
+                }
+            }
+        }
+    }
+    for key in mb.keys() {
+        if !ma.contains_key(key) {
+            out.only_b.push((*key).to_string());
+        }
+    }
+    Ok(out)
+}
+
+/// Print the last `lines` raw journal lines; with `follow`, keep polling
+/// for new complete lines (and new shards) until interrupted.
+pub fn tail(dir: &Path, lines: usize, follow: bool) -> crate::Result<()> {
+    let mut offsets: BTreeMap<PathBuf, u64> = BTreeMap::new();
+    let mut tail_buf: Vec<String> = Vec::new();
+    for shard in sorted_shards(dir)? {
+        let (read, end) = complete_lines(&shard, 0)?;
+        tail_buf.extend(read);
+        offsets.insert(shard, end);
+    }
+    let start = tail_buf.len().saturating_sub(lines);
+    for line in &tail_buf[start..] {
+        println!("{line}");
+    }
+    if !follow {
+        return Ok(());
+    }
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        for shard in sorted_shards(dir)? {
+            let from = offsets.get(&shard).copied().unwrap_or(0);
+            let (read, end) = complete_lines(&shard, from)?;
+            for line in read {
+                println!("{line}");
+            }
+            offsets.insert(shard, end);
+        }
+    }
+}
+
+fn sorted_shards(dir: &Path) -> crate::Result<Vec<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(anyhow::anyhow!("journal dir {}: {e}", dir.display())),
+    };
+    let mut shards: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("shard-") && n.ends_with(".jsonl"))
+                .unwrap_or(false)
+        })
+        .collect();
+    shards.sort();
+    Ok(shards)
+}
+
+/// Read complete (newline-terminated) lines from byte `from` onward and
+/// return them with the offset just past the last complete line — a torn
+/// tail stays unread until its newline lands.
+fn complete_lines(path: &Path, from: u64) -> crate::Result<(Vec<String>, u64)> {
+    let mut file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("journal shard {}: {e}", path.display()))?;
+    file.seek(SeekFrom::Start(from))
+        .map_err(|e| anyhow::anyhow!("journal shard {}: {e}", path.display()))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut lines = Vec::new();
+    let mut offset = from;
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = reader
+            .read_line(&mut buf)
+            .map_err(|e| anyhow::anyhow!("journal shard {}: {e}", path.display()))?;
+        if n == 0 || !buf.ends_with('\n') {
+            break;
+        }
+        offset += n as u64;
+        lines.push(buf.trim_end_matches('\n').to_string());
+    }
+    Ok((lines, offset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::journal::record::TrialRecord;
+    use crate::journal::store::{JournalSink, JournalWriter};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hcim-inspect-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record(sweep: &str, key: &str, status: TrialStatus, val: f64) -> TrialRecord {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("v".to_string(), Json::Num(val));
+        TrialRecord {
+            sweep: sweep.to_string(),
+            key: key.to_string(),
+            fingerprint: 1,
+            seed: 0,
+            status,
+            metrics: Json::Obj(metrics),
+            virt_ns: None,
+            wall_ms: 1.0,
+            unix_ms: 100,
+            instruments: BTreeMap::new(),
+        }
+    }
+
+    fn write_journal(dir: &Path, recs: &[TrialRecord]) {
+        let writer = JournalWriter::create(dir, "test").unwrap();
+        let sink = JournalSink::new(writer, "test", recs.len() as u64, None, None);
+        for r in recs {
+            sink.append_trial(r).unwrap();
+        }
+        sink.finish();
+    }
+
+    #[test]
+    fn summarize_rolls_up_per_sweep_and_flags_stalls() {
+        let dir = tmp_dir("sum");
+        write_journal(
+            &dir,
+            &[
+                record("dse", "k1", TrialStatus::Ok, 1.0),
+                record("dse", "k2", TrialStatus::Failed, 2.0),
+                record("robustness", "r1", TrialStatus::Ok, 3.0),
+            ],
+        );
+        // Heartbeats carry done=3, total=3 for sweep "test" — the trial
+        // sweeps have no heartbeat, so they can never be flagged stalled.
+        let s = summarize(&dir, 30.0, 10_000_000).unwrap();
+        assert_eq!(s.shards, 1);
+        let dse = s.sweeps.iter().find(|x| x.sweep == "dse").unwrap();
+        assert_eq!((dse.trials, dse.ok, dse.failed), (2, 1, 1));
+        assert_eq!(dse.distinct_keys, 2);
+        assert!(!dse.stalled);
+        let json = s.to_json().to_string();
+        assert!(json.contains("\"sweeps\""), "{json}");
+        assert!(!s.table().render().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stall_is_flagged_only_when_incomplete_and_silent() {
+        let dir = tmp_dir("stall");
+        // Hand-write a shard whose last heartbeat says 1/5 done at t=1000ms.
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("shard-0000.jsonl"),
+            concat!(
+                "{\"schema\":\"hcim-journal-v1\",\"sweep\":\"dse\",\"type\":\"header\",\"unix_ms\":1000}\n",
+                "{\"done\":1,\"sweep\":\"dse\",\"total\":5,\"type\":\"heartbeat\",\"unix_ms\":1000,\"wall_ms\":1}\n",
+            ),
+        )
+        .unwrap();
+        // 100s later with a 30s threshold: stalled.
+        let s = summarize(&dir, 30.0, 101_000).unwrap();
+        assert!(s.sweeps[0].stalled);
+        // 10s later: merely slow.
+        let s = summarize(&dir, 30.0, 11_000).unwrap();
+        assert!(!s.sweeps[0].stalled);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn diff_classifies_keys() {
+        let a = tmp_dir("diff-a");
+        let b = tmp_dir("diff-b");
+        write_journal(
+            &a,
+            &[
+                record("dse", "shared-same", TrialStatus::Ok, 1.0),
+                record("dse", "shared-diff", TrialStatus::Ok, 2.0),
+                record("dse", "only-a", TrialStatus::Ok, 3.0),
+            ],
+        );
+        write_journal(
+            &b,
+            &[
+                record("dse", "shared-same", TrialStatus::Ok, 1.0),
+                record("dse", "shared-diff", TrialStatus::Ok, 99.0),
+                record("dse", "only-b", TrialStatus::Ok, 4.0),
+            ],
+        );
+        let d = diff(&a, &b).unwrap();
+        assert_eq!(d.only_a, vec!["only-a".to_string()]);
+        assert_eq!(d.only_b, vec!["only-b".to_string()]);
+        assert_eq!(d.differing, vec!["shared-diff".to_string()]);
+        assert_eq!(d.matching, 1);
+        assert!(!d.is_clean());
+        assert!(d.to_json().to_string().contains("\"clean\":false"));
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+
+    #[test]
+    fn complete_lines_leave_torn_tail_unread() {
+        let dir = tmp_dir("tailbuf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shard-0000.jsonl");
+        std::fs::write(&p, "line1\nline2\npartial").unwrap();
+        let (lines, end) = complete_lines(&p, 0).unwrap();
+        assert_eq!(lines, vec!["line1".to_string(), "line2".to_string()]);
+        assert_eq!(end, 12);
+        // Once the newline lands the remainder is read from the offset.
+        std::fs::write(&p, "line1\nline2\npartial-done\n").unwrap();
+        let (lines, _) = complete_lines(&p, end).unwrap();
+        assert_eq!(lines, vec!["partial-done".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

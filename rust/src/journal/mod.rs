@@ -1,0 +1,40 @@
+//! Durable experiment flight recorder.
+//!
+//! A *journal* is a directory of append-only JSONL shard files recording
+//! every trial a sweep completes — DSE design points, Monte Carlo
+//! robustness trials, timeline sweep cells — plus periodic heartbeats.
+//! Each run opens a fresh `shard-NNNN.jsonl` (existing shards are never
+//! rewritten) whose first line is a schema-version header; every append
+//! is fsync'd, so a crash loses at most one torn line, which the reader
+//! detects, logs, and skips.
+//!
+//! The journal serves three roles:
+//!
+//! - **Durability / resume**: sweeps started with `--journal DIR` skip any
+//!   trial whose key already has a successful record, and the resumed
+//!   final report is byte-identical to an uninterrupted run (metric
+//!   payloads round-trip f64s exactly; wall-clock fields are provenance
+//!   and never reach deterministic reports).
+//! - **Observability**: `hcim journal summarize|tail|diff` inspect live or
+//!   finished sweeps; heartbeat records let `summarize` flag a stalled
+//!   sweep (no beacon within the stall threshold) as opposed to a slow one.
+//! - **Caching**: the DSE [`ResultCache`](crate::dse::ResultCache) can be
+//!   journal-backed, replacing the whole-file JSON cache with durable
+//!   incremental shards behind the same API.
+
+pub mod inspect;
+pub mod record;
+pub mod store;
+
+pub use inspect::{diff, summarize, tail, JournalDiff, JournalSummary, SweepSummary};
+pub use record::{
+    counter_delta, hex_u64, now_unix_ms, parse_hex_u64, Heartbeat, TrialRecord, TrialStatus,
+};
+pub use store::{read_dir, JournalContents, JournalSink, JournalWriter, KILL_AFTER_ENV};
+
+/// Schema tag written as the first line of every shard. Bump on any
+/// backward-incompatible record change; readers hard-fail on mismatch.
+pub const JOURNAL_SCHEMA: &str = "hcim-journal-v1";
+
+/// Default heartbeat cadence for journal sinks.
+pub const HEARTBEAT_EVERY_MS: u64 = 1_000;

@@ -1,0 +1,322 @@
+//! Trial-record schema for the experiment journal.
+//!
+//! Every line in a journal shard is a single JSON object with a `"type"`
+//! discriminator: `"header"` (first line of every shard), `"trial"` (one
+//! completed unit of work), or `"heartbeat"` (liveness beacon). Unknown
+//! types are ignored by readers for forward compatibility.
+//!
+//! `u64` quantities that need full 64-bit fidelity (seeds, fingerprints)
+//! are serialized as `0x`-prefixed hex *strings* because JSON numbers go
+//! through `f64` in our parser and would lose the high bits.
+
+use std::collections::BTreeMap;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Outcome of a single journaled trial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialStatus {
+    /// The trial completed and its metrics payload is usable.
+    Ok,
+    /// The trial ran but failed; the record exists only for audit.
+    Failed,
+}
+
+impl TrialStatus {
+    /// Stable on-disk spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrialStatus::Ok => "ok",
+            TrialStatus::Failed => "failed",
+        }
+    }
+
+    /// Parse the on-disk spelling; unknown strings are `None`.
+    pub fn parse(s: &str) -> Option<TrialStatus> {
+        match s {
+            "ok" => Some(TrialStatus::Ok),
+            "failed" => Some(TrialStatus::Failed),
+            _ => None,
+        }
+    }
+}
+
+/// One durable record of a completed trial.
+///
+/// The `key` is the stable identity used for resume: a resumed sweep skips
+/// any key already present with [`TrialStatus::Ok`]. The `fingerprint`
+/// ties the record to its inputs so a summarizer can detect records
+/// produced under different configurations sharing a directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialRecord {
+    /// Sweep family this trial belongs to (`"dse"`, `"robustness"`, ...).
+    pub sweep: String,
+    /// Stable, human-auditable trial identity (same scheme as cache keys).
+    pub key: String,
+    /// Fingerprint of the trial's inputs (sparsity table, noise params, ...).
+    pub fingerprint: u64,
+    /// RNG seed the trial ran under (0 when the trial is deterministic).
+    pub seed: u64,
+    /// Outcome.
+    pub status: TrialStatus,
+    /// Metric payload; schema is per-sweep and round-trips bit-exactly.
+    pub metrics: Json,
+    /// Virtual (simulated) time attributed to the trial, when meaningful.
+    pub virt_ns: Option<f64>,
+    /// Wall-clock milliseconds the trial took (provenance only — never
+    /// folded into deterministic reports).
+    pub wall_ms: f64,
+    /// Wall-clock timestamp of the append, ms since the Unix epoch.
+    pub unix_ms: u64,
+    /// Instrument counter deltas attributed to this trial (empty allowed).
+    pub instruments: BTreeMap<String, u64>,
+}
+
+impl TrialRecord {
+    /// Serialize to the journal-line JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str("trial".to_string()));
+        obj.insert("sweep".to_string(), Json::Str(self.sweep.clone()));
+        obj.insert("key".to_string(), Json::Str(self.key.clone()));
+        obj.insert("fp".to_string(), Json::Str(hex_u64(self.fingerprint)));
+        obj.insert("seed".to_string(), Json::Str(hex_u64(self.seed)));
+        obj.insert(
+            "status".to_string(),
+            Json::Str(self.status.as_str().to_string()),
+        );
+        obj.insert("metrics".to_string(), self.metrics.clone());
+        if let Some(v) = self.virt_ns {
+            obj.insert("virt_ns".to_string(), Json::Num(v));
+        }
+        obj.insert("wall_ms".to_string(), Json::Num(self.wall_ms));
+        obj.insert("unix_ms".to_string(), Json::Num(self.unix_ms as f64));
+        if !self.instruments.is_empty() {
+            let map = self
+                .instruments
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect();
+            obj.insert("instruments".to_string(), Json::Obj(map));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse a journal-line object previously produced by [`to_json`].
+    ///
+    /// [`to_json`]: TrialRecord::to_json
+    pub fn from_json(j: &Json) -> Option<TrialRecord> {
+        let sweep = j.str_field("sweep").ok()?.to_string();
+        let key = j.str_field("key").ok()?.to_string();
+        let fingerprint = parse_hex_u64(j.str_field("fp").ok()?)?;
+        let seed = parse_hex_u64(j.str_field("seed").ok()?)?;
+        let status = TrialStatus::parse(j.str_field("status").ok()?)?;
+        let metrics = j.get("metrics")?.clone();
+        let virt_ns = j.get("virt_ns").and_then(Json::as_f64);
+        let wall_ms = j.num_field("wall_ms").ok()?;
+        let unix_ms = j.num_field("unix_ms").ok()? as u64;
+        let instruments = match j.get("instruments") {
+            Some(Json::Obj(map)) => map
+                .iter()
+                .filter_map(|(k, v)| Some((k.clone(), v.as_f64()? as u64)))
+                .collect(),
+            _ => BTreeMap::new(),
+        };
+        Some(TrialRecord {
+            sweep,
+            key,
+            fingerprint,
+            seed,
+            status,
+            metrics,
+            virt_ns,
+            wall_ms,
+            unix_ms,
+            instruments,
+        })
+    }
+}
+
+/// Periodic liveness beacon written by the journal sink. A reader uses the
+/// gap between `unix_ms` and "now" to distinguish a slow sweep from a
+/// stalled one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Heartbeat {
+    /// Sweep family the beacon belongs to.
+    pub sweep: String,
+    /// Trials appended so far by the emitting process.
+    pub done: u64,
+    /// Trials the emitting process planned to run (this invocation).
+    pub total: u64,
+    /// Wall-clock ms since the emitting sink was created.
+    pub wall_ms: f64,
+    /// Wall-clock timestamp of the beacon, ms since the Unix epoch.
+    pub unix_ms: u64,
+    /// Absolute instrument counter snapshot at beacon time.
+    pub instruments: BTreeMap<String, u64>,
+}
+
+impl Heartbeat {
+    /// Serialize to the journal-line JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str("heartbeat".to_string()));
+        obj.insert("sweep".to_string(), Json::Str(self.sweep.clone()));
+        obj.insert("done".to_string(), Json::Num(self.done as f64));
+        obj.insert("total".to_string(), Json::Num(self.total as f64));
+        obj.insert("wall_ms".to_string(), Json::Num(self.wall_ms));
+        obj.insert("unix_ms".to_string(), Json::Num(self.unix_ms as f64));
+        if !self.instruments.is_empty() {
+            let map = self
+                .instruments
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect();
+            obj.insert("instruments".to_string(), Json::Obj(map));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse a journal-line object previously produced by [`to_json`].
+    ///
+    /// [`to_json`]: Heartbeat::to_json
+    pub fn from_json(j: &Json) -> Option<Heartbeat> {
+        Some(Heartbeat {
+            sweep: j.str_field("sweep").ok()?.to_string(),
+            done: j.num_field("done").ok()? as u64,
+            total: j.num_field("total").ok()? as u64,
+            wall_ms: j.num_field("wall_ms").ok()?,
+            unix_ms: j.num_field("unix_ms").ok()? as u64,
+            instruments: match j.get("instruments") {
+                Some(Json::Obj(map)) => map
+                    .iter()
+                    .filter_map(|(k, v)| Some((k.clone(), v.as_f64()? as u64)))
+                    .collect(),
+                _ => BTreeMap::new(),
+            },
+        })
+    }
+}
+
+/// Build the per-shard header line carrying the schema version.
+pub fn header_json(schema: &str, sweep: &str, unix_ms: u64) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("type".to_string(), Json::Str("header".to_string()));
+    obj.insert("schema".to_string(), Json::Str(schema.to_string()));
+    obj.insert("sweep".to_string(), Json::Str(sweep.to_string()));
+    obj.insert("unix_ms".to_string(), Json::Num(unix_ms as f64));
+    Json::Obj(obj)
+}
+
+/// Wall-clock ms since the Unix epoch (0 if the clock is before 1970).
+pub fn now_unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Full-fidelity hex spelling of a `u64` (`0x`-prefixed, zero-padded).
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:#018x}")
+}
+
+/// Parse [`hex_u64`] output (the `0x` prefix is optional).
+pub fn parse_hex_u64(s: &str) -> Option<u64> {
+    let digits = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(digits, 16).ok()
+}
+
+/// Positive per-trial deltas between two instrument counter snapshots.
+pub fn counter_delta(
+    before: &BTreeMap<String, u64>,
+    after: &BTreeMap<String, u64>,
+) -> BTreeMap<String, u64> {
+    after
+        .iter()
+        .filter_map(|(name, &v)| {
+            let prev = before.get(name).copied().unwrap_or(0);
+            (v > prev).then(|| (name.clone(), v - prev))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrialRecord {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("energy_pj".to_string(), Json::Num(1234.5));
+        let mut instruments = BTreeMap::new();
+        instruments.insert("sim.mvm".to_string(), 42u64);
+        TrialRecord {
+            sweep: "dse".to_string(),
+            key: "hcim-dse-v3|resnet20|...".to_string(),
+            fingerprint: 0xdead_beef_cafe_f00d,
+            seed: u64::MAX,
+            status: TrialStatus::Ok,
+            metrics: Json::Obj(metrics),
+            virt_ns: Some(77.25),
+            wall_ms: 12.5,
+            unix_ms: 1_700_000_000_123,
+            instruments,
+        }
+    }
+
+    #[test]
+    fn trial_record_roundtrips() {
+        let rec = sample();
+        let line = rec.to_json().to_string();
+        let parsed = TrialRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(parsed, rec);
+    }
+
+    #[test]
+    fn hex_preserves_full_u64_range() {
+        for v in [0u64, 1, u64::MAX, 0x8000_0000_0000_0000] {
+            assert_eq!(parse_hex_u64(&hex_u64(v)), Some(v));
+        }
+        assert_eq!(parse_hex_u64("ff"), Some(255));
+        assert_eq!(parse_hex_u64("zz"), None);
+    }
+
+    #[test]
+    fn status_spellings_are_stable() {
+        assert_eq!(TrialStatus::parse("ok"), Some(TrialStatus::Ok));
+        assert_eq!(TrialStatus::parse("failed"), Some(TrialStatus::Failed));
+        assert_eq!(TrialStatus::parse("weird"), None);
+        assert_eq!(TrialStatus::Ok.as_str(), "ok");
+    }
+
+    #[test]
+    fn heartbeat_roundtrips() {
+        let hb = Heartbeat {
+            sweep: "dse".to_string(),
+            done: 3,
+            total: 10,
+            wall_ms: 250.0,
+            unix_ms: 1_700_000_000_456,
+            instruments: BTreeMap::new(),
+        };
+        let line = hb.to_json().to_string();
+        let parsed = Heartbeat::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(parsed, hb);
+    }
+
+    #[test]
+    fn counter_delta_is_positive_only() {
+        let mut before = BTreeMap::new();
+        before.insert("a".to_string(), 5u64);
+        before.insert("b".to_string(), 7u64);
+        let mut after = BTreeMap::new();
+        after.insert("a".to_string(), 9u64);
+        after.insert("b".to_string(), 7u64);
+        after.insert("c".to_string(), 2u64);
+        let delta = counter_delta(&before, &after);
+        assert_eq!(delta.get("a"), Some(&4));
+        assert_eq!(delta.get("b"), None);
+        assert_eq!(delta.get("c"), Some(&2));
+    }
+}

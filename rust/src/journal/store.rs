@@ -1,0 +1,567 @@
+//! Durable shard writer, concurrent sink, and tolerant reader.
+//!
+//! Shards are append-only: a resumed run never rewrites an existing file —
+//! it opens the next free `shard-NNNN.jsonl` and appends there. Every line
+//! is written whole and `sync_data`'d before the append returns, so a
+//! crash can lose at most the line being written (a *torn write*), which
+//! the reader detects and skips.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{ErrorKind, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::journal::record::{
+    header_json, now_unix_ms, Heartbeat, TrialRecord, TrialStatus,
+};
+use crate::journal::JOURNAL_SCHEMA;
+use crate::obs::instrument;
+use crate::obs::progress::Progress;
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use crate::{log_debug, log_warn};
+
+/// Environment variable for deterministic crash injection: after this many
+/// trial appends the sink aborts the process (SIGKILL-equivalent). Used by
+/// the CI interrupt-and-resume smoke; ignored when unset or unparseable.
+pub const KILL_AFTER_ENV: &str = "HCIM_JOURNAL_KILL_AFTER";
+
+/// Owns one open shard file and appends fsync'd lines to it.
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: File,
+    path: PathBuf,
+}
+
+impl JournalWriter {
+    /// Create the journal directory if needed and open a *new* shard —
+    /// never an existing one — writing the schema header as its first line.
+    pub fn create(dir: &Path, sweep: &str) -> crate::Result<JournalWriter> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("journal dir {}: {e}", dir.display()))?;
+        for idx in 0..10_000u32 {
+            let path = dir.join(format!("shard-{idx:04}.jsonl"));
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(file) => {
+                    let mut w = JournalWriter { file, path };
+                    w.append_line(&header_json(JOURNAL_SCHEMA, sweep, now_unix_ms()))?;
+                    log_debug!("journal: opened shard {}", w.path.display());
+                    return Ok(w);
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => continue,
+                Err(e) => {
+                    return Err(anyhow::anyhow!("journal shard {}: {e}", path.display()))
+                }
+            }
+        }
+        Err(anyhow::anyhow!(
+            "journal dir {} has no free shard slot",
+            dir.display()
+        ))
+    }
+
+    /// Append one record as a single line and flush it to stable storage.
+    pub fn append_line(&mut self, record: &Json) -> crate::Result<()> {
+        let mut line = record.to_string();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| anyhow::anyhow!("journal append {}: {e}", self.path.display()))
+    }
+
+    /// Path of the shard this writer appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+struct SinkInner {
+    writer: Mutex<JournalWriter>,
+    sweep: String,
+    total: u64,
+    progress: Option<Progress>,
+    t0: Instant,
+    appended: AtomicU64,
+    appended_keys: Mutex<BTreeSet<u64>>,
+    kill_after: Option<u64>,
+    stop: Arc<AtomicBool>,
+    heartbeat: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SinkInner {
+    fn write_heartbeat(&self) {
+        let hb = Heartbeat {
+            sweep: self.sweep.clone(),
+            done: self.appended.load(Ordering::Relaxed),
+            total: self.total,
+            wall_ms: self.t0.elapsed().as_secs_f64() * 1e3,
+            unix_ms: now_unix_ms(),
+            instruments: instrument::global().counter_values(),
+        };
+        let mut writer = self.writer.lock().unwrap();
+        if let Err(e) = writer.append_line(&hb.to_json()) {
+            log_warn!("journal heartbeat dropped: {e}");
+        }
+    }
+}
+
+impl Drop for SinkInner {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.heartbeat.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Shared, thread-safe handle for appending trial records from workers.
+///
+/// Cloning is cheap (an `Arc`); all clones append to the same shard. The
+/// sink owns the sweep's [`Progress`] meter so the meter ticks exactly
+/// when a record becomes durable — progress is *derived from* the journal
+/// rather than counted separately.
+#[derive(Clone)]
+pub struct JournalSink {
+    inner: Arc<SinkInner>,
+}
+
+impl std::fmt::Debug for JournalSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JournalSink")
+            .field("sweep", &self.inner.sweep)
+            .field("appended", &self.inner.appended.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl JournalSink {
+    /// Wrap a writer. `total` is the number of trials this invocation
+    /// plans to run; `heartbeat_ms` enables the background beacon thread.
+    pub fn new(
+        writer: JournalWriter,
+        sweep: &str,
+        total: u64,
+        progress: Option<Progress>,
+        heartbeat_ms: Option<u64>,
+    ) -> JournalSink {
+        let kill_after = std::env::var(KILL_AFTER_ENV)
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok());
+        let inner = Arc::new(SinkInner {
+            writer: Mutex::new(writer),
+            sweep: sweep.to_string(),
+            total,
+            progress,
+            t0: Instant::now(),
+            appended: AtomicU64::new(0),
+            appended_keys: Mutex::new(BTreeSet::new()),
+            kill_after,
+            stop: Arc::new(AtomicBool::new(false)),
+            heartbeat: Mutex::new(None),
+        });
+        // An immediate beacon: even a sub-second sweep leaves a liveness
+        // trail, and `summarize` can always date the run's start.
+        inner.write_heartbeat();
+        if let Some(every_ms) = heartbeat_ms {
+            let weak: Weak<SinkInner> = Arc::downgrade(&inner);
+            let stop = Arc::clone(&inner.stop);
+            let handle = std::thread::spawn(move || loop {
+                // Sleep in short steps so Drop never waits a full interval.
+                let mut slept = 0u64;
+                while slept < every_ms {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let step = (every_ms - slept).min(50);
+                    std::thread::sleep(Duration::from_millis(step));
+                    slept += step;
+                }
+                match weak.upgrade() {
+                    Some(inner) => inner.write_heartbeat(),
+                    None => return,
+                }
+            });
+            *inner.heartbeat.lock().unwrap() = Some(handle);
+        }
+        JournalSink { inner }
+    }
+
+    /// Append a trial record durably, tick the sweep's progress meter, and
+    /// honor crash injection ([`KILL_AFTER_ENV`]).
+    pub fn append_trial(&self, record: &TrialRecord) -> crate::Result<()> {
+        {
+            let mut writer = self.inner.writer.lock().unwrap();
+            writer.append_line(&record.to_json())?;
+        }
+        self.inner
+            .appended_keys
+            .lock()
+            .unwrap()
+            .insert(fnv1a64(record.key.as_bytes()));
+        if let Some(p) = &self.inner.progress {
+            p.tick();
+        }
+        let n = self.inner.appended.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(limit) = self.inner.kill_after {
+            if n >= limit {
+                log_warn!(
+                    "journal: {KILL_AFTER_ENV}={limit} reached after {n} appends — aborting"
+                );
+                std::process::abort();
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether this sink already appended a record under `key` (used to
+    /// suppress duplicate appends from cache insertion paths).
+    pub fn has_appended(&self, key: &str) -> bool {
+        self.inner
+            .appended_keys
+            .lock()
+            .unwrap()
+            .contains(&fnv1a64(key.as_bytes()))
+    }
+
+    /// Write a final heartbeat so the journal records sweep completion.
+    pub fn finish(&self) {
+        self.inner.write_heartbeat();
+    }
+
+    /// Wall-clock ms since the sink was created.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.inner.t0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Everything a reader recovered from a journal directory.
+#[derive(Debug, Default)]
+pub struct JournalContents {
+    /// Shard files read, in name order.
+    pub shards: Vec<PathBuf>,
+    /// All trial records, in shard-then-line order.
+    pub trials: Vec<TrialRecord>,
+    /// All heartbeat records, in shard-then-line order.
+    pub heartbeats: Vec<Heartbeat>,
+    /// Distinct sweep families seen in headers and records.
+    pub sweeps: BTreeSet<String>,
+    /// Torn final lines skipped (crash mid-append).
+    pub truncated: usize,
+    /// Interior lines that failed to parse (corruption, not torn writes).
+    pub malformed: usize,
+}
+
+impl JournalContents {
+    /// Latest record per trial key (later shards/lines win), the map a
+    /// resumed sweep consults to skip completed work.
+    pub fn latest_by_key(&self) -> BTreeMap<&str, &TrialRecord> {
+        let mut map = BTreeMap::new();
+        for rec in &self.trials {
+            map.insert(rec.key.as_str(), rec);
+        }
+        map
+    }
+
+    /// Latest *successful* record per trial key.
+    pub fn latest_ok_by_key(&self) -> BTreeMap<&str, &TrialRecord> {
+        let mut map = BTreeMap::new();
+        for rec in &self.trials {
+            if rec.status == TrialStatus::Ok {
+                map.insert(rec.key.as_str(), rec);
+            }
+        }
+        map
+    }
+
+    /// True when no shard contributed any record.
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty() && self.heartbeats.is_empty()
+    }
+}
+
+/// Read every shard under `dir`, tolerating torn final lines (skipped with
+/// a warning) and hard-failing only on schema mismatches. A missing
+/// directory reads as an empty journal — resume from nothing is a fresh run.
+pub fn read_dir(dir: &Path) -> crate::Result<JournalContents> {
+    let mut contents = JournalContents::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(contents),
+        Err(e) => return Err(anyhow::anyhow!("journal dir {}: {e}", dir.display())),
+    };
+    let mut shards: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("shard-") && n.ends_with(".jsonl"))
+                .unwrap_or(false)
+        })
+        .collect();
+    shards.sort();
+    for shard in shards {
+        read_shard(&shard, &mut contents)?;
+        contents.shards.push(shard);
+    }
+    Ok(contents)
+}
+
+fn read_shard(path: &Path, contents: &mut JournalContents) -> crate::Result<()> {
+    let raw = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("journal shard {}: {e}", path.display()))?;
+    let ends_complete = raw.ends_with('\n');
+    let lines: Vec<&str> = raw.lines().collect();
+    let Some((first, rest)) = lines.split_first() else {
+        // Zero-length shard: the process died between create and header.
+        log_warn!("journal: empty shard {} skipped", path.display());
+        contents.truncated += 1;
+        return Ok(());
+    };
+    let header = match Json::parse(first) {
+        Ok(j) => j,
+        Err(_) if rest.is_empty() && !ends_complete => {
+            log_warn!(
+                "journal: torn header in {} skipped (crash during shard creation)",
+                path.display()
+            );
+            contents.truncated += 1;
+            return Ok(());
+        }
+        Err(e) => {
+            return Err(anyhow::anyhow!(
+                "journal shard {} has an unreadable header: {e}",
+                path.display()
+            ))
+        }
+    };
+    if header.str_field("type").ok() != Some("header") {
+        return Err(anyhow::anyhow!(
+            "journal shard {} does not start with a header line",
+            path.display()
+        ));
+    }
+    let found = header.str_field("schema").unwrap_or("<missing>");
+    if found != JOURNAL_SCHEMA {
+        return Err(anyhow::anyhow!(
+            "journal shard {}: schema `{found}`, expected `{JOURNAL_SCHEMA}` — \
+             point --journal at a fresh directory or migrate the old one",
+            path.display()
+        ));
+    }
+    if let Ok(sweep) = header.str_field("sweep") {
+        contents.sweeps.insert(sweep.to_string());
+    }
+    for (i, line) in rest.iter().enumerate() {
+        let is_last = i + 1 == rest.len();
+        let parsed = Json::parse(line).ok().and_then(|j| {
+            match j.str_field("type").ok() {
+                Some("trial") => TrialRecord::from_json(&j).map(Line::Trial),
+                Some("heartbeat") => Heartbeat::from_json(&j).map(Line::Heartbeat),
+                // Unknown record types: skip silently (forward compat).
+                Some(_) => Some(Line::Other),
+                None => None,
+            }
+        });
+        match parsed {
+            Some(Line::Trial(rec)) => {
+                contents.sweeps.insert(rec.sweep.clone());
+                contents.trials.push(rec);
+            }
+            Some(Line::Heartbeat(hb)) => {
+                contents.sweeps.insert(hb.sweep.clone());
+                contents.heartbeats.push(hb);
+            }
+            Some(Line::Other) => {}
+            None if is_last && !ends_complete => {
+                log_warn!(
+                    "journal: torn final line in {} skipped (crash mid-append)",
+                    path.display()
+                );
+                contents.truncated += 1;
+            }
+            None => {
+                log_warn!(
+                    "journal: malformed line {} in {} skipped",
+                    i + 2,
+                    path.display()
+                );
+                contents.malformed += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+enum Line {
+    Trial(TrialRecord),
+    Heartbeat(Heartbeat),
+    Other,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::journal::record::hex_u64;
+    use std::collections::BTreeMap as Map;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hcim-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record(key: &str, seed: u64) -> TrialRecord {
+        let mut metrics = Map::new();
+        metrics.insert("x".to_string(), Json::Num(seed as f64 * 0.5));
+        TrialRecord {
+            sweep: "test".to_string(),
+            key: key.to_string(),
+            fingerprint: 7,
+            seed,
+            status: TrialStatus::Ok,
+            metrics: Json::Obj(metrics),
+            virt_ns: None,
+            wall_ms: 1.0,
+            unix_ms: 1,
+            instruments: Map::new(),
+        }
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_across_resumed_shards() {
+        let dir = tmp_dir("roundtrip");
+        let writer = JournalWriter::create(&dir, "test").unwrap();
+        let sink = JournalSink::new(writer, "test", 2, None, None);
+        sink.append_trial(&record("a", 1)).unwrap();
+        sink.append_trial(&record("b", 2)).unwrap();
+        assert!(sink.has_appended("a") && !sink.has_appended("c"));
+        sink.finish();
+        drop(sink);
+
+        // A resumed run opens a new shard in the same directory.
+        let writer2 = JournalWriter::create(&dir, "test").unwrap();
+        assert!(writer2.path().ends_with("shard-0001.jsonl"));
+        let sink2 = JournalSink::new(writer2, "test", 1, None, None);
+        sink2.append_trial(&record("a", 3)).unwrap();
+        drop(sink2);
+
+        let contents = read_dir(&dir).unwrap();
+        assert_eq!(contents.shards.len(), 2);
+        assert_eq!(contents.trials.len(), 3);
+        assert!(contents.heartbeats.len() >= 3);
+        assert_eq!(contents.truncated, 0);
+        assert_eq!(contents.malformed, 0);
+        // Later shards win in latest_by_key.
+        let latest = contents.latest_by_key();
+        assert_eq!(latest["a"].seed, 3);
+        assert_eq!(latest["b"].seed, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_reads_as_empty() {
+        let contents = read_dir(Path::new("/nonexistent/hcim-journal")).unwrap();
+        assert!(contents.is_empty());
+        assert!(contents.shards.is_empty());
+    }
+
+    #[test]
+    fn torn_final_line_is_skipped_and_counted() {
+        let dir = tmp_dir("torn");
+        let writer = JournalWriter::create(&dir, "test").unwrap();
+        let path = writer.path().to_path_buf();
+        let sink = JournalSink::new(writer, "test", 2, None, None);
+        sink.append_trial(&record("a", 1)).unwrap();
+        sink.append_trial(&record("b", 2)).unwrap();
+        drop(sink);
+
+        // Simulate a torn write: chop the final line mid-record so it has
+        // no trailing newline and cannot parse.
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let trimmed = raw.trim_end_matches('\n');
+        let cut = trimmed.len() - 10;
+        std::fs::write(&path, &trimmed[..cut]).unwrap();
+
+        let contents = read_dir(&dir).unwrap();
+        assert_eq!(contents.trials.len(), 1);
+        assert_eq!(contents.trials[0].key, "a");
+        assert_eq!(contents.truncated, 1);
+        assert_eq!(contents.malformed, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_garbage_counts_as_malformed_not_truncated() {
+        let dir = tmp_dir("garbage");
+        let writer = JournalWriter::create(&dir, "test").unwrap();
+        let path = writer.path().to_path_buf();
+        let sink = JournalSink::new(writer, "test", 1, None, None);
+        sink.append_trial(&record("a", 1)).unwrap();
+        drop(sink);
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str("{not json\n");
+        raw.push_str(&record("b", 2).to_json().to_string());
+        raw.push('\n');
+        std::fs::write(&path, raw).unwrap();
+
+        let contents = read_dir(&dir).unwrap();
+        assert_eq!(contents.trials.len(), 2);
+        assert_eq!(contents.malformed, 1);
+        assert_eq!(contents.truncated, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_mismatch_is_a_hard_error_naming_both_versions() {
+        let dir = tmp_dir("schema");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("shard-0000.jsonl"),
+            "{\"schema\":\"hcim-journal-v0\",\"sweep\":\"test\",\"type\":\"header\",\"unix_ms\":1}\n",
+        )
+        .unwrap();
+        let err = read_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("hcim-journal-v0"), "{err}");
+        assert!(err.contains(JOURNAL_SCHEMA), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_ok_ignores_failed_records() {
+        let dir = tmp_dir("failed");
+        let writer = JournalWriter::create(&dir, "test").unwrap();
+        let sink = JournalSink::new(writer, "test", 2, None, None);
+        let mut failed = record("a", 1);
+        failed.status = TrialStatus::Failed;
+        sink.append_trial(&failed).unwrap();
+        sink.append_trial(&record("b", 2)).unwrap();
+        drop(sink);
+        let contents = read_dir(&dir).unwrap();
+        let ok = contents.latest_ok_by_key();
+        assert!(!ok.contains_key("a"));
+        assert!(ok.contains_key("b"));
+        assert_eq!(contents.latest_by_key().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hex_seed_fidelity_survives_the_disk() {
+        let dir = tmp_dir("hex");
+        let writer = JournalWriter::create(&dir, "test").unwrap();
+        let sink = JournalSink::new(writer, "test", 1, None, None);
+        sink.append_trial(&record("k", u64::MAX)).unwrap();
+        drop(sink);
+        let contents = read_dir(&dir).unwrap();
+        assert_eq!(contents.trials[0].seed, u64::MAX);
+        assert_eq!(hex_u64(u64::MAX), "0xffffffffffffffff");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -43,6 +43,10 @@
 //!   byte-identity contract as the reports), wall-clock RAII spans, a
 //!   named instrument registry, Chrome `trace_event` export (`--trace`),
 //!   and a progress/ETA stderr stream for fan-out sweeps (`--progress`).
+//! * [`journal`] — durable experiment flight recorder: fsync'd append-only
+//!   JSONL trial records with crash-resume for DSE / Monte Carlo /
+//!   timeline sweeps, heartbeat-based stall detection, and the
+//!   `hcim journal summarize|tail|diff` inspection surface (`--journal`).
 
 pub mod util;
 pub mod config;
@@ -57,6 +61,7 @@ pub mod experiments;
 pub mod dse;
 pub mod nonideal;
 pub mod obs;
+pub mod journal;
 pub mod cli;
 
 /// Crate version (mirrors `Cargo.toml`).

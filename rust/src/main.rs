@@ -15,8 +15,9 @@ use hcim::coordinator::loadgen::{self, LoadGenCfg};
 use hcim::coordinator::{Scheduler, SchedulerCfg, Server, ServerConfig, ShardPlan, TenantSpec};
 use hcim::dse::{DesignSpace, ResultCache, RobustnessCfg, SweepReport, SweepRunner};
 use hcim::experiments;
+use hcim::journal;
 use hcim::model::zoo;
-use hcim::nonideal::{run_monte_carlo, MonteCarloCfg, NonIdealityParams};
+use hcim::nonideal::{run_monte_carlo_journaled, MonteCarloCfg, NonIdealityParams};
 use hcim::obs;
 use hcim::runtime::Engine;
 use hcim::sim::simulator::{Arch, Simulator, SparsityTable};
@@ -45,6 +46,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "robustness" => cmd_robustness(&args),
         "timeline" => cmd_timeline(&args),
+        "journal" => cmd_journal(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             println!("{USAGE}");
@@ -306,7 +308,14 @@ fn cmd_tables(args: &Args) -> hcim::Result<()> {
     experiments::ablation_adc_precision_sweep(&sim).print();
     experiments::ablation_variation_robustness().print();
     experiments::serving_contention_sweep().print();
-    experiments::timeline_utilization_sweep().print();
+    // `--journal DIR` journals the timeline sweep's cells and resumes any
+    // already-recorded ones, so a re-run after a crash re-simulates nothing
+    match args.flag("journal") {
+        Some(dir) => {
+            experiments::timeline_utilization_sweep_journaled(Some(Path::new(dir)))?.print()
+        }
+        None => experiments::timeline_utilization_sweep().print(),
+    }
     Ok(())
 }
 
@@ -331,8 +340,13 @@ fn cmd_dse(args: &Args) -> hcim::Result<()> {
     );
 
     let mut runner = SweepRunner::new(space).with_workers(args.usize_or("workers", 0)?);
-    if !args.has("no-cache") {
-        runner = runner.with_cache(ResultCache::at_path(&out_dir.join("cache.json")));
+    // `--journal DIR` supersedes the whole-file cache: every finished point
+    // is fsync'd as a JSONL trial record, so a killed sweep resumes from
+    // the journal with a byte-identical final report
+    if let Some(dir) = args.flag("journal") {
+        runner = runner.with_cache(ResultCache::journaled(Path::new(dir))?);
+    } else if !args.has("no-cache") {
+        runner = runner.with_cache(ResultCache::at_path(&out_dir.join("cache.json"))?);
     }
     if let Some(path) = args.flag("sparsity") {
         runner = runner.with_sparsity(SparsityTable::load_or_default(Path::new(path)));
@@ -390,7 +404,8 @@ fn cmd_robustness(args: &Args) -> hcim::Result<()> {
         workers: args.usize_or("workers", 0)?,
     };
     let t0 = Instant::now();
-    let report = run_monte_carlo(&graph, &cfg, &ni, &mc);
+    let report =
+        run_monte_carlo_journaled(&graph, &cfg, &ni, &mc, args.flag("journal").map(Path::new))?;
     let elapsed = t0.elapsed();
 
     // stdout carries only seed-deterministic content, so the output is
@@ -484,6 +499,65 @@ fn cmd_timeline(args: &Args) -> hcim::Result<()> {
         report.rounds,
         elapsed.as_secs_f64()
     );
+    Ok(())
+}
+
+/// `hcim journal <verb>` — read-side inspection of the trial journals
+/// written by `dse|robustness|tables --journal DIR` runs. Verbs:
+/// `summarize` (per-sweep rollup with stall detection), `tail` (raw
+/// records, optionally `--follow`), `diff A B` (key-level comparison,
+/// exits non-zero on mismatch).
+fn cmd_journal(args: &Args) -> hcim::Result<()> {
+    let verb = args.positional.first().map(String::as_str).unwrap_or("summarize");
+    // the directory can arrive as `--journal DIR` or as a positional
+    // after the verb: `hcim journal summarize jdir`
+    let dir = args
+        .flag("journal")
+        .or_else(|| args.positional.get(1).map(String::as_str))
+        .unwrap_or("journal");
+    match verb {
+        "summarize" => {
+            let stall_s = args.f64_or("stall-s", 30.0)?;
+            let summary = journal::summarize(Path::new(dir), stall_s, journal::now_unix_ms())?;
+            match args.flag_or("format", "table") {
+                "json" => println!("{}", summary.to_json()),
+                _ => summary.table().print(),
+            }
+        }
+        "tail" => {
+            let lines = args.usize_or("lines", 20)?;
+            // `--follow` parses as a switch normally but as a flag when a
+            // positional token follows it — accept both spellings
+            let follow = args.has("follow") || args.flag("follow").is_some();
+            journal::tail(Path::new(dir), lines, follow)?;
+        }
+        "diff" => {
+            let a = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: hcim journal diff DIR_A DIR_B"))?;
+            let b = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("usage: hcim journal diff DIR_A DIR_B"))?;
+            let d = journal::diff(Path::new(a), Path::new(b))?;
+            match args.flag_or("format", "table") {
+                "json" => println!("{}", d.to_json()),
+                _ => println!(
+                    "{} matching, {} differing, {} only in {a}, {} only in {b}",
+                    d.matching,
+                    d.differing.len(),
+                    d.only_a.len(),
+                    d.only_b.len()
+                ),
+            }
+            // like cmp/diff: agreement is exit 0, any divergence is 1
+            if !d.is_clean() {
+                std::process::exit(1);
+            }
+        }
+        other => anyhow::bail!("unknown journal verb `{other}` (summarize|tail|diff)"),
+    }
     Ok(())
 }
 

@@ -58,5 +58,7 @@ pub use inject::{
     NonIdealEngine, NonIdealOutput, TrialOutcome,
 };
 pub use models::{CellFault, CrossbarPerturbation, NonIdealityParams};
-pub use monte_carlo::{run_monte_carlo, trial_seeds, MonteCarloCfg, TrialMetrics};
+pub use monte_carlo::{
+    run_monte_carlo, run_monte_carlo_journaled, trial_seeds, MonteCarloCfg, TrialMetrics,
+};
 pub use report::RobustnessReport;

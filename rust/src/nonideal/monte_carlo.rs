@@ -8,14 +8,19 @@
 //! order-preserving `map` scatters results back into trial order before
 //! any statistics are computed.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::config::hardware::HcimConfig;
+use crate::journal::{self, TrialRecord, TrialStatus};
 use crate::model::graph::Graph;
 use crate::nonideal::inject::run_trial;
 use crate::nonideal::models::NonIdealityParams;
 use crate::nonideal::report::RobustnessReport;
 use crate::obs::{self, instrument, Progress};
+use crate::util::json::Json;
 use crate::util::rng::splitmix64;
 use crate::util::threadpool::ThreadPool;
 
@@ -66,43 +71,166 @@ pub fn run_monte_carlo(
     ni: &NonIdealityParams,
     mc: &MonteCarloCfg,
 ) -> RobustnessReport {
+    run_monte_carlo_journaled(graph, cfg, ni, mc, None)
+        .expect("journal-less monte carlo cannot fail")
+}
+
+/// [`run_monte_carlo`] with optional journal-backed durability and
+/// resume. With `journal_dir` set, every completed trial is appended to
+/// the journal as it finishes, and trials whose key already has a
+/// successful record are loaded instead of re-run — the resumed report is
+/// byte-identical to an uninterrupted one because trial seeds are
+/// prefix-stable in the master seed and metric f64s round-trip exactly.
+pub fn run_monte_carlo_journaled(
+    graph: &Graph,
+    cfg: &HcimConfig,
+    ni: &NonIdealityParams,
+    mc: &MonteCarloCfg,
+    journal_dir: Option<&Path>,
+) -> crate::Result<RobustnessReport> {
     assert!(mc.trials >= 1, "monte carlo needs at least one trial");
     let _span = obs::wall_span("mc.run");
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let seeds = trial_seeds(mc.seed, mc.trials);
+    let ni_fp = ni.fingerprint();
     let ctx = Arc::new((graph.clone(), cfg.clone(), *ni));
-    let progress = Arc::new(Progress::new("mc.trials", mc.trials as u64));
-    let trials: Vec<TrialMetrics> = if mc.trials == 1 || mc.workers == 1 {
+
+    // Resolve what the journal already holds (empty without --journal).
+    let mut slots: Vec<Option<TrialMetrics>> = vec![None; mc.trials];
+    let keys: Vec<String> = seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| mc_trial_key(&ctx.0.name, cfg, ni_fp, mc.seed, i, s))
+        .collect();
+    let mut sink = None;
+    if let Some(dir) = journal_dir {
+        let contents = journal::read_dir(dir)?;
+        let completed = contents.latest_ok_by_key();
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(rec) = completed.get(key.as_str()) {
+                slots[i] = trial_from_json(&rec.metrics, rec.seed);
+            }
+        }
+        let pending_n = slots.iter().filter(|s| s.is_none()).count() as u64;
+        let writer = journal::JournalWriter::create(dir, "robustness")?;
+        sink = Some(journal::JournalSink::new(
+            writer,
+            "robustness",
+            pending_n,
+            Some(Progress::new("mc.trials", pending_n)),
+            Some(journal::HEARTBEAT_EVERY_MS),
+        ));
+    }
+
+    let pending: Vec<(usize, u64, String)> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_none())
+        .map(|(i, _)| (i, seeds[i], keys[i].clone()))
+        .collect();
+    let executed = pending.len();
+    let progress = sink
+        .is_none()
+        .then(|| Arc::new(Progress::new("mc.trials", executed as u64)));
+
+    let worker_ctx = Arc::clone(&ctx);
+    let worker_sink = sink.clone();
+    let worker = move |(i, seed, key): (usize, u64, String)| -> (usize, TrialMetrics) {
+        let before = instrument::global().counter_values();
+        let trial_t0 = Instant::now();
+        let t = run_one(&worker_ctx, seed);
+        if let Some(sink) = &worker_sink {
+            let rec = TrialRecord {
+                sweep: "robustness".to_string(),
+                key: key.clone(),
+                fingerprint: ni_fp,
+                seed,
+                status: TrialStatus::Ok,
+                metrics: trial_to_json(&t),
+                virt_ns: None,
+                wall_ms: trial_t0.elapsed().as_secs_f64() * 1e3,
+                unix_ms: journal::now_unix_ms(),
+                instruments: journal::counter_delta(
+                    &before,
+                    &instrument::global().counter_values(),
+                ),
+            };
+            if let Err(e) = sink.append_trial(&rec) {
+                crate::log_warn!("journal append failed for {key}: {e}");
+            }
+        } else if let Some(progress) = &progress {
+            progress.tick();
+        }
+        (i, t)
+    };
+    let fresh: Vec<(usize, TrialMetrics)> = if pending.len() <= 1 || mc.workers == 1 {
         // serial path: also used when a trial runs inside another pool's
         // worker (e.g. the DSE sweep), avoiding nested pool spawns
-        seeds
-            .into_iter()
-            .map(|s| {
-                let t = run_one(&ctx, s);
-                progress.tick();
-                t
-            })
-            .collect()
+        pending.into_iter().map(worker).collect()
     } else {
         let workers = if mc.workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         } else {
             mc.workers
         };
-        let pool = ThreadPool::new(workers.min(mc.trials).max(1));
-        let ctx = Arc::clone(&ctx);
-        let progress = Arc::clone(&progress);
-        pool.map(seeds, move |s| {
-            let t = run_one(&ctx, s);
-            progress.tick();
-            t
-        })
+        let pool = ThreadPool::new(workers.min(pending.len()).max(1));
+        pool.map(pending, worker)
     };
+    for (i, t) in fresh {
+        slots[i] = Some(t);
+    }
     let inst = instrument::global();
-    inst.counter("mc.trials").add(mc.trials as u64);
+    inst.counter("mc.trials").add(executed as u64);
     inst.gauge("mc.trial_rate_per_s")
-        .set_max((mc.trials as f64 / t0.elapsed().as_secs_f64().max(1e-9)) as u64);
-    RobustnessReport::build(&ctx.0.name, &ctx.1, ni, mc.seed, trials)
+        .set_max((executed as f64 / t0.elapsed().as_secs_f64().max(1e-9)) as u64);
+    if let Some(sink) = &sink {
+        sink.finish();
+    }
+    let trials: Vec<TrialMetrics> =
+        slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+    Ok(RobustnessReport::build(&ctx.0.name, &ctx.1, ni, mc.seed, trials))
+}
+
+/// Stable journal key of one Monte Carlo trial. Embeds everything that
+/// invalidates the result: model version, workload, precision mode,
+/// crossbar geometry, tech node, non-ideality fingerprint, master seed,
+/// trial index, and the derived trial seed.
+fn mc_trial_key(
+    model: &str,
+    cfg: &HcimConfig,
+    ni_fp: u64,
+    master: u64,
+    idx: usize,
+    seed: u64,
+) -> String {
+    format!(
+        "{}|mc|{model}|{}|{}x{}|{:.0}nm|ni{ni_fp:016x}|m{master:016x}|t{idx}|s{seed:016x}",
+        crate::nonideal::MODEL_VERSION,
+        cfg.mode.precision_label(),
+        cfg.xbar.rows,
+        cfg.xbar.cols,
+        cfg.node.nm,
+    )
+}
+
+/// Journal metrics payload of one trial (field names mirror the
+/// per-trial columns of [`RobustnessReport::to_json`]).
+fn trial_to_json(t: &TrialMetrics) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("flip_rate".to_string(), Json::Num(t.flip_rate));
+    m.insert("zero_corruption_rate".to_string(), Json::Num(t.zero_corruption_rate));
+    m.insert("ps_disagreement".to_string(), Json::Num(t.disagreement));
+    Json::Obj(m)
+}
+
+/// Parse [`trial_to_json`] output back; `None` re-runs the trial.
+fn trial_from_json(j: &Json, seed: u64) -> Option<TrialMetrics> {
+    Some(TrialMetrics {
+        seed,
+        flip_rate: j.num_field("flip_rate").ok()?,
+        zero_corruption_rate: j.num_field("zero_corruption_rate").ok()?,
+        disagreement: j.num_field("ps_disagreement").ok()?,
+    })
 }
 
 fn run_one(ctx: &(Graph, HcimConfig, NonIdealityParams), seed: u64) -> TrialMetrics {

@@ -125,6 +125,17 @@ impl Instruments {
         Arc::clone(self.histograms.lock().unwrap().entry(name.to_string()).or_default())
     }
 
+    /// Plain name→value snapshot of every counter (the form the journal
+    /// embeds in heartbeat records and per-trial instrument deltas).
+    pub fn counter_values(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
     /// Sorted-key JSON snapshot:
     /// `{"counters":{..},"gauges":{..},"histograms":{name:{buckets,count,sum}}}`.
     pub fn snapshot_json(&self) -> Json {
@@ -198,6 +209,18 @@ mod tests {
         assert_eq!(b[HIST_BUCKETS - 1], 1); // 1e6 overflows
         assert_eq!(h.count(), 6);
         assert_eq!(h.sum(), 1_000_125);
+    }
+
+    #[test]
+    fn counter_values_snapshots_names_and_counts() {
+        let reg = Instruments::new();
+        reg.counter("z.last").add(9);
+        reg.counter("a.first").add(2);
+        reg.gauge("not.a.counter").set(5);
+        let vals = reg.counter_values();
+        assert_eq!(vals.get("a.first"), Some(&2));
+        assert_eq!(vals.get("z.last"), Some(&9));
+        assert!(!vals.contains_key("not.a.counter"));
     }
 
     #[test]

@@ -68,9 +68,7 @@ impl Progress {
         if !finished && !self.emission_due() {
             return;
         }
-        let elapsed = self.t0.elapsed().as_secs_f64();
-        let rate = done as f64 / elapsed.max(1e-9);
-        let eta_s = if rate > 0.0 { self.total.saturating_sub(done) as f64 / rate } else { 0.0 };
+        let (rate, eta_s) = rate_eta(done, self.total, self.t0.elapsed().as_secs_f64());
         let lvl = if stream_enabled() { Level::Info } else { Level::Debug };
         emit(
             lvl,
@@ -93,6 +91,22 @@ impl Progress {
                 .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
     }
+}
+
+/// Elapsed times below this are treated as this (the very first throttled
+/// emission can land with a near-zero clock reading and would otherwise
+/// report an absurd rate with `eta_s = 0`).
+const MIN_ELAPSED_S: f64 = 1e-3;
+
+/// Rate (units/s) and remaining-time estimate from a clamped elapsed time.
+fn rate_eta(done: u64, total: u64, elapsed_s: f64) -> (f64, f64) {
+    let rate = done as f64 / elapsed_s.max(MIN_ELAPSED_S);
+    let eta_s = if rate > 0.0 {
+        total.saturating_sub(done) as f64 / rate
+    } else {
+        0.0
+    };
+    (rate, eta_s)
 }
 
 #[cfg(test)]
@@ -118,6 +132,23 @@ mod tests {
         }
         assert_eq!(p.done(), 64);
         assert_eq!(p.total(), 64);
+    }
+
+    #[test]
+    fn zero_elapsed_rate_is_clamped_finite() {
+        // A zero (or denormal) elapsed reading must not produce an
+        // inf/NaN rate or a bogus eta of 0 with work remaining.
+        let (rate, eta_s) = rate_eta(4, 8, 0.0);
+        assert!(rate.is_finite());
+        assert_eq!(rate, 4.0 / MIN_ELAPSED_S);
+        assert!(eta_s > 0.0 && eta_s.is_finite());
+        // Nothing done yet: rate 0, eta reported as 0 (unknown).
+        let (rate, eta_s) = rate_eta(0, 8, 0.0);
+        assert_eq!((rate, eta_s), (0.0, 0.0));
+        // Normal case unchanged by the clamp.
+        let (rate, eta_s) = rate_eta(10, 20, 2.0);
+        assert_eq!(rate, 5.0);
+        assert_eq!(eta_s, 2.0);
     }
 
     #[test]

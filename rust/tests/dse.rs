@@ -91,7 +91,7 @@ fn overlapping_sweeps_reuse_the_cache() {
     let space = || DesignSpace::default_for(&["resnet20".to_string()]);
 
     let first = SweepRunner::new(space())
-        .with_cache(ResultCache::at_path(&cache_path))
+        .with_cache(ResultCache::at_path(&cache_path).unwrap())
         .run()
         .unwrap();
     assert_eq!(first.cache_hits, 0);
@@ -99,7 +99,7 @@ fn overlapping_sweeps_reuse_the_cache() {
     assert!(cache_path.exists(), "cache must persist after the sweep");
 
     let second = SweepRunner::new(space())
-        .with_cache(ResultCache::at_path(&cache_path))
+        .with_cache(ResultCache::at_path(&cache_path).unwrap())
         .run()
         .unwrap();
     assert_eq!(second.simulated, 0, "second identical sweep must be all cache hits");
@@ -114,7 +114,7 @@ fn overlapping_sweeps_reuse_the_cache() {
     let wider = DesignSpace::default_for(&["resnet20".to_string()])
         .with_nodes(&[TechNode::N32, TechNode::N65, TechNode::N45]);
     let third = SweepRunner::new(wider)
-        .with_cache(ResultCache::at_path(&cache_path))
+        .with_cache(ResultCache::at_path(&cache_path).unwrap())
         .run()
         .unwrap();
     assert_eq!(third.cache_hits, first.points.len());

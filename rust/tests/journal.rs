@@ -1,0 +1,211 @@
+//! Integration tests for the durable experiment flight recorder — the
+//! acceptance criteria of the journal issue:
+//!
+//! * a sweep interrupted mid-run resumes from its `--journal` directory
+//!   and produces a final report **byte-identical** to an uninterrupted
+//!   run, across worker-pool sizes {1, 2, 8};
+//! * a torn final JSONL line (power loss mid-append) is detected and
+//!   skipped, and the resumed report is still byte-identical;
+//! * Monte Carlo and timeline sweeps share the same resume semantics;
+//! * `journal summarize` / `journal diff` read live directories.
+
+use std::path::PathBuf;
+
+use hcim::config::hardware::{CrossbarDims, HcimConfig};
+use hcim::dse::{ArchKind, DesignSpace, ResultCache, SweepReport, SweepRunner};
+use hcim::experiments::timeline_utilization_sweep_rows_journaled;
+use hcim::journal;
+use hcim::model::zoo;
+use hcim::nonideal::{run_monte_carlo, run_monte_carlo_journaled, MonteCarloCfg, NonIdealityParams};
+use hcim::sim::tech::TechNode;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hcim-journal-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small 4-point space (1 workload × 1 size × 2 nodes × 2 peripheries).
+fn full_space() -> DesignSpace {
+    DesignSpace::new()
+        .with_workloads(&["resnet20"])
+        .with_sizes(&[CrossbarDims { rows: 128, cols: 128 }])
+        .with_nodes(&[TechNode::N32, TechNode::N65])
+        .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcFlash4])
+}
+
+/// The 2-point sub-space a "killed" run would have finished.
+fn partial_space() -> DesignSpace {
+    DesignSpace::new()
+        .with_workloads(&["resnet20"])
+        .with_sizes(&[CrossbarDims { rows: 128, cols: 128 }])
+        .with_nodes(&[TechNode::N32])
+        .with_archs(&[ArchKind::HcimTernary, ArchKind::AdcFlash4])
+}
+
+#[test]
+fn dse_resume_is_byte_identical_across_pool_sizes() {
+    // reference: one uninterrupted, journal-less run
+    let clean = SweepRunner::new(full_space()).with_workers(2).run().unwrap();
+    let clean_report = SweepReport::build(&clean);
+    let (ref_json, ref_csv) = (clean_report.to_json().to_string(), clean_report.to_csv());
+
+    for workers in [1usize, 2, 8] {
+        let dir = tmp_dir(&format!("dse-w{workers}"));
+        // phase 1: the "crashed" run journals a subset of the space
+        let partial = SweepRunner::new(partial_space())
+            .with_workers(workers)
+            .with_cache(ResultCache::journaled(&dir).unwrap())
+            .run()
+            .unwrap();
+        assert_eq!(partial.simulated, 2);
+
+        // phase 2: resume over the full space — journaled points are
+        // cache hits, only the missing ones simulate
+        let resumed = SweepRunner::new(full_space())
+            .with_workers(workers)
+            .with_cache(ResultCache::journaled(&dir).unwrap())
+            .run()
+            .unwrap();
+        assert_eq!(resumed.cache_hits, 2, "workers={workers}");
+        assert_eq!(resumed.simulated, 2, "workers={workers}");
+
+        let report = SweepReport::build(&resumed);
+        assert_eq!(report.to_json().to_string(), ref_json, "workers={workers}");
+        assert_eq!(report.to_csv(), ref_csv, "workers={workers}");
+
+        // the journal carries heartbeat beacons alongside the trials
+        let contents = journal::read_dir(&dir).unwrap();
+        assert_eq!(contents.trials.len(), 4);
+        assert!(contents.heartbeats.len() >= 2, "each shard opens and closes with a beacon");
+        assert_eq!(contents.truncated, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn dse_resume_tolerates_a_torn_final_record() {
+    let clean = SweepRunner::new(full_space()).with_workers(2).run().unwrap();
+    let ref_json = SweepReport::build(&clean).to_json().to_string();
+
+    let dir = tmp_dir("dse-torn");
+    SweepRunner::new(partial_space())
+        .with_workers(1)
+        .with_cache(ResultCache::journaled(&dir).unwrap())
+        .run()
+        .unwrap();
+
+    // power loss mid-append: rewrite the shard so it ends mid-way through
+    // its LAST TRIAL record (everything after the tear, including the
+    // closing heartbeat, is gone — exactly what an interrupted fsync
+    // sequence leaves behind)
+    let shard = dir.join("shard-0000.jsonl");
+    let text = std::fs::read_to_string(&shard).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let last_trial = lines
+        .iter()
+        .rposition(|l| l.contains("\"type\":\"trial\""))
+        .expect("the partial run journaled trial records");
+    let mut torn = lines[..last_trial].join("\n");
+    torn.push('\n');
+    let tail = lines[last_trial];
+    torn.push_str(&tail[..tail.len() - 7]);
+    std::fs::write(&shard, torn).unwrap();
+
+    let contents = journal::read_dir(&dir).unwrap();
+    assert_eq!(contents.truncated, 1, "the torn tail must be counted, not crash the reader");
+
+    // resume: the torn record's point re-simulates, everything else is a
+    // hit, and the final report is still byte-identical to the clean run
+    let resumed = SweepRunner::new(full_space())
+        .with_workers(2)
+        .with_cache(ResultCache::journaled(&dir).unwrap())
+        .run()
+        .unwrap();
+    assert!(resumed.simulated >= 3, "the torn record must not count as completed");
+    assert_eq!(SweepReport::build(&resumed).to_json().to_string(), ref_json);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn monte_carlo_resume_extends_prior_trials_bit_exactly() {
+    let graph = zoo::resnet20();
+    let cfg = HcimConfig::config_a();
+    let ni = NonIdealityParams::default_for(TechNode::N32);
+    let mc = |trials: usize, workers: usize| MonteCarloCfg { trials, seed: 0xBEEF, workers };
+
+    // reference: uninterrupted 6-trial run
+    let clean = run_monte_carlo(&graph, &cfg, &ni, &mc(6, 2));
+
+    for workers in [1usize, 2, 8] {
+        let dir = tmp_dir(&format!("mc-w{workers}"));
+        // the "crashed" run finished 3 of 6 trials (SplitMix64 trial
+        // seeds are prefix-stable, so they are the same first 3)
+        run_monte_carlo_journaled(&graph, &cfg, &ni, &mc(3, workers), Some(&dir)).unwrap();
+        let resumed =
+            run_monte_carlo_journaled(&graph, &cfg, &ni, &mc(6, workers), Some(&dir)).unwrap();
+        assert_eq!(resumed.to_json().to_string(), clean.to_json().to_string());
+        assert_eq!(resumed.to_csv(), clean.to_csv());
+
+        // exactly 6 trial records hit the journal: 3 + 3, no re-runs
+        let contents = journal::read_dir(&dir).unwrap();
+        assert_eq!(contents.trials.len(), 6, "workers={workers}");
+        assert_eq!(contents.shards.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn timeline_sweep_resume_reuses_every_cell() {
+    let dir = tmp_dir("timeline");
+    let first = timeline_utilization_sweep_rows_journaled(Some(&dir)).unwrap();
+    let second = timeline_utilization_sweep_rows_journaled(Some(&dir)).unwrap();
+
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.batch, b.batch);
+        // bit-exact, not approximate: resumed metrics round-trip through
+        // the JSON writer without drift
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+        assert_eq!(a.throughput_ips.to_bits(), b.throughput_ips.to_bits());
+        assert_eq!(a.xbar_util.to_bits(), b.xbar_util.to_bits());
+        assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
+    }
+    // the second run simulated nothing: still one trial record per cell
+    let contents = journal::read_dir(&dir).unwrap();
+    assert_eq!(contents.trials.len(), first.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn summarize_and_diff_read_live_journals() {
+    let a = tmp_dir("inspect-a");
+    let b = tmp_dir("inspect-b");
+    for dir in [&a, &b] {
+        SweepRunner::new(partial_space())
+            .with_workers(1)
+            .with_cache(ResultCache::journaled(dir).unwrap())
+            .run()
+            .unwrap();
+    }
+
+    let s = journal::summarize(&a, 30.0, journal::now_unix_ms()).unwrap();
+    let dse = s.sweeps.iter().find(|x| x.sweep == "dse").unwrap();
+    assert_eq!((dse.trials, dse.ok, dse.failed), (2, 2, 0));
+    assert!(!dse.stalled, "a finished sweep must never read as stalled");
+    assert!(s.to_json().to_string().contains("\"sweeps\""));
+
+    // two independent runs of the same deterministic sweep agree exactly
+    let d = journal::diff(&a, &b).unwrap();
+    assert!(
+        d.is_clean(),
+        "only_a={:?} only_b={:?} differing={:?}",
+        d.only_a,
+        d.only_b,
+        d.differing
+    );
+    assert_eq!(d.matching, 2);
+    let _ = std::fs::remove_dir_all(&a);
+    let _ = std::fs::remove_dir_all(&b);
+}

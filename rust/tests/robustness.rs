@@ -99,7 +99,7 @@ fn dse_emits_a_four_objective_frontier_with_robustness() {
         .with_archs(&[ArchKind::HcimTernary, ArchKind::HcimBinary, ArchKind::AdcFlash4]);
     let result = SweepRunner::new(space)
         .with_workers(2)
-        .with_cache(ResultCache::at_path(&dir.join("cache.json")))
+        .with_cache(ResultCache::at_path(&dir.join("cache.json")).unwrap())
         .with_robustness(RobustnessCfg { trials: 2, seed: 42 })
         .run()
         .unwrap();
@@ -145,7 +145,7 @@ fn dse_emits_a_four_objective_frontier_with_robustness() {
         .with_archs(&[ArchKind::HcimTernary, ArchKind::HcimBinary, ArchKind::AdcFlash4]);
     let second = SweepRunner::new(space)
         .with_workers(2)
-        .with_cache(ResultCache::at_path(&dir.join("cache.json")))
+        .with_cache(ResultCache::at_path(&dir.join("cache.json")).unwrap())
         .with_robustness(RobustnessCfg { trials: 2, seed: 42 })
         .run()
         .unwrap();
