@@ -102,7 +102,7 @@ hcim — ADC-Less Hybrid Analog-Digital CiM accelerator (paper reproduction)
 USAGE:
   hcim <command> [options]
 
-TELEMETRY (serve | dse | robustness | timeline):
+TELEMETRY (serve | fleet | dse | robustness | timeline):
   --trace FILE    write a Chrome trace_event JSON (open in Perfetto or
                   chrome://tracing). `timeline` exports the virtual-clock
                   span journal (crossbar groups, DCiM occupancy, NoC
@@ -130,6 +130,8 @@ COMMANDS:
                                  tenants (each floored at its largest layer)
                 --requests N     open-loop arrivals per tenant (default 64)
                 --gap-us F       mean exponential inter-arrival gap (default 500)
+                --arrivals exp|bursty   arrival process: open-loop exponential
+                                 or seeded two-state bursty on/off (default exp)
                 --queue-cap N    per-tenant admission bound (default 32)
                 --format table|json   json prints ONLY the seed-deterministic
                                  metrics (byte-identical across runs/pool sizes)
@@ -142,6 +144,39 @@ COMMANDS:
               admission, virtual latencies, and energy attribution are
               deterministic from --seed; real execution on the shared pool
               additionally runs when --artifacts has a manifest
+  fleet       multi-chip fault-injected fleet serving on the virtual clock
+                --models resnet20,vgg9[,...]   replicated zoo tenants
+                                 (`model:weight` as in serve; default both)
+                --chips N        chips in the fleet (default 4)
+                --replicas N     replicas per tenant, placed on chips
+                                 (tenant+r) mod chips (default 2, clamped)
+                --tiles N        per-chip crossbar-tile budget (default 0 =
+                                 midway between tenant floor and full demand)
+                --faults SPEC    comma-joined fault schedule (default none):
+                                 fail@C:T    chip C fail-stops at T µs
+                                 stall@C:T+D chip C freezes for D µs at T
+                                 degrade@C:TxF service/flip-rate inflation
+                                 from the nonideal models at severity F
+                --arrivals exp|bursty   arrival process (default exp)
+                --requests N     arrivals per tenant (default 64)
+                --gap-us F       mean inter-arrival gap (default 500)
+                --queue-cap N    per-lane admission bound (default 16)
+                --retries N      retry budget per request (default 3)
+                --backoff-us N   base retry backoff; attempt k waits
+                                 backoff << k (default 500)
+                --stall-us N     health-monitor detection horizon in virtual
+                                 µs (default 3000)
+                --seed S         master seed (arrivals + degradation)
+                --format table|json   json prints the deterministic fleet
+                                 report, byte-identical across runs
+                --out FILE       also write the report JSON
+                --journal DIR    record the finished report as a durable
+                                 trial; a re-run with the same configuration
+                                 replays it instead of re-simulating
+              a fail-stop never aborts the run: the health monitor drains
+              the chip, survivors re-plan with the displaced tenants'
+              weights doubled, and displaced requests retry with
+              exponential backoff or count as dropped_after_retry
   tables      print every paper table/figure reproduction
                 --artifacts DIR
                 --journal DIR    journal the timeline-utilization sweep's

@@ -1,0 +1,335 @@
+//! Deterministic fault schedules for the chip fleet.
+//!
+//! A fault schedule is a list of virtual-time events against named chips —
+//! fail-stop, transient stall, or *degradation* — parsed from a compact
+//! CLI grammar or sampled from a seed. Everything here is a pure function
+//! of its inputs: the same spec (or the same seed) always yields the same
+//! schedule, which is what lets the fleet's metrics JSON stay
+//! byte-identical across runs.
+//!
+//! Degradation is priced through the existing `nonideal/` models rather
+//! than an ad-hoc knob: the severity factor scales
+//! [`NonIdealityParams::default_for`] at the chip's tech node (i.e. it is
+//! `TechNode::variability_scale`-scaled by construction), a
+//! [`CrossbarPerturbation`] is sampled on the chip's crossbar geometry,
+//! and the resulting stuck-cell fraction + analytic noise terms become a
+//! service-time inflation and a reported flip-rate estimate.
+//! [`CrossbarPerturbation::sample`] draws the *same* RNG stream regardless
+//! of parameter magnitudes, so at a fixed seed the fault count — and hence
+//! the inflation — is monotone in severity. The degraded-chip regression
+//! test leans on exactly that property.
+
+use crate::config::hardware::HcimConfig;
+use crate::nonideal::{CrossbarPerturbation, NonIdealityParams};
+use crate::util::rng::Rng;
+
+/// What happens to a chip when a fault event fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The chip dies and never comes back; queued work is black-holed
+    /// until the health monitor notices and drains it.
+    FailStop,
+    /// The chip freezes for `duration_us`, then resumes where it left off.
+    Stall {
+        /// Stall length, virtual µs (≥ 1).
+        duration_us: u64,
+    },
+    /// The chip keeps serving but its nonidealities are inflated by
+    /// `severity` (1.0 = the node's default magnitudes).
+    Degraded {
+        /// Multiplier on [`NonIdealityParams::default_for`] magnitudes.
+        severity: f64,
+    },
+}
+
+impl FaultKind {
+    /// Deterministic tie-break rank for events on the same microsecond.
+    fn rank(&self) -> u8 {
+        match self {
+            FaultKind::FailStop => 0,
+            FaultKind::Stall { .. } => 1,
+            FaultKind::Degraded { .. } => 2,
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Target chip index (0-based).
+    pub chip: usize,
+    /// Virtual time the fault fires, µs.
+    pub t_us: u64,
+    pub kind: FaultKind,
+}
+
+/// A whole run's fault schedule, sorted by `(t_us, chip, kind)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Parse the `--faults` grammar: `none` (or an empty string), or a
+    /// comma-separated list of terms —
+    ///
+    /// * `fail@C:T` — chip `C` fail-stops at `T` µs;
+    /// * `stall@C:T+D` — chip `C` stalls at `T` µs for `D` µs (`D ≥ 1`);
+    /// * `degrade@C:TxF` — chip `C` degrades at `T` µs with severity
+    ///   factor `F` (≥ 0, scales the node-default nonideality magnitudes).
+    ///
+    /// Chip indices must lie below `chips`. The parsed schedule is sorted
+    /// into its canonical order, so [`Self::describe`] round-trips.
+    pub fn parse(spec: &str, chips: usize) -> crate::Result<FaultSchedule> {
+        anyhow::ensure!(chips > 0, "a fleet needs at least one chip");
+        let spec = spec.trim();
+        let mut events = Vec::new();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultSchedule { events });
+        }
+        for term in spec.split(',') {
+            let term = term.trim();
+            let (kind_s, rest) = term.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("fault term `{term}` is missing `@` (expected e.g. fail@0:5000)")
+            })?;
+            let (chip_s, tail) = rest.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("fault term `{term}` is missing `:` between chip and time")
+            })?;
+            let chip: usize = chip_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad chip index `{chip_s}` in fault term `{term}`"))?;
+            anyhow::ensure!(
+                chip < chips,
+                "fault term `{term}` targets chip {chip}, but the fleet has only {chips} chips"
+            );
+            let parse_t = |s: &str| -> crate::Result<u64> {
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("bad virtual time `{s}` in fault term `{term}`"))
+            };
+            let (t_us, kind) = match kind_s {
+                "fail" => (parse_t(tail)?, FaultKind::FailStop),
+                "stall" => {
+                    let (t_s, d_s) = tail.split_once('+').ok_or_else(|| {
+                        anyhow::anyhow!("stall term `{term}` needs `T+D` (start + duration)")
+                    })?;
+                    let duration_us = parse_t(d_s)?;
+                    anyhow::ensure!(
+                        duration_us >= 1,
+                        "stall duration must be ≥ 1 µs in fault term `{term}`"
+                    );
+                    (parse_t(t_s)?, FaultKind::Stall { duration_us })
+                }
+                "degrade" => {
+                    let (t_s, f_s) = tail.split_once('x').ok_or_else(|| {
+                        anyhow::anyhow!("degrade term `{term}` needs `TxF` (time x severity)")
+                    })?;
+                    let severity: f64 = f_s.parse().map_err(|_| {
+                        anyhow::anyhow!("bad severity `{f_s}` in fault term `{term}`")
+                    })?;
+                    anyhow::ensure!(
+                        severity.is_finite() && severity >= 0.0,
+                        "degrade severity must be a finite non-negative number in `{term}`"
+                    );
+                    (parse_t(t_s)?, FaultKind::Degraded { severity })
+                }
+                other => anyhow::bail!(
+                    "unknown fault kind `{other}` in `{term}` (expected fail, stall, or degrade)"
+                ),
+            };
+            events.push(FaultEvent { chip, t_us, kind });
+        }
+        events.sort_by_key(|e| (e.t_us, e.chip, e.kind.rank()));
+        Ok(FaultSchedule { events })
+    }
+
+    /// Canonical spec string (sorted event order); parses back to `self`.
+    pub fn describe(&self) -> String {
+        if self.events.is_empty() {
+            return "none".to_string();
+        }
+        let parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::FailStop => format!("fail@{}:{}", e.chip, e.t_us),
+                FaultKind::Stall { duration_us } => {
+                    format!("stall@{}:{}+{}", e.chip, e.t_us, duration_us)
+                }
+                FaultKind::Degraded { severity } => {
+                    format!("degrade@{}:{}x{}", e.chip, e.t_us, severity)
+                }
+            })
+            .collect();
+        parts.join(",")
+    }
+
+    /// Seed-deterministic fail-stop schedule: each chip independently
+    /// fail-stops with probability `fail_rate`, at a time drawn uniformly
+    /// from the [5 ms, 15 ms) virtual window (mid-run for the default
+    /// load). Per-chip streams fork off the master seed in chip order, so
+    /// the schedule for chip `i` does not move when `chips` grows — the
+    /// failover sweep relies on that prefix stability.
+    pub fn seeded(chips: usize, fail_rate: f64, seed: u64) -> FaultSchedule {
+        let mut master = Rng::new(seed);
+        let mut events = Vec::new();
+        for chip in 0..chips {
+            let mut rng = master.fork();
+            if rng.chance(fail_rate) {
+                let t_us = 5_000 + rng.below(10_000);
+                events.push(FaultEvent { chip, t_us, kind: FaultKind::FailStop });
+            }
+        }
+        events.sort_by_key(|e| (e.t_us, e.chip, e.kind.rank()));
+        FaultSchedule { events }
+    }
+}
+
+/// What a degradation event does to a chip, priced through `nonideal/`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradedPricing {
+    /// Multiplier on every hosted lane's service time (≥ 1.0; exactly 1.0
+    /// at severity 0).
+    pub svc_inflation: f64,
+    /// Estimated bit-flip-rate proxy (stuck-cell fraction + mean absolute
+    /// gain deviation, clamped to 1.0). Reported, not asserted monotone.
+    pub flip_rate: f64,
+    /// Stuck cells in the sampled representative crossbar.
+    pub fault_cells: usize,
+}
+
+/// Price a degradation of `severity` on `hw`'s crossbar geometry.
+///
+/// The severity scales the node-default [`NonIdealityParams`] (stuck
+/// rates clamped to 0.45 each, IR drop to 1.0, keeping `validate` happy at
+/// any severity), then one [`CrossbarPerturbation`] is sampled with a
+/// seed derived from `(seed, chip)`. Because the sampler's draw order is
+/// independent of the parameter magnitudes, a fixed `(seed, chip)` pair
+/// gives fault counts — and therefore `svc_inflation` — monotone in
+/// `severity`; the `sigma_g` term makes the inflation *strictly*
+/// increasing while the clamps are inactive.
+pub fn price_degradation(
+    severity: f64,
+    hw: &HcimConfig,
+    seed: u64,
+    chip: usize,
+) -> crate::Result<DegradedPricing> {
+    anyhow::ensure!(
+        severity.is_finite() && severity >= 0.0,
+        "degrade severity must be a finite non-negative number (got {severity})"
+    );
+    let base = NonIdealityParams::default_for(hw.node);
+    let p = NonIdealityParams {
+        sigma_g: base.sigma_g * severity,
+        stuck_on: (base.stuck_on * severity).min(0.45),
+        stuck_off: (base.stuck_off * severity).min(0.45),
+        ir_drop: (base.ir_drop * severity).min(1.0),
+        sigma_cmp: base.sigma_cmp * severity,
+    };
+    p.validate()?;
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(chip as u64 + 1));
+    let pert = CrossbarPerturbation::sample(hw.xbar.rows, hw.xbar.cols, &p, &mut rng);
+    let cells = (hw.xbar.rows * hw.xbar.cols) as f64;
+    let fault_frac = pert.fault_count() as f64 / cells;
+    let mut dev = 0.0;
+    for r in 0..hw.xbar.rows {
+        for c in 0..hw.xbar.cols {
+            dev += (pert.cell_gain(r, c) - 1.0).abs();
+        }
+    }
+    let mean_abs_gain_dev = dev / cells;
+    Ok(DegradedPricing {
+        svc_inflation: 1.0 + p.sigma_g + p.ir_drop + 0.05 * p.sigma_cmp + 8.0 * fault_frac,
+        flip_rate: (fault_frac + mean_abs_gain_dev).min(1.0),
+        fault_cells: pert.fault_count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sorts_and_describe_roundtrips() {
+        let s = FaultSchedule::parse("fail@0:5000, stall@1:2000+3000, degrade@2:1000x2.5", 4)
+            .unwrap();
+        assert_eq!(s.events.len(), 3);
+        // canonical order is by fire time
+        assert_eq!(s.events[0].kind, FaultKind::Degraded { severity: 2.5 });
+        assert_eq!(s.events[1].kind, FaultKind::Stall { duration_us: 3000 });
+        assert_eq!(s.events[2].kind, FaultKind::FailStop);
+        let canon = s.describe();
+        assert_eq!(canon, "degrade@2:1000x2.5,stall@1:2000+3000,fail@0:5000");
+        assert_eq!(FaultSchedule::parse(&canon, 4).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_none_and_empty_are_empty() {
+        assert!(FaultSchedule::parse("none", 2).unwrap().events.is_empty());
+        assert!(FaultSchedule::parse("  ", 2).unwrap().events.is_empty());
+        assert_eq!(FaultSchedule::default().describe(), "none");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_terms() {
+        for bad in [
+            "fail0:5000",     // missing @
+            "fail@0",         // missing :
+            "fail@9:5000",    // chip out of range
+            "fail@x:5000",    // bad chip
+            "fail@0:abc",     // bad time
+            "stall@0:5000",   // missing +D
+            "stall@0:5000+0", // zero duration
+            "degrade@0:5000", // missing xF
+            "degrade@0:10x-1", // negative severity
+            "explode@0:5000",  // unknown kind
+        ] {
+            assert!(FaultSchedule::parse(bad, 4).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_rate_bounded() {
+        let a = FaultSchedule::seeded(8, 0.5, 7);
+        let b = FaultSchedule::seeded(8, 0.5, 7);
+        assert_eq!(a, b);
+        assert!(FaultSchedule::seeded(8, 0.0, 7).events.is_empty());
+        let all = FaultSchedule::seeded(8, 1.0, 7);
+        assert_eq!(all.events.len(), 8, "rate 1.0 fails every chip");
+        assert!(all.events.iter().all(|e| (5_000..15_000).contains(&e.t_us)));
+        assert!(all.events.iter().all(|e| matches!(e.kind, FaultKind::FailStop)));
+        // prefix stability: growing the fleet never moves earlier chips
+        let small = FaultSchedule::seeded(4, 1.0, 7);
+        for e in &small.events {
+            assert!(all.events.contains(e), "chip {} schedule moved", e.chip);
+        }
+    }
+
+    #[test]
+    fn degradation_pricing_is_monotone_in_severity() {
+        let hw = HcimConfig::config_a();
+        let mut last = 0.0;
+        for (i, sev) in [0.0, 1.0, 2.0, 4.0].into_iter().enumerate() {
+            let p = price_degradation(sev, &hw, 0xFEED, 1).unwrap();
+            if i == 0 {
+                assert_eq!(p.svc_inflation, 1.0, "severity 0 is the ideal chip");
+                assert_eq!(p.flip_rate, 0.0);
+                assert_eq!(p.fault_cells, 0);
+            } else {
+                assert!(
+                    p.svc_inflation > last,
+                    "inflation must grow with severity: {} !> {last}",
+                    p.svc_inflation
+                );
+            }
+            last = p.svc_inflation;
+        }
+    }
+
+    #[test]
+    fn extreme_severity_stays_valid() {
+        let hw = HcimConfig::config_a();
+        let p = price_degradation(1000.0, &hw, 1, 0).unwrap();
+        assert!(p.svc_inflation.is_finite() && p.svc_inflation > 1.0);
+        assert!((0.0..=1.0).contains(&p.flip_rate));
+    }
+}

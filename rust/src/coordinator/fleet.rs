@@ -1,0 +1,1084 @@
+//! Multi-chip fleet serving with fault injection and graceful degradation.
+//!
+//! A fleet is N chips, each running its own [`ShardPlan`]-partitioned set
+//! of tenant lanes (the same bounded-queue / FIFO virtual-time admission
+//! model as [`super::scheduler`]). Tenant `i` is replicated onto chips
+//! `(i + r) % N` for `r < replicas`; every request picks the replica with
+//! the earliest projected completion among the chips not currently marked
+//! unhealthy.
+//!
+//! Faults come from a [`FaultSchedule`] (see [`super::faults`]) and play
+//! out on the virtual clock:
+//!
+//! * **fail-stop** — the chip dies; queued requests are black-holed until
+//!   the health monitor notices;
+//! * **stall** — the chip freezes for a bounded window; its queue's
+//!   completion times shift by the stall;
+//! * **degrade** — the chip keeps serving, but its lanes' service times
+//!   are inflated by [`super::faults::price_degradation`], i.e. by the
+//!   `TechNode::variability_scale`-scaled `nonideal/` models.
+//!
+//! The health monitor replays the PR 7 journal liveness protocol: at a
+//! fault's detection horizon it synthesizes a [`Heartbeat`] from the
+//! chip's progress counters and applies the journal STALLED rule (an
+//! incomplete, silent-beyond-threshold sweep is stalled). A chip flagged
+//! this way is marked unhealthy, its queued requests are **drained** and
+//! re-admitted with deterministic virtual-time exponential backoff
+//! (bounded retries; exhausted requests count as `dropped_after_retry`,
+//! never a panic or a hang), and — for fail-stop — the surviving replicas
+//! are **re-planned**: their chips re-partition with the affected
+//! tenants' weights doubled so the displaced load gets shard headroom.
+//! If a failure leaves a tenant with zero surviving replicas the run
+//! returns a hard error naming the tenant.
+//!
+//! Everything runs on the virtual clock in a single thread: the metrics
+//! JSON ([`FleetReport::deterministic_json`]) is a pure function of the
+//! seed, the specs, and the fault schedule — byte-identical across runs
+//! and worker-pool sizes, the same contract every other subsystem honors.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::config::hardware::HcimConfig;
+use crate::journal::Heartbeat;
+use crate::model::zoo;
+use crate::obs::{self, instrument};
+use crate::sim::simulator::{Arch, Simulator};
+use crate::util::json::{num3, Json};
+use crate::util::stats::percentile_sorted;
+use crate::util::table::Table;
+
+use super::faults::{price_degradation, FaultKind, FaultSchedule};
+use super::loadgen::{self, LoadGenCfg};
+use super::scheduler::{ShardPlan, TenantSpec, MAX_TENANT_WEIGHT};
+
+/// Fleet-level knobs (per-chip admission and the failover pipeline).
+#[derive(Clone, Debug)]
+pub struct FleetCfg {
+    /// Chips in the fleet.
+    pub chips: usize,
+    /// Replicas per tenant (clamped to the chip count at build).
+    pub replicas: usize,
+    /// Per-lane admission bound (queued requests beyond this bounce to
+    /// the retry path as `rejected_by_backpressure`).
+    pub queue_cap: usize,
+    /// Retry budget per request; the attempt that would exceed it is
+    /// counted as `dropped_after_retry` instead.
+    pub max_retries: u32,
+    /// Base virtual-time retry backoff; attempt `k` waits
+    /// `backoff_us << k`.
+    pub backoff_us: u64,
+    /// Health-monitor detection horizon: a frozen chip is checked this
+    /// many virtual µs after its fault fires (the journal stall
+    /// threshold, in virtual time).
+    pub stall_threshold_us: u64,
+    /// Seed for degradation sampling (the arrival seed lives in
+    /// [`LoadGenCfg`]).
+    pub seed: u64,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            chips: 4,
+            replicas: 2,
+            queue_cap: 16,
+            max_retries: 3,
+            backoff_us: 500,
+            stall_threshold_us: 3_000,
+            seed: 42,
+        }
+    }
+}
+
+/// A built fleet: placement, per-chip shard plans, per-tenant costs.
+pub struct Fleet {
+    pub cfg: FleetCfg,
+    pub hw: HcimConfig,
+    /// Per-chip crossbar-tile budget.
+    pub budget_tiles: usize,
+    pub specs: Vec<TenantSpec>,
+    pub schedule: FaultSchedule,
+    /// Effective replica count (`cfg.replicas` clamped to the chip count).
+    pub replicas: usize,
+    /// Per-chip sorted hosted tenant indices.
+    hosted: Vec<Vec<usize>>,
+    /// Per-tenant `(energy_pj, latency_ns)` inference cost.
+    costs: Vec<(f64, f64)>,
+    /// Per-chip `tenant → base service µs` from the initial shard plan.
+    init_svc: Vec<BTreeMap<usize, u64>>,
+}
+
+/// Event ranks: ties on the same microsecond resolve in this order, so
+/// a stall always ends before new work lands and faults precede the
+/// requests they affect. Field order in [`Ev`] makes the derived `Ord`
+/// a strict total order — the heap pops in one deterministic sequence.
+const RANK_STALL_END: u8 = 0;
+const RANK_FAULT: u8 = 1;
+const RANK_HEALTH: u8 = 2;
+const RANK_REQUEST: u8 = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t_us: u64,
+    rank: u8,
+    chip: usize,
+    tenant: usize,
+    seq: u64,
+    attempt: u32,
+    /// Original arrival time (requests only; retries keep it so failover
+    /// latency includes the backoff waits).
+    arrival_us: u64,
+    /// Index into the fault schedule (fault / stall-end events only).
+    fault_idx: usize,
+}
+
+/// One queued request on a lane.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    seq: u64,
+    arrival_us: u64,
+    attempt: u32,
+}
+
+/// One tenant's lane on one chip.
+struct Lane {
+    base_svc_us: u64,
+    svc_us: u64,
+    free_at: u64,
+    q: VecDeque<(u64, Pending)>,
+}
+
+/// Mutable per-chip run state.
+struct ChipState {
+    failed: bool,
+    fail_at: u64,
+    stalled_until: Option<u64>,
+    unhealthy: bool,
+    stalls: u64,
+    unavailable_us: u64,
+    degr_inflation: f64,
+    flip_rate: f64,
+    completed: u64,
+    drained: u64,
+    last_progress_us: u64,
+    lanes: BTreeMap<usize, Lane>,
+}
+
+/// Mutable per-tenant accumulators.
+#[derive(Default)]
+struct TenantAcc {
+    offered: u64,
+    completed: u64,
+    rejected: u64,
+    retries: u64,
+    drained: u64,
+    dropped: u64,
+    makespan_us: u64,
+    latencies_us: Vec<u64>,
+}
+
+struct FleetCounters {
+    retries: std::sync::Arc<obs::Counter>,
+    drops: std::sync::Arc<obs::Counter>,
+    drains: std::sync::Arc<obs::Counter>,
+}
+
+impl Fleet {
+    /// Build a fleet, pricing each tenant's inference through the
+    /// co-simulation path (one [`Simulator`] run per tenant on `hw`).
+    pub fn build(
+        specs: Vec<TenantSpec>,
+        hw: &HcimConfig,
+        budget_tiles: usize,
+        cfg: FleetCfg,
+        schedule: FaultSchedule,
+    ) -> crate::Result<Fleet> {
+        let sim = Simulator::new(hw.node);
+        let costs: Vec<(f64, f64)> = specs
+            .iter()
+            .map(|s| {
+                zoo::by_name(&s.model)
+                    .map(|g| {
+                        let r = sim.run(&g, &Arch::Hcim(hw.clone()));
+                        (r.energy_pj(), r.latency_ns())
+                    })
+                    .unwrap_or((0.0, 0.0))
+            })
+            .collect();
+        Fleet::build_with_costs(specs, hw, budget_tiles, cfg, schedule, &costs)
+    }
+
+    /// Build with per-tenant `(energy_pj, latency_ns)` costs injected —
+    /// the hand-checkable hook the unit tests and the failover sweep use.
+    pub fn build_with_costs(
+        specs: Vec<TenantSpec>,
+        hw: &HcimConfig,
+        budget_tiles: usize,
+        cfg: FleetCfg,
+        schedule: FaultSchedule,
+        costs: &[(f64, f64)],
+    ) -> crate::Result<Fleet> {
+        anyhow::ensure!(cfg.chips > 0, "a fleet needs at least one chip");
+        anyhow::ensure!(!specs.is_empty(), "a fleet needs at least one tenant");
+        assert_eq!(specs.len(), costs.len(), "one cost pair per tenant");
+        for e in &schedule.events {
+            anyhow::ensure!(
+                e.chip < cfg.chips,
+                "fault schedule targets chip {}, but the fleet has only {} chips",
+                e.chip,
+                cfg.chips
+            );
+        }
+        let replicas = cfg.replicas.clamp(1, cfg.chips);
+        let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); cfg.chips];
+        for tenant in 0..specs.len() {
+            for r in 0..replicas {
+                hosted[(tenant + r) % cfg.chips].push(tenant);
+            }
+        }
+        for h in &mut hosted {
+            h.sort_unstable();
+            h.dedup();
+        }
+        // one shard plan per occupied chip: validates the budget up front
+        // and prices every lane's base service time
+        let mut init_svc: Vec<BTreeMap<usize, u64>> = vec![BTreeMap::new(); cfg.chips];
+        for (chip, h) in hosted.iter().enumerate() {
+            if h.is_empty() {
+                continue;
+            }
+            let chip_specs: Vec<TenantSpec> = h.iter().map(|&t| specs[t].clone()).collect();
+            let plan = ShardPlan::partition(&chip_specs, hw, budget_tiles)?;
+            for (a, &t) in plan.assignments.iter().zip(h) {
+                let svc = ((costs[t].1 * a.inflation()) / 1000.0).ceil().max(1.0) as u64;
+                init_svc[chip].insert(t, svc);
+            }
+        }
+        Ok(Fleet {
+            cfg,
+            hw: hw.clone(),
+            budget_tiles,
+            specs,
+            schedule,
+            replicas,
+            hosted,
+            costs: costs.to_vec(),
+            init_svc,
+        })
+    }
+
+    /// Run the fleet against a seeded arrival sequence. Single-threaded,
+    /// virtual-clock, deterministic; returns a hard error only when a
+    /// fail-stop leaves some tenant with zero surviving replicas.
+    pub fn run(&self, lg: &LoadGenCfg) -> crate::Result<FleetReport> {
+        let _span = obs::wall_span("fleet.run");
+        let counters = FleetCounters {
+            retries: instrument::global().counter("fleet.retries"),
+            drops: instrument::global().counter("fleet.drops"),
+            drains: instrument::global().counter("fleet.drains"),
+        };
+        let n = self.specs.len();
+        let arrivals = loadgen::generate(lg, n);
+
+        let mut chips: Vec<ChipState> = (0..self.cfg.chips)
+            .map(|c| ChipState {
+                failed: false,
+                fail_at: 0,
+                stalled_until: None,
+                unhealthy: false,
+                stalls: 0,
+                unavailable_us: 0,
+                degr_inflation: 1.0,
+                flip_rate: 0.0,
+                completed: 0,
+                drained: 0,
+                last_progress_us: 0,
+                lanes: self.init_svc[c]
+                    .iter()
+                    .map(|(&t, &svc)| {
+                        let lane =
+                            Lane { base_svc_us: svc, svc_us: svc, free_at: 0, q: VecDeque::new() };
+                        (t, lane)
+                    })
+                    .collect(),
+            })
+            .collect();
+        let mut acc: Vec<TenantAcc> = (0..n).map(|_| TenantAcc::default()).collect();
+        let mut weights: Vec<u32> = self.specs.iter().map(|s| s.weight).collect();
+        let mut replans: u64 = 0;
+        let mut horizon: u64 = 0;
+
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        for a in &arrivals {
+            heap.push(Reverse(Ev {
+                t_us: a.t_us,
+                rank: RANK_REQUEST,
+                chip: 0,
+                tenant: a.tenant,
+                seq: a.seq,
+                attempt: 0,
+                arrival_us: a.t_us,
+                fault_idx: 0,
+            }));
+        }
+        for (idx, e) in self.schedule.events.iter().enumerate() {
+            heap.push(Reverse(Ev {
+                t_us: e.t_us,
+                rank: RANK_FAULT,
+                chip: e.chip,
+                tenant: 0,
+                seq: 0,
+                attempt: 0,
+                arrival_us: 0,
+                fault_idx: idx,
+            }));
+            match e.kind {
+                FaultKind::FailStop => heap.push(Reverse(Ev {
+                    t_us: e.t_us.saturating_add(self.cfg.stall_threshold_us),
+                    rank: RANK_HEALTH,
+                    chip: e.chip,
+                    tenant: 0,
+                    seq: 0,
+                    attempt: 0,
+                    arrival_us: 0,
+                    fault_idx: idx,
+                })),
+                FaultKind::Stall { duration_us } => {
+                    heap.push(Reverse(Ev {
+                        t_us: e.t_us.saturating_add(duration_us),
+                        rank: RANK_STALL_END,
+                        chip: e.chip,
+                        tenant: 0,
+                        seq: 0,
+                        attempt: 0,
+                        arrival_us: 0,
+                        fault_idx: idx,
+                    }));
+                    if duration_us > self.cfg.stall_threshold_us {
+                        heap.push(Reverse(Ev {
+                            t_us: e.t_us.saturating_add(self.cfg.stall_threshold_us),
+                            rank: RANK_HEALTH,
+                            chip: e.chip,
+                            tenant: 0,
+                            seq: 0,
+                            attempt: 0,
+                            arrival_us: 0,
+                            fault_idx: idx,
+                        }));
+                    }
+                }
+                FaultKind::Degraded { .. } => {}
+            }
+        }
+
+        while let Some(Reverse(ev)) = heap.pop() {
+            horizon = horizon.max(ev.t_us);
+            match ev.rank {
+                RANK_STALL_END => {
+                    let chip = &mut chips[ev.chip];
+                    if chip.failed {
+                        continue;
+                    }
+                    if chip.stalled_until == Some(ev.t_us) {
+                        chip.stalled_until = None;
+                        // a long stall that was flagged STALLED rejoins here
+                        chip.unhealthy = false;
+                    }
+                }
+                RANK_FAULT => {
+                    let kind = self.schedule.events[ev.fault_idx].kind;
+                    let chip = &mut chips[ev.chip];
+                    if chip.failed {
+                        continue;
+                    }
+                    finalize(chip, &mut acc, ev.t_us, &mut horizon);
+                    match kind {
+                        FaultKind::FailStop => {
+                            chip.failed = true;
+                            chip.fail_at = ev.t_us;
+                        }
+                        FaultKind::Stall { duration_us } => {
+                            chip.stalled_until = Some(ev.t_us.saturating_add(duration_us));
+                            chip.stalls += 1;
+                            chip.unavailable_us += duration_us;
+                            for lane in chip.lanes.values_mut() {
+                                lane.free_at = lane.free_at.max(ev.t_us) + duration_us;
+                                for entry in lane.q.iter_mut() {
+                                    entry.0 += duration_us;
+                                }
+                            }
+                        }
+                        FaultKind::Degraded { severity } => {
+                            let seed = self.cfg.seed;
+                            let p = price_degradation(severity, &self.hw, seed, ev.chip)?;
+                            chip.degr_inflation = p.svc_inflation;
+                            chip.flip_rate = p.flip_rate;
+                            for lane in chip.lanes.values_mut() {
+                                let svc = lane.base_svc_us as f64 * p.svc_inflation;
+                                lane.svc_us = (svc.ceil() as u64).max(1);
+                            }
+                        }
+                    }
+                }
+                RANK_HEALTH => {
+                    if chips[ev.chip].unhealthy {
+                        continue; // already detected and drained
+                    }
+                    let frozen = chips[ev.chip].failed
+                        || chips[ev.chip].stalled_until.is_some_and(|s| s > ev.t_us);
+                    if !frozen {
+                        continue; // recovered before the detection horizon
+                    }
+                    let queued: u64 =
+                        chips[ev.chip].lanes.values().map(|l| l.q.len() as u64).sum();
+                    // the monitor consumes the journal heartbeat schema:
+                    // progress counters + virtual timestamps, judged by the
+                    // same incomplete-and-silent rule `journal summarize`
+                    // applies to real sweeps
+                    let hb = Heartbeat {
+                        sweep: format!("fleet.chip{}", ev.chip),
+                        done: chips[ev.chip].completed,
+                        total: chips[ev.chip].completed + queued,
+                        wall_ms: ev.t_us as f64 / 1000.0,
+                        unix_ms: ev.t_us / 1000,
+                        instruments: BTreeMap::new(),
+                    };
+                    let silent_us = ev.t_us.saturating_sub(chips[ev.chip].last_progress_us);
+                    let stalled = hb.done < hb.total || silent_us >= self.cfg.stall_threshold_us;
+                    if !stalled {
+                        continue;
+                    }
+                    chips[ev.chip].unhealthy = true;
+                    let mut displaced: Vec<(usize, Pending)> = Vec::new();
+                    for (&tenant, lane) in chips[ev.chip].lanes.iter_mut() {
+                        while let Some((_, p)) = lane.q.pop_front() {
+                            displaced.push((tenant, p));
+                        }
+                        lane.free_at = 0;
+                    }
+                    chips[ev.chip].drained += displaced.len() as u64;
+                    for (tenant, p) in displaced {
+                        acc[tenant].drained += 1;
+                        counters.drains.incr();
+                        schedule_retry(
+                            &mut heap,
+                            &mut acc[tenant],
+                            &self.cfg,
+                            ev.t_us,
+                            tenant,
+                            p,
+                            &counters,
+                        );
+                    }
+                    if chips[ev.chip].failed {
+                        self.replan_on_failure(ev.chip, &mut chips, &mut weights, &mut replans)?;
+                    }
+                }
+                RANK_REQUEST => {
+                    if ev.attempt == 0 {
+                        acc[ev.tenant].offered += 1;
+                    }
+                    let mut best: Option<(u64, usize)> = None;
+                    let mut saw_candidate = false;
+                    for r in 0..self.replicas {
+                        let c = (ev.tenant + r) % self.cfg.chips;
+                        if chips[c].unhealthy {
+                            continue;
+                        }
+                        saw_candidate = true;
+                        finalize(&mut chips[c], &mut acc, ev.t_us, &mut horizon);
+                        let lane = &chips[c].lanes[&ev.tenant];
+                        if lane.q.len() >= self.cfg.queue_cap.max(1) {
+                            continue;
+                        }
+                        let projected = lane.free_at.max(ev.t_us) + lane.svc_us;
+                        if best.is_none_or(|b| (projected, c) < b) {
+                            best = Some((projected, c));
+                        }
+                    }
+                    match best {
+                        Some((done, c)) => {
+                            let lane = chips[c].lanes.get_mut(&ev.tenant).expect("placed lane");
+                            lane.q.push_back((
+                                done,
+                                Pending {
+                                    seq: ev.seq,
+                                    arrival_us: ev.arrival_us,
+                                    attempt: ev.attempt,
+                                },
+                            ));
+                            lane.free_at = done;
+                        }
+                        None => {
+                            if saw_candidate {
+                                acc[ev.tenant].rejected += 1;
+                            }
+                            let p = Pending {
+                                seq: ev.seq,
+                                arrival_us: ev.arrival_us,
+                                attempt: ev.attempt,
+                            };
+                            schedule_retry(
+                                &mut heap,
+                                &mut acc[ev.tenant],
+                                &self.cfg,
+                                ev.t_us,
+                                ev.tenant,
+                                p,
+                                &counters,
+                            );
+                        }
+                    }
+                }
+                _ => unreachable!("unknown event rank {}", ev.rank),
+            }
+        }
+
+        // drain every surviving queue to completion
+        for chip in chips.iter_mut() {
+            finalize(chip, &mut acc, u64::MAX, &mut horizon);
+        }
+        for chip in chips.iter_mut() {
+            if chip.failed {
+                chip.unavailable_us =
+                    chip.unavailable_us.saturating_add(horizon.saturating_sub(chip.fail_at));
+            }
+        }
+
+        // reconcile: every offered request either completed or was dropped
+        for (i, a) in acc.iter().enumerate() {
+            debug_assert_eq!(
+                a.offered,
+                a.completed + a.dropped,
+                "tenant {i} lost requests (offered != completed + dropped)"
+            );
+        }
+
+        let chip_rows = chips
+            .iter()
+            .enumerate()
+            .map(|(c, s)| {
+                let avail = if horizon == 0 {
+                    1.0
+                } else {
+                    (1.0 - s.unavailable_us as f64 / horizon as f64).clamp(0.0, 1.0)
+                };
+                ChipReport {
+                    chip: c,
+                    availability: avail,
+                    completed: s.completed,
+                    drained: s.drained,
+                    failed: s.failed,
+                    stalls: s.stalls,
+                    degraded_inflation: s.degr_inflation,
+                    flip_rate: s.flip_rate,
+                    tenants: self.hosted[c].iter().map(|&t| self.specs[t].model.clone()).collect(),
+                }
+            })
+            .collect();
+        let tenants = acc
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                let mut lat: Vec<f64> = a.latencies_us.iter().map(|&v| v as f64).collect();
+                lat.sort_by(f64::total_cmp);
+                let (mean, p50, p95, p99, max) = if lat.is_empty() {
+                    (0.0, 0.0, 0.0, 0.0, 0.0)
+                } else {
+                    (
+                        lat.iter().sum::<f64>() / lat.len() as f64,
+                        percentile_sorted(&lat, 50.0),
+                        percentile_sorted(&lat, 95.0),
+                        percentile_sorted(&lat, 99.0),
+                        lat[lat.len() - 1],
+                    )
+                };
+                FleetTenantReport {
+                    name: self.specs[i].model.clone(),
+                    weight: self.specs[i].weight,
+                    replicas: self.replicas,
+                    offered: a.offered,
+                    completed: a.completed,
+                    rejected_by_backpressure: a.rejected,
+                    retries: a.retries,
+                    drained: a.drained,
+                    dropped_after_retry: a.dropped,
+                    makespan_us: a.makespan_us,
+                    lat_mean_us: mean,
+                    lat_p50_us: p50,
+                    lat_p95_us: p95,
+                    lat_p99_us: p99,
+                    lat_max_us: max,
+                }
+            })
+            .collect();
+        Ok(FleetReport {
+            schema: 1,
+            seed: lg.seed,
+            chips: self.cfg.chips,
+            replicas: self.replicas,
+            budget_tiles: self.budget_tiles,
+            queue_cap: self.cfg.queue_cap,
+            max_retries: self.cfg.max_retries,
+            backoff_us: self.cfg.backoff_us,
+            stall_threshold_us: self.cfg.stall_threshold_us,
+            faults: self.schedule.describe(),
+            arrivals: lg.mode.as_str().to_string(),
+            chip_rows,
+            tenants,
+            replans,
+        })
+    }
+
+    /// Drain aftermath of a fail-stop: verify every hosted tenant still
+    /// has a live replica (hard error naming the tenant otherwise), then
+    /// re-partition every surviving chip that hosts an affected tenant
+    /// with that tenant's weight doubled.
+    fn replan_on_failure(
+        &self,
+        failed_chip: usize,
+        chips: &mut [ChipState],
+        weights: &mut [u32],
+        replans: &mut u64,
+    ) -> crate::Result<()> {
+        let affected = &self.hosted[failed_chip];
+        for &tenant in affected {
+            let survivors = (0..self.replicas)
+                .map(|r| (tenant + r) % self.cfg.chips)
+                .filter(|&c| !chips[c].failed)
+                .count();
+            anyhow::ensure!(
+                survivors > 0,
+                "tenant `{}` has no surviving replicas: all {} replica chip(s) failed",
+                self.specs[tenant].model,
+                self.replicas
+            );
+        }
+        for &tenant in affected {
+            weights[tenant] = (weights[tenant].saturating_mul(2)).min(MAX_TENANT_WEIGHT);
+        }
+        for c in 0..self.cfg.chips {
+            if chips[c].failed || self.hosted[c].is_empty() {
+                continue;
+            }
+            if !self.hosted[c].iter().any(|t| affected.contains(t)) {
+                continue;
+            }
+            let chip_specs: Vec<TenantSpec> = self.hosted[c]
+                .iter()
+                .map(|&t| TenantSpec { model: self.specs[t].model.clone(), weight: weights[t] })
+                .collect();
+            let plan = ShardPlan::partition(&chip_specs, &self.hw, self.budget_tiles)?;
+            for (a, &t) in plan.assignments.iter().zip(&self.hosted[c]) {
+                let base = ((self.costs[t].1 * a.inflation()) / 1000.0).ceil().max(1.0) as u64;
+                let lane = chips[c].lanes.get_mut(&t).expect("hosted lane");
+                lane.base_svc_us = base;
+                lane.svc_us = ((base as f64 * chips[c].degr_inflation).ceil() as u64).max(1);
+            }
+            *replans += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Pop every completion due by `t` on a live chip. A failed chip
+/// finalizes nothing: its queue is black-holed until the health monitor
+/// drains it.
+fn finalize(chip: &mut ChipState, acc: &mut [TenantAcc], t: u64, horizon: &mut u64) {
+    if chip.failed {
+        return;
+    }
+    for (&tenant, lane) in chip.lanes.iter_mut() {
+        while lane.q.front().is_some_and(|&(done, _)| done <= t) {
+            let (done, p) = lane.q.pop_front().expect("checked front");
+            chip.completed += 1;
+            chip.last_progress_us = chip.last_progress_us.max(done);
+            *horizon = (*horizon).max(done);
+            let a = &mut acc[tenant];
+            a.completed += 1;
+            a.makespan_us = a.makespan_us.max(done);
+            a.latencies_us.push(done.saturating_sub(p.arrival_us));
+        }
+    }
+}
+
+/// Re-admit a displaced or rejected request with exponential virtual-time
+/// backoff, or count it as dropped once its retry budget is exhausted.
+fn schedule_retry(
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    acc: &mut TenantAcc,
+    cfg: &FleetCfg,
+    now: u64,
+    tenant: usize,
+    p: Pending,
+    counters: &FleetCounters,
+) {
+    if p.attempt >= cfg.max_retries {
+        acc.dropped += 1;
+        counters.drops.incr();
+        return;
+    }
+    acc.retries += 1;
+    counters.retries.incr();
+    let delay = cfg.backoff_us.max(1) << p.attempt.min(16);
+    heap.push(Reverse(Ev {
+        t_us: now.saturating_add(delay),
+        rank: RANK_REQUEST,
+        chip: 0,
+        tenant,
+        seq: p.seq,
+        attempt: p.attempt + 1,
+        arrival_us: p.arrival_us,
+        fault_idx: 0,
+    }));
+}
+
+/// One chip's row in the fleet report.
+#[derive(Clone, Debug)]
+pub struct ChipReport {
+    pub chip: usize,
+    /// `1 − unavailable/horizon`, clamped to `[0, 1]`.
+    pub availability: f64,
+    pub completed: u64,
+    pub drained: u64,
+    pub failed: bool,
+    pub stalls: u64,
+    pub degraded_inflation: f64,
+    pub flip_rate: f64,
+    pub tenants: Vec<String>,
+}
+
+/// One tenant's row in the fleet report.
+#[derive(Clone, Debug)]
+pub struct FleetTenantReport {
+    pub name: String,
+    pub weight: u32,
+    pub replicas: usize,
+    pub offered: u64,
+    pub completed: u64,
+    pub rejected_by_backpressure: u64,
+    pub retries: u64,
+    pub drained: u64,
+    pub dropped_after_retry: u64,
+    pub makespan_us: u64,
+    pub lat_mean_us: f64,
+    pub lat_p50_us: f64,
+    pub lat_p95_us: f64,
+    pub lat_p99_us: f64,
+    pub lat_max_us: f64,
+}
+
+/// The fleet serving report. Everything in it is virtual-clock
+/// deterministic — there is no wall section to exclude.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub schema: u32,
+    pub seed: u64,
+    pub chips: usize,
+    pub replicas: usize,
+    pub budget_tiles: usize,
+    pub queue_cap: usize,
+    pub max_retries: u32,
+    pub backoff_us: u64,
+    pub stall_threshold_us: u64,
+    /// Canonical fault-spec string ([`FaultSchedule::describe`]).
+    pub faults: String,
+    /// Arrival mode name (`exp` / `bursty`).
+    pub arrivals: String,
+    pub chip_rows: Vec<ChipReport>,
+    pub tenants: Vec<FleetTenantReport>,
+    /// Surviving-chip re-partitions triggered by fail-stops.
+    pub replans: u64,
+}
+
+impl FleetReport {
+    fn chip_json(c: &ChipReport) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("availability".to_string(), num3(c.availability));
+        o.insert("chip".to_string(), Json::Num(c.chip as f64));
+        o.insert("completed".to_string(), Json::Num(c.completed as f64));
+        o.insert("degraded_inflation".to_string(), num3(c.degraded_inflation));
+        o.insert("drained".to_string(), Json::Num(c.drained as f64));
+        o.insert("failed".to_string(), Json::Bool(c.failed));
+        o.insert("flip_rate".to_string(), num3(c.flip_rate));
+        o.insert("stalls".to_string(), Json::Num(c.stalls as f64));
+        o.insert(
+            "tenants".to_string(),
+            Json::Arr(c.tenants.iter().map(|t| Json::Str(t.clone())).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    fn tenant_json(t: &FleetTenantReport) -> Json {
+        let mut lat = BTreeMap::new();
+        lat.insert("max".to_string(), num3(t.lat_max_us));
+        lat.insert("mean".to_string(), num3(t.lat_mean_us));
+        lat.insert("p50".to_string(), num3(t.lat_p50_us));
+        lat.insert("p95".to_string(), num3(t.lat_p95_us));
+        lat.insert("p99".to_string(), num3(t.lat_p99_us));
+        let mut o = BTreeMap::new();
+        o.insert("completed".to_string(), Json::Num(t.completed as f64));
+        o.insert("drained".to_string(), Json::Num(t.drained as f64));
+        o.insert("dropped_after_retry".to_string(), Json::Num(t.dropped_after_retry as f64));
+        o.insert("makespan_us".to_string(), Json::Num(t.makespan_us as f64));
+        o.insert("name".to_string(), Json::Str(t.name.clone()));
+        o.insert("offered".to_string(), Json::Num(t.offered as f64));
+        o.insert(
+            "rejected_by_backpressure".to_string(),
+            Json::Num(t.rejected_by_backpressure as f64),
+        );
+        o.insert("replicas".to_string(), Json::Num(t.replicas as f64));
+        o.insert("retries".to_string(), Json::Num(t.retries as f64));
+        o.insert("virt_latency_us".to_string(), Json::Obj(lat));
+        o.insert("weight".to_string(), Json::Num(t.weight as f64));
+        Json::Obj(o)
+    }
+
+    /// The whole report is deterministic; this is what `hcim fleet
+    /// --format json` prints and CI byte-compares across runs and pool
+    /// sizes.
+    pub fn deterministic_json(&self) -> Json {
+        let offered: u64 = self.tenants.iter().map(|t| t.offered).sum();
+        let completed: u64 = self.tenants.iter().map(|t| t.completed).sum();
+        let dropped: u64 = self.tenants.iter().map(|t| t.dropped_after_retry).sum();
+        let retries: u64 = self.tenants.iter().map(|t| t.retries).sum();
+        let drains: u64 = self.tenants.iter().map(|t| t.drained).sum();
+        let rejected: u64 = self.tenants.iter().map(|t| t.rejected_by_backpressure).sum();
+        let makespan: u64 = self.tenants.iter().map(|t| t.makespan_us).max().unwrap_or(0);
+        let avail_min =
+            self.chip_rows.iter().map(|c| c.availability).fold(f64::INFINITY, f64::min).min(1.0);
+        let mut totals = BTreeMap::new();
+        totals.insert("availability_min".to_string(), num3(avail_min));
+        totals.insert("completed".to_string(), Json::Num(completed as f64));
+        totals.insert("drains".to_string(), Json::Num(drains as f64));
+        totals.insert("dropped_after_retry".to_string(), Json::Num(dropped as f64));
+        totals.insert("makespan_us".to_string(), Json::Num(makespan as f64));
+        totals.insert("offered".to_string(), Json::Num(offered as f64));
+        totals.insert("rejected_by_backpressure".to_string(), Json::Num(rejected as f64));
+        totals.insert("replans".to_string(), Json::Num(self.replans as f64));
+        totals.insert("retries".to_string(), Json::Num(retries as f64));
+        let mut fleet = BTreeMap::new();
+        fleet.insert("backoff_us".to_string(), Json::Num(self.backoff_us as f64));
+        fleet.insert("chips".to_string(), Json::Num(self.chips as f64));
+        fleet.insert("max_retries".to_string(), Json::Num(self.max_retries as f64));
+        fleet.insert("queue_cap".to_string(), Json::Num(self.queue_cap as f64));
+        fleet.insert("replicas".to_string(), Json::Num(self.replicas as f64));
+        fleet.insert("stall_threshold_us".to_string(), Json::Num(self.stall_threshold_us as f64));
+        let mut top = BTreeMap::new();
+        top.insert("arrivals".to_string(), Json::Str(self.arrivals.clone()));
+        top.insert("budget_tiles".to_string(), Json::Num(self.budget_tiles as f64));
+        top.insert(
+            "chips".to_string(),
+            Json::Arr(self.chip_rows.iter().map(Self::chip_json).collect()),
+        );
+        top.insert("faults".to_string(), Json::Str(self.faults.clone()));
+        top.insert("fleet".to_string(), Json::Obj(fleet));
+        top.insert("schema".to_string(), Json::Num(self.schema as f64));
+        top.insert("seed".to_string(), Json::Str(format!("{:#018x}", self.seed)));
+        top.insert(
+            "tenants".to_string(),
+            Json::Arr(self.tenants.iter().map(Self::tenant_json).collect()),
+        );
+        top.insert("totals".to_string(), Json::Obj(totals));
+        Json::Obj(top)
+    }
+
+    /// Alias for [`Self::deterministic_json`] (the fleet has no wall
+    /// section), kept for symmetry with the other report types.
+    pub fn to_json(&self) -> Json {
+        self.deterministic_json()
+    }
+
+    /// Per-tenant summary table (`--format table`).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "fleet tenants",
+            &["tenant", "offered", "done", "rej", "retry", "drain", "drop", "p50", "p99", "max"],
+        );
+        for r in &self.tenants {
+            t.row(&[
+                r.name.clone(),
+                r.offered.to_string(),
+                r.completed.to_string(),
+                r.rejected_by_backpressure.to_string(),
+                r.retries.to_string(),
+                r.drained.to_string(),
+                r.dropped_after_retry.to_string(),
+                format!("{:.1}", r.lat_p50_us),
+                format!("{:.1}", r.lat_p99_us),
+                format!("{:.1}", r.lat_max_us),
+            ]);
+        }
+        t
+    }
+
+    /// Per-chip health table (`--format table`).
+    pub fn chips_table(&self) -> Table {
+        let mut t = Table::new(
+            "fleet chips",
+            &["chip", "tenants", "avail", "infl", "flip", "done", "drain", "stalls", "failed"],
+        );
+        for c in &self.chip_rows {
+            t.row(&[
+                c.chip.to_string(),
+                c.tenants.join("+"),
+                format!("{:.3}", c.availability),
+                format!("{:.3}", c.degraded_inflation),
+                format!("{:.4}", c.flip_rate),
+                c.completed.to_string(),
+                c.drained.to_string(),
+                c.stalls.to_string(),
+                if c.failed { "yes".to_string() } else { "no".to_string() },
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::loadgen::ArrivalMode;
+
+    fn specs() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec { model: "resnet20".to_string(), weight: 2 },
+            TenantSpec { model: "vgg9".to_string(), weight: 1 },
+        ]
+    }
+
+    fn budget(hw: &HcimConfig) -> usize {
+        let (floor, full) = ShardPlan::bounds(&specs(), hw).unwrap();
+        floor + (full - floor) / 2
+    }
+
+    fn fleet(cfg: FleetCfg, schedule: FaultSchedule) -> Fleet {
+        let hw = HcimConfig::config_a();
+        let b = budget(&hw);
+        // hand-checkable costs: (energy_pj, latency_ns)
+        let costs = [(2_000.0, 40_000.0), (3_000.0, 60_000.0)];
+        Fleet::build_with_costs(specs(), &hw, b, cfg, schedule, &costs).unwrap()
+    }
+
+    fn lg(seed: u64) -> LoadGenCfg {
+        LoadGenCfg { seed, requests_per_tenant: 96, mean_gap_us: 150.0, mode: ArrivalMode::Exp }
+    }
+
+    #[test]
+    fn healthy_fleet_serves_everything() {
+        let f = fleet(FleetCfg::default(), FaultSchedule::default());
+        let r = f.run(&lg(7)).unwrap();
+        for t in &r.tenants {
+            assert_eq!(t.offered, 96);
+            assert_eq!(t.offered, t.completed + t.dropped_after_retry);
+            assert_eq!(t.dropped_after_retry, 0);
+            assert_eq!(t.retries, 0);
+            assert_eq!(t.drained, 0);
+        }
+        for c in &r.chip_rows {
+            assert_eq!(c.availability, 1.0);
+            assert!(!c.failed);
+        }
+        assert_eq!(r.replans, 0);
+    }
+
+    #[test]
+    fn report_is_byte_identical_across_runs() {
+        let sched = FaultSchedule::parse("fail@1:5000,degrade@2:2000x2", 4).unwrap();
+        let f = fleet(FleetCfg::default(), sched.clone());
+        let a = f.run(&lg(11)).unwrap().deterministic_json().to_string();
+        let g = fleet(FleetCfg::default(), sched);
+        let b = g.run(&lg(11)).unwrap().deterministic_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fail_stop_drains_replans_and_reconciles() {
+        let sched = FaultSchedule::parse("fail@1:4000", 4).unwrap();
+        let f = fleet(FleetCfg::default(), sched);
+        let r = f.run(&lg(3)).unwrap();
+        let failed = &r.chip_rows[1];
+        assert!(failed.failed);
+        assert!(failed.availability < 1.0);
+        // both tenants are hosted on chip 1 (placement (i + r) % 4), so
+        // the failure must trigger re-plans on the survivors
+        assert!(r.replans > 0, "surviving replicas must be re-planned");
+        for t in &r.tenants {
+            assert_eq!(
+                t.offered,
+                t.completed + t.dropped_after_retry,
+                "tenant {} does not reconcile",
+                t.name
+            );
+        }
+        // drains on the failed chip match the per-tenant drain counters
+        let tenant_drains: u64 = r.tenants.iter().map(|t| t.drained).sum();
+        let chip_drains: u64 = r.chip_rows.iter().map(|c| c.drained).sum();
+        assert_eq!(tenant_drains, chip_drains);
+    }
+
+    #[test]
+    fn all_replicas_down_is_a_hard_error_naming_the_tenant() {
+        let hw = HcimConfig::config_a();
+        let b = budget(&hw);
+        let cfg = FleetCfg { chips: 2, replicas: 1, ..FleetCfg::default() };
+        let sched = FaultSchedule::parse("fail@0:2000", 2).unwrap();
+        let costs = [(2_000.0, 40_000.0), (3_000.0, 60_000.0)];
+        let f = Fleet::build_with_costs(specs(), &hw, b, cfg, sched, &costs).unwrap();
+        let err = f.run(&lg(5)).unwrap_err().to_string();
+        assert!(err.contains("resnet20"), "error must name the tenant: {err}");
+        assert!(err.contains("no surviving replicas"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn long_stall_drains_retries_and_never_hangs() {
+        let hw = HcimConfig::config_a();
+        let one = vec![TenantSpec { model: "resnet20".to_string(), weight: 1 }];
+        let (floor, _) = ShardPlan::bounds(&one, &hw).unwrap();
+        let cfg = FleetCfg { chips: 1, replicas: 1, ..FleetCfg::default() };
+        let sched = FaultSchedule::parse("stall@0:1000+8000", 1).unwrap();
+        let f =
+            Fleet::build_with_costs(one, &hw, floor, cfg, sched, &[(2_000.0, 40_000.0)]).unwrap();
+        let l = LoadGenCfg {
+            seed: 9,
+            requests_per_tenant: 128,
+            mean_gap_us: 100.0,
+            mode: ArrivalMode::Exp,
+        };
+        let r = f.run(&l).unwrap();
+        let t = &r.tenants[0];
+        assert_eq!(t.offered, 128);
+        assert_eq!(t.offered, t.completed + t.dropped_after_retry);
+        assert!(t.drained > 0, "queued work at detection time must drain");
+        assert!(t.retries > 0);
+        assert!(
+            t.dropped_after_retry > 0,
+            "requests retried only into the dead window must exhaust their budget"
+        );
+        assert_eq!(r.chip_rows[0].stalls, 1);
+        assert!(r.chip_rows[0].availability < 1.0);
+        assert!(r.replans == 0, "a stall is not a failure: no re-plan");
+    }
+
+    #[test]
+    fn degraded_chip_inflates_latency_monotonically() {
+        let mk = |sev: f64| {
+            let spec = format!("degrade@0:0x{sev}");
+            let sched = FaultSchedule::parse(&spec, 4).unwrap();
+            let f = fleet(FleetCfg::default(), sched);
+            f.run(&lg(13)).unwrap()
+        };
+        let base = mk(0.0);
+        let mild = mk(1.0);
+        let bad = mk(4.0);
+        assert_eq!(base.chip_rows[0].degraded_inflation, 1.0);
+        assert!(mild.chip_rows[0].degraded_inflation > 1.0);
+        assert!(bad.chip_rows[0].degraded_inflation > mild.chip_rows[0].degraded_inflation);
+        for r in [&base, &mild, &bad] {
+            for t in &r.tenants {
+                assert_eq!(t.offered, t.completed + t.dropped_after_retry);
+            }
+        }
+    }
+}

@@ -2,13 +2,15 @@
 //! serving scheduler.
 //!
 //! Arrivals live on a **virtual clock** (integer microseconds): each tenant
-//! gets an independent Poisson-ish arrival process (exponential
-//! inter-arrival gaps) drawn from a generator forked off one master seed —
-//! the same SplitMix64/xoshiro substrate as the Monte Carlo harness, so a
-//! fixed `--seed` reproduces the exact arrival sequence on any machine,
-//! any worker count, any run. The merged sequence is totally ordered by
-//! `(t_us, tenant, seq)`, which makes downstream admission decisions
-//! deterministic too.
+//! gets an independent arrival process drawn from a generator forked off
+//! one master seed — the same SplitMix64/xoshiro substrate as the Monte
+//! Carlo harness, so a fixed `--seed` reproduces the exact arrival
+//! sequence on any machine, any worker count, any run. Two process shapes
+//! are available ([`ArrivalMode`]): the open-loop exponential
+//! (Poisson-ish) stream, and a two-state on/off MMPP-style bursty stream
+//! whose ON windows fire densely and whose OFF windows are silent. The
+//! merged sequence is totally ordered by `(t_us, tenant, seq)`, which
+//! makes downstream admission decisions deterministic too.
 //!
 //! Images are not materialised here: every arrival carries an
 //! `image_seed`, and [`synth_image`] expands it on demand. That keeps the
@@ -18,6 +20,35 @@
 use crate::util::hash::Fnv1a;
 use crate::util::rng::Rng;
 
+/// Arrival-process shape, selectable via `--arrivals exp|bursty`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalMode {
+    /// Open-loop exponential (Poisson-ish) inter-arrival gaps.
+    Exp,
+    /// Two-state on/off (MMPP-style) bursts: dense exponential gaps
+    /// inside exponentially-sized ON windows, silence during OFF windows.
+    Bursty,
+}
+
+impl ArrivalMode {
+    /// Parse a `--arrivals` CLI value.
+    pub fn parse(s: &str) -> crate::Result<ArrivalMode> {
+        match s {
+            "exp" => Ok(ArrivalMode::Exp),
+            "bursty" => Ok(ArrivalMode::Bursty),
+            other => anyhow::bail!("unknown arrival mode `{other}` (expected exp|bursty)"),
+        }
+    }
+
+    /// Canonical CLI spelling; round-trips through [`ArrivalMode::parse`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArrivalMode::Exp => "exp",
+            ArrivalMode::Bursty => "bursty",
+        }
+    }
+}
+
 /// Load-generator configuration.
 #[derive(Clone, Debug)]
 pub struct LoadGenCfg {
@@ -25,13 +56,18 @@ pub struct LoadGenCfg {
     pub seed: u64,
     /// Open-loop arrivals per tenant.
     pub requests_per_tenant: usize,
-    /// Mean exponential inter-arrival gap, virtual microseconds.
+    /// Mean exponential inter-arrival gap, virtual microseconds. In
+    /// bursty mode this still sets the scale: ON-window gaps are a
+    /// quarter of it, ON windows average 6× it, OFF windows 18× it.
     pub mean_gap_us: f64,
+    /// Arrival-process shape.
+    pub mode: ArrivalMode,
 }
 
 impl Default for LoadGenCfg {
     fn default() -> Self {
-        LoadGenCfg { seed: 42, requests_per_tenant: 64, mean_gap_us: 500.0 }
+        let mode = ArrivalMode::Exp;
+        LoadGenCfg { seed: 42, requests_per_tenant: 64, mean_gap_us: 500.0, mode }
     }
 }
 
@@ -60,16 +96,52 @@ pub fn generate(cfg: &LoadGenCfg, tenants: usize) -> Vec<Arrival> {
     for tenant in 0..tenants {
         // fork, never clone: sibling streams must be independent
         let mut rng = master.fork();
-        let mut t: u64 = 0;
-        for seq in 0..cfg.requests_per_tenant as u64 {
-            // exponential inter-arrival; 1 - f64() is in (0, 1] so ln() is finite
-            let gap = -cfg.mean_gap_us * (1.0 - rng.f64()).ln();
-            t = t.saturating_add((gap as u64).max(1));
-            all.push(Arrival { tenant, seq, t_us: t, image_seed: rng.next_u64() });
+        match cfg.mode {
+            ArrivalMode::Exp => push_exp(cfg, tenant, &mut rng, &mut all),
+            ArrivalMode::Bursty => push_bursty(cfg, tenant, &mut rng, &mut all),
         }
     }
     all.sort_by_key(|a| (a.t_us, a.tenant, a.seq));
     all
+}
+
+/// One exponential gap with mean `mean_us`, floored at 1 µs so the virtual
+/// clock strictly advances. `1 - f64()` is in `(0, 1]` so `ln()` is finite.
+fn exp_gap(rng: &mut Rng, mean_us: f64) -> u64 {
+    let gap = -mean_us * (1.0 - rng.f64()).ln();
+    (gap as u64).max(1)
+}
+
+fn push_exp(cfg: &LoadGenCfg, tenant: usize, rng: &mut Rng, all: &mut Vec<Arrival>) {
+    let mut t: u64 = 0;
+    for seq in 0..cfg.requests_per_tenant as u64 {
+        t = t.saturating_add(exp_gap(rng, cfg.mean_gap_us));
+        all.push(Arrival { tenant, seq, t_us: t, image_seed: rng.next_u64() });
+    }
+}
+
+/// Two-state on/off process: exponential ON windows (mean `6 × gap`) with
+/// dense arrivals (mean `gap / 4`), separated by silent exponential OFF
+/// windows (mean `18 × gap`). An arrival that lands past the current ON
+/// window is shifted across an OFF period instead — the overshoot shrinks
+/// by at least the next window's length each round, so the shift loop
+/// always terminates.
+fn push_bursty(cfg: &LoadGenCfg, tenant: usize, rng: &mut Rng, all: &mut Vec<Arrival>) {
+    let on_mean = cfg.mean_gap_us * 6.0;
+    let off_mean = cfg.mean_gap_us * 18.0;
+    let burst_gap = cfg.mean_gap_us / 4.0;
+    let mut t: u64 = 0;
+    let mut window_end = exp_gap(rng, on_mean);
+    for seq in 0..cfg.requests_per_tenant as u64 {
+        t = t.saturating_add(exp_gap(rng, burst_gap));
+        while t > window_end {
+            let overshoot = t - window_end;
+            let resume = window_end.saturating_add(exp_gap(rng, off_mean));
+            t = resume.saturating_add(overshoot);
+            window_end = resume.saturating_add(exp_gap(rng, on_mean));
+        }
+        all.push(Arrival { tenant, seq, t_us: t, image_seed: rng.next_u64() });
+    }
 }
 
 /// Expand an arrival's `image_seed` into a flattened image payload
@@ -96,9 +168,14 @@ pub fn fingerprint(arrivals: &[Arrival]) -> u64 {
 mod tests {
     use super::*;
 
+    /// Full-literal helper so adding cfg fields stays a one-line change.
+    fn mk(seed: u64, n: usize, gap: f64) -> LoadGenCfg {
+        LoadGenCfg { seed, requests_per_tenant: n, mean_gap_us: gap, mode: ArrivalMode::Exp }
+    }
+
     #[test]
     fn same_seed_same_sequence() {
-        let cfg = LoadGenCfg { seed: 7, requests_per_tenant: 50, mean_gap_us: 300.0 };
+        let cfg = mk(7, 50, 300.0);
         let a = generate(&cfg, 3);
         let b = generate(&cfg, 3);
         assert_eq!(a, b);
@@ -114,7 +191,7 @@ mod tests {
 
     #[test]
     fn merged_sequence_is_time_ordered_and_complete() {
-        let cfg = LoadGenCfg { seed: 11, requests_per_tenant: 40, mean_gap_us: 100.0 };
+        let cfg = mk(11, 40, 100.0);
         let all = generate(&cfg, 4);
         assert_eq!(all.len(), 160);
         assert!(all.windows(2).all(|w| {
@@ -132,7 +209,7 @@ mod tests {
 
     #[test]
     fn tenant_streams_are_decorrelated() {
-        let cfg = LoadGenCfg { seed: 13, requests_per_tenant: 20, mean_gap_us: 200.0 };
+        let cfg = mk(13, 20, 200.0);
         let all = generate(&cfg, 2);
         let t0: Vec<u64> = all.iter().filter(|a| a.tenant == 0).map(|a| a.t_us).collect();
         let t1: Vec<u64> = all.iter().filter(|a| a.tenant == 1).map(|a| a.t_us).collect();
@@ -152,10 +229,48 @@ mod tests {
     #[test]
     fn gaps_are_floored_so_time_advances() {
         // absurdly small mean gap: every gap rounds to the 1 µs floor
-        let cfg = LoadGenCfg { seed: 5, requests_per_tenant: 30, mean_gap_us: 1e-9 };
+        let cfg = mk(5, 30, 1e-9);
         let all = generate(&cfg, 1);
         let times: Vec<u64> = all.iter().map(|a| a.t_us).collect();
         assert!(times.windows(2).all(|w| w[1] > w[0]), "virtual clock must advance");
         assert_eq!(*times.last().unwrap(), 30);
+    }
+
+    #[test]
+    fn arrival_mode_parses_and_round_trips() {
+        assert_eq!(ArrivalMode::parse("exp").unwrap(), ArrivalMode::Exp);
+        assert_eq!(ArrivalMode::parse("bursty").unwrap(), ArrivalMode::Bursty);
+        assert!(ArrivalMode::parse("storm").is_err());
+        for m in [ArrivalMode::Exp, ArrivalMode::Bursty] {
+            assert_eq!(ArrivalMode::parse(m.as_str()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn bursty_same_seed_same_sequence() {
+        let mut cfg = mk(7, 50, 300.0);
+        cfg.mode = ArrivalMode::Bursty;
+        let a = generate(&cfg, 3);
+        let b = generate(&cfg, 3);
+        assert_eq!(a, b);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn bursty_differs_from_exp_but_stays_complete_and_ordered() {
+        let exp = mk(21, 40, 200.0);
+        let mut bur = exp.clone();
+        bur.mode = ArrivalMode::Bursty;
+        let a = generate(&exp, 2);
+        let b = generate(&bur, 2);
+        assert_ne!(fingerprint(&a), fingerprint(&b), "modes must shape time differently");
+        assert_eq!(b.len(), 80);
+        assert!(b.windows(2).all(|w| {
+            (w[0].t_us, w[0].tenant, w[0].seq) < (w[1].t_us, w[1].tenant, w[1].seq)
+        }));
+        for tenant in 0..2 {
+            let n = b.iter().filter(|x| x.tenant == tenant).count();
+            assert_eq!(n, 40, "tenant {tenant} lost arrivals");
+        }
     }
 }

@@ -17,12 +17,22 @@
 //!   fed by the seed-deterministic open-loop [`loadgen`] and dispatched in
 //!   weighted round-robin onto a shared thread pool (`hcim serve
 //!   --models ... --tiles ...`).
+//! * [`fleet::Fleet`] — multi-chip: N chips each carrying a
+//!   [`scheduler::ShardPlan`], replicated tenants, a seeded virtual-clock
+//!   fault schedule ([`faults::FaultSchedule`]), heartbeat-driven health
+//!   checks, and a drain → re-plan → retrying-re-admit failover pipeline
+//!   (`hcim fleet --chips ... --faults ...`).
 
 pub mod batcher;
+pub mod faults;
+pub mod fleet;
 pub mod loadgen;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
+pub use faults::{FaultEvent, FaultKind, FaultSchedule};
+pub use fleet::{Fleet, FleetCfg, FleetReport};
+pub use loadgen::ArrivalMode;
 pub use scheduler::{Scheduler, SchedulerCfg, ServeReport, ShardPlan, TenantSpec};
 pub use server::{Server, ServerConfig};

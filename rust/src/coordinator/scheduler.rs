@@ -711,6 +711,9 @@ impl ServeReport {
         o.insert("peak_tiles".to_string(), Json::Num(t.peak_tiles as f64));
         o.insert("queue_cap".to_string(), Json::Num(t.queue_cap as f64));
         o.insert("rejected".to_string(), Json::Num(t.rejected as f64));
+        // same quantity as `rejected`, under the fleet-wide name that
+        // distinguishes backpressure bounces from `dropped_after_retry`
+        o.insert("rejected_by_backpressure".to_string(), Json::Num(t.rejected as f64));
         o.insert("shard_tiles".to_string(), Json::Num(t.shard_tiles as f64));
         o.insert("svc_us".to_string(), Json::Num(t.svc_us as f64));
         if let Some(u) = &t.util {
@@ -966,7 +969,12 @@ mod tests {
             )
         };
         let arrivals = loadgen::generate(
-            &loadgen::LoadGenCfg { seed: 9, requests_per_tenant: 200, mean_gap_us: 400.0 },
+            &loadgen::LoadGenCfg {
+                seed: 9,
+                requests_per_tenant: 200,
+                mean_gap_us: 400.0,
+                mode: loadgen::ArrivalMode::Exp,
+            },
             2,
         );
         let mut a = mk();
@@ -1022,6 +1030,11 @@ mod tests {
         ] {
             assert!(tenants[0].get(key).is_some(), "tenant json missing `{key}`");
         }
+        // the fleet-facing alias mirrors `rejected` exactly
+        assert_eq!(
+            tenants[0].num_field("rejected_by_backpressure").unwrap(),
+            tenants[0].num_field("rejected").unwrap()
+        );
         let totals = parsed.get("totals").unwrap();
         assert!(totals.num_field("admitted").unwrap() > 0.0);
         // full JSON additionally carries the wall section (null: virtual run)
@@ -1052,7 +1065,12 @@ mod tests {
             assert!((0.0..=1.0).contains(&u.noc));
         }
         let arrivals = loadgen::generate(
-            &loadgen::LoadGenCfg { seed: 7, requests_per_tenant: 64, mean_gap_us: 200.0 },
+            &loadgen::LoadGenCfg {
+                seed: 7,
+                requests_per_tenant: 64,
+                mean_gap_us: 200.0,
+                mode: loadgen::ArrivalMode::Exp,
+            },
             2,
         );
         a.plan_admissions(&arrivals);

@@ -2,6 +2,7 @@
 //! metrics. Leader/worker: the leader owns the queues, worker threads own
 //! executions.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -43,6 +44,23 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Started/responded batch counters shared with the workers, so a
+/// collect error can say exactly how many in-flight batches died with
+/// them (a batch that never produced its responses — worker panic or
+/// execution error — stays unaccounted forever).
+#[derive(Default)]
+struct InFlight {
+    started: AtomicU64,
+    finished: AtomicU64,
+}
+
+impl InFlight {
+    fn lost(&self) -> u64 {
+        let started = self.started.load(Ordering::Relaxed);
+        started.saturating_sub(self.finished.load(Ordering::Relaxed))
+    }
+}
+
 /// Batched inference server over the AOT artifacts.
 pub struct Server {
     batcher: Arc<Batcher>,
@@ -50,6 +68,7 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     resp_rx: Receiver<Response>,
     next_id: u64,
+    in_flight: Arc<InFlight>,
     /// Per-inference co-simulation estimate for the served model.
     pub hw_estimate: Option<SimReport>,
 }
@@ -87,11 +106,13 @@ impl Server {
             .map(|r| (r.energy_pj(), r.latency_ns()))
             .unwrap_or((0.0, 0.0));
 
+        let in_flight = Arc::new(InFlight::default());
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let engine = Arc::clone(&engine);
+            let in_flight = Arc::clone(&in_flight);
             let resp_tx = resp_tx.clone();
             workers.push(
                 std::thread::Builder::new()
@@ -103,6 +124,7 @@ impl Server {
                             let n = batch.len();
                             batches_ctr.incr();
                             reqs_ctr.add(n as u64);
+                            in_flight.started.fetch_add(1, Ordering::Relaxed);
                             let elems = engine.manifest.input_elems();
                             let mut flat = Vec::with_capacity(n * elems);
                             for r in &batch {
@@ -129,6 +151,7 @@ impl Server {
                                         per_inf.0 * n as f64,
                                         per_inf.1 * n as f64,
                                     );
+                                    in_flight.finished.fetch_add(1, Ordering::Relaxed);
                                 }
                                 Err(e) => {
                                     crate::log_error!("batch of {n} failed: {e}");
@@ -145,6 +168,7 @@ impl Server {
             workers,
             resp_rx,
             next_id: 0,
+            in_flight,
             hw_estimate,
         }
     }
@@ -163,16 +187,21 @@ impl Server {
     ///
     /// If the worker threads die before `n` responses arrive (e.g. a
     /// panicking batch), the error reports how many responses were drained
-    /// instead of aborting the process.
+    /// and how many in-flight batches died with the workers, instead of
+    /// aborting the process.
     pub fn collect(&self, n: usize) -> crate::Result<Vec<Response>> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             match self.resp_rx.recv() {
                 Ok(r) => out.push(r),
-                Err(_) => anyhow::bail!(
-                    "serving workers died after {} of {n} responses",
-                    out.len()
-                ),
+                Err(_) => {
+                    let lost = self.in_flight.lost();
+                    anyhow::bail!(
+                        "serving workers died after {} of {n} responses \
+                         ({lost} in-flight batch(es) lost)",
+                        out.len()
+                    )
+                }
             }
         }
         Ok(out)
@@ -189,14 +218,22 @@ impl Server {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.resp_rx.recv_timeout(left) {
                 Ok(r) => out.push(r),
-                Err(RecvTimeoutError::Timeout) => anyhow::bail!(
-                    "timed out after {timeout:?} with {} of {n} responses",
-                    out.len()
-                ),
-                Err(RecvTimeoutError::Disconnected) => anyhow::bail!(
-                    "serving workers died after {} of {n} responses",
-                    out.len()
-                ),
+                Err(RecvTimeoutError::Timeout) => {
+                    let lost = self.in_flight.lost();
+                    anyhow::bail!(
+                        "timed out after {timeout:?} with {} of {n} responses \
+                         ({lost} in-flight batch(es) lost)",
+                        out.len()
+                    )
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let lost = self.in_flight.lost();
+                    anyhow::bail!(
+                        "serving workers died after {} of {n} responses \
+                         ({lost} in-flight batch(es) lost)",
+                        out.len()
+                    )
+                }
             }
         }
         Ok(out)

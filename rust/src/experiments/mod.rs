@@ -505,7 +505,7 @@ pub struct ServingSweepRow {
 /// --gap-us 150 --queue-cap 8 --seed 42` reproduces any row live (the
 /// sweep's knobs differ from the CLI defaults).
 pub fn serving_contention_sweep_rows() -> Vec<ServingSweepRow> {
-    use crate::coordinator::loadgen::{self, LoadGenCfg};
+    use crate::coordinator::loadgen::{self, ArrivalMode, LoadGenCfg};
     use crate::coordinator::{Scheduler, SchedulerCfg, ShardPlan, TenantSpec};
 
     let cfg = HcimConfig::config_a();
@@ -538,7 +538,12 @@ pub fn serving_contention_sweep_rows() -> Vec<ServingSweepRow> {
             42,
         );
         let arrivals = loadgen::generate(
-            &LoadGenCfg { seed: 42, requests_per_tenant: 256, mean_gap_us: 150.0 },
+            &LoadGenCfg {
+                seed: 42,
+                requests_per_tenant: 256,
+                mean_gap_us: 150.0,
+                mode: ArrivalMode::Exp,
+            },
             sched.tenants.len(),
         );
         sched.plan_admissions(&arrivals);
@@ -784,6 +789,121 @@ pub fn timeline_utilization_sweep_journaled(journal_dir: Option<&Path>) -> crate
     Ok(t)
 }
 
+// ---------------------------------------------------------------------------
+// Fleet failover sweep — availability & retries vs fault rate × replicas
+// ---------------------------------------------------------------------------
+
+/// One cell of the fleet failover sweep.
+#[derive(Clone, Debug)]
+pub struct FleetSweepRow {
+    pub fail_rate: f64,
+    pub replicas: usize,
+    /// `ok`, or `tenant-down` when a fail-stop took out every replica of
+    /// some tenant (the fleet reports the outage instead of hanging).
+    pub status: String,
+    pub availability_min: f64,
+    pub completed: u64,
+    pub retries: u64,
+    pub dropped: u64,
+    pub drained: u64,
+    pub replans: u64,
+    pub worst_p99_us: f64,
+}
+
+/// Fleet failover sweep: seeded fail-stop rate × replica count on a
+/// 6-chip fleet (ResNet-20 + VGG-9, seed-42 arrivals, per-tenant costs
+/// priced once through the co-simulation path). Cells where a fail-stop
+/// leaves a tenant with zero surviving replicas report `tenant-down`
+/// rather than erroring the whole table. Entirely virtual-time and
+/// seed-deterministic (EXPERIMENTS.md §Failover).
+pub fn fleet_failover_sweep_rows() -> Vec<FleetSweepRow> {
+    use crate::coordinator::faults::FaultSchedule;
+    use crate::coordinator::fleet::{Fleet, FleetCfg};
+    use crate::coordinator::loadgen::LoadGenCfg;
+    use crate::coordinator::{ShardPlan, TenantSpec};
+
+    let hw = HcimConfig::config_a();
+    let specs = vec![
+        TenantSpec { model: "resnet20".into(), weight: 1 },
+        TenantSpec { model: "vgg9".into(), weight: 1 },
+    ];
+    let sim = Simulator::new(hw.node);
+    let costs: Vec<(f64, f64)> = specs
+        .iter()
+        .map(|s| {
+            let g = zoo::by_name(&s.model).expect("sweep models exist");
+            let r = sim.run(&g, &Arch::Hcim(hw.clone()));
+            (r.energy_pj(), r.latency_ns())
+        })
+        .collect();
+    let (floor, full) = ShardPlan::bounds(&specs, &hw).expect("sweep bounds");
+    let budget = floor + (full - floor) / 2;
+    let lg = LoadGenCfg::default(); // seed 42, 64 requests/tenant, 500 µs gaps
+
+    let mut rows = Vec::new();
+    for &fail_rate in &[0.0, 0.3, 0.6] {
+        for replicas in [1usize, 2, 3] {
+            let cfg = FleetCfg { chips: 6, replicas, ..FleetCfg::default() };
+            let schedule = FaultSchedule::seeded(6, fail_rate, 0xF1EE7);
+            let fleet = Fleet::build_with_costs(specs.clone(), &hw, budget, cfg, schedule, &costs)
+                .expect("sweep fleet builds");
+            match fleet.run(&lg) {
+                Ok(rep) => {
+                    let avail = rep.chip_rows.iter().map(|c| c.availability).fold(1.0, f64::min);
+                    let p99 = rep.tenants.iter().map(|t| t.lat_p99_us).fold(0.0, f64::max);
+                    rows.push(FleetSweepRow {
+                        fail_rate,
+                        replicas,
+                        status: "ok".to_string(),
+                        availability_min: avail,
+                        completed: rep.tenants.iter().map(|t| t.completed).sum(),
+                        retries: rep.tenants.iter().map(|t| t.retries).sum(),
+                        dropped: rep.tenants.iter().map(|t| t.dropped_after_retry).sum(),
+                        drained: rep.tenants.iter().map(|t| t.drained).sum(),
+                        replans: rep.replans,
+                        worst_p99_us: p99,
+                    });
+                }
+                Err(_) => rows.push(FleetSweepRow {
+                    fail_rate,
+                    replicas,
+                    status: "tenant-down".to_string(),
+                    availability_min: 0.0,
+                    completed: 0,
+                    retries: 0,
+                    dropped: 0,
+                    drained: 0,
+                    replans: 0,
+                    worst_p99_us: 0.0,
+                }),
+            }
+        }
+    }
+    rows
+}
+
+/// Tabled form of [`fleet_failover_sweep_rows`].
+pub fn fleet_failover_sweep() -> Table {
+    let mut t = Table::new(
+        "Fleet failover — availability vs fault rate × replicas (6 chips, seed 42)",
+        &["Rate", "Repl", "Status", "Avail", "Done", "Retry", "Drop", "Replan", "p99 µs"],
+    );
+    for r in fleet_failover_sweep_rows() {
+        t.row(&[
+            format!("{:.1}", r.fail_rate),
+            r.replicas.to_string(),
+            r.status,
+            format!("{:.3}", r.availability_min),
+            r.completed.to_string(),
+            r.retries.to_string(),
+            r.dropped.to_string(),
+            r.replans.to_string(),
+            format!("{:.0}", r.worst_p99_us),
+        ]);
+    }
+    t
+}
+
 /// Reports used by EXPERIMENTS.md: run everything and also return the raw
 /// SimReports for the headline claims.
 pub fn headline_reports(sim: &Simulator) -> Vec<SimReport> {
@@ -812,6 +932,26 @@ mod tests {
         assert!(t.contains("24x128"));
         assert!(t.contains("24x64"));
         assert!(t.contains("4*128"));
+    }
+
+    #[test]
+    fn fleet_failover_sweep_covers_the_grid() {
+        let rows = fleet_failover_sweep_rows();
+        assert_eq!(rows.len(), 9, "3 fault rates x 3 replica counts");
+        assert!(rows.iter().all(|r| r.status == "ok" || r.status == "tenant-down"));
+        // a fault-free fleet is fully available and never re-plans
+        for r in rows.iter().filter(|r| r.fail_rate == 0.0) {
+            assert_eq!(r.status, "ok");
+            assert_eq!(r.availability_min, 1.0, "replicas={}", r.replicas);
+            assert_eq!(r.replans, 0);
+        }
+        // deterministic: a second pass reproduces every cell exactly
+        let again = fleet_failover_sweep_rows();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.status, b.status);
+            assert_eq!(a.availability_min.to_bits(), b.availability_min.to_bits());
+            assert_eq!((a.completed, a.retries, a.dropped), (b.completed, b.retries, b.dropped));
+        }
     }
 
     #[test]

@@ -1,8 +1,14 @@
 //! Failure-injection and edge-case tests: malformed artifacts, degenerate
-//! models, invalid hardware programs — the system must fail loudly and
-//! precisely, never silently mis-simulate.
+//! models, invalid hardware programs, and fleet-level chaos (chip
+//! fail-stop mid-run, every replica dead, degraded chips, crash-resume
+//! through the journal) — the system must fail loudly and precisely,
+//! never silently mis-simulate, hang, or abort.
 
 use hcim::config::hardware::HcimConfig;
+use hcim::coordinator::faults::FaultSchedule;
+use hcim::coordinator::fleet::{Fleet, FleetCfg, FleetReport};
+use hcim::coordinator::loadgen::{ArrivalMode, LoadGenCfg};
+use hcim::coordinator::{ShardPlan, TenantSpec};
 use hcim::model::graph::Graph;
 use hcim::model::layer::{Chw, Layer};
 use hcim::quant::bits::Mat;
@@ -184,4 +190,162 @@ fn batcher_survives_worker_panic_isolation() {
         seen += batch.len();
     }
     assert_eq!(seen, 20);
+}
+
+// ---- fleet failover layer ----
+
+fn fleet_specs() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec { model: "resnet20".into(), weight: 1 },
+        TenantSpec { model: "vgg9".into(), weight: 1 },
+    ]
+}
+
+fn midpoint_budget(specs: &[TenantSpec], hw: &HcimConfig) -> usize {
+    let (floor, full) = ShardPlan::bounds(specs, hw).unwrap();
+    floor + (full - floor) / 2
+}
+
+/// Chip fail-stop mid-run plus a transient stall: the report stays
+/// byte-identical across runs, marks the dead chip, drains its queue,
+/// and reconciles every offered request as completed or dropped — never
+/// silently lost.
+#[test]
+fn fleet_fail_stop_mid_run_is_byte_identical_and_reconciles() {
+    let run = || {
+        let hw = HcimConfig::config_a();
+        let specs = fleet_specs();
+        let budget = midpoint_budget(&specs, &hw);
+        let sched = FaultSchedule::parse("fail@1:2500,stall@0:6000+2000", 4).unwrap();
+        let costs = [(1_000.0, 30_000.0), (2_000.0, 50_000.0)];
+        let fleet =
+            Fleet::build_with_costs(specs, &hw, budget, FleetCfg::default(), sched, &costs)
+                .unwrap();
+        let lg = LoadGenCfg {
+            seed: 21,
+            requests_per_tenant: 80,
+            mean_gap_us: 120.0,
+            mode: ArrivalMode::Bursty,
+        };
+        fleet.run(&lg).unwrap().deterministic_json().to_string()
+    };
+    let a = run();
+    assert_eq!(a, run(), "fleet metrics JSON must be byte-identical across runs");
+    let parsed = Json::parse(&a).unwrap();
+    let chips = parsed.get("chips").and_then(|c| c.as_arr()).unwrap();
+    assert_eq!(chips[1].get("failed").and_then(Json::as_bool), Some(true));
+    let totals = parsed.get("totals").unwrap();
+    assert!(totals.num_field("drains").unwrap() > 0.0, "the dead chip's queue must drain");
+    assert_eq!(
+        totals.num_field("offered").unwrap(),
+        totals.num_field("completed").unwrap() + totals.num_field("dropped_after_retry").unwrap()
+    );
+}
+
+/// Losing every replica of a tenant is a hard, precise error — the run
+/// names the tenant and returns instead of hanging or panicking.
+#[test]
+fn fleet_all_replicas_down_is_an_error_naming_the_tenant() {
+    let hw = HcimConfig::config_a();
+    let specs = vec![TenantSpec { model: "vgg9".into(), weight: 1 }];
+    let (floor, _) = ShardPlan::bounds(&specs, &hw).unwrap();
+    let cfg = FleetCfg { chips: 2, replicas: 2, ..FleetCfg::default() };
+    let sched = FaultSchedule::parse("fail@0:1500,fail@1:1500", 2).unwrap();
+    let fleet =
+        Fleet::build_with_costs(specs, &hw, floor, cfg, sched, &[(1_000.0, 30_000.0)]).unwrap();
+    let lg = LoadGenCfg {
+        seed: 4,
+        requests_per_tenant: 64,
+        mean_gap_us: 100.0,
+        mode: ArrivalMode::Exp,
+    };
+    let err = fleet.run(&lg).unwrap_err().to_string();
+    assert!(err.contains("vgg9"), "must name the dead tenant: {err}");
+    assert!(err.contains("no surviving replicas"), "{err}");
+}
+
+/// A degraded chip keeps serving, but the nonideal-priced service-time
+/// inflation — and with it the observed latency — grows monotonically
+/// with fault severity, and every request still reconciles.
+#[test]
+fn fleet_degraded_chip_latency_grows_with_severity() {
+    let run = |severity: f64| {
+        let hw = HcimConfig::config_a();
+        let specs = vec![TenantSpec { model: "resnet20".into(), weight: 1 }];
+        let budget = midpoint_budget(&specs, &hw);
+        let spec = format!("degrade@0:0x{severity}");
+        let sched = FaultSchedule::parse(&spec, 1).unwrap();
+        let cfg = FleetCfg { chips: 1, replicas: 1, ..FleetCfg::default() };
+        let fleet =
+            Fleet::build_with_costs(specs, &hw, budget, cfg, sched, &[(1_000.0, 40_000.0)])
+                .unwrap();
+        let lg = LoadGenCfg {
+            seed: 8,
+            requests_per_tenant: 64,
+            mean_gap_us: 200.0,
+            mode: ArrivalMode::Exp,
+        };
+        fleet.run(&lg).unwrap()
+    };
+    let clean = run(0.0);
+    let mild = run(1.0);
+    let severe = run(4.0);
+    let infl = |r: &FleetReport| r.chip_rows[0].degraded_inflation;
+    assert_eq!(infl(&clean), 1.0, "severity 0 must price as the ideal chip");
+    assert!(infl(&mild) > infl(&clean) && infl(&severe) > infl(&mild));
+    let p50 = |r: &FleetReport| r.tenants[0].lat_p50_us;
+    assert!(p50(&mild) >= p50(&clean));
+    assert!(p50(&severe) > p50(&clean), "severe degradation must show up in latency");
+    for r in [&clean, &mild, &severe] {
+        let t = &r.tenants[0];
+        assert_eq!(t.offered, t.completed + t.dropped_after_retry);
+    }
+}
+
+/// End-to-end crash-resume through the CLI: a `hcim fleet` run killed
+/// right after its journal record is durable (but before stdout) must,
+/// on resume, replay the exact bytes a clean run would have printed.
+#[test]
+fn fleet_journal_kill_and_resume_replays_identical_report() {
+    let dir = tmp_dir("fleet_resume");
+    let journal = dir.join("journal");
+    let run = |journaled: bool, kill: Option<&str>| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_hcim"));
+        cmd.args([
+            "fleet",
+            "--models",
+            "resnet20,vgg9",
+            "--chips",
+            "4",
+            "--faults",
+            "fail@1:2500",
+            "--requests",
+            "48",
+            "--seed",
+            "11",
+            "--format",
+            "json",
+        ]);
+        if journaled {
+            cmd.arg("--journal").arg(&journal);
+        }
+        match kill {
+            Some(n) => cmd.env("HCIM_JOURNAL_KILL_AFTER", n),
+            None => cmd.env_remove("HCIM_JOURNAL_KILL_AFTER"),
+        };
+        cmd.output().unwrap()
+    };
+    let clean = run(false, None);
+    assert!(clean.status.success(), "clean fleet run failed");
+    assert!(!clean.stdout.is_empty(), "clean run must print the report");
+    let killed = run(true, Some("1"));
+    assert!(!killed.status.success(), "KILL_AFTER=1 must abort the run");
+    assert!(killed.stdout.is_empty(), "the killed run must die before printing");
+    let resumed = run(true, None);
+    assert!(resumed.status.success(), "resume must replay the journal");
+    assert_eq!(
+        String::from_utf8_lossy(&resumed.stdout),
+        String::from_utf8_lossy(&clean.stdout),
+        "resumed report must be byte-identical to a clean run"
+    );
 }

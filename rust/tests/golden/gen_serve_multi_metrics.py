@@ -104,6 +104,7 @@ def tenant_json(name, weight, demand, peak, shard, cap, energy_pj, latency_ns, a
         "peak_tiles": peak,
         "queue_cap": cap,
         "rejected": rejected,
+        "rejected_by_backpressure": rejected,
         "shard_tiles": shard,
         "svc_us": svc,
         "virt_latency_us": {

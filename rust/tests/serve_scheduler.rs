@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use hcim::config::hardware::HcimConfig;
-use hcim::coordinator::loadgen::{self, LoadGenCfg};
+use hcim::coordinator::loadgen::{self, ArrivalMode, LoadGenCfg};
 use hcim::coordinator::scheduler::ShardAssignment;
 use hcim::coordinator::{Scheduler, SchedulerCfg, ShardPlan, TenantSpec};
 use hcim::runtime::Engine;
@@ -64,7 +64,7 @@ fn run_once(seed: u64, workers: usize, with_engines: bool) -> String {
         }
     }
     let arrivals = loadgen::generate(
-        &LoadGenCfg { seed, requests_per_tenant: 120, mean_gap_us: 120.0 },
+        &LoadGenCfg { seed, requests_per_tenant: 120, mean_gap_us: 120.0, mode: ArrivalMode::Exp },
         sched.tenants.len(),
     );
     let admitted = sched.plan_admissions(&arrivals);
@@ -94,7 +94,12 @@ fn metrics_json_is_byte_identical_across_runs_and_pool_sizes() {
 
 #[test]
 fn loadgen_arrival_sequence_is_seed_deterministic() {
-    let cfg = LoadGenCfg { seed: 77, requests_per_tenant: 300, mean_gap_us: 90.0 };
+    let cfg = LoadGenCfg {
+        seed: 77,
+        requests_per_tenant: 300,
+        mean_gap_us: 90.0,
+        mode: ArrivalMode::Exp,
+    };
     let a = loadgen::generate(&cfg, 3);
     let b = loadgen::generate(&cfg, 3);
     assert_eq!(a, b, "same seed must replay the exact arrival sequence");
@@ -112,7 +117,12 @@ fn two_tenants_make_progress_within_the_tile_budget() {
     assert!(plan.total_shard_tiles() <= budget);
     let mut sched = Scheduler::new(plan, &cfg, SchedulerCfg::default(), 42);
     let arrivals = loadgen::generate(
-        &LoadGenCfg { seed: 42, requests_per_tenant: 64, mean_gap_us: 500.0 },
+        &LoadGenCfg {
+            seed: 42,
+            requests_per_tenant: 64,
+            mean_gap_us: 500.0,
+            mode: ArrivalMode::Exp,
+        },
         2,
     );
     sched.plan_admissions(&arrivals);
@@ -141,7 +151,12 @@ fn starved_budget_triggers_backpressure() {
         );
         let arrivals = loadgen::generate(
             // aggressive open-loop load: tiny inter-arrival gap
-            &LoadGenCfg { seed: 5, requests_per_tenant: 200, mean_gap_us: 10.0 },
+            &LoadGenCfg {
+                seed: 5,
+                requests_per_tenant: 200,
+                mean_gap_us: 10.0,
+                mode: ArrivalMode::Exp,
+            },
             2,
         );
         sched.plan_admissions(&arrivals);
@@ -232,6 +247,7 @@ fn report_matches_golden_file() {
     assert_eq!(tenants[0].num_field("shard_tiles").unwrap(), 50.0);
     assert_eq!(tenants[0].num_field("admitted").unwrap(), 4.0);
     assert_eq!(tenants[0].num_field("rejected").unwrap(), 2.0);
+    assert_eq!(tenants[0].num_field("rejected_by_backpressure").unwrap(), 2.0);
     let lat = tenants[0].get("virt_latency_us").unwrap();
     assert_eq!(lat.num_field("p50").unwrap(), 4000.0);
     assert_eq!(lat.num_field("p95").unwrap(), 6550.0);

@@ -139,7 +139,8 @@ fn server_round_trip_with_cosim() {
 /// process abort. Uses the offline stub engine so no artifacts are
 /// needed: a wrong-length image either panics the worker (debug asserts)
 /// or makes the engine reject the batch without a response (release) —
-/// both must resolve to an error within the timeout.
+/// both must resolve to an error within the timeout, and the error must
+/// state exactly how many in-flight batches died with the worker.
 #[test]
 fn dead_or_silent_worker_is_an_error_not_a_panic() {
     if cfg!(feature = "pjrt") {
@@ -174,5 +175,11 @@ fn dead_or_silent_worker_is_an_error_not_a_panic() {
     assert!(
         msg.contains("workers died") || msg.contains("timed out"),
         "unexpected error: {msg}"
+    );
+    // the one malformed batch was started and never responded — the
+    // error must account for it precisely, not just say "something died"
+    assert!(
+        msg.contains("1 in-flight batch(es) lost"),
+        "error must count the lost in-flight batches: {msg}"
     );
 }
