@@ -18,9 +18,10 @@ use hcim::nonideal::{
     psq_mvm_nonideal_scalar, run_trial, run_trial_scalar, CrossbarPerturbation, NonIdealEngine,
     NonIdealOutput, NonIdealityParams,
 };
-use hcim::quant::bits::Mat;
+use hcim::quant::bits::{ColBlocks, Mat, PackedBits};
 use hcim::quant::encode::encode_all;
 use hcim::quant::psq::{psq_mvm_scalar, PsqEngine, PsqLayerParams, PsqMode, PsqOutput};
+use hcim::quant::simd;
 use hcim::sim::dcim::array::DcimArray;
 use hcim::sim::energy::CostLedger;
 use hcim::sim::params::CalibParams;
@@ -31,9 +32,12 @@ use hcim::timeline::{TimelineCfg, TimelineModel};
 use hcim::util::bench::{black_box, Bencher};
 use hcim::util::json::Json;
 use hcim::util::rng::Rng;
+use hcim::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 fn main() {
     let mut b = Bencher::from_env();
+    b.set_provenance(provenance());
     let params = CalibParams::at_65nm();
 
     // ---- L3 core: gate-level DCiM word-op (128 columns) ----
@@ -69,6 +73,39 @@ fn main() {
         black_box(xbar.evaluate_stream_pure(&x, 2));
     });
 
+    // ---- blocked AND+popcount kernel: per-column vs blocked vs SIMD ----
+    // two geometries: the paper's 128-row macro, and a tall 1024-row tile
+    // where the plane re-streaming cost the blocking removes dominates
+    for (rows, ncols) in [(128usize, 128usize), (1024, 256)] {
+        let mut krng = Rng::new((rows * 31 + ncols) as u64);
+        let cols: Vec<PackedBits> = (0..ncols)
+            .map(|_| {
+                let bits: Vec<u8> = (0..rows).map(|_| (krng.next_u64() & 1) as u8).collect();
+                PackedBits::from_bits(&bits)
+            })
+            .collect();
+        let plane_bits: Vec<u8> = (0..rows).map(|_| (krng.next_u64() & 1) as u8).collect();
+        let plane = PackedBits::from_bits(&plane_bits);
+        let blocks = ColBlocks::from_cols(&cols);
+        let mut dots = vec![0i64; ncols];
+        b.bench(&format!("dot_many {rows}r x {ncols}c (per-column dot)"), || {
+            for (c, d) in dots.iter_mut().enumerate() {
+                *d = cols[c].dot(&plane);
+            }
+            black_box(dots[0]);
+        });
+        b.bench(&format!("dot_many {rows}r x {ncols}c (blocked scalar)"), || {
+            blocks.dot_many_scalar(&plane, &mut dots);
+            black_box(dots[0]);
+        });
+        if simd::active() {
+            b.bench(&format!("dot_many {rows}r x {ncols}c (simd)"), || {
+                blocks.dot_many(&plane, &mut dots);
+                black_box(dots[0]);
+            });
+        }
+    }
+
     // ---- PSQ MVM: scalar oracle vs packed weight-stationary engine ----
     // same 128×128 physical crossbar (32 logical cols × 4 bit-slices)
     let mut prng_psq = Rng::new(9);
@@ -101,6 +138,25 @@ fn main() {
     b.bench("psq_mvm_nonideal 128x128 (packed engine, amortized)", || {
         ni_engine.mvm_into(&x, &mut ni_out);
         black_box(ni_out.ps[0]);
+    });
+
+    // ---- batch MVM: shared engine, images fanned onto the ThreadPool ----
+    let batch_engine = Arc::new(PsqEngine::program(&w, &psq));
+    let mut brng = Rng::new(77);
+    let images: Vec<Vec<i64>> = (0..16)
+        .map(|_| (0..128).map(|_| brng.range_i64(0, 15)).collect())
+        .collect();
+    b.bench("psq_mvm batch 16 imgs (sequential)", || {
+        let mut plane = PackedBits::zeros(0);
+        let mut out = PsqOutput::zeroed(0, 0);
+        for img in &images {
+            batch_engine.mvm_with(img, &mut plane, &mut out);
+            black_box(out.ps[0]);
+        }
+    });
+    let pool = ThreadPool::new(4);
+    b.bench("psq_mvm batch 16 imgs (pool = 4)", || {
+        black_box(batch_engine.mvm_batch(images.clone(), &pool).len());
     });
 
     // ---- robustness Monte Carlo trial (the `hcim robustness` unit) ----
@@ -196,6 +252,21 @@ fn main() {
         }
     }
 
+    // derived §Perf metric: SIMD speedup over the blocked-scalar kernel
+    // (rows exist only when the explicit-SIMD kernel actually ran)
+    for r in b.results().iter().filter(|r| r.name.ends_with("(simd)")) {
+        let scalar_name = r.name.replace("(simd)", "(blocked scalar)");
+        if let Some(s) = b.results().iter().find(|c| c.name == scalar_name) {
+            if r.mean_ns > 0.0 {
+                println!(
+                    "derived: {:.2}x speedup — {} vs blocked scalar",
+                    s.mean_ns / r.mean_ns,
+                    r.name
+                );
+            }
+        }
+    }
+
     // perf-trajectory artifact (EXPERIMENTS.md §Perf; uploaded by CI and
     // checked in per perf-relevant PR). A failed write must fail the bench
     // step, not surface later as a missing artifact.
@@ -204,4 +275,24 @@ fn main() {
     b.write_json(std::path::Path::new(&json_path))
         .unwrap_or_else(|e| panic!("could not write {json_path}: {e}"));
     println!("wrote {json_path}");
+}
+
+/// Provenance string for the JSON artifact. `HCIM_BENCH_PROVENANCE`
+/// overrides (CI injects runner/commit/date there); the fallback
+/// self-describes the crate version, kernel flavour, and architecture.
+fn provenance() -> String {
+    std::env::var("HCIM_BENCH_PROVENANCE").unwrap_or_else(|_| {
+        let feature = if simd::compiled() { "on" } else { "off" };
+        let kernel = if simd::active() {
+            "active (AVX2)"
+        } else {
+            "inactive (blocked scalar)"
+        };
+        format!(
+            "hcim {} · cargo bench --bench hotpath · simd feature {feature} · \
+             explicit-SIMD kernel {kernel} · {}",
+            hcim::VERSION,
+            std::env::consts::ARCH,
+        )
+    })
 }

@@ -138,11 +138,16 @@ impl HcimConfig {
         };
         let node = TechNode::by_name(cfg.str_or("hardware.node", "32nm"))
             .ok_or_else(|| anyhow::anyhow!("unknown hardware.node"))?;
+        let w_bits = cfg.i64_or("hardware.w_bits", base.w_bits as i64) as u32;
+        let x_bits = cfg.i64_or("hardware.x_bits", base.x_bits as i64) as u32;
+        // reject overflow-prone widths here, at the fallible boundary —
+        // the packing layer's shifts are only defined for 1..=32 bits
+        crate::quant::bits::validate_bit_widths(w_bits, x_bits)?;
         Ok(HcimConfig {
             xbar: CrossbarDims { rows, cols },
             mode,
-            w_bits: cfg.i64_or("hardware.w_bits", base.w_bits as i64) as u32,
-            x_bits: cfg.i64_or("hardware.x_bits", base.x_bits as i64) as u32,
+            w_bits,
+            x_bits,
             sf_bits: cfg.i64_or("hardware.sf_bits", base.sf_bits as i64) as u32,
             ps_bits: cfg.i64_or("hardware.ps_bits", base.ps_bits as i64) as u32,
             node,
@@ -251,6 +256,26 @@ mod tests {
     fn from_config_rejects_unknown() {
         let cfg = Config::parse("[hardware]\nconfig = \"Z\"").unwrap();
         assert!(HcimConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn from_config_rejects_overflow_bit_widths() {
+        // w_bits = 64 used to survive parsing and overflow `1 << w_bits`
+        // deep in the packing layer (silently wrong masks in release);
+        // now it is a config error at the boundary.
+        for toml in [
+            "[hardware]\nw_bits = 64",
+            "[hardware]\nw_bits = 0",
+            "[hardware]\nx_bits = 64",
+            "[hardware]\nx_bits = 33",
+        ] {
+            let cfg = Config::parse(toml).unwrap();
+            let err = HcimConfig::from_config(&cfg).unwrap_err();
+            assert!(
+                err.to_string().contains("outside supported range"),
+                "{toml}: unexpected error {err}"
+            );
+        }
     }
 
     #[test]

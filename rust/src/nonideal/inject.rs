@@ -25,11 +25,17 @@
 use crate::config::hardware::HcimConfig;
 use crate::model::graph::Graph;
 use crate::nonideal::models::{CrossbarPerturbation, NonIdealityParams};
-use crate::quant::bits::{input_bitplane, weight_bitslice, Mat, PackedBits};
+use crate::quant::bits::{
+    assert_bit_widths, input_bitplane, weight_bitslice, ColBlocks, Mat, PackedBits,
+};
 use crate::quant::fixed::sat_add;
-use crate::quant::psq::{psq_mvm_scalar, quantize_ps, PsqEngine, PsqLayerParams, PsqOutput};
+use crate::quant::psq::{
+    chunk_images, psq_mvm_scalar, quantize_ps, PsqEngine, PsqLayerParams, PsqOutput,
+};
 use crate::sim::components::comparator::ComparatorBank;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 /// Output of one perturbed PSQ-MVM (same layout as
 /// [`crate::quant::psq::PsqOutput`], with the analog pre-comparator values
@@ -85,8 +91,9 @@ pub struct NonIdealEngine {
     params: PsqLayerParams,
     rows: usize,
     phys_cols: usize,
-    /// Packed bit-slice columns with stuck-at masks already applied.
-    cols: Vec<PackedBits>,
+    /// Column-blocked bit-slice columns with stuck-at masks already
+    /// applied.
+    blocks: ColBlocks,
     /// Column-major cell current gains: `gains[c * rows + r]`.
     gains: Vec<f64>,
     /// Per-column comparator input-referred offsets.
@@ -148,7 +155,7 @@ impl NonIdealEngine {
             params: params.clone(),
             rows,
             phys_cols,
-            cols,
+            blocks: ColBlocks::from_cols(&cols),
             gains,
             plane: PackedBits::zeros(rows),
         }
@@ -163,32 +170,97 @@ impl NonIdealEngine {
     }
 
     /// One full perturbed MVM into a reusable output buffer — no heap
-    /// allocation once `out` and the plane scratch have warmed up. The
-    /// comparator decision is the inlined form of
-    /// [`ComparatorBank::compare_analog`]'s per-column expression
-    /// (`quantize_ps(a + offset − θ)`), evaluated in the same order with
-    /// the same associativity, so codes stay bit-identical to the scalar
-    /// oracle without its per-stream code-vector allocations.
+    /// allocation once `out` and the plane scratch have warmed up.
     pub fn mvm_into(&mut self, x: &[i64], out: &mut NonIdealOutput) {
-        assert_eq!(x.len(), self.rows, "input/crossbar row mismatch");
-        out.reset(self.phys_cols, self.params.x_bits);
-        for j in 0..self.params.x_bits {
-            self.plane.pack_bitplane(x, j);
-            for c in 0..self.phys_cols {
-                // perturbed column current: Σ gains over conducting cells,
-                // ascending rows (bit-identical to the scalar oracle's sum)
-                let g = &self.gains[c * self.rows..(c + 1) * self.rows];
-                let mut a = 0.0;
-                self.cols[c].and_for_each_one(&self.plane, |r| a += g[r]);
-                let p =
-                    quantize_ps(a + self.offsets[c] - self.params.theta, self.params.mode);
-                let idx = j as usize * self.phys_cols + c;
-                out.analog[idx] = a;
-                out.p[idx] = p;
-                if p != 0 {
-                    let s = self.params.scales[idx];
-                    out.ps[c] = sat_add(out.ps[c], p as i64 * s, self.params.ps_bits);
-                }
+        let NonIdealEngine { params, rows, phys_cols, blocks, gains, offsets, plane } = self;
+        nonideal_mvm_core(params, *rows, *phys_cols, blocks, gains, offsets, plane, x, out);
+    }
+
+    /// Shared-engine perturbed MVM with caller-supplied bit-plane scratch
+    /// (the `&self` form for concurrent image streams; see
+    /// [`NonIdealEngine::mvm_batch`]). Identical output to
+    /// [`NonIdealEngine::mvm_into`].
+    pub fn mvm_with(&self, x: &[i64], plane: &mut PackedBits, out: &mut NonIdealOutput) {
+        nonideal_mvm_core(
+            &self.params,
+            self.rows,
+            self.phys_cols,
+            &self.blocks,
+            &self.gains,
+            &self.offsets,
+            plane,
+            x,
+            out,
+        );
+    }
+
+    /// Evaluate a batch of input images against the shared programmed
+    /// perturbation, fanned out over `pool` in fixed-size chunks.
+    ///
+    /// Deterministic: `out[i]` is exactly [`NonIdealEngine::mvm_into`] of
+    /// `images[i]` — including the `f64` analog sums — for any pool size.
+    pub fn mvm_batch(
+        self: &Arc<Self>,
+        images: Vec<Vec<i64>>,
+        pool: &ThreadPool,
+    ) -> Vec<NonIdealOutput> {
+        let engine = Arc::clone(self);
+        let outs = pool.map(chunk_images(images), move |chunk| {
+            let mut plane = PackedBits::zeros(0);
+            chunk
+                .iter()
+                .map(|x| {
+                    let mut out = NonIdealOutput::zeroed(engine.phys_cols, engine.params.x_bits);
+                    engine.mvm_with(x, &mut plane, &mut out);
+                    out
+                })
+                .collect::<Vec<_>>()
+        });
+        outs.into_iter().flatten().collect()
+    }
+}
+
+/// The blocked perturbed-MVM sweep shared by [`NonIdealEngine::mvm_into`]
+/// and [`NonIdealEngine::mvm_with`].
+///
+/// The perturbed column current is Σ gains over the conducting cells,
+/// accumulated directly into `out.analog` by the blocked `(col, row)`
+/// visitor — work proportional to the active cells (the simulator-side
+/// mirror of the paper's §4.2.2 sparsity energy argument). Within each
+/// column the visitor ascends rows exactly as the unblocked scan did, so
+/// every per-column `f64` sum is bit-identical to the scalar oracle
+/// [`psq_mvm_nonideal_scalar`] even though columns interleave. The
+/// comparator decision is the inlined form of
+/// [`ComparatorBank::compare_analog`]'s per-column expression
+/// (`quantize_ps(a + offset − θ)`), evaluated in the same order with the
+/// same associativity.
+#[allow(clippy::too_many_arguments)]
+fn nonideal_mvm_core(
+    params: &PsqLayerParams,
+    rows: usize,
+    phys_cols: usize,
+    blocks: &ColBlocks,
+    gains: &[f64],
+    offsets: &[f64],
+    plane: &mut PackedBits,
+    x: &[i64],
+    out: &mut NonIdealOutput,
+) {
+    assert_eq!(x.len(), rows, "input/crossbar row mismatch");
+    out.reset(phys_cols, params.x_bits);
+    for j in 0..params.x_bits {
+        plane.pack_bitplane(x, j);
+        let base = j as usize * phys_cols;
+        let analog = &mut out.analog[base..base + phys_cols];
+        blocks.and_for_each_one(plane, |c, r| analog[c] += gains[c * rows + r]);
+        for c in 0..phys_cols {
+            let idx = base + c;
+            let a = out.analog[idx];
+            let p = quantize_ps(a + offsets[c] - params.theta, params.mode);
+            out.p[idx] = p;
+            if p != 0 {
+                let s = params.scales[idx];
+                out.ps[c] = sat_add(out.ps[c], p as i64 * s, params.ps_bits);
             }
         }
     }
@@ -389,6 +461,7 @@ pub fn run_trial(
     ni: &NonIdealityParams,
     seed: u64,
 ) -> TrialOutcome {
+    assert_bit_widths(cfg.w_bits, cfg.x_bits);
     let mut rng = Rng::new(seed);
     let w_lo = -(1i64 << (cfg.w_bits - 1));
     let w_hi = (1i64 << (cfg.w_bits - 1)) - 1;
@@ -437,6 +510,7 @@ pub fn run_trial_scalar(
     ni: &NonIdealityParams,
     seed: u64,
 ) -> TrialOutcome {
+    assert_bit_widths(cfg.w_bits, cfg.x_bits);
     let mut rng = Rng::new(seed);
     let w_lo = -(1i64 << (cfg.w_bits - 1));
     let w_hi = (1i64 << (cfg.w_bits - 1)) - 1;

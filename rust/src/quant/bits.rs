@@ -12,8 +12,45 @@
 //! but the *unquantized* reference MVM below keeps them explicit so tests
 //! can verify exact integer equivalence.
 
+/// Hard upper bound on the weight/activation code widths the packing
+/// boundary accepts. The packing and range arithmetic computes
+/// `1 << w_bits` and `-(1 << (w_bits - 1))`; at 64 bits those shifts
+/// overflow (a panic in debug builds, silently masked wrong bit patterns
+/// in release), so widths are capped well below the word size.
+pub const MAX_CODE_BITS: u32 = 32;
+
+/// Validate `w_bits` / `x_bits` at a fallible boundary (config parsing,
+/// CLI flags): both must lie in `1..=MAX_CODE_BITS`. The packing
+/// functions enforce the same bound with a hard panic; callers holding
+/// user-supplied widths should reject them here first.
+pub fn validate_bit_widths(w_bits: u32, x_bits: u32) -> crate::Result<()> {
+    for (name, v) in [("w_bits", w_bits), ("x_bits", x_bits)] {
+        if !(1..=MAX_CODE_BITS).contains(&v) {
+            anyhow::bail!("{name} = {v} outside supported range 1..={MAX_CODE_BITS}");
+        }
+    }
+    Ok(())
+}
+
+/// Panicking form of [`validate_bit_widths`] for infallible interior
+/// paths (engine programming, trial synthesis) — a hard `assert!`, not a
+/// `debug_assert!`, so release builds fail loudly instead of computing
+/// with overflowed shift masks.
+#[inline]
+pub fn assert_bit_widths(w_bits: u32, x_bits: u32) {
+    assert!(
+        (1..=MAX_CODE_BITS).contains(&w_bits),
+        "w_bits = {w_bits} outside supported range 1..={MAX_CODE_BITS}"
+    );
+    assert!(
+        (1..=MAX_CODE_BITS).contains(&x_bits),
+        "x_bits = {x_bits} outside supported range 1..={MAX_CODE_BITS}"
+    );
+}
+
 /// Extract bit-plane `j` (0 = LSB) of a vector of unsigned activation codes.
 pub fn input_bitplane(x: &[i64], j: u32) -> Vec<u8> {
+    assert!(j < 64, "bit-plane index {j} overflows the activation word");
     x.iter()
         .map(|&v| {
             debug_assert!(v >= 0, "activations must be unsigned codes (got {v})");
@@ -24,13 +61,22 @@ pub fn input_bitplane(x: &[i64], j: u32) -> Vec<u8> {
 
 /// Extract bit-slice `i` of signed weight codes (two's complement over
 /// `w_bits`). Returns 0/1 per element.
+///
+/// Hard-validates `w_bits ∈ 1..=MAX_CODE_BITS` and every weight code
+/// against the `w_bits` two's-complement range — in release builds too,
+/// since an out-of-range code would silently alias another weight's bit
+/// pattern after masking.
 pub fn weight_bitslice(w: &[i64], i: u32, w_bits: u32) -> Vec<u8> {
+    assert!(
+        (1..=MAX_CODE_BITS).contains(&w_bits),
+        "w_bits = {w_bits} outside supported range 1..={MAX_CODE_BITS}"
+    );
     assert!(i < w_bits);
+    let lo = -(1i64 << (w_bits - 1));
+    let hi = (1i64 << (w_bits - 1)) - 1;
     w.iter()
         .map(|&v| {
-            let lo = -(1i64 << (w_bits - 1));
-            let hi = (1i64 << (w_bits - 1)) - 1;
-            debug_assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
+            assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
             // two's complement bit pattern over w_bits
             let pattern = (v as u64) & ((1u64 << w_bits) - 1);
             ((pattern >> i) & 1) as u8
@@ -146,14 +192,19 @@ impl PackedBits {
     }
 
     /// Pack bit-slice `i` of signed weight codes (two's complement over
-    /// `w_bits`) — the packed equivalent of [`weight_bitslice`].
+    /// `w_bits`) — the packed equivalent of [`weight_bitslice`]. Same hard
+    /// validation of `w_bits` and the weight-code range in release builds.
     pub fn from_bitslice(w: &[i64], i: u32, w_bits: u32) -> PackedBits {
+        assert!(
+            (1..=MAX_CODE_BITS).contains(&w_bits),
+            "w_bits = {w_bits} outside supported range 1..={MAX_CODE_BITS}"
+        );
         assert!(i < w_bits);
+        let lo = -(1i64 << (w_bits - 1));
+        let hi = (1i64 << (w_bits - 1)) - 1;
         let mut p = PackedBits::zeros(w.len());
         for (k, &v) in w.iter().enumerate() {
-            let lo = -(1i64 << (w_bits - 1));
-            let hi = (1i64 << (w_bits - 1)) - 1;
-            debug_assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
+            assert!(v >= lo && v <= hi, "weight {v} outside {w_bits}-bit range");
             let pattern = (v as u64) & ((1u64 << w_bits) - 1);
             p.words[k >> 6] |= ((pattern >> i) & 1) << (k & 63);
         }
@@ -268,6 +319,134 @@ impl PackedBits {
     /// Unpack to the scalar 0/1 byte representation (tests, debugging).
     pub fn to_bits(&self) -> Vec<u8> {
         (0..self.len).map(|i| self.get(i)).collect()
+    }
+}
+
+/// Number of physical columns per interleaved block in [`ColBlocks`].
+///
+/// Eight `u64` column words fit two AVX2 vectors (or one cache line), so
+/// one broadcast input-plane word from L1 serves the whole block.
+pub const COL_BLOCK: usize = 8;
+
+/// Column-blocked packed bit matrix — the batched hot-path layout for a
+/// whole crossbar of bit-slice columns.
+///
+/// [`PackedBits::dot`] re-streams the input bit-plane from cache once per
+/// column. `ColBlocks` transposes the storage into interleaved blocks of
+/// [`COL_BLOCK`] columns: word `wi` of column `b·COL_BLOCK + k` lives at
+/// `data[(b·nwords + wi)·COL_BLOCK + k]`, so the per-word inner step loads
+/// one plane word and ANDs it against eight contiguous column words — the
+/// shape the explicit-SIMD kernel (`--features simd`) vectorizes directly.
+/// Missing tail columns of the last block are zero words, which popcount
+/// to zero and never produce visitor callbacks, so no masking is needed.
+///
+/// [`ColBlocks::dot_many_scalar`] is the always-available blocked kernel
+/// and the bit-for-bit oracle for the SIMD path (the PR 3 pattern);
+/// [`ColBlocks::dot_many`] dispatches to AVX2 when the `simd` feature is
+/// compiled in and the CPU supports it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColBlocks {
+    rows: usize,
+    ncols: usize,
+    nwords: usize,
+    data: Vec<u64>,
+}
+
+impl ColBlocks {
+    /// Build from per-column packed bit vectors (all the same length).
+    pub fn from_cols(cols: &[PackedBits]) -> ColBlocks {
+        let rows = cols.first().map(|c| c.len()).unwrap_or(0);
+        assert!(
+            cols.iter().all(|c| c.len() == rows),
+            "all columns must have the same row count"
+        );
+        let ncols = cols.len();
+        let nwords = rows.div_ceil(64);
+        let nblocks = ncols.div_ceil(COL_BLOCK);
+        let mut data = vec![0u64; nblocks * nwords * COL_BLOCK];
+        for (c, col) in cols.iter().enumerate() {
+            let (b, k) = (c / COL_BLOCK, c % COL_BLOCK);
+            for (wi, &w) in col.words().iter().enumerate() {
+                data[(b * nwords + wi) * COL_BLOCK + k] = w;
+            }
+        }
+        ColBlocks { rows, ncols, nwords, data }
+    }
+
+    /// Row count shared by every column.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of (logical, unpadded) columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// AND+popcount of `plane` against every column at once:
+    /// `out[c] = Σ_i col_c[i]·plane[i]`. Dispatches to the explicit-SIMD
+    /// kernel when compiled with `--features simd` on a CPU with AVX2
+    /// (runtime-detected); otherwise runs [`ColBlocks::dot_many_scalar`].
+    /// Both paths produce identical integer results.
+    pub fn dot_many(&self, plane: &PackedBits, out: &mut [i64]) {
+        assert_eq!(plane.len(), self.rows, "plane/column length mismatch");
+        assert_eq!(out.len(), self.ncols, "output/column count mismatch");
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::quant::simd::active() {
+            // SAFETY: `active()` verified AVX2 support on this CPU.
+            unsafe {
+                crate::quant::simd::dot_many_avx2(plane.words(), &self.data, self.nwords, out);
+            }
+            return;
+        }
+        self.dot_many_scalar(plane, out);
+    }
+
+    /// Blocked scalar kernel (and the SIMD oracle): one plane-word load
+    /// serves `COL_BLOCK` column words via `&` + `count_ones`.
+    pub fn dot_many_scalar(&self, plane: &PackedBits, out: &mut [i64]) {
+        assert_eq!(plane.len(), self.rows, "plane/column length mismatch");
+        assert_eq!(out.len(), self.ncols, "output/column count mismatch");
+        let pwords = plane.words();
+        for b in 0..self.ncols.div_ceil(COL_BLOCK) {
+            let mut acc = [0i64; COL_BLOCK];
+            let boff = b * self.nwords * COL_BLOCK;
+            for (wi, &p) in pwords.iter().enumerate() {
+                let woff = boff + wi * COL_BLOCK;
+                for (k, a) in acc.iter_mut().enumerate() {
+                    *a += (self.data[woff + k] & p).count_ones() as i64;
+                }
+            }
+            let base = b * COL_BLOCK;
+            let width = COL_BLOCK.min(self.ncols - base);
+            out[base..base + width].copy_from_slice(&acc[..width]);
+        }
+    }
+
+    /// Visit `(col, row)` for every set bit of `col & plane`, block by
+    /// block. Within each column the rows are visited in ascending order
+    /// (word-major, then `trailing_zeros` within the word) — exactly the
+    /// order of [`PackedBits::and_for_each_one`] — so per-column `f64`
+    /// accumulations stay bit-identical to the unblocked engines even
+    /// though callbacks for different columns interleave.
+    #[inline]
+    pub fn and_for_each_one<F: FnMut(usize, usize)>(&self, plane: &PackedBits, mut f: F) {
+        assert_eq!(plane.len(), self.rows, "plane/column length mismatch");
+        let pwords = plane.words();
+        for b in 0..self.ncols.div_ceil(COL_BLOCK) {
+            let boff = b * self.nwords * COL_BLOCK;
+            let base = b * COL_BLOCK;
+            for (wi, &p) in pwords.iter().enumerate() {
+                let woff = boff + wi * COL_BLOCK;
+                for k in 0..COL_BLOCK {
+                    let mut m = self.data[woff + k] & p;
+                    while m != 0 {
+                        f(base + k, (wi << 6) + m.trailing_zeros() as usize);
+                        m &= m - 1;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -520,5 +699,110 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn dot_rejects_length_mismatch() {
         PackedBits::zeros(64).dot(&PackedBits::zeros(65));
+    }
+
+    // ---- bit-width validation (w_bits = 64 shift-overflow regression) ----
+
+    #[test]
+    fn validate_bit_widths_accepts_supported_range() {
+        for b in 1..=MAX_CODE_BITS {
+            assert!(validate_bit_widths(b, b).is_ok(), "{b} bits must be accepted");
+        }
+    }
+
+    #[test]
+    fn validate_bit_widths_rejects_overflow_values() {
+        // These run in release mode too: the whole point is that the old
+        // debug_assert! guards vanished there while `1 << 64` still
+        // overflowed.
+        for bad in [0u32, 33, 63, 64, 65, u32::MAX] {
+            assert!(validate_bit_widths(bad, 4).is_err(), "w_bits = {bad} must be rejected");
+            assert!(validate_bit_widths(4, bad).is_err(), "x_bits = {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside supported range")]
+    fn weight_bitslice_rejects_w_bits_64() {
+        weight_bitslice(&[0], 0, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside supported range")]
+    fn from_bitslice_rejects_w_bits_64() {
+        PackedBits::from_bitslice(&[0], 0, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 4-bit range")]
+    fn weight_bitslice_rejects_out_of_range_code_in_release_too() {
+        // 8 is not representable in 4-bit two's complement [-8, 7]; the
+        // check is a hard assert!, so this panics in release builds too.
+        weight_bitslice(&[8], 0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 4-bit range")]
+    fn from_bitslice_rejects_out_of_range_code_in_release_too() {
+        PackedBits::from_bitslice(&[-9], 0, 4);
+    }
+
+    // ---- ColBlocks ⇄ per-column equivalence ------------------------------
+
+    /// Deterministic pseudo-random bit for test fixtures.
+    fn fixture_bit(seed: usize, i: usize) -> u8 {
+        (((i * 2654435761) ^ (seed * 40503) ^ (i >> 3)) % 7 < 3) as u8
+    }
+
+    #[test]
+    fn col_blocks_dot_many_matches_per_column_dot() {
+        for &rows in BOUNDARY_LENS {
+            for ncols in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 31] {
+                let cols: Vec<PackedBits> = (0..ncols)
+                    .map(|c| {
+                        let bits: Vec<u8> = (0..rows).map(|i| fixture_bit(c + 1, i)).collect();
+                        PackedBits::from_bits(&bits)
+                    })
+                    .collect();
+                let pbits: Vec<u8> = (0..rows).map(|i| fixture_bit(0, i)).collect();
+                let plane = PackedBits::from_bits(&pbits);
+                let blocks = ColBlocks::from_cols(&cols);
+                assert_eq!(blocks.rows(), if ncols == 0 { 0 } else { rows });
+                assert_eq!(blocks.ncols(), ncols);
+                if ncols == 0 {
+                    continue;
+                }
+                let expect: Vec<i64> = cols.iter().map(|c| c.dot(&plane)).collect();
+                let mut got = vec![-1i64; ncols];
+                blocks.dot_many_scalar(&plane, &mut got);
+                assert_eq!(got, expect, "blocked scalar at {rows}x{ncols}");
+                let mut got2 = vec![-1i64; ncols];
+                blocks.dot_many(&plane, &mut got2);
+                assert_eq!(got2, expect, "dispatched dot_many at {rows}x{ncols}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_blocks_visitor_matches_per_column_visitor() {
+        for &rows in BOUNDARY_LENS {
+            let ncols = 11; // straddles one full block + a 3-column tail
+            let cols: Vec<PackedBits> = (0..ncols)
+                .map(|c| {
+                    let bits: Vec<u8> = (0..rows).map(|i| fixture_bit(c + 17, i)).collect();
+                    PackedBits::from_bits(&bits)
+                })
+                .collect();
+            let plane =
+                PackedBits::from_bits(&(0..rows).map(|i| fixture_bit(5, i)).collect::<Vec<_>>());
+            let blocks = ColBlocks::from_cols(&cols);
+            let mut got: Vec<Vec<usize>> = vec![Vec::new(); ncols];
+            blocks.and_for_each_one(&plane, |c, r| got[c].push(r));
+            for (c, col) in cols.iter().enumerate() {
+                let mut expect = Vec::new();
+                col.and_for_each_one(&plane, |r| expect.push(r));
+                assert_eq!(got[c], expect, "column {c} rows must match, ascending, at {rows} rows");
+            }
+        }
     }
 }

@@ -7,7 +7,11 @@
 //! * [`bits`] — weight bit-slicing and input bit-streaming (bit-slice = 1,
 //!   bit-stream = 1, as in the paper's evaluation), plus the packed
 //!   multi-word bit-vector ([`bits::PackedBits`]) whose AND+popcount dot
-//!   kernel is the hot-path form of a crossbar column op,
+//!   kernel is the hot-path form of a crossbar column op, and the
+//!   column-blocked [`bits::ColBlocks`] layout that serves one bit-plane
+//!   load to eight columns at once,
+//! * [`simd`] — the explicit-SIMD (AVX2, runtime-detected) variant of the
+//!   blocked AND+popcount kernel behind the `simd` cargo feature,
 //! * [`psq`] — binary / ternary partial-sum quantization with trainable
 //!   scale factors (the algorithm of Fig. 2(a)), the reference PSQ-MVM,
 //!   and the weight-stationary [`psq::PsqEngine`] (program once, evaluate
@@ -23,3 +27,4 @@ pub mod fixed;
 pub mod bits;
 pub mod psq;
 pub mod encode;
+pub mod simd;

@@ -14,9 +14,13 @@
 //! scale factors) are folded into batch-norm on the python side; the rust
 //! reference here works purely on integer codes plus one `f64` output step.
 
-use super::bits::{bit_dot, input_bitplane, weight_bitslice, Mat, PackedBits};
+use super::bits::{
+    assert_bit_widths, bit_dot, input_bitplane, weight_bitslice, ColBlocks, Mat, PackedBits,
+};
 use super::fixed::sat_add;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
 
 /// Partial-sum quantization mode.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -110,6 +114,7 @@ impl PsqLayerParams {
         ps_bits: u32,
         rng: &mut Rng,
     ) -> PsqLayerParams {
+        assert_bit_widths(w_bits, x_bits);
         let phys_cols = w.cols * w_bits as usize;
         let theta = w.rows as f64 * 0.25; // mean popcount for dense 0/1 bits
         // keep codes within a 4-bit signed scale-factor range (the CIFAR
@@ -178,27 +183,30 @@ impl PsqOutput {
 ///
 /// [`PsqEngine::program`] pays the bit-slice extraction and packing cost a
 /// single time; every [`PsqEngine::mvm_into`] then runs the whole
-/// `x_bits × phys_cols` sweep as AND+popcount word kernels
-/// ([`PackedBits::dot`]) with **zero per-call heap allocation** (the input
-/// bit-plane scratch and the caller's output buffer are reused).
-/// Output is bit-identical to [`psq_mvm_scalar`], which is kept as the
-/// test oracle.
+/// `x_bits × phys_cols` sweep through the column-blocked AND+popcount
+/// kernel ([`ColBlocks::dot_many`] — one bit-plane load serves eight
+/// columns, explicit-SIMD with `--features simd`) with **zero per-call
+/// heap allocation** (the input bit-plane scratch and the caller's output
+/// buffer are reused). Output is bit-identical to [`psq_mvm_scalar`],
+/// which is kept as the test oracle.
 #[derive(Clone, Debug)]
 pub struct PsqEngine {
     params: PsqLayerParams,
     rows: usize,
     phys_cols: usize,
-    /// Packed physical bit-slice columns, `w_bits` per logical column.
-    cols: Vec<PackedBits>,
+    /// Column-blocked physical bit-slice columns, `w_bits` per logical
+    /// column.
+    blocks: ColBlocks,
     /// Input bit-plane scratch, repacked per stream.
     plane: PackedBits,
 }
 
 impl PsqEngine {
     /// Program the crossbar: expand each logical column of `w` into
-    /// `w_bits` packed physical bit-slice columns (the program-once cost
-    /// of the weight-stationary architecture).
+    /// `w_bits` packed physical bit-slice columns, stored column-blocked
+    /// (the program-once cost of the weight-stationary architecture).
     pub fn program(w: &Mat, params: &PsqLayerParams) -> PsqEngine {
+        assert_bit_widths(params.w_bits, params.x_bits);
         let phys_cols = w.cols * params.w_bits as usize;
         assert_eq!(
             params.scales.len(),
@@ -216,7 +224,7 @@ impl PsqEngine {
             params: params.clone(),
             rows: w.rows,
             phys_cols,
-            cols,
+            blocks: ColBlocks::from_cols(&cols),
             plane: PackedBits::zeros(w.rows),
         }
     }
@@ -247,21 +255,89 @@ impl PsqEngine {
     /// One full MVM into a reusable output buffer — no heap allocation
     /// once `out` and the plane scratch have warmed up to this shape.
     pub fn mvm_into(&mut self, x: &[i64], out: &mut PsqOutput) {
-        psq_mvm_count().incr();
-        assert_eq!(x.len(), self.rows, "input/crossbar row mismatch");
-        out.reset(self.phys_cols, self.params.x_bits);
-        for j in 0..self.params.x_bits {
-            self.plane.pack_bitplane(x, j);
-            for c in 0..self.phys_cols {
-                let raw = self.cols[c].dot(&self.plane);
-                let p = quantize_ps(raw as f64 - self.params.theta, self.params.mode);
-                let idx = j as usize * self.phys_cols + c;
-                out.raw[idx] = raw;
-                out.p[idx] = p;
-                if p != 0 {
-                    let s = self.params.scales[idx];
-                    out.ps[c] = sat_add(out.ps[c], p as i64 * s, self.params.ps_bits);
-                }
+        let PsqEngine { params, rows, phys_cols, blocks, plane } = self;
+        psq_mvm_core(params, *rows, *phys_cols, blocks, plane, x, out);
+    }
+
+    /// Shared-engine MVM with caller-supplied bit-plane scratch — the
+    /// `&self` form used when one programmed crossbar serves concurrent
+    /// image streams (each worker owns a scratch plane; see
+    /// [`PsqEngine::mvm_batch`]). Identical output to
+    /// [`PsqEngine::mvm_into`].
+    pub fn mvm_with(&self, x: &[i64], plane: &mut PackedBits, out: &mut PsqOutput) {
+        psq_mvm_core(&self.params, self.rows, self.phys_cols, &self.blocks, plane, x, out);
+    }
+
+    /// Evaluate a batch of input images against the shared programmed
+    /// crossbar, fanned out over `pool` in fixed-size chunks (each worker
+    /// task reuses one scratch plane and appends whole images).
+    ///
+    /// Deterministic: `out[i]` is exactly [`PsqEngine::mvm_into`] of
+    /// `images[i]` — byte-identical for any pool size, in input order.
+    pub fn mvm_batch(self: &Arc<Self>, images: Vec<Vec<i64>>, pool: &ThreadPool) -> Vec<PsqOutput> {
+        let engine = Arc::clone(self);
+        let outs = pool.map(chunk_images(images), move |chunk| {
+            let mut plane = PackedBits::zeros(0);
+            chunk
+                .iter()
+                .map(|x| {
+                    let mut out = PsqOutput::zeroed(engine.phys_cols, engine.params.x_bits);
+                    engine.mvm_with(x, &mut plane, &mut out);
+                    out
+                })
+                .collect::<Vec<_>>()
+        });
+        outs.into_iter().flatten().collect()
+    }
+}
+
+/// Images per worker task in the batch MVM paths: big enough to amortize
+/// the per-task scratch warm-up, small enough to load-balance a pool.
+pub(crate) const BATCH_CHUNK: usize = 8;
+
+/// Split an owned image list into `BATCH_CHUNK`-sized chunks for
+/// [`ThreadPool::map`] (which needs `'static` items), preserving order.
+pub(crate) fn chunk_images(images: Vec<Vec<i64>>) -> Vec<Vec<Vec<i64>>> {
+    let mut chunks: Vec<Vec<Vec<i64>>> = Vec::with_capacity(images.len().div_ceil(BATCH_CHUNK));
+    for (i, x) in images.into_iter().enumerate() {
+        if i % BATCH_CHUNK == 0 {
+            chunks.push(Vec::with_capacity(BATCH_CHUNK));
+        }
+        chunks.last_mut().expect("chunk pushed above").push(x);
+    }
+    chunks
+}
+
+/// The blocked PSQ-MVM sweep shared by [`PsqEngine::mvm_into`] (field-split
+/// borrows) and [`PsqEngine::mvm_with`] (shared engine + worker scratch).
+///
+/// `out.raw` doubles as the `dot_many` output buffer per stream, so the
+/// whole sweep stays allocation-free; the quantize/accumulate pass then
+/// walks the columns in ascending order exactly as the scalar oracle does.
+fn psq_mvm_core(
+    params: &PsqLayerParams,
+    rows: usize,
+    phys_cols: usize,
+    blocks: &ColBlocks,
+    plane: &mut PackedBits,
+    x: &[i64],
+    out: &mut PsqOutput,
+) {
+    psq_mvm_count().incr();
+    assert_eq!(x.len(), rows, "input/crossbar row mismatch");
+    out.reset(phys_cols, params.x_bits);
+    for j in 0..params.x_bits {
+        plane.pack_bitplane(x, j);
+        let base = j as usize * phys_cols;
+        blocks.dot_many(plane, &mut out.raw[base..base + phys_cols]);
+        for c in 0..phys_cols {
+            let idx = base + c;
+            let raw = out.raw[idx];
+            let p = quantize_ps(raw as f64 - params.theta, params.mode);
+            out.p[idx] = p;
+            if p != 0 {
+                let s = params.scales[idx];
+                out.ps[c] = sat_add(out.ps[c], p as i64 * s, params.ps_bits);
             }
         }
     }

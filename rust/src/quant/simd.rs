@@ -1,0 +1,126 @@
+//! Explicit-SIMD AND+popcount kernels (`--features simd`).
+//!
+//! The paper's column operation — "AND and popcount" (§3) — vectorizes
+//! cleanly over [`crate::quant::bits::ColBlocks`]' interleaved layout: one
+//! broadcast input-plane word ANDs against eight contiguous column words
+//! (two AVX2 vectors), and the per-byte nibble-LUT popcount
+//! (`vpshufb` + `vpsadbw`, the classic Muła technique) reduces each 64-bit
+//! lane to its set-bit count. Popcounts are exact integers, so the SIMD
+//! path is bit-identical to [`ColBlocks::dot_many_scalar`] — the blocked
+//! scalar kernel stays in the build as the always-available oracle and
+//! fallback, and the differential suite in `tests/simd_equivalence.rs`
+//! holds the two together.
+//!
+//! Dispatch policy: the kernel is compiled only with `--features simd` on
+//! `x86_64` and selected at runtime via `is_x86_feature_detected!("avx2")`
+//! (cached). Everything else — other architectures, CPUs without AVX2, or
+//! `HCIM_NO_SIMD=1` in the environment — uses the blocked scalar kernel.
+//!
+//! [`ColBlocks::dot_many_scalar`]: crate::quant::bits::ColBlocks::dot_many_scalar
+
+use std::sync::OnceLock;
+
+/// True when the crate was compiled with the `simd` feature (regardless of
+/// what the CPU supports). Used by benches and reports to label results.
+pub fn compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// True when [`crate::quant::bits::ColBlocks::dot_many`] will actually run
+/// the explicit-SIMD kernel: the `simd` feature is compiled in, the target
+/// is `x86_64`, the CPU reports AVX2, and `HCIM_NO_SIMD` is not set in the
+/// environment. Detection runs once and is cached.
+pub fn active() -> bool {
+    static ACTIVE: OnceLock<bool> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detect() -> bool {
+    let disabled = std::env::var("HCIM_NO_SIMD").map(|v| v != "0" && !v.is_empty());
+    if disabled.unwrap_or(false) {
+        return false;
+    }
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn detect() -> bool {
+    false
+}
+
+/// AVX2 blocked AND+popcount: `out[c] = popcount(col_c & plane)` over the
+/// interleaved [`crate::quant::bits::ColBlocks`] layout (`data[(b·nwords +
+/// wi)·8 + k]`). Tail-block padding columns are zero words, so the vector
+/// lanes for them count zero and the scalar epilogue simply skips them.
+///
+/// # Safety
+///
+/// The CPU must support AVX2 — callers go through [`active`]. `data` must
+/// hold `ceil(out.len()/8) · nwords · 8` words and `pwords` at least
+/// `nwords` words (both guaranteed by `ColBlocks`' constructor and the
+/// length asserts in `dot_many`).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_many_avx2(pwords: &[u64], data: &[u64], nwords: usize, out: &mut [i64]) {
+    use std::arch::x86_64::*;
+
+    let ncols = out.len();
+    let nblocks = ncols.div_ceil(8);
+    debug_assert!(data.len() >= nblocks * nwords * 8);
+    debug_assert!(pwords.len() >= nwords);
+
+    // Per-nibble popcount table for vpshufb, duplicated across both lanes.
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_nibble = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+
+    for b in 0..nblocks {
+        let boff = b * nwords * 8;
+        let mut acc0 = zero;
+        let mut acc1 = zero;
+        for (wi, &p) in pwords.iter().take(nwords).enumerate() {
+            let pv = _mm256_set1_epi64x(p as i64);
+            let off = boff + wi * 8;
+            let v0 = _mm256_loadu_si256(data.as_ptr().add(off) as *const __m256i);
+            let v1 = _mm256_loadu_si256(data.as_ptr().add(off + 4) as *const __m256i);
+            let a0 = _mm256_and_si256(v0, pv);
+            let a1 = _mm256_and_si256(v1, pv);
+            // popcount per byte via nibble LUT, then horizontal byte sums
+            // into the four 64-bit lanes (exact: max 64 per lane per word).
+            let c0 = _mm256_add_epi8(
+                _mm256_shuffle_epi8(lut, _mm256_and_si256(a0, low_nibble)),
+                _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16(a0, 4), low_nibble)),
+            );
+            let c1 = _mm256_add_epi8(
+                _mm256_shuffle_epi8(lut, _mm256_and_si256(a1, low_nibble)),
+                _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16(a1, 4), low_nibble)),
+            );
+            acc0 = _mm256_add_epi64(acc0, _mm256_sad_epu8(c0, zero));
+            acc1 = _mm256_add_epi64(acc1, _mm256_sad_epu8(c1, zero));
+        }
+        let mut lanes = [0i64; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(lanes.as_mut_ptr().add(4) as *mut __m256i, acc1);
+        let base = b * 8;
+        let width = 8.min(ncols - base);
+        out[base..base + width].copy_from_slice(&lanes[..width]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn active_implies_compiled() {
+        // `active()` may be false on any box (no feature, no AVX2, or
+        // HCIM_NO_SIMD), but it must never claim a kernel that was not
+        // compiled in.
+        if super::active() {
+            assert!(super::compiled());
+        }
+    }
+}

@@ -14,24 +14,25 @@
 //! latency is one crossbar cycle per stream (pipelined with the column
 //! periphery downstream).
 
-use crate::quant::bits::{Mat, PackedBits};
+use crate::quant::bits::{ColBlocks, Mat, PackedBits};
 use crate::sim::energy::{Component, CostLedger};
 use crate::sim::params::CalibParams;
 
 /// A programmed crossbar holding bit-sliced weights (weight-stationary).
 ///
-/// Hot-path representation (EXPERIMENTS.md §Perf): each physical column's
-/// cell bits live in a shared multi-word [`PackedBits`] mask over the
-/// wordlines, so one analog column evaluation is `(col & plane)` popcount —
-/// the idealised popcount current in one or two word instructions per
-/// 64 rows. Tiles larger than 128 wordlines simply grow the word vector
-/// (the former `u128` representation capped rows at 128).
+/// Hot-path representation (EXPERIMENTS.md §Perf): the physical columns'
+/// cell bits live in the column-blocked [`ColBlocks`] layout, so one
+/// streamed bit-plane evaluates all columns through the blocked
+/// AND+popcount kernel — one plane-word load serves eight columns, and the
+/// explicit-SIMD kernel takes over under `--features simd`. Tiles larger
+/// than 128 wordlines simply grow the word vector (the former `u128`
+/// representation capped rows at 128).
 #[derive(Clone, Debug)]
 pub struct Crossbar {
     pub rows: usize,
     pub cols: usize,
-    /// Per physical column: bit r = cell (r, c).
-    cells: Vec<PackedBits>,
+    /// Column-blocked cell bits: bit r of column c = cell (r, c).
+    cells: ColBlocks,
 }
 
 impl Crossbar {
@@ -39,22 +40,22 @@ impl Crossbar {
     /// logical-cols) expands each logical column into `w_bits` physical
     /// bit-slice columns.
     pub fn program(w: &Mat, w_bits: u32) -> Crossbar {
-        let mut cells = Vec::with_capacity(w.cols * w_bits as usize);
+        let mut cols = Vec::with_capacity(w.cols * w_bits as usize);
         for lc in 0..w.cols {
             let col = w.col(lc);
             for i in 0..w_bits {
-                cells.push(PackedBits::from_bitslice(&col, i, w_bits));
+                cols.push(PackedBits::from_bitslice(&col, i, w_bits));
             }
         }
-        Crossbar { rows: w.rows, cols: cells.len(), cells }
+        Crossbar { rows: w.rows, cols: cols.len(), cells: ColBlocks::from_cols(&cols) }
     }
 
     /// Program raw physical bits directly (for tests / tiling).
     pub fn from_bits(raw: Vec<Vec<u8>>) -> Crossbar {
         let rows = raw.first().map(|c| c.len()).unwrap_or(0);
         assert!(raw.iter().all(|c| c.len() == rows), "ragged columns");
-        let cells: Vec<PackedBits> = raw.iter().map(|c| PackedBits::from_bits(c)).collect();
-        Crossbar { rows, cols: cells.len(), cells }
+        let cols: Vec<PackedBits> = raw.iter().map(|c| PackedBits::from_bits(c)).collect();
+        Crossbar { rows, cols: cols.len(), cells: ColBlocks::from_cols(&cols) }
     }
 
     /// One analog evaluation for input bit-plane `j` of activation codes
@@ -96,7 +97,7 @@ impl Crossbar {
             self.cols as u64,
         );
         ledger.add_latency(params.xbar_cycle_ns);
-        self.cells.iter().map(|col| col.dot(plane)).collect()
+        self.evaluate_plane_pure(plane)
     }
 
     /// Pure functional evaluation (no cost booking) — used by oracles.
@@ -105,10 +106,17 @@ impl Crossbar {
         self.evaluate_plane_pure(&PackedBits::from_bitplane(x, j))
     }
 
-    /// Pure functional evaluation over a packed plane (no cost booking).
+    /// Pure functional evaluation over a packed plane (no cost booking):
+    /// the blocked AND+popcount kernel across every column at once.
     pub fn evaluate_plane_pure(&self, plane: &PackedBits) -> Vec<i64> {
         assert_eq!(plane.len(), self.rows, "plane length != crossbar rows");
-        self.cells.iter().map(|col| col.dot(plane)).collect()
+        if self.cols == 0 {
+            // a column-less crossbar has no blocked storage to consult
+            return Vec::new();
+        }
+        let mut out = vec![0i64; self.cols];
+        self.cells.dot_many(plane, &mut out);
+        out
     }
 
     /// Crossbar silicon area.

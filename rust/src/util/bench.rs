@@ -40,6 +40,7 @@ pub struct Bencher {
     warmup: Duration,
     budget: Duration,
     results: Vec<BenchResult>,
+    provenance: Option<String>,
 }
 
 impl Default for Bencher {
@@ -50,7 +51,15 @@ impl Default for Bencher {
 
 impl Bencher {
     pub fn new(warmup: Duration, budget: Duration) -> Bencher {
-        Bencher { warmup, budget, results: Vec::new() }
+        Bencher { warmup, budget, results: Vec::new(), provenance: None }
+    }
+
+    /// Attach a provenance string (runner, commit, date, kernel flavour)
+    /// that [`Bencher::to_json`] emits alongside the results, so
+    /// checked-in `BENCH_*.json` artifacts describe where their numbers
+    /// came from.
+    pub fn set_provenance(&mut self, p: impl Into<String>) {
+        self.provenance = Some(p.into());
     }
 
     /// Fast settings for CI-ish runs (set `HCIM_BENCH_FAST=1`).
@@ -144,6 +153,9 @@ impl Bencher {
             .collect();
         let mut top = BTreeMap::new();
         top.insert("benchmarks".into(), Json::Arr(arr));
+        if let Some(p) = &self.provenance {
+            top.insert("provenance".into(), Json::Str(p.clone()));
+        }
         Json::Obj(top)
     }
 
@@ -241,6 +253,18 @@ mod tests {
             assert!(e.num_field("p90_ns").unwrap() >= 0.0);
             assert!(e.num_field("throughput_per_s").unwrap() > 0.0);
         }
+    }
+
+    #[test]
+    fn json_report_carries_provenance() {
+        let mut b = Bencher::new(Duration::from_millis(2), Duration::from_millis(8));
+        b.bench("delta", || {
+            black_box(5u64 * 5);
+        });
+        assert!(b.to_json().get("provenance").is_none(), "absent until set");
+        b.set_provenance("runner X · commit Y · date Z");
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.str_field("provenance").unwrap(), "runner X · commit Y · date Z");
     }
 
     #[test]

@@ -17,6 +17,12 @@ pub struct Summary {
 
 impl Summary {
     /// Compute a summary over `xs` (empty input yields all-zero summary).
+    ///
+    /// NaN samples never panic: sorting uses `f64::total_cmp`, which
+    /// places positive NaN after `+∞` (and negative NaN before `-∞`), so a
+    /// stray NaN latency sample (e.g. a degraded-chip `svc_inflation`
+    /// edge case) lands in `max` — and propagates into `mean`/`std_dev` as
+    /// NaN — instead of aborting the whole report.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
             return Summary { n: 0, mean: 0.0, std_dev: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
@@ -29,7 +35,7 @@ impl Summary {
             0.0
         };
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
@@ -123,6 +129,21 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_samples() {
+        // regression: partial_cmp(..).unwrap() panicked on the first NaN
+        // latency sample; total_cmp sorts it after +∞ instead.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN must sort last, into max");
+        assert_eq!(s.p50, 2.0, "median of [1, 2, NaN] by total order");
+        assert!(s.mean.is_nan(), "NaN propagates through the mean");
+        // finite-only input is untouched by the ordering change
+        let t = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!((t.min, t.p50, t.max), (1.0, 2.0, 3.0));
     }
 
     #[test]

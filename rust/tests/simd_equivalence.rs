@@ -1,0 +1,251 @@
+//! SIMD / blocked-kernel ⇄ scalar equivalence — the bit-exactness guard
+//! of the column-blocked AND+popcount engine (and of the explicit-SIMD
+//! kernel when built with `--features simd`).
+//!
+//! `ColBlocks::dot_many` dispatches to AVX2 when compiled in and
+//! runtime-detected, and to the blocked scalar kernel otherwise, so this
+//! suite runs against whichever kernel the build actually ships: under
+//! `--features simd` on an AVX2 box every `dot_many`/engine call below
+//! exercises the vector kernel against the byte-per-bit and per-column
+//! scalar oracles. CI runs the whole test suite both with and without the
+//! feature; the golden-file tests (`tests/golden/` serve/timeline JSON)
+//! ride along in the `--features simd` pass, which is the byte-identity
+//! check that the SIMD build reproduces those artifacts exactly.
+//!
+//! Covered here: `dot_many` vs per-column `dot` vs `bit_dot` across
+//! lengths straddling 64-bit word AND 256-bit SIMD-lane boundaries and
+//! column counts straddling the 8-column block width; blocked MVM engines
+//! vs their scalar oracles (binary + ternary, with and without stuck-at
+//! fault masks, `f64` analog sums included); and batch MVM determinism
+//! across thread-pool sizes.
+
+use hcim::nonideal::{
+    psq_mvm_nonideal_scalar, CrossbarPerturbation, NonIdealEngine, NonIdealOutput,
+    NonIdealityParams,
+};
+use hcim::quant::bits::{bit_dot, ColBlocks, Mat, PackedBits};
+use hcim::quant::psq::{psq_mvm_scalar, PsqEngine, PsqLayerParams, PsqMode, PsqOutput};
+use hcim::util::rng::Rng;
+use hcim::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Row counts straddling the `u64` word boundaries (63/64/65, 127/128/129)
+/// and the 256-bit SIMD lane boundaries (255/256/257 bits = 4 words).
+const BOUNDARY_LENS: &[usize] =
+    &[1, 2, 63, 64, 65, 127, 128, 129, 191, 192, 193, 255, 256, 257, 300];
+
+/// Column counts straddling the 8-column block width.
+const BOUNDARY_COLS: &[usize] = &[1, 2, 7, 8, 9, 15, 16, 17, 24, 31];
+
+fn fixture_bits(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.next_u64() & 1) as u8).collect()
+}
+
+#[test]
+fn dot_many_matches_scalar_oracles_across_boundaries() {
+    for &rows in BOUNDARY_LENS {
+        for &ncols in BOUNDARY_COLS {
+            let colbits: Vec<Vec<u8>> = (0..ncols)
+                .map(|c| fixture_bits((rows * 1000 + c) as u64, rows))
+                .collect();
+            let cols: Vec<PackedBits> = colbits.iter().map(|b| PackedBits::from_bits(b)).collect();
+            let pbits = fixture_bits(rows as u64 ^ 0xD07, rows);
+            let plane = PackedBits::from_bits(&pbits);
+            let blocks = ColBlocks::from_cols(&cols);
+
+            // byte-per-bit oracle and the per-column packed kernel
+            let expect: Vec<i64> = colbits.iter().map(|b| bit_dot(b, &pbits)).collect();
+            let per_col: Vec<i64> = cols.iter().map(|c| c.dot(&plane)).collect();
+            assert_eq!(per_col, expect, "per-column dot at {rows}x{ncols}");
+
+            let mut blocked = vec![-1i64; ncols];
+            blocks.dot_many_scalar(&plane, &mut blocked);
+            assert_eq!(blocked, expect, "blocked scalar at {rows}x{ncols}");
+
+            let mut dispatched = vec![-1i64; ncols];
+            blocks.dot_many(&plane, &mut dispatched);
+            assert_eq!(dispatched, expect, "dispatched (simd?) at {rows}x{ncols}");
+        }
+    }
+}
+
+#[test]
+fn simd_kernel_agrees_with_blocked_scalar_on_adversarial_words() {
+    // all-ones / alternating / sparse patterns at SIMD-lane-straddling
+    // shapes — the popcount byte-sum path must be exact, not approximate
+    for &rows in &[256usize, 257, 300, 1024] {
+        for (tag, f) in [
+            ("ones", Box::new(|_: usize| 1u8) as Box<dyn Fn(usize) -> u8>),
+            ("alt", Box::new(|i: usize| (i % 2) as u8)),
+            ("sparse", Box::new(|i: usize| (i % 61 == 0) as u8)),
+        ] {
+            let cols: Vec<PackedBits> = (0..17)
+                .map(|c| {
+                    let bits: Vec<u8> = (0..rows).map(|i| f(i + c)).collect();
+                    PackedBits::from_bits(&bits)
+                })
+                .collect();
+            let plane = PackedBits::from_bits(&vec![1u8; rows]);
+            let blocks = ColBlocks::from_cols(&cols);
+            let mut a = vec![0i64; 17];
+            let mut b = vec![0i64; 17];
+            blocks.dot_many(&plane, &mut a);
+            blocks.dot_many_scalar(&plane, &mut b);
+            assert_eq!(a, b, "{tag} pattern at {rows} rows");
+        }
+    }
+}
+
+fn calibrated_problem(
+    rows: usize,
+    cols: usize,
+    mode: PsqMode,
+    seed: u64,
+) -> (Mat, Vec<i64>, PsqLayerParams) {
+    let mut rng = Rng::new(seed);
+    let w = Mat::from_fn(rows, cols, |_, _| rng.range_i64(-8, 7));
+    let params = PsqLayerParams::calibrated(&w, mode, 4, 4, 8, &mut rng);
+    let x: Vec<i64> = (0..rows).map(|_| rng.range_i64(0, 15)).collect();
+    (w, x, params)
+}
+
+#[test]
+fn blocked_psq_engine_matches_scalar_oracle_across_boundaries() {
+    for &rows in BOUNDARY_LENS {
+        for mode in [PsqMode::Binary, PsqMode::Ternary { alpha: 1.0 }] {
+            let (w, x, params) = calibrated_problem(rows, 3, mode, rows as u64 ^ 0xA11);
+            let mut engine = PsqEngine::program(&w, &params);
+            let mut out = PsqOutput::zeroed(0, 0);
+            engine.mvm_into(&x, &mut out);
+            let scalar = psq_mvm_scalar(&w, &x, &params);
+            let ctx = format!("{} at {rows} rows", mode.precision_label());
+            assert_eq!(out.ps, scalar.ps, "{ctx}: PS");
+            assert_eq!(out.p, scalar.p, "{ctx}: codes");
+            assert_eq!(out.raw, scalar.raw, "{ctx}: raw popcounts");
+        }
+    }
+}
+
+#[test]
+fn blocked_nonideal_engine_matches_scalar_with_and_without_fault_masks() {
+    for &rows in BOUNDARY_LENS {
+        for (tag, ni) in [
+            ("no faults", NonIdealityParams::ideal()),
+            (
+                "stuck-at faults",
+                NonIdealityParams {
+                    sigma_g: 0.2,
+                    stuck_on: 0.05,
+                    stuck_off: 0.05,
+                    ir_drop: 0.1,
+                    sigma_cmp: 0.5,
+                },
+            ),
+        ] {
+            for mode in [PsqMode::Binary, PsqMode::Ternary { alpha: 1.0 }] {
+                let (w, x, params) = calibrated_problem(rows, 2, mode, rows as u64 ^ 0xFA17);
+                let mut rng = Rng::new(rows as u64 ^ 0x5EED);
+                let pert = CrossbarPerturbation::sample(rows, w.cols * 4, &ni, &mut rng);
+                let mut engine = NonIdealEngine::program(&w, &params, &pert);
+                let mut out = NonIdealOutput::zeroed(0, 0);
+                engine.mvm_into(&x, &mut out);
+                let scalar = psq_mvm_nonideal_scalar(&w, &x, &params, &pert);
+                let ctx = format!("{tag}, {} at {rows} rows", mode.precision_label());
+                assert_eq!(out.p, scalar.p, "{ctx}: codes");
+                assert_eq!(out.ps, scalar.ps, "{ctx}: PS");
+                // f64 equality on purpose: the blocked visitor must keep
+                // the scalar per-column summation order exactly
+                assert_eq!(out.analog, scalar.analog, "{ctx}: analog sums");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_mvm_is_byte_identical_across_pool_sizes() {
+    let (w, _, params) = calibrated_problem(129, 4, PsqMode::Ternary { alpha: 1.0 }, 0xBA7C);
+    let mut rng = Rng::new(0x1337);
+    let images: Vec<Vec<i64>> = (0..19) // deliberately not a chunk multiple
+        .map(|_| (0..129).map(|_| rng.range_i64(0, 15)).collect())
+        .collect();
+
+    let engine = Arc::new(PsqEngine::program(&w, &params));
+    let expected: Vec<PsqOutput> = {
+        let mut plane = PackedBits::zeros(0);
+        images
+            .iter()
+            .map(|x| {
+                let mut out = PsqOutput::zeroed(0, 0);
+                engine.mvm_with(x, &mut plane, &mut out);
+                out
+            })
+            .collect()
+    };
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        let got = engine.mvm_batch(images.clone(), &pool);
+        assert_eq!(got.len(), expected.len(), "pool = {workers}");
+        for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(g.ps, e.ps, "pool = {workers}, image {i}: PS");
+            assert_eq!(g.p, e.p, "pool = {workers}, image {i}: codes");
+            assert_eq!(g.raw, e.raw, "pool = {workers}, image {i}: raw");
+        }
+    }
+
+    // and the perturbed engine, f64 analog sums included
+    let ni = NonIdealityParams { sigma_g: 0.25, ..NonIdealityParams::ideal() };
+    let mut prng = Rng::new(0xF00D);
+    let pert = CrossbarPerturbation::sample(129, 16, &ni, &mut prng);
+    let ni_engine = Arc::new(NonIdealEngine::program(&w, &params, &pert));
+    let ni_expected: Vec<NonIdealOutput> = {
+        let mut plane = PackedBits::zeros(0);
+        images
+            .iter()
+            .map(|x| {
+                let mut out = NonIdealOutput::zeroed(0, 0);
+                ni_engine.mvm_with(x, &mut plane, &mut out);
+                out
+            })
+            .collect()
+    };
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        let got = ni_engine.mvm_batch(images.clone(), &pool);
+        for (i, (g, e)) in got.iter().zip(&ni_expected).enumerate() {
+            assert_eq!(g.p, e.p, "pool = {workers}, image {i}: codes");
+            assert_eq!(g.ps, e.ps, "pool = {workers}, image {i}: PS");
+            assert_eq!(g.analog, e.analog, "pool = {workers}, image {i}: analog sums");
+        }
+    }
+}
+
+#[test]
+fn kernel_dispatch_is_consistent() {
+    // whichever kernel active() selects, repeated dispatches must agree
+    // with each other and with the blocked scalar oracle (a regression
+    // guard against state leaking between dot_many calls)
+    let cols: Vec<PackedBits> = (0..13)
+        .map(|c| PackedBits::from_bits(&fixture_bits(c as u64, 300)))
+        .collect();
+    let blocks = ColBlocks::from_cols(&cols);
+    let plane = PackedBits::from_bits(&fixture_bits(0xAB, 300));
+    let mut first = vec![0i64; 13];
+    blocks.dot_many(&plane, &mut first);
+    for _ in 0..3 {
+        let mut again = vec![0i64; 13];
+        blocks.dot_many(&plane, &mut again);
+        assert_eq!(again, first);
+    }
+    let mut scalar = vec![0i64; 13];
+    blocks.dot_many_scalar(&plane, &mut scalar);
+    assert_eq!(scalar, first);
+    // report which kernel this build actually tested (visible with
+    // `cargo test -- --nocapture`)
+    let kernel = if hcim::quant::simd::active() {
+        "active (AVX2)"
+    } else {
+        "inactive (blocked scalar)"
+    };
+    println!("simd_equivalence ran with explicit-SIMD kernel: {kernel}");
+}
