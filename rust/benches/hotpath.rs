@@ -188,7 +188,7 @@ fn main() {
         None,
     )
     .expect("unbudgeted timeline build cannot fail");
-    let tl_cfg = TimelineCfg { batch: 4, chunks: 8, trace: false };
+    let tl_cfg = TimelineCfg { batch: 4, chunks: 8, ..TimelineCfg::default() };
     b.bench("timeline_schedule resnet20 (batch 4, DES)", || {
         black_box(hcim::timeline::simulate(&tl_model, &tl_cfg).makespan_ns);
     });

@@ -114,6 +114,20 @@ TELEMETRY (serve | fleet | dse | robustness | timeline):
                   batches) to stderr at info level; without it the same
                   lines still appear under HCIM_LOG=debug
 
+POWER (timeline | serve | fleet):
+  --power         bin every event's energy into fixed virtual-time
+                  windows and add a `power` section to the report:
+                  per-channel windowed mW series with peak/avg/p99.
+                  `timeline` channels are resource classes (xbar, dcim,
+                  noc, adc, peripheral) with per-layer attribution and
+                  analytic-vs-measured sparsity; `serve` channels are
+                  tenant models; `fleet` channels are chips. Purely
+                  virtual-clock: the section is byte-identical across
+                  runs and pool sizes. `dse` always prices a power
+                  trace per point (the peak_power_mw column).
+  --power-window-ns N   binning window in virtual ns (default 0 =
+                  auto: smallest 1/2/5*10^k giving <=128 windows)
+
 COMMANDS:
   simulate    run the cycle-accurate simulator on a model
                 --model resnet20|resnet32|resnet44|wrn20|vgg9|vgg11|resnet18
@@ -141,6 +155,8 @@ COMMANDS:
                                  reprogramming rounds replace the analytical
                                  demand/shard inflation) and report per-
                                  component utilization in the metrics JSON
+                --power          per-tenant virtual-time power section
+                                 (see POWER above)
               admission, virtual latencies, and energy attribution are
               deterministic from --seed; real execution on the shared pool
               additionally runs when --artifacts has a manifest
@@ -173,6 +189,8 @@ COMMANDS:
                 --journal DIR    record the finished report as a durable
                                  trial; a re-run with the same configuration
                                  replays it instead of re-simulating
+                --power          per-chip virtual-time power section (see
+                                 POWER above; changes the journal key)
               a fail-stop never aborts the run: the health monitor drains
               the chip, survivors re-plan with the displaced tenants'
               weights doubled, and displaced requests retry with
@@ -230,11 +248,17 @@ COMMANDS:
                 --sparsity FILE  measured sparsity table
                 --format table|json|csv   stdout format (default table);
                                  json/csv are byte-identical across runs
-                --out DIR        also write timeline.{json,csv}
+                --out DIR        also write timeline.{json,csv} (plus
+                                 timeline.power.csv with --power)
                 --vcd FILE       Gantt-style VCD trace (one signal per
-                                 resource; open in GTKWave)
+                                 resource; open in GTKWave). With --power
+                                 it also carries power.{class} uW signals
                 --trace FILE     Chrome trace_event JSON of the same busy
-                                 intervals on the virtual clock (Perfetto)
+                                 intervals on the virtual clock (Perfetto).
+                                 With --power it gains per-class counter
+                                 tracks (mW vs virtual time)
+                --power          see POWER above (adds the report section
+                                 and the exports; --power-window-ns N)
   journal     inspect a --journal directory (schema hcim-journal-v1)
                 summarize [DIR]  per-sweep rollup: trials/ok/failed/keys,
                                  last heartbeat progress, stall detection

@@ -75,6 +75,12 @@ pub struct FleetCfg {
     /// Seed for degradation sampling (the arrival seed lives in
     /// [`LoadGenCfg`]).
     pub seed: u64,
+    /// Record a per-chip virtual-time power trace (each completed
+    /// request's inference energy charged over its service interval).
+    /// Adds a `power` section to the deterministic JSON; off by default.
+    pub power: bool,
+    /// Power-trace window size; `None` auto-sizes to ≤128 windows.
+    pub power_window_ns: Option<f64>,
 }
 
 impl Default for FleetCfg {
@@ -87,6 +93,8 @@ impl Default for FleetCfg {
             backoff_us: 500,
             stall_threshold_us: 3_000,
             seed: 42,
+            power: false,
+            power_window_ns: None,
         }
     }
 }
@@ -139,6 +147,9 @@ struct Pending {
     seq: u64,
     arrival_us: u64,
     attempt: u32,
+    /// Lane service time at admission (the power trace charges the
+    /// completed request's energy over `[done − svc_us, done]`).
+    svc_us: u64,
 }
 
 /// One tenant's lane on one chip.
@@ -163,6 +174,10 @@ struct ChipState {
     drained: u64,
     last_progress_us: u64,
     lanes: BTreeMap<usize, Lane>,
+    /// `(start_us, done_us, tenant)` per completed request, recorded in
+    /// completion order for the power trace (`Some` only under
+    /// `FleetCfg::power`).
+    charges: Option<Vec<(u64, u64, usize)>>,
 }
 
 /// Mutable per-tenant accumulators.
@@ -294,6 +309,7 @@ impl Fleet {
                 completed: 0,
                 drained: 0,
                 last_progress_us: 0,
+                charges: self.cfg.power.then(Vec::new),
                 lanes: self.init_svc[c]
                     .iter()
                     .map(|(&t, &svc)| {
@@ -506,6 +522,7 @@ impl Fleet {
                                     seq: ev.seq,
                                     arrival_us: ev.arrival_us,
                                     attempt: ev.attempt,
+                                    svc_us: lane.svc_us,
                                 },
                             ));
                             lane.free_at = done;
@@ -518,6 +535,7 @@ impl Fleet {
                                 seq: ev.seq,
                                 arrival_us: ev.arrival_us,
                                 attempt: ev.attempt,
+                                svc_us: 0,
                             };
                             schedule_retry(
                                 &mut heap,
@@ -545,6 +563,23 @@ impl Fleet {
                     chip.unavailable_us.saturating_add(horizon.saturating_sub(chip.fail_at));
             }
         }
+
+        // per-chip power attribution: replay every completed request's
+        // energy over its service interval, chips in index order so the
+        // f64 accumulation order (and hence the JSON) is reproducible
+        let power = self.cfg.power.then(|| {
+            let mut rec = obs::PowerRecorder::new();
+            for c in 0..self.cfg.chips {
+                rec.channel(&format!("chip{c}"));
+            }
+            for (c, chip) in chips.iter().enumerate() {
+                let name = format!("chip{c}");
+                for &(start, done, tenant) in chip.charges.iter().flatten() {
+                    rec.charge(&name, start as f64 * 1e3, done as f64 * 1e3, self.costs[tenant].0);
+                }
+            }
+            rec.finish(self.cfg.power_window_ns, horizon as f64 * 1e3)
+        });
 
         // reconcile: every offered request either completed or was dropped
         for (i, a) in acc.iter().enumerate() {
@@ -628,6 +663,7 @@ impl Fleet {
             chip_rows,
             tenants,
             replans,
+            power,
         })
     }
 
@@ -699,6 +735,9 @@ fn finalize(chip: &mut ChipState, acc: &mut [TenantAcc], t: u64, horizon: &mut u
             a.completed += 1;
             a.makespan_us = a.makespan_us.max(done);
             a.latencies_us.push(done.saturating_sub(p.arrival_us));
+            if let Some(ch) = chip.charges.as_mut() {
+                ch.push((done.saturating_sub(p.svc_us), done, tenant));
+            }
         }
     }
 }
@@ -790,6 +829,9 @@ pub struct FleetReport {
     pub tenants: Vec<FleetTenantReport>,
     /// Surviving-chip re-partitions triggered by fail-stops.
     pub replans: u64,
+    /// Per-chip power trace (present exactly when the fleet ran with
+    /// `FleetCfg::power`; virtual-clock, hence deterministic).
+    pub power: Option<obs::PowerTrace>,
 }
 
 impl FleetReport {
@@ -874,6 +916,9 @@ impl FleetReport {
         );
         top.insert("faults".to_string(), Json::Str(self.faults.clone()));
         top.insert("fleet".to_string(), Json::Obj(fleet));
+        if let Some(p) = &self.power {
+            top.insert("power".to_string(), p.to_json());
+        }
         top.insert("schema".to_string(), Json::Num(self.schema as f64));
         top.insert("seed".to_string(), Json::Str(format!("{:#018x}", self.seed)));
         top.insert(
@@ -1059,6 +1104,35 @@ mod tests {
         assert_eq!(r.chip_rows[0].stalls, 1);
         assert!(r.chip_rows[0].availability < 1.0);
         assert!(r.replans == 0, "a stall is not a failure: no re-plan");
+    }
+
+    #[test]
+    fn power_section_charges_completed_energy_per_chip() {
+        let base = fleet(FleetCfg::default(), FaultSchedule::default());
+        let off = base.run(&lg(7)).unwrap();
+        assert!(off.power.is_none());
+        assert!(!off.deterministic_json().to_string().contains("\"power\""));
+
+        let cfg = FleetCfg { power: true, ..FleetCfg::default() };
+        let f = fleet(cfg.clone(), FaultSchedule::default());
+        let r = f.run(&lg(7)).unwrap();
+        let p = r.power.as_ref().expect("power requested");
+        assert_eq!(p.channels.len(), 4, "one channel per chip");
+        // completed work conserves energy: Σ chip totals = Σ tenant
+        // completed × per-inference cost (costs are 2000/3000 pJ)
+        let charged: f64 = p.channels.iter().map(|c| c.total_pj).sum();
+        let expect: f64 = r
+            .tenants
+            .iter()
+            .zip([2_000.0, 3_000.0])
+            .map(|(t, e)| t.completed as f64 * e)
+            .sum();
+        assert_eq!(charged, expect);
+        // byte-identical across runs, and the section lands in the JSON
+        let g = fleet(cfg, FaultSchedule::default());
+        let a = r.deterministic_json().to_string();
+        assert_eq!(a, g.run(&lg(7)).unwrap().deterministic_json().to_string());
+        assert!(a.contains("\"power\""));
     }
 
     #[test]

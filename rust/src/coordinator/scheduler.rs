@@ -243,6 +243,13 @@ pub struct SchedulerCfg {
     /// exported executable when one is attached).
     pub max_batch: usize,
     pub batch_window: Duration,
+    /// Record a per-tenant virtual-time power trace during admission
+    /// planning (each admitted request's co-simulated energy charged over
+    /// its service interval). Adds a `power` section to the deterministic
+    /// JSON; off by default so existing goldens are unaffected.
+    pub power: bool,
+    /// Power-trace window size; `None` auto-sizes to ≤128 windows.
+    pub power_window_ns: Option<f64>,
 }
 
 impl Default for SchedulerCfg {
@@ -252,6 +259,8 @@ impl Default for SchedulerCfg {
             workers: 2,
             max_batch: 8,
             batch_window: Duration::from_millis(2),
+            power: false,
+            power_window_ns: None,
         }
     }
 }
@@ -337,6 +346,10 @@ pub struct Scheduler {
     pub seed: u64,
     pub budget_tiles: usize,
     pub tenants: Vec<Tenant>,
+    /// Per-tenant virtual-time power trace from the last
+    /// [`Self::plan_admissions`] pass (`cfg.power` only). Tenants sharing
+    /// a model name share a channel.
+    pub power: Option<obs::PowerTrace>,
 }
 
 impl Scheduler {
@@ -375,7 +388,7 @@ impl Scheduler {
     ) -> crate::Result<Scheduler> {
         let sim = Simulator::new(hw.node);
         let budget_tiles = plan.budget_tiles;
-        let tl_cfg = TimelineCfg { batch: 1, chunks: 8, trace: false };
+        let tl_cfg = TimelineCfg::default();
         let mut tenants = Vec::with_capacity(plan.assignments.len());
         for a in plan.assignments {
             let graph = zoo::by_name(&a.model)
@@ -399,7 +412,7 @@ impl Scheduler {
                 Some(rep.util),
             ));
         }
-        Ok(Scheduler { cfg, seed, budget_tiles, tenants })
+        Ok(Scheduler { cfg, seed, budget_tiles, tenants, power: None })
     }
 
     /// Build with per-inference `(energy_pj, latency_ns)` costs injected
@@ -419,7 +432,7 @@ impl Scheduler {
             .zip(costs)
             .map(|(a, &(e_pj, l_ns))| Tenant::build(a, e_pj, l_ns, &cfg))
             .collect();
-        Scheduler { cfg, seed, budget_tiles, tenants }
+        Scheduler { cfg, seed, budget_tiles, tenants, power: None }
     }
 
     /// Attach a loaded engine to tenant `i`, rebuilding its batcher so the
@@ -445,6 +458,14 @@ impl Scheduler {
         let mut inflight: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
         let mut free_at: Vec<u64> = vec![0; n];
         let mut admitted = Vec::with_capacity(arrivals.len());
+        // per-tenant power channels, pinned in tenant order so the trace
+        // layout is stable even for tenants that admit nothing
+        let mut power = self.cfg.power.then(obs::PowerRecorder::new);
+        if let Some(rec) = power.as_mut() {
+            for t in &self.tenants {
+                rec.channel(&t.assignment.model);
+            }
+        }
         for arr in arrivals {
             assert!(arr.tenant < n, "arrival for unknown tenant {}", arr.tenant);
             let t = &mut self.tenants[arr.tenant];
@@ -464,8 +485,21 @@ impl Scheduler {
             t.stats.admitted += 1;
             t.stats.virt_latencies_us.push(done - arr.t_us);
             t.stats.makespan_us = t.stats.makespan_us.max(done);
+            if let Some(rec) = power.as_mut() {
+                // one inference's energy drawn over its service interval
+                rec.charge(
+                    &t.assignment.model,
+                    start as f64 * 1e3,
+                    done as f64 * 1e3,
+                    t.stats.energy_pj_per_inf,
+                );
+            }
             admitted.push(arr.clone());
         }
+        self.power = power.map(|rec| {
+            let makespan_us = self.tenants.iter().map(|t| t.stats.makespan_us).max().unwrap_or(0);
+            rec.finish(self.cfg.power_window_ns, makespan_us as f64 * 1e3)
+        });
         admitted
     }
 
@@ -645,7 +679,13 @@ impl Scheduler {
                 }
             })
             .collect();
-        ServeReport { schema: 1, seed: self.seed, budget_tiles: self.budget_tiles, tenants }
+        ServeReport {
+            schema: 1,
+            seed: self.seed,
+            budget_tiles: self.budget_tiles,
+            tenants,
+            power: self.power.clone(),
+        }
     }
 }
 
@@ -688,6 +728,9 @@ pub struct ServeReport {
     pub seed: u64,
     pub budget_tiles: usize,
     pub tenants: Vec<TenantReport>,
+    /// Per-tenant power trace (present exactly when the scheduler ran
+    /// with `power: true`; virtual-clock, hence deterministic).
+    pub power: Option<obs::PowerTrace>,
 }
 
 impl ServeReport {
@@ -753,6 +796,9 @@ impl ServeReport {
         totals.insert("virt_throughput_rps".to_string(), num3(throughput));
         let mut top = BTreeMap::new();
         top.insert("budget_tiles".to_string(), Json::Num(self.budget_tiles as f64));
+        if let Some(p) = &self.power {
+            top.insert("power".to_string(), p.to_json());
+        }
         top.insert("schema".to_string(), Json::Num(self.schema as f64));
         top.insert("seed".to_string(), Json::Str(format!("{:#018x}", self.seed)));
         top.insert(
@@ -1084,6 +1130,29 @@ mod tests {
         let mut c = Scheduler::new(plan, &cfg, SchedulerCfg::default(), 7);
         c.plan_admissions(&arrivals);
         assert!(!c.report().deterministic_json().to_string().contains("\"util\""));
+    }
+
+    #[test]
+    fn power_section_appears_only_when_enabled_and_is_deterministic() {
+        let arrivals: Vec<Arrival> = (0..6)
+            .map(|k| Arrival { tenant: 0, seq: k, t_us: 500 * k, image_seed: k })
+            .collect();
+        let mk = |power: bool| {
+            let plan = hand_plan(&[(10, 2, 5)]);
+            let cfg = SchedulerCfg { power, ..Default::default() };
+            let mut s = Scheduler::with_costs(plan, &[(1.5e6, 2_000_000.0)], cfg, 3);
+            s.plan_admissions(&arrivals);
+            s.report().deterministic_json().to_string()
+        };
+        let off = mk(false);
+        assert!(!off.contains("\"power\""), "power must stay out of the default JSON");
+        let on = mk(true);
+        assert_eq!(on, mk(true), "power trace must be deterministic");
+        let parsed = Json::parse(&on).unwrap();
+        let chan = parsed.get("power").unwrap().get("channels").unwrap().get("m0").unwrap();
+        // 6 admitted inferences × 1.5e6 pJ
+        assert_eq!(chan.num_field("total_pj").unwrap(), 9e6);
+        assert!(chan.num_field("peak_mw").unwrap() > 0.0);
     }
 
     #[test]

@@ -27,8 +27,9 @@ use crate::util::json::Json;
 /// Bump when the cost model changes in a way that invalidates old entries.
 /// (v2: entries optionally carry a robustness objective. v3: every entry
 /// carries the discrete-event timeline columns — batch-4 throughput and
-/// peak component utilization.)
-pub const CACHE_SCHEMA: &str = "hcim-dse-v3";
+/// peak component utilization. v4: every entry carries the timeline power
+/// trace's peak total power in mW.)
+pub const CACHE_SCHEMA: &str = "hcim-dse-v4";
 
 pub use crate::util::hash::fnv1a64;
 
@@ -47,6 +48,10 @@ pub struct PointMetrics {
     /// bottleneck class: crossbar tiles, DCiM arrays, mesh links, or the
     /// off-chip channel).
     pub peak_util: f64,
+    /// Peak windowed total power (mW) of the same timeline run's
+    /// virtual-clock power trace — the thermal/delivery envelope the
+    /// point would demand, as opposed to its integrated energy.
+    pub peak_power_mw: f64,
     /// Mean Monte Carlo PSQ-code flip rate under the node's default
     /// non-ideality magnitudes; present only when the sweep ran with
     /// robustness enabled.
@@ -86,6 +91,7 @@ impl PointMetrics {
         m.insert("area_mm2".to_string(), Json::Num(self.area_mm2));
         m.insert("throughput_ips".to_string(), Json::Num(self.throughput_ips));
         m.insert("peak_util".to_string(), Json::Num(self.peak_util));
+        m.insert("peak_power_mw".to_string(), Json::Num(self.peak_power_mw));
         if let Some(r) = self.robustness {
             m.insert("robustness".to_string(), Json::Num(r));
         }
@@ -103,6 +109,7 @@ impl PointMetrics {
             area_mm2: j.num_field("area_mm2").ok()?,
             throughput_ips: j.num_field("throughput_ips").ok()?,
             peak_util: j.num_field("peak_util").ok()?,
+            peak_power_mw: j.num_field("peak_power_mw").ok()?,
             robustness: j.get("robustness").and_then(|r| r.as_f64()),
         })
     }
@@ -376,6 +383,7 @@ mod tests {
             area_mm2: 0.5,
             throughput_ips: 100.0 * e,
             peak_util: 0.75,
+            peak_power_mw: 0.25 * e,
             robustness: None,
         }
     }
@@ -468,6 +476,7 @@ mod tests {
             area_mm2: 4.0,
             throughput_ips: 50.0,
             peak_util: 0.9,
+            peak_power_mw: 1.5,
             robustness: None,
         };
         assert_eq!(m.latency_area(), 12.0);

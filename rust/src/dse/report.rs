@@ -93,7 +93,7 @@ impl SweepReport {
         let with_rob = self.has_robustness();
         let mut headers = vec![
             "Workload", "Architecture", "Crossbar", "Node", "Energy (µJ)",
-            "Latency (µs)", "Area (mm²)", "EDAP", "img/s", "Peak util",
+            "Latency (µs)", "Area (mm²)", "EDAP", "img/s", "Peak util", "Peak mW",
         ];
         if with_rob {
             headers.push("Flip rate");
@@ -115,6 +115,7 @@ impl SweepReport {
                 format!("{:.3e}", m.edap()),
                 fnum(m.throughput_ips),
                 format!("{:.2}", m.peak_util),
+                fnum(m.peak_power_mw),
             ];
             if with_rob {
                 cells.push(Self::fmt_robustness(m));
@@ -191,6 +192,7 @@ impl SweepReport {
                 o.insert("edap".into(), Json::Num(m.edap()));
                 o.insert("throughput_ips".into(), Json::Num(m.throughput_ips));
                 o.insert("peak_util".into(), Json::Num(m.peak_util));
+                o.insert("peak_power_mw".into(), Json::Num(m.peak_power_mw));
                 if let Some(r) = m.robustness {
                     o.insert("robustness".into(), Json::Num(r));
                 }
@@ -221,13 +223,13 @@ impl SweepReport {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "workload,arch,xbar_rows,xbar_cols,node,energy_pj,latency_ns,area_mm2,edap,\
-             throughput_ips,peak_util,robustness,pareto\n",
+             throughput_ips,peak_util,peak_power_mw,robustness,pareto\n",
         );
         for row in &self.rows {
             let p = &row.result.point;
             let m = &row.result.metrics;
             out.push_str(&format!(
-                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{:.3},{:.6},{},{}\n",
+                "{},{},{},{},{},{:.6},{:.6},{:.8},{:.6e},{:.3},{:.6},{:.6},{},{}\n",
                 p.workload,
                 p.arch.key(),
                 p.xbar.rows,
@@ -239,6 +241,7 @@ impl SweepReport {
                 m.edap(),
                 m.throughput_ips,
                 m.peak_util,
+                m.peak_power_mw,
                 m.robustness.map(|r| format!("{r:.6}")).unwrap_or_default(),
                 row.pareto,
             ));
@@ -282,6 +285,7 @@ mod tests {
                 area_mm2: a,
                 throughput_ips: 1000.0 / l,
                 peak_util: 0.8,
+                peak_power_mw: e / l,
                 robustness: rob,
             },
             cached: false,

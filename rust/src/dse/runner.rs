@@ -263,9 +263,11 @@ fn simulate_point(
     let tl_model =
         TimelineModel::from_graph(&graph, &point.arch(), &sim.params, &sim.sparsity, None)
             .expect("unbudgeted timeline build cannot fail");
+    // power on: the trace is cheap (a handful of windows per class) and
+    // gives every point its delivery-envelope column, peak_power_mw
     let tl = timeline::simulate(
         &tl_model,
-        &TimelineCfg { batch: TIMELINE_BATCH, chunks: 8, trace: false },
+        &TimelineCfg { batch: TIMELINE_BATCH, chunks: 8, power: true, ..TimelineCfg::default() },
     );
     let robustness = robustness.map(|rc| {
         let cfg = point.arch().config().clone();
@@ -284,6 +286,7 @@ fn simulate_point(
         area_mm2: report.area_mm2(),
         throughput_ips: tl.throughput_ips,
         peak_util: tl.peak_util(),
+        peak_power_mw: tl.power.as_ref().map(|p| p.peak_total_mw()).unwrap_or(0.0),
         robustness,
     };
     // the scheduled makespan doubles as the trial's virtual-time column
@@ -325,6 +328,7 @@ mod tests {
                 "peak util {} out of range",
                 p.metrics.peak_util
             );
+            assert!(p.metrics.peak_power_mw > 0.0, "timeline power column missing");
         }
         // the ADC baseline costs more energy than ternary HCiM (Fig. 6)
         assert!(r.points[1].metrics.energy_pj > r.points[0].metrics.energy_pj);

@@ -716,7 +716,7 @@ pub fn timeline_utilization_sweep_rows_journaled(
             }
             let before = instrument::global().counter_values();
             let t0 = std::time::Instant::now();
-            let rep = simulate(&model, &TimelineCfg { batch, chunks: 8, trace: false });
+            let rep = simulate(&model, &TimelineCfg { batch, chunks: 8, ..TimelineCfg::default() });
             let row = TimelineSweepRow {
                 model: g.name.clone(),
                 batch,

@@ -104,6 +104,20 @@ fn arch_from(args: &Args, cfg: HcimConfig) -> hcim::Result<Arch> {
     })
 }
 
+/// `--power` parses as a switch normally but as a flag when a positional
+/// token follows it — accept both spellings (same idiom as `--progress`).
+fn power_requested(args: &Args) -> bool {
+    args.has("power") || args.flag("power").is_some()
+}
+
+/// `--power-window-ns N` → fixed power-trace window; absent or 0 → auto.
+fn power_window_from(args: &Args) -> hcim::Result<Option<f64>> {
+    Ok(match args.f64_or("power-window-ns", 0.0)? {
+        w if w > 0.0 => Some(w),
+        _ => None,
+    })
+}
+
 /// `--trace` for the wall-clock commands (`serve`, `dse`, `robustness`):
 /// dump every recorded wall span plus the instrument-registry snapshot
 /// as a Chrome trace_event document. The `timeline` command has its own
@@ -212,6 +226,8 @@ fn cmd_serve_multi(args: &Args) -> hcim::Result<()> {
         workers: args.usize_or("workers", 2)?,
         max_batch: args.usize_or("max-batch", 8)?,
         batch_window: std::time::Duration::from_micros(args.usize_or("window-us", 2000)? as u64),
+        power: power_requested(args),
+        power_window_ns: power_window_from(args)?,
     };
     // --timeline prices each tenant's service time with the discrete-event
     // engine on its shard (reprogramming rounds) instead of the analytical
@@ -330,6 +346,8 @@ fn cmd_fleet(args: &Args) -> hcim::Result<()> {
         backoff_us: args.u64_or("backoff-us", 500)?,
         stall_threshold_us: args.u64_or("stall-us", 3_000)?,
         seed,
+        power: power_requested(args),
+        power_window_ns: power_window_from(args)?,
     };
     let lg = LoadGenCfg {
         seed,
@@ -340,7 +358,7 @@ fn cmd_fleet(args: &Args) -> hcim::Result<()> {
 
     // every knob feeding the deterministic report goes into the journal
     // key, so a resumed run replays only this exact configuration
-    let descriptor = format!(
+    let mut descriptor = format!(
         "fleet-v1|{}|{}|c{}|r{}|t{}|q{}|mr{}|bo{}|st{}|s{:#018x}|f[{}]|a{}|n{}|g{}",
         hw.name,
         models,
@@ -357,6 +375,11 @@ fn cmd_fleet(args: &Args) -> hcim::Result<()> {
         lg.requests_per_tenant,
         lg.mean_gap_us,
     );
+    // the power section changes the report bytes, so it must change the
+    // key too — but only when on, keeping existing journals replayable
+    if cfg.power {
+        descriptor.push_str(&format!("|pw{}", cfg.power_window_ns.unwrap_or(0.0)));
+    }
     let fp = fnv1a64(descriptor.as_bytes());
     let key = format!("fleet-v1|{fp:016x}|report");
     let journal_dir = args.flag("journal").map(Path::new);
@@ -598,13 +621,20 @@ fn cmd_timeline(args: &Args) -> hcim::Result<()> {
         0 => None,
         n => Some(n),
     };
-    let tl_model =
-        TimelineModel::from_graph(&graph, &arch, &sim.params, &sim.sparsity, budget)?;
+    let power = power_requested(args);
+    let power_window = power_window_from(args)?;
+    // --power also probes each layer's DCiM column gating with a seeded
+    // functional tile run, so the trace prices measured sparsity
+    let tl_model = TimelineModel::from_graph_opts(
+        &graph, &arch, &sim.params, &sim.sparsity, budget, power,
+    )?;
     let tl_cfg = TimelineCfg {
         batch: args.usize_or("batch", 1)?.max(1),
         chunks: args.usize_or("chunks", 8)?.max(1),
         // both exports read the same busy intervals, recorded only on demand
         trace: args.flag("vcd").is_some() || args.flag("trace").is_some(),
+        power,
+        power_window_ns: power_window,
     };
     let t0 = Instant::now();
     let report = timeline::simulate(&tl_model, &tl_cfg);

@@ -6,9 +6,12 @@
 //! `sim/trace.rs`. Timestamps and durations are in **microseconds**
 //! (the trace_event unit) rounded through `num3`, i.e. ns resolution.
 //!
-//! Events are serialized in push order; push each track's complete
-//! events in time order so `ts` stays monotone per `(pid, tid)` — the
-//! CI smoke validates exactly that invariant.
+//! Non-counter events are serialized in push order; push each track's
+//! complete events in time order so `ts` stays monotone per
+//! `(pid, tid)` — the CI smoke validates exactly that invariant.
+//! Counter ("C") events are stable-sorted by `(pid, tid, name, ts)` at
+//! render time, so callers may interleave counter tracks freely (e.g.
+//! the per-class power series) and still get monotone counter tracks.
 
 use std::collections::BTreeMap;
 
@@ -93,11 +96,29 @@ impl ChromeTrace {
     }
 
     /// The bare trace document (no process-global state): deterministic
-    /// for a given event sequence, hence golden-testable.
+    /// for a given event sequence, hence golden-testable. Counter events
+    /// come last, stable-sorted by `(pid, tid, name, ts)` so each
+    /// counter track is monotone regardless of push interleaving.
     pub fn to_json(&self) -> Json {
+        fn counter_key(e: &Json) -> (u64, u64, String, f64) {
+            (
+                e.num_field("pid").unwrap_or(0.0) as u64,
+                e.num_field("tid").unwrap_or(0.0) as u64,
+                e.str_field("name").unwrap_or("").to_string(),
+                e.num_field("ts").unwrap_or(0.0),
+            )
+        }
+        let is_counter = |e: &&Json| e.str_field("ph").ok() == Some("C");
+        let mut events: Vec<Json> =
+            self.events.iter().filter(|e| !is_counter(e)).cloned().collect();
+        let mut counters: Vec<Json> = self.events.iter().filter(is_counter).cloned().collect();
+        counters.sort_by(|a, b| {
+            counter_key(a).partial_cmp(&counter_key(b)).expect("num3 ts is never NaN")
+        });
+        events.extend(counters);
         let mut o = BTreeMap::new();
         o.insert("displayTimeUnit".to_string(), Json::Str("ns".to_string()));
-        o.insert("traceEvents".to_string(), Json::Arr(self.events.clone()));
+        o.insert("traceEvents".to_string(), Json::Arr(events));
         Json::Obj(o)
     }
 
@@ -169,6 +190,28 @@ mod tests {
             last_ts.insert(tid, ts);
         }
         assert_eq!(last_ts.len(), 2); // two tracks → two tids
+    }
+
+    #[test]
+    fn counters_sorted_by_track_then_ts_at_render() {
+        let mut t = ChromeTrace::new();
+        // Interleaved pushes across two counter tracks, out of ts order.
+        t.counter(1, 9, "power.xbar", 2.0, "mw", 0.2);
+        t.counter(1, 8, "noc.active", 5.0, "active", 3.0);
+        t.counter(1, 9, "power.xbar", 1.0, "mw", 0.1);
+        t.complete(1, 1, "busy", 9.0, 1.0);
+        let doc = t.to_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        // Non-counters keep push order and precede all counters.
+        assert_eq!(events[0].str_field("ph").unwrap(), "X");
+        let got: Vec<(i64, f64)> = events[1..]
+            .iter()
+            .map(|e| (e.num_field("tid").unwrap() as i64, e.num_field("ts").unwrap()))
+            .collect();
+        assert_eq!(got, vec![(8, 5.0), (9, 1.0), (9, 2.0)]);
+        // Rendering is a pure function of the pushed events.
+        assert_eq!(doc.to_string(), t.to_json().to_string());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::util::json::Json;
+use crate::util::json::{num3, Json};
 
 /// Monotone event counter.
 #[derive(Debug, Default)]
@@ -97,6 +97,39 @@ impl Histogram {
     pub fn buckets(&self) -> [u64; HIST_BUCKETS] {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
+
+    /// Estimate the `q`-quantile (`0.0..=1.0`) by log-interpolating
+    /// inside the containing decade bucket (the geometric analogue of
+    /// the linear interpolation `util::stats::percentile_sorted` does on
+    /// exact samples — decade buckets are log-uniform, so interpolating
+    /// in log space keeps the estimate within the sample's bucket).
+    /// Bucket 0 interpolates up from 1; the overflow bucket pins to its
+    /// lower bound; an empty histogram returns 0.0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let buckets = self.buckets();
+        let count: u64 = buckets.iter().sum();
+        if count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * count as f64;
+        let mut seen = 0u64;
+        for (i, &n) in buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if rank <= (seen + n) as f64 {
+                if i == HIST_BOUNDS.len() {
+                    break; // overflow bucket: no upper bound to reach
+                }
+                let lo = if i == 0 { 1.0 } else { HIST_BOUNDS[i - 1] as f64 };
+                let hi = HIST_BOUNDS[i] as f64;
+                let frac = ((rank - seen as f64) / n as f64).clamp(0.0, 1.0);
+                return lo * (hi / lo).powf(frac);
+            }
+            seen += n;
+        }
+        HIST_BOUNDS[HIST_BOUNDS.len() - 1] as f64
+    }
 }
 
 /// Registry of named instruments. `counter`/`gauge`/`histogram` create on
@@ -155,6 +188,9 @@ impl Instruments {
                 Json::Arr(v.buckets().iter().map(|&b| Json::Num(b as f64)).collect()),
             );
             h.insert("count".to_string(), Json::Num(v.count() as f64));
+            h.insert("p50".to_string(), num3(v.quantile(0.50)));
+            h.insert("p95".to_string(), num3(v.quantile(0.95)));
+            h.insert("p99".to_string(), num3(v.quantile(0.99)));
             h.insert("sum".to_string(), Json::Num(v.sum() as f64));
             histograms.insert(k.clone(), Json::Obj(h));
         }
@@ -209,6 +245,54 @@ mod tests {
         assert_eq!(b[HIST_BUCKETS - 1], 1); // 1e6 overflows
         assert_eq!(h.count(), 6);
         assert_eq!(h.sum(), 1_000_125);
+    }
+
+    #[test]
+    fn quantiles_reconcile_with_exact_summary_within_bucket_tolerance() {
+        // Decade buckets can only promise the estimate lands in the same
+        // decade as the exact sample quantile, so reconcile against
+        // `util::stats::Summary` with a one-decade ratio tolerance.
+        let h = Histogram::default();
+        let samples: Vec<u64> = (0..500u64).map(|i| (i * i) % 9000 + 1).collect();
+        let exact: Vec<f64> = samples.iter().map(|&v| v as f64).collect();
+        for &v in &samples {
+            h.observe(v);
+        }
+        let s = crate::util::stats::Summary::of(&exact);
+        for (q, want) in [(0.50, s.p50), (0.95, s.p95), (0.99, s.p99)] {
+            let est = h.quantile(q);
+            assert!(
+                est <= want * 10.0 + 1e-9 && want <= est * 10.0 + 1e-9,
+                "q{q}: est {est} vs exact {want} disagree by more than a decade"
+            );
+        }
+        assert!(h.quantile(0.50) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.99), 0.0); // empty
+        for _ in 0..4 {
+            h.observe(2_000_000); // all overflow
+        }
+        assert_eq!(h.quantile(0.5), HIST_BOUNDS[HIST_BOUNDS.len() - 1] as f64);
+    }
+
+    #[test]
+    fn snapshot_histograms_carry_quantiles() {
+        let reg = Instruments::new();
+        let h = reg.histogram("h.wait");
+        for v in [5u64, 50, 500] {
+            h.observe(v);
+        }
+        let s = reg.snapshot_json().to_string();
+        let parsed = Json::parse(&s).unwrap();
+        let hj = parsed.get("histograms").unwrap().get("h.wait").unwrap();
+        let p50 = hj.num_field("p50").unwrap();
+        let p99 = hj.num_field("p99").unwrap();
+        assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
     }
 
     #[test]

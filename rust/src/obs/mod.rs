@@ -20,10 +20,12 @@
 
 pub mod chrome;
 pub mod instrument;
+pub mod power;
 pub mod progress;
 pub mod span;
 
 pub use chrome::ChromeTrace;
 pub use instrument::{Counter, Gauge, Histogram, Instruments};
+pub use power::{auto_window_ns, ChannelPower, PowerRecorder, PowerTrace};
 pub use progress::Progress;
 pub use span::{wall_span, SpanGuard, SpanJournal, VirtSpan, WallSpan};

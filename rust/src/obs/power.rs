@@ -1,0 +1,350 @@
+//! Virtual-time power traces: turn event-charged energy into windowed
+//! power series.
+//!
+//! A [`PowerRecorder`] collects `(channel, t_start_ns, t_end_ns, pj)`
+//! charges on the **virtual** clock and bins them into fixed-width
+//! windows. Binning spreads each charge proportionally over the windows
+//! it overlaps, assigning the *last* overlapping window the remainder so
+//! every charge is conserved per-charge; the per-channel `total_pj` is
+//! additionally mirrored as a running sum in charge order, which makes
+//! it bit-exact against any ledger that accumulated the same f64 values
+//! in the same order (the acceptance contract of the timeline power
+//! report — see `timeline/power.rs`).
+//!
+//! Unit bookkeeping: 1 pJ / 1 ns = 1 mW, so `power_mw = bin_pj /
+//! window_ns` with no scale constants.
+//!
+//! Everything here is deterministic: channels keep insertion order,
+//! charges are replayed in call order, and no wall-clock data is read.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{num3, Json};
+use crate::util::stats::percentile_sorted;
+
+/// Hard cap on auto-selected window count: small enough to eyeball and
+/// to keep report JSONs compact, large enough to resolve phases.
+const AUTO_MAX_WINDOWS: usize = 128;
+
+/// Pick the smallest "nice" window (1/2/5 × 10^k ns) that covers
+/// `horizon_ns` with at most [`AUTO_MAX_WINDOWS`] windows.
+pub fn auto_window_ns(horizon_ns: f64) -> f64 {
+    if !(horizon_ns > 0.0) {
+        return 1.0;
+    }
+    let mut decade = 1.0f64;
+    loop {
+        for mult in [1.0, 2.0, 5.0] {
+            let w = mult * decade;
+            if (horizon_ns / w).ceil() as usize <= AUTO_MAX_WINDOWS {
+                return w;
+            }
+        }
+        decade *= 10.0;
+    }
+}
+
+/// One recorded energy charge.
+#[derive(Clone, Copy, Debug)]
+struct Charge {
+    channel: usize,
+    t0_ns: f64,
+    t1_ns: f64,
+    pj: f64,
+}
+
+/// Accumulates energy charges per named channel on the virtual clock.
+#[derive(Clone, Debug, Default)]
+pub struct PowerRecorder {
+    names: Vec<String>,
+    index: BTreeMap<String, usize>,
+    charges: Vec<Charge>,
+    /// Running per-channel sums in charge order (the bit-exact mirror).
+    totals: Vec<f64>,
+}
+
+impl PowerRecorder {
+    pub fn new() -> PowerRecorder {
+        PowerRecorder::default()
+    }
+
+    /// True when no energy has been charged yet.
+    pub fn is_empty(&self) -> bool {
+        self.charges.is_empty()
+    }
+
+    /// Get-or-create a channel, pinning its position in the output order.
+    /// Lets callers fix a stable channel layout (e.g. one per resource
+    /// class, even when a class never charges) before any energy lands.
+    pub fn channel(&mut self, name: &str) -> usize {
+        match self.index.get(name) {
+            Some(&i) => i,
+            None => {
+                let i = self.names.len();
+                self.names.push(name.to_string());
+                self.index.insert(name.to_string(), i);
+                self.totals.push(0.0);
+                i
+            }
+        }
+    }
+
+    /// Book `pj` picojoules on `channel` over `[t0_ns, t1_ns]` virtual ns.
+    pub fn charge(&mut self, channel: &str, t0_ns: f64, t1_ns: f64, pj: f64) {
+        debug_assert!(pj >= 0.0, "negative energy on {channel}");
+        let ch = self.channel(channel);
+        self.totals[ch] += pj;
+        self.charges.push(Charge { channel: ch, t0_ns, t1_ns, pj });
+    }
+
+    /// Bin all charges into fixed windows over `[0, horizon_ns]`.
+    /// `window_ns = None` picks [`auto_window_ns`].
+    pub fn finish(&self, window_ns: Option<f64>, horizon_ns: f64) -> PowerTrace {
+        let window_ns = window_ns.unwrap_or_else(|| auto_window_ns(horizon_ns)).max(1e-9);
+        let windows = ((horizon_ns / window_ns).ceil() as usize).max(1);
+        let mut channels: Vec<ChannelPower> = self
+            .names
+            .iter()
+            .zip(&self.totals)
+            .map(|(name, &total_pj)| ChannelPower {
+                name: name.clone(),
+                total_pj,
+                bins_pj: vec![0.0; windows],
+            })
+            .collect();
+        for c in &self.charges {
+            spread(&mut channels[c.channel].bins_pj, window_ns, c.t0_ns, c.t1_ns, c.pj);
+        }
+        PowerTrace { window_ns, windows, horizon_ns, channels }
+    }
+}
+
+/// Spread one charge over the windows it overlaps; the last overlapping
+/// window takes the remainder so the charge is conserved exactly.
+fn spread(bins: &mut [f64], window_ns: f64, t0: f64, t1: f64, pj: f64) {
+    let last = bins.len() - 1;
+    let clamp = |w: f64| (w.max(0.0) as usize).min(last);
+    if t1 <= t0 {
+        bins[clamp((t0 / window_ns).floor())] += pj;
+        return;
+    }
+    let w0 = clamp((t0 / window_ns).floor());
+    let w1 = clamp((t1 / window_ns).ceil() - 1.0);
+    if w0 >= w1 {
+        bins[w0] += pj;
+        return;
+    }
+    let dur = t1 - t0;
+    let mut assigned = 0.0;
+    for (w, bin) in bins.iter_mut().enumerate().take(w1).skip(w0) {
+        let seg_start = if w == w0 { t0 } else { w as f64 * window_ns };
+        let seg_end = (w as f64 + 1.0) * window_ns;
+        let part = pj * ((seg_end - seg_start) / dur);
+        *bin += part;
+        assigned += part;
+    }
+    bins[w1] += pj - assigned;
+}
+
+/// Windowed power series of one channel.
+#[derive(Clone, Debug)]
+pub struct ChannelPower {
+    pub name: String,
+    /// Charge-order running sum (bit-exact against a same-order ledger).
+    pub total_pj: f64,
+    /// Energy per window (pJ); sums to `total_pj` up to fp grouping.
+    pub bins_pj: Vec<f64>,
+}
+
+impl ChannelPower {
+    /// Power per window in mW (pJ/ns).
+    pub fn series_mw(&self, window_ns: f64) -> Vec<f64> {
+        self.bins_pj.iter().map(|&pj| pj / window_ns).collect()
+    }
+
+    pub fn peak_mw(&self, window_ns: f64) -> f64 {
+        self.bins_pj.iter().fold(0.0f64, |m, &pj| m.max(pj / window_ns))
+    }
+
+    /// Mean power over the whole horizon (total energy / total time).
+    pub fn avg_mw(&self, horizon_ns: f64) -> f64 {
+        if horizon_ns > 0.0 {
+            self.total_pj / horizon_ns
+        } else {
+            0.0
+        }
+    }
+
+    /// p99 of the windowed series (linear-interpolated percentile).
+    pub fn p99_mw(&self, window_ns: f64) -> f64 {
+        let mut s = self.series_mw(window_ns);
+        s.sort_by(f64::total_cmp);
+        percentile_sorted(&s, 99.0)
+    }
+
+    /// Summary JSON (num3-rounded, deterministic).
+    pub fn to_json(&self, window_ns: f64, horizon_ns: f64) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("avg_mw".into(), num3(self.avg_mw(horizon_ns)));
+        o.insert("p99_mw".into(), num3(self.p99_mw(window_ns)));
+        o.insert("peak_mw".into(), num3(self.peak_mw(window_ns)));
+        o.insert(
+            "series_mw".into(),
+            Json::Arr(self.series_mw(window_ns).into_iter().map(num3).collect()),
+        );
+        o.insert("total_pj".into(), num3(self.total_pj));
+        Json::Obj(o)
+    }
+}
+
+/// A finished, binned power trace over named channels.
+#[derive(Clone, Debug)]
+pub struct PowerTrace {
+    pub window_ns: f64,
+    pub windows: usize,
+    pub horizon_ns: f64,
+    /// Channels in insertion order.
+    pub channels: Vec<ChannelPower>,
+}
+
+impl PowerTrace {
+    /// Peak of the summed-across-channels window power (mW) — the "peak
+    /// chip power" scalar the DSE frontier trades against energy.
+    pub fn peak_total_mw(&self) -> f64 {
+        let mut peak = 0.0f64;
+        for w in 0..self.windows {
+            let pj: f64 = self.channels.iter().map(|c| c.bins_pj[w]).sum();
+            peak = peak.max(pj / self.window_ns);
+        }
+        peak
+    }
+
+    /// `{channels: {name: summary}, window_ns, windows}` — the generic
+    /// deterministic report section (serve / fleet attribution).
+    pub fn to_json(&self) -> Json {
+        let channels: BTreeMap<String, Json> = self
+            .channels
+            .iter()
+            .map(|c| (c.name.clone(), c.to_json(self.window_ns, self.horizon_ns)))
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("channels".into(), Json::Obj(channels));
+        o.insert("window_ns".into(), num3(self.window_ns));
+        o.insert("windows".into(), Json::Num(self.windows as f64));
+        Json::Obj(o)
+    }
+
+    /// CSV export: one row per (window, channel).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_start_ns,channel,energy_pj,power_mw\n");
+        for w in 0..self.windows {
+            for c in &self.channels {
+                out.push_str(&format!(
+                    "{},{},{:.6},{:.6}\n",
+                    w as f64 * self.window_ns,
+                    c.name,
+                    c.bins_pj[w],
+                    c.bins_pj[w] / self.window_ns
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_window_picks_nice_sizes() {
+        assert_eq!(auto_window_ns(100.0), 1.0); // 100 windows of 1 ns
+        assert_eq!(auto_window_ns(129.0), 2.0); // 1 ns would need 129
+        assert_eq!(auto_window_ns(950.0), 10.0);
+        assert_eq!(auto_window_ns(128_000.0), 1000.0);
+        assert_eq!(auto_window_ns(300_000.0), 5000.0);
+        assert_eq!(auto_window_ns(0.0), 1.0, "degenerate horizon");
+    }
+
+    #[test]
+    fn spread_conserves_energy_with_remainder_in_last_window() {
+        let mut bins = vec![0.0; 10];
+        spread(&mut bins, 100.0, 50.0, 250.0, 20.0);
+        assert_eq!(bins[0], 5.0);
+        assert_eq!(bins[1], 10.0);
+        assert_eq!(bins[2], 5.0);
+        assert_eq!(bins.iter().sum::<f64>(), 20.0);
+    }
+
+    #[test]
+    fn zero_duration_and_out_of_range_charges_clamp() {
+        let mut bins = vec![0.0; 4];
+        spread(&mut bins, 100.0, 150.0, 150.0, 7.0); // instantaneous
+        assert_eq!(bins[1], 7.0);
+        spread(&mut bins, 100.0, 900.0, 950.0, 3.0); // past the horizon
+        assert_eq!(bins[3], 3.0);
+    }
+
+    #[test]
+    fn recorder_totals_and_series_round_trip() {
+        let mut r = PowerRecorder::new();
+        r.charge("xbar", 0.0, 100.0, 10.0);
+        r.charge("xbar", 100.0, 200.0, 30.0);
+        r.charge("noc", 50.0, 150.0, 8.0);
+        let t = r.finish(Some(100.0), 200.0);
+        assert_eq!(t.windows, 2);
+        let xbar = &t.channels[0];
+        assert_eq!(xbar.name, "xbar");
+        assert_eq!(xbar.total_pj, 40.0);
+        assert_eq!(xbar.series_mw(t.window_ns), vec![0.1, 0.3]);
+        assert_eq!(xbar.peak_mw(t.window_ns), 0.3);
+        assert_eq!(xbar.avg_mw(t.horizon_ns), 0.2);
+        let noc = &t.channels[1];
+        assert_eq!(noc.bins_pj, vec![4.0, 4.0]);
+        // summed peak: window 1 holds 30 + 4 pJ over 100 ns
+        assert_eq!(t.peak_total_mw(), 0.34);
+    }
+
+    #[test]
+    fn json_and_csv_are_deterministic() {
+        let build = || {
+            let mut r = PowerRecorder::new();
+            r.charge("a", 0.0, 90.0, 9.0);
+            r.charge("b", 30.0, 60.0, 3.0);
+            r.finish(None, 90.0)
+        };
+        let (x, y) = (build(), build());
+        assert_eq!(x.to_json().to_string(), y.to_json().to_string());
+        assert_eq!(x.to_csv(), y.to_csv());
+        assert!(x.to_csv().starts_with("t_start_ns,channel,"));
+        let j = x.to_json();
+        assert!(j.get("channels").unwrap().get("a").is_some());
+        assert_eq!(j.num_field("window_ns").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn preregistered_channels_survive_with_zero_energy() {
+        let mut r = PowerRecorder::new();
+        r.channel("adc");
+        r.charge("xbar", 0.0, 10.0, 5.0);
+        let t = r.finish(Some(10.0), 10.0);
+        assert_eq!(t.channels[0].name, "adc");
+        assert_eq!(t.channels[0].total_pj, 0.0);
+        assert_eq!(t.channels[0].bins_pj, vec![0.0]);
+        assert_eq!(t.channels[1].name, "xbar");
+    }
+
+    #[test]
+    fn percentile_matches_hand_value() {
+        let mut r = PowerRecorder::new();
+        // ten 10-ns windows: 9 at 1 pJ, one at 11 pJ
+        for w in 0..9 {
+            r.charge("c", w as f64 * 10.0, (w + 1) as f64 * 10.0, 1.0);
+        }
+        r.charge("c", 90.0, 100.0, 11.0);
+        let t = r.finish(Some(10.0), 100.0);
+        let p99 = t.channels[0].p99_mw(t.window_ns);
+        // sorted mW series [0.1 ×9, 1.1], rank .99·9 = 8.91
+        assert!((p99 - (0.1 + 0.91 * (1.1 - 0.1))).abs() < 1e-12, "{p99}");
+    }
+}

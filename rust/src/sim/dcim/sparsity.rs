@@ -81,6 +81,19 @@ impl GatingStats {
         self.gated_ops += other.gated_ops;
         self.sub_ops += other.sub_ops;
     }
+
+    /// Deterministic JSON row (consumed by the power report's
+    /// analytic-vs-measured sparsity table).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num3, Json};
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("active_ops".to_string(), Json::Num(self.active_ops as f64));
+        o.insert("gated_ops".to_string(), Json::Num(self.gated_ops as f64));
+        o.insert("sparsity".to_string(), num3(self.sparsity()));
+        o.insert("sub_ops".to_string(), Json::Num(self.sub_ops as f64));
+        o.insert("total_ops".to_string(), Json::Num(self.total_ops() as f64));
+        Json::Obj(o)
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +140,18 @@ mod tests {
     #[test]
     fn empty_stats_zero_sparsity() {
         assert_eq!(GatingStats::default().sparsity(), 0.0);
+    }
+
+    #[test]
+    fn json_row_carries_counts_and_sparsity() {
+        let st = GatingStats { active_ops: 3, gated_ops: 1, sub_ops: 2 };
+        let j = st.to_json();
+        assert_eq!(j.num_field("active_ops").unwrap(), 3.0);
+        assert_eq!(j.num_field("gated_ops").unwrap(), 1.0);
+        assert_eq!(j.num_field("total_ops").unwrap(), 4.0);
+        assert_eq!(j.num_field("sparsity").unwrap(), 0.25);
+        // empty stats serialize to all-zero (sparsity defined as 0.0)
+        assert_eq!(GatingStats::default().to_json().num_field("sparsity").unwrap(), 0.0);
     }
 
     #[test]

@@ -211,6 +211,12 @@ impl HcimTile {
         self.dcim.stats.sparsity()
     }
 
+    /// Accumulated column-gating statistics (active / gated / sub ops)
+    /// across every MVM run on this tile so far.
+    pub fn gating(&self) -> crate::sim::dcim::sparsity::GatingStats {
+        self.dcim.stats
+    }
+
     /// Sparsity statistics of a single functional MVM without cost
     /// booking (used to calibrate the statistical model per layer).
     pub fn probe_sparsity(&mut self, x: &[i64]) -> SparsityStats {

@@ -48,17 +48,19 @@
 //!     None,
 //! )
 //! .unwrap();
-//! let report = simulate(&model, &TimelineCfg { batch: 4, chunks: 8, trace: false });
+//! let report = simulate(&model, &TimelineCfg { batch: 4, ..TimelineCfg::default() });
 //! report.summary_table().print();
 //! ```
 //! (`no_run` for the same reason as `util::prop`: doctest binaries cannot
 //! resolve their rpath in this offline image.)
 
 pub mod event;
+pub mod power;
 pub mod resource;
 pub mod schedule;
 pub mod report;
 
+pub use power::{PowerClass, PowerReport, SparsityRow, TimelinePowerRecorder};
 pub use report::{ClassUtil, ResourceUsage, TimelineReport, TIMELINE_SCHEMA};
 pub use resource::{NocStats, WAIT_BUCKETS};
 pub use schedule::{simulate, LayerSpec, TimelineCfg, TimelineModel};

@@ -1,0 +1,473 @@
+//! Time-resolved power for the timeline engine.
+//!
+//! Every scheduled event already charges energy into the run's
+//! [`CostLedger`]; this module mirrors those charges onto the virtual
+//! clock as `(t_start_ns, t_end_ns, Component, pj)` and bins them into a
+//! per-resource-class [`crate::obs::power::PowerTrace`] (crossbar, DCiM,
+//! NoC, ADC-baseline, peripheral), plus an energy-attribution drill-down
+//! (per layer / input streaming / weight reprogramming).
+//!
+//! ## Bit-exactness contract
+//!
+//! The acceptance invariant is that each class's `total_pj` equals the
+//! same class rollup of the run ledger *bit-exactly* — not merely within
+//! an epsilon. f64 addition is not associative, so the recorder keeps a
+//! per-[`Component`] mirror accumulated in [`Component::ALL`] order for
+//! every charge, exactly the order `CostLedger::merge_serial` adds the
+//! same values into the ledger. Folding that mirror per class therefore
+//! reproduces the ledger's per-component sums bit-for-bit; the windowed
+//! bins (which group differently) conserve each charge exactly but are
+//! only epsilon-close to the class total when summed.
+//!
+//! ## Measured sparsity
+//!
+//! [`measure_layer_gating`] runs one seeded functional [`HcimTile`] MVM
+//! per layer (the zoo graphs carry shapes, not weights, so the probe
+//! synthesizes weights from a per-layer hash seed) and returns the DCiM
+//! column-gating statistics. The engine prices DCiM energy with the
+//! measured rate so the ledger, the trace, and the report agree; the
+//! analytic `SparsityTable` figure is reported alongside for the
+//! analytic-vs-measured comparison.
+
+use std::collections::BTreeMap;
+
+use crate::config::hardware::HcimConfig;
+use crate::obs::power::{ChannelPower, PowerRecorder, PowerTrace};
+use crate::quant::bits::Mat;
+use crate::quant::psq::PsqLayerParams;
+use crate::sim::dcim::sparsity::GatingStats;
+use crate::sim::energy::{Component, CostLedger};
+use crate::sim::params::CalibParams;
+use crate::sim::tile::HcimTile;
+use crate::util::hash::fnv1a64;
+use crate::util::json::{num3, Json};
+use crate::util::rng::Rng;
+
+/// Resource classes of the power trace (the binning axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerClass {
+    /// Analog crossbar reads.
+    Xbar,
+    /// DCiM scale-factor array (read/compute/store/control).
+    Dcim,
+    /// Mesh interconnect.
+    Noc,
+    /// ADC conversions (baseline architectures only).
+    Adc,
+    /// Everything else: drivers, comparators, adders, registers,
+    /// buffers, off-chip streaming.
+    Peripheral,
+}
+
+impl PowerClass {
+    /// Every class, in channel-registration order. All five are always
+    /// present in the report even when a class never charges (an HCiM
+    /// run has a flat-zero `adc` series — that *is* the claim).
+    pub const ALL: [PowerClass; 5] = [
+        PowerClass::Xbar,
+        PowerClass::Dcim,
+        PowerClass::Noc,
+        PowerClass::Adc,
+        PowerClass::Peripheral,
+    ];
+
+    /// The class a ledger component charges into.
+    pub fn of(c: Component) -> PowerClass {
+        match c {
+            Component::Crossbar => PowerClass::Xbar,
+            Component::Adc => PowerClass::Adc,
+            Component::Interconnect => PowerClass::Noc,
+            c if c.is_dcim() => PowerClass::Dcim,
+            _ => PowerClass::Peripheral,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PowerClass::Xbar => "xbar",
+            PowerClass::Dcim => "dcim",
+            PowerClass::Noc => "noc",
+            PowerClass::Adc => "adc",
+            PowerClass::Peripheral => "peripheral",
+        }
+    }
+}
+
+/// Who a charge is attributed to in the drill-down.
+#[derive(Clone, Copy, Debug)]
+pub enum Attribution {
+    /// Off-chip input streaming (not owned by any layer).
+    Input,
+    /// A model layer, by ordinal position in the timeline model.
+    Layer(usize),
+    /// Weight reprogramming / round barriers.
+    Program,
+}
+
+/// Collects the timeline engine's event charges on the virtual clock.
+#[derive(Clone, Debug)]
+pub struct TimelinePowerRecorder {
+    rec: PowerRecorder,
+    /// Per-component running sums in charge order — the bit-exact mirror
+    /// of the run ledger (same values added in the same order).
+    comp_pj: [f64; Component::ALL.len()],
+    layer_pj: Vec<f64>,
+    input_pj: f64,
+    other_pj: f64,
+}
+
+impl TimelinePowerRecorder {
+    pub fn new(n_layers: usize) -> TimelinePowerRecorder {
+        let mut rec = PowerRecorder::new();
+        for class in PowerClass::ALL {
+            rec.channel(class.name());
+        }
+        TimelinePowerRecorder {
+            rec,
+            comp_pj: [0.0; Component::ALL.len()],
+            layer_pj: vec![0.0; n_layers],
+            input_pj: 0.0,
+            other_pj: 0.0,
+        }
+    }
+
+    fn attribute(&mut self, attr: Attribution, pj: f64) {
+        match attr {
+            Attribution::Input => self.input_pj += pj,
+            Attribution::Layer(l) => self.layer_pj[l] += pj,
+            Attribution::Program => self.other_pj += pj,
+        }
+    }
+
+    /// Mirror a delta ledger that the engine is about to `merge_serial`
+    /// into the run ledger. Non-DCiM components span `[t0, t1]`; the
+    /// DCiM components span `[t0, dcim_end]` (the scale-factor array
+    /// only occupies the head of each chunk — see `dcim_occupancy_ns`).
+    pub fn charge_ledger(
+        &mut self,
+        delta: &CostLedger,
+        attr: Attribution,
+        t0: f64,
+        t1: f64,
+        dcim_end: f64,
+    ) {
+        for (i, &c) in Component::ALL.iter().enumerate() {
+            let e = delta.energy(c);
+            if e == 0.0 {
+                continue; // x + 0.0 == x for these sums: skip is bit-safe
+            }
+            self.comp_pj[i] += e;
+            let end = if c.is_dcim() { dcim_end } else { t1 };
+            self.rec.charge(PowerClass::of(c).name(), t0, end, e);
+            self.attribute(attr, e);
+        }
+    }
+
+    /// Mirror a single-component charge booked with `add_energy_n`
+    /// (NoC transfers, round-barrier buffer traffic). The caller passes
+    /// the *identical* f64 expression the ledger site books.
+    pub fn charge_component(&mut self, c: Component, pj: f64, attr: Attribution, t0: f64, t1: f64) {
+        if pj == 0.0 {
+            return;
+        }
+        self.comp_pj[c as usize] += pj;
+        self.rec.charge(PowerClass::of(c).name(), t0, t1, pj);
+        self.attribute(attr, pj);
+    }
+
+    /// Bin everything and build the report. `layer_ids[ordinal]` is the
+    /// graph layer index used for display; `sparsity` rows pair each
+    /// layer's analytic table value with the measured gating stats.
+    pub fn finish(
+        self,
+        window_ns: Option<f64>,
+        makespan_ns: f64,
+        layer_ids: &[usize],
+        sparsity: Vec<SparsityRow>,
+    ) -> PowerReport {
+        let trace = self.rec.finish(window_ns, makespan_ns);
+        let classes: Vec<ClassPower> = PowerClass::ALL
+            .iter()
+            .enumerate()
+            .map(|(slot, &class)| {
+                let mut power = trace.channels[slot].clone();
+                debug_assert_eq!(power.name, class.name());
+                // class total from the component mirror, folded in
+                // Component::ALL order — bit-exact vs the run ledger
+                power.total_pj = Component::ALL
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| PowerClass::of(c) == class)
+                    .map(|(i, _)| self.comp_pj[i])
+                    .sum();
+                ClassPower { class, power }
+            })
+            .collect();
+        let total_pj = self.comp_pj.iter().sum();
+        let layers = layer_ids.iter().copied().zip(self.layer_pj).collect();
+        PowerReport {
+            window_ns: trace.window_ns,
+            windows: trace.windows,
+            makespan_ns,
+            classes,
+            layers,
+            input_pj: self.input_pj,
+            other_pj: self.other_pj,
+            sparsity,
+            total_pj,
+        }
+    }
+}
+
+/// One resource class's windowed series plus its bit-exact total.
+#[derive(Clone, Debug)]
+pub struct ClassPower {
+    pub class: PowerClass,
+    /// `power.total_pj` is the ledger-order mirror fold; `power.bins_pj`
+    /// conserves each charge but groups additions differently, so it
+    /// sums to `total_pj` only up to fp regrouping.
+    pub power: ChannelPower,
+}
+
+/// One layer's analytic-vs-measured sparsity comparison.
+#[derive(Clone, Debug)]
+pub struct SparsityRow {
+    /// Graph layer index (display key, matches the resource names).
+    pub layer: usize,
+    /// `SparsityTable` value the analytic model would have priced with.
+    pub analytic: f64,
+    /// Runtime gating stats from the functional probe (None when the
+    /// architecture has no DCiM or measurement was off).
+    pub measured: Option<GatingStats>,
+}
+
+impl SparsityRow {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("analytic".to_string(), num3(self.analytic));
+        o.insert("layer".to_string(), Json::Num(self.layer as f64));
+        if let Some(m) = &self.measured {
+            o.insert("measured".to_string(), m.to_json());
+        }
+        Json::Obj(o)
+    }
+}
+
+/// The timeline power report: windowed per-class power, attribution
+/// drill-down, and the sparsity comparison table.
+#[derive(Clone, Debug)]
+pub struct PowerReport {
+    pub window_ns: f64,
+    pub windows: usize,
+    pub makespan_ns: f64,
+    /// All five classes, [`PowerClass::ALL`] order.
+    pub classes: Vec<ClassPower>,
+    /// `(graph layer index, pj)` per layer, model order.
+    pub layers: Vec<(usize, f64)>,
+    pub input_pj: f64,
+    pub other_pj: f64,
+    pub sparsity: Vec<SparsityRow>,
+    /// Mirror fold over every component — bit-exact vs
+    /// `CostLedger::total_energy_pj()` of the run ledger.
+    pub total_pj: f64,
+}
+
+impl PowerReport {
+    /// Peak of the summed-across-classes window power (the DSE's
+    /// `peak_power_mw` objective column).
+    pub fn peak_total_mw(&self) -> f64 {
+        let mut peak = 0.0f64;
+        for w in 0..self.windows {
+            let pj: f64 = self.classes.iter().map(|c| c.power.bins_pj[w]).sum();
+            peak = peak.max(pj / self.window_ns);
+        }
+        peak
+    }
+
+    /// The class series as a generic [`PowerTrace`] (CSV / export reuse).
+    pub fn trace(&self) -> PowerTrace {
+        PowerTrace {
+            window_ns: self.window_ns,
+            windows: self.windows,
+            horizon_ns: self.makespan_ns,
+            channels: self.classes.iter().map(|c| c.power.clone()).collect(),
+        }
+    }
+
+    /// CSV export: one row per (window, class).
+    pub fn to_csv(&self) -> String {
+        self.trace().to_csv()
+    }
+
+    /// Deterministic JSON section (embedded in the timeline report).
+    pub fn to_json(&self) -> Json {
+        let classes: BTreeMap<String, Json> = self
+            .classes
+            .iter()
+            .map(|c| (c.power.name.clone(), c.power.to_json(self.window_ns, self.makespan_ns)))
+            .collect();
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|&(l, pj)| {
+                let mut o = BTreeMap::new();
+                o.insert("layer".to_string(), Json::Num(l as f64));
+                o.insert("pj".to_string(), num3(pj));
+                Json::Obj(o)
+            })
+            .collect();
+        let sparsity: Vec<Json> = self.sparsity.iter().map(|r| r.to_json()).collect();
+        let mut o = BTreeMap::new();
+        o.insert("classes".to_string(), Json::Obj(classes));
+        o.insert("input_pj".to_string(), num3(self.input_pj));
+        o.insert("layers".to_string(), Json::Arr(layers));
+        o.insert("makespan_ns".to_string(), num3(self.makespan_ns));
+        o.insert("other_pj".to_string(), num3(self.other_pj));
+        o.insert("peak_total_mw".to_string(), num3(self.peak_total_mw()));
+        o.insert("sparsity".to_string(), Json::Arr(sparsity));
+        o.insert("total_pj".to_string(), num3(self.total_pj));
+        o.insert("window_ns".to_string(), num3(self.window_ns));
+        o.insert("windows".to_string(), Json::Num(self.windows as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Measure one layer's DCiM column-gating rate with a functional tile
+/// probe. The zoo graphs carry shapes only, so weights and inputs are
+/// synthesized from a per-(model, layer) hash seed — deterministic for
+/// fixed inputs, independent of thread-pool size.
+pub fn measure_layer_gating(cfg: &HcimConfig, model: &str, layer_index: usize) -> GatingStats {
+    let seed = fnv1a64(format!("{model}|gating|{layer_index}").as_bytes());
+    let mut rng = Rng::new(seed);
+    // probe shape: fits one crossbar, small enough to stay cheap
+    let rows = cfg.xbar.rows.clamp(8, 48);
+    let cols = (cfg.xbar.cols / cfg.w_bits.max(1) as usize).clamp(1, 12);
+    let half = ((1i64 << (cfg.w_bits.max(2) - 1)) - 1).max(1);
+    let span = 2 * half + 1;
+    let salt = (seed % 0x7fff) as i64;
+    let w = Mat::from_fn(rows, cols, |r, c| {
+        (((r as i64 * 7 + c as i64 * 3 + salt) % span) + span) % span - half
+    });
+    let mut psq =
+        PsqLayerParams::calibrated(&w, cfg.mode, cfg.w_bits, cfg.x_bits, cfg.ps_bits, &mut rng);
+    // keep |Σ p·s| < 2^(ps_bits−1): scales ≤ 7 over the x_bits streams
+    for s in psq.scales.iter_mut() {
+        *s = (*s).clamp(-7, 7);
+    }
+    let mut tile = HcimTile::program(cfg, &w, &psq);
+    let xmax = 1u64 << cfg.x_bits;
+    let x: Vec<i64> = (0..rows).map(|i| ((i as u64 * 5 + seed % 11) % xmax) as i64).collect();
+    let mut ledger = CostLedger::new();
+    tile.mvm(&x, &CalibParams::at_65nm(), &mut ledger);
+    tile.gating()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_component_maps_to_one_class() {
+        let mut counts = BTreeMap::new();
+        for c in Component::ALL {
+            *counts.entry(PowerClass::of(c).name()).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts["xbar"], 1);
+        assert_eq!(counts["adc"], 1);
+        assert_eq!(counts["noc"], 1);
+        assert_eq!(counts["dcim"], 4);
+        assert_eq!(counts["peripheral"], 7);
+    }
+
+    #[test]
+    fn mirror_matches_ledger_bit_exactly() {
+        // same delta merged twice: the recorder's class totals must fold
+        // to the run ledger's per-component sums bit-for-bit
+        let mut delta = CostLedger::new();
+        delta.add_energy_n(Component::Crossbar, 0.1, 1); // 0.1 is inexact in f64
+        delta.add_energy_n(Component::DcimCompute, 0.3, 1);
+        delta.add_energy_n(Component::Register, 0.7, 1);
+        let mut run = CostLedger::new();
+        let mut rec = TimelinePowerRecorder::new(1);
+        for _ in 0..3 {
+            run.merge_serial(&delta);
+            rec.charge_ledger(&delta, Attribution::Layer(0), 0.0, 10.0, 5.0);
+        }
+        let rep = rec.finish(Some(10.0), 10.0, &[0], vec![]);
+        for cp in &rep.classes {
+            let want: f64 = Component::ALL
+                .iter()
+                .filter(|&&c| PowerClass::of(c) == cp.class)
+                .map(|&c| run.energy(c))
+                .sum();
+            assert_eq!(cp.power.total_pj.to_bits(), want.to_bits(), "{}", cp.power.name);
+        }
+        assert_eq!(rep.total_pj.to_bits(), run.total_energy_pj().to_bits());
+        assert_eq!(rep.layers, vec![(0, rep.total_pj)]);
+    }
+
+    #[test]
+    fn all_five_classes_always_present() {
+        let rec = TimelinePowerRecorder::new(0);
+        let rep = rec.finish(Some(1.0), 1.0, &[], vec![]);
+        let names: Vec<&str> = rep.classes.iter().map(|c| c.power.name.as_str()).collect();
+        assert_eq!(names, vec!["xbar", "dcim", "noc", "adc", "peripheral"]);
+        assert_eq!(rep.peak_total_mw(), 0.0);
+        let j = rep.to_json();
+        for n in ["xbar", "dcim", "noc", "adc", "peripheral"] {
+            assert!(j.get("classes").unwrap().get(n).is_some(), "missing class {n}");
+        }
+    }
+
+    #[test]
+    fn component_charge_lands_in_noc_class() {
+        let mut rec = TimelinePowerRecorder::new(0);
+        rec.charge_component(Component::Interconnect, 8.0, Attribution::Program, 0.0, 4.0);
+        let rep = rec.finish(Some(2.0), 4.0, &[], vec![]);
+        let noc = &rep.classes[2];
+        assert_eq!(noc.power.name, "noc");
+        assert_eq!(noc.power.total_pj, 8.0);
+        assert_eq!(noc.power.bins_pj, vec![4.0, 4.0]);
+        assert_eq!(rep.other_pj, 8.0);
+        assert_eq!(rep.peak_total_mw(), 2.0);
+    }
+
+    #[test]
+    fn measured_gating_is_deterministic() {
+        let cfg = HcimConfig::config_a();
+        let a = measure_layer_gating(&cfg, "resnet20", 3);
+        let b = measure_layer_gating(&cfg, "resnet20", 3);
+        assert_eq!(a, b);
+        assert!(a.total_ops() > 0, "probe must run some column ops");
+        // different layers draw different seeds → different stats
+        let c = measure_layer_gating(&cfg, "resnet20", 4);
+        assert!(a != c || a.sparsity() == c.sparsity());
+    }
+
+    #[test]
+    fn report_json_is_stable_and_sorted() {
+        let mut rec = TimelinePowerRecorder::new(2);
+        rec.charge_component(Component::Crossbar, 10.0, Attribution::Layer(0), 0.0, 10.0);
+        rec.charge_component(Component::OffChip, 2.0, Attribution::Input, 0.0, 5.0);
+        let rows = vec![
+            SparsityRow { layer: 0, analytic: 0.5, measured: None },
+            SparsityRow {
+                layer: 2,
+                analytic: 0.5,
+                measured: Some(GatingStats { active_ops: 1, gated_ops: 1, sub_ops: 0 }),
+            },
+        ];
+        let rep = rec.finish(Some(5.0), 10.0, &[0, 2], rows);
+        let a = rep.to_json().to_string();
+        let b = rep.to_json().to_string();
+        assert_eq!(a, b);
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.num_field("total_pj").unwrap(), 12.0);
+        assert_eq!(j.num_field("input_pj").unwrap(), 2.0);
+        assert_eq!(j.num_field("windows").unwrap(), 2.0);
+        let sp = j.get("sparsity").unwrap().as_arr().unwrap();
+        assert!(sp[0].get("measured").is_none());
+        assert_eq!(sp[1].get("measured").unwrap().num_field("sparsity").unwrap(), 0.5);
+        assert!(rep.to_csv().starts_with("t_start_ns,channel,"));
+    }
+}

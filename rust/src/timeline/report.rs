@@ -85,6 +85,11 @@ pub struct TimelineReport {
     /// with tracing on and off. Export via [`TimelineReport::chrome_trace`]
     /// or the journal's own `deterministic_json`.
     pub spans: Option<crate::obs::SpanJournal>,
+    /// Windowed per-class power report (present when the engine ran
+    /// with `--power`). Serialized under the `"power"` key — the key is
+    /// present exactly when the flag was on, so power-off JSONs stay
+    /// golden-stable.
+    pub power: Option<super::power::PowerReport>,
 }
 
 impl TimelineReport {
@@ -146,6 +151,9 @@ impl TimelineReport {
         top.insert("makespan_ns".to_string(), num3(self.makespan_ns));
         top.insert("model".to_string(), Json::Str(self.model.clone()));
         top.insert("noc".to_string(), Json::Obj(noc));
+        if let Some(p) = &self.power {
+            top.insert("power".to_string(), p.to_json());
+        }
         top.insert("resources".to_string(), Json::Arr(resources));
         top.insert("rounds".to_string(), Json::Num(self.rounds as f64));
         top.insert("schema".to_string(), Json::Num(self.schema as f64));
@@ -195,6 +203,10 @@ impl TimelineReport {
             ),
         ]);
         t.row(&["energy (µJ)".into(), fnum(self.ledger.total_energy_pj() / 1e6)]);
+        if let Some(p) = &self.power {
+            t.row(&["peak power (mW)".into(), fnum(p.peak_total_mw())]);
+            t.row(&["power window (ns)".into(), fnum(p.window_ns)]);
+        }
         t
     }
 
@@ -214,7 +226,8 @@ impl TimelineReport {
         t
     }
 
-    /// Write `timeline.json` and `timeline.csv` under `dir`.
+    /// Write `timeline.json` and `timeline.csv` under `dir` (plus
+    /// `timeline.power.csv` when the engine ran with `--power`).
     pub fn write(&self, dir: &Path) -> crate::Result<(PathBuf, PathBuf)> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
@@ -224,14 +237,21 @@ impl TimelineReport {
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", json_path.display()))?;
         std::fs::write(&csv_path, self.to_csv())
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", csv_path.display()))?;
+        if let Some(p) = &self.power {
+            let power_path = dir.join("timeline.power.csv");
+            std::fs::write(&power_path, p.to_csv())
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", power_path.display()))?;
+        }
         Ok((json_path, csv_path))
     }
 
     /// Build the Chrome `trace_event` export: one track (tid) per
     /// resource in registry order with the journal's spans as complete
     /// events, plus the NoC activity counter track when gather traffic
-    /// was traced. Deterministic for fixed inputs — the CLI layers the
-    /// (non-deterministic) instrument snapshot on top at write time.
+    /// was traced and one `power.<class>` counter track per resource
+    /// class (series `mw`, one sample per window) when the engine ran
+    /// with `--power`. Deterministic for fixed inputs — the CLI layers
+    /// the (non-deterministic) instrument snapshot on top at write time.
     /// Errors when the engine ran without tracing.
     pub fn chrome_trace(&self) -> crate::Result<crate::obs::ChromeTrace> {
         let spans = self
@@ -249,6 +269,18 @@ impl TimelineReport {
                     declared = true;
                 }
                 t.counter(1, noc_tid, "noc.active", e.cycle as f64 / 1e3, "active", e.value as f64);
+            }
+        }
+        if let Some(p) = &self.power {
+            let base_tid = spans.tracks().len() as u64 + 2;
+            for (i, cp) in p.classes.iter().enumerate() {
+                let tid = base_tid + i as u64;
+                let name = format!("power.{}", cp.power.name);
+                t.thread_meta(1, tid, &name);
+                for (w, &pj) in cp.power.bins_pj.iter().enumerate() {
+                    let ts_us = w as f64 * p.window_ns / 1e3;
+                    t.counter(1, tid, &name, ts_us, "mw", pj / p.window_ns);
+                }
             }
         }
         Ok(t)
@@ -301,6 +333,7 @@ mod tests {
             ledger,
             trace: None,
             spans: None,
+            power: None,
         }
     }
 
@@ -372,5 +405,26 @@ mod tests {
     fn peak_util_is_the_max_class() {
         let r = report();
         assert!((r.peak_util() - 0.63).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_section_only_when_enabled() {
+        use super::super::power::{Attribution, TimelinePowerRecorder};
+        use crate::sim::energy::Component as C;
+        let mut r = report();
+        assert!(r.to_json().get("power").is_none(), "no power key when off");
+        let mut rec = TimelinePowerRecorder::new(1);
+        rec.charge_component(C::Crossbar, 160.0, Attribution::Layer(0), 0.0, 950.0);
+        r.power = Some(rec.finish(Some(100.0), 950.0, &[0], vec![]));
+        let j = r.to_json();
+        let p = j.get("power").unwrap();
+        assert_eq!(p.num_field("total_pj").unwrap(), 160.0);
+        assert!(p.get("classes").unwrap().get("xbar").is_some());
+        assert!(r.summary_table().render().contains("peak power"));
+        // the extra export lands next to the json/csv pair
+        let dir = std::env::temp_dir().join("hcim_timeline_report_power_write");
+        let _ = std::fs::remove_dir_all(&dir);
+        r.write(&dir).unwrap();
+        assert!(dir.join("timeline.power.csv").exists());
     }
 }

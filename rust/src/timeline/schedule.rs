@@ -37,6 +37,7 @@ use crate::obs::span::SpanJournal;
 use crate::sim::chip::layer_local_movement_cost;
 use crate::sim::components::memory::OffChip;
 use crate::sim::dcim::pipeline::{PipelineCfg, PipelineSchedule};
+use crate::sim::dcim::sparsity::GatingStats;
 use crate::sim::energy::{Component, CostLedger};
 use crate::sim::mapping::ModelMapping;
 use crate::sim::noc::Mesh;
@@ -46,6 +47,7 @@ use crate::sim::tile::MvmStats;
 use crate::sim::trace::Tracer;
 
 use super::event::{EventKind, EventQueue};
+use super::power::{measure_layer_gating, Attribution, SparsityRow, TimelinePowerRecorder};
 use super::report::{ClassUtil, ResourceUsage, TimelineReport};
 use super::resource::{BusyTrack, NocStats, ResourceClass};
 
@@ -75,6 +77,13 @@ pub struct LayerSpec {
     /// Buffer/accumulate energy per invocation (mesh gather excluded —
     /// the engine books that live, with contention).
     pub move_energy: CostLedger,
+    /// The `SparsityTable` figure for this layer (what the analytic
+    /// model would have priced DCiM energy with).
+    pub analytic_sparsity: f64,
+    /// Runtime-measured column-gating stats from the functional probe
+    /// (Some only when the model was built with gating measurement on an
+    /// HCiM arch; the priced `mvm_energy` then uses the measured rate).
+    pub gating: Option<GatingStats>,
 }
 
 /// A whole model's priced timeline structure.
@@ -104,11 +113,17 @@ pub struct TimelineCfg {
     /// Record busy intervals, feeding both the Gantt-style VCD export
     /// and the virtual-clock span journal / Chrome trace.
     pub trace: bool,
+    /// Record every event's energy on the virtual clock and emit the
+    /// windowed per-class power report ([`super::power`]).
+    pub power: bool,
+    /// Power-binning window (virtual ns); `None` auto-picks the
+    /// smallest 1/2/5×10^k covering the makespan in ≤128 windows.
+    pub power_window_ns: Option<f64>,
 }
 
 impl Default for TimelineCfg {
     fn default() -> Self {
-        TimelineCfg { batch: 1, chunks: 8, trace: false }
+        TimelineCfg { batch: 1, chunks: 8, trace: false, power: false, power_window_ns: None }
     }
 }
 
@@ -123,6 +138,26 @@ impl TimelineModel {
         params: &CalibParams,
         sparsity: &SparsityTable,
         tile_budget: Option<usize>,
+    ) -> crate::Result<TimelineModel> {
+        TimelineModel::from_graph_opts(graph, arch, params, sparsity, tile_budget, false)
+    }
+
+    /// [`TimelineModel::from_graph`] with optional runtime gating
+    /// measurement: when `measure_gating` is set and `arch` is HCiM,
+    /// every layer runs one seeded functional tile probe
+    /// ([`measure_layer_gating`]) and DCiM energy is priced with the
+    /// *measured* column-gating rate instead of the analytic table
+    /// value. Both figures land on the [`LayerSpec`] so the power
+    /// report can show them side by side, and the per-layer
+    /// `dcim.lNN.gated_ops` / `dcim.lNN.active_ops` instrument counters
+    /// are bumped (wall-side telemetry, never in the report JSON).
+    pub fn from_graph_opts(
+        graph: &Graph,
+        arch: &Arch,
+        params: &CalibParams,
+        sparsity: &SparsityTable,
+        tile_budget: Option<usize>,
+        measure_gating: bool,
     ) -> crate::Result<TimelineModel> {
         let cfg = arch.config();
         let mapping = ModelMapping::build(graph, cfg);
@@ -145,10 +180,20 @@ impl TimelineModel {
             _ => 0.0, // ADC peripheries have no scale-factor array
         };
 
+        let inst = instrument::global();
         let mut layers = Vec::with_capacity(mapping.layers.len());
         for (mvm_idx, lm) in mapping.layers.iter().enumerate() {
+            let analytic = sparsity.lookup(&graph.name, mvm_idx, cfg.mode);
+            let gating = if measure_gating && matches!(arch, Arch::Hcim(_)) {
+                let st = measure_layer_gating(cfg, &graph.name, lm.layer_index);
+                inst.counter(&format!("dcim.l{mvm_idx:02}.gated_ops")).add(st.gated_ops);
+                inst.counter(&format!("dcim.l{mvm_idx:02}.active_ops")).add(st.active_ops);
+                Some(st)
+            } else {
+                None
+            };
             let stats = MvmStats {
-                sparsity: sparsity.lookup(&graph.name, mvm_idx, cfg.mode),
+                sparsity: gating.map(|g| g.sparsity()).unwrap_or(analytic),
                 input_density: 0.30,
                 row_utilization: lm.row_utilization(cfg),
             };
@@ -171,6 +216,8 @@ impl TimelineModel {
                 weight_bytes: lm.crossbars() * cfg.xbar.cells().div_ceil(8),
                 mvm_energy: per_mvm.replicate(1, lm.crossbars() as u64),
                 move_energy: layer_local_movement_cost(lm, cfg, params),
+                analytic_sparsity: analytic,
+                gating,
             });
         }
 
@@ -343,6 +390,10 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
         q.push(0.0, EventKind::Ready { task: img });
     }
     let mut ledger = CostLedger::new();
+    // power recorder: mirrors every ledger charge onto the virtual clock
+    // (same f64 values, same order — see timeline/power.rs for the
+    // bit-exactness contract)
+    let mut power = if cfg.power { Some(TimelinePowerRecorder::new(nl)) } else { None };
     let mut noc = NocStats { links: mesh.routable_links(), ..NocStats::default() };
     let mut noc_deltas: Vec<(f64, i64)> = Vec::new();
     let mut makespan = 0.0f64;
@@ -367,14 +418,32 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
                 tracks[res].occupy(start, end);
                 let mut done = end;
                 match layer {
-                    None => ledger.merge_serial(&model.input_energy),
+                    None => {
+                        ledger.merge_serial(&model.input_energy);
+                        if let Some(p) = power.as_mut() {
+                            p.charge_ledger(
+                                &model.input_energy,
+                                Attribution::Input,
+                                start,
+                                end,
+                                end,
+                            );
+                        }
+                    }
                     Some(l) => {
                         let spec = &model.layers[l];
+                        let dcim_end = start + dcim_ns.min(duration);
                         if dcim_ns > 0.0 {
-                            tracks[dcim_track(l)].occupy(start, start + dcim_ns.min(duration));
+                            tracks[dcim_track(l)].occupy(start, dcim_end);
                         }
-                        ledger.merge_serial(&spec.mvm_energy.replicate(invocs, 1));
-                        ledger.merge_serial(&spec.move_energy.replicate(invocs, 1));
+                        let mvm_e = spec.mvm_energy.replicate(invocs, 1);
+                        let move_e = spec.move_energy.replicate(invocs, 1);
+                        ledger.merge_serial(&mvm_e);
+                        ledger.merge_serial(&move_e);
+                        if let Some(p) = power.as_mut() {
+                            p.charge_ledger(&mvm_e, Attribution::Layer(l), start, end, dcim_end);
+                            p.charge_ledger(&move_e, Attribution::Layer(l), start, end, dcim_end);
+                        }
                         if spec.psum_bytes_per_src_mvm > 0 && spec.row_tiles > 1 {
                             let bytes = spec.psum_bytes_per_src_mvm * invocs as usize;
                             for src in 1..spec.row_tiles {
@@ -385,6 +454,17 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
                                 noc_wait_hist
                                     .observe((tr.latency_ns - tr.ideal_ns).max(0.0) as u64);
                                 let fin = end + tr.latency_ns;
+                                if let Some(p) = power.as_mut() {
+                                    // identical expression to the booking
+                                    // inside Mesh::transfer (noc.rs)
+                                    p.charge_component(
+                                        Component::Interconnect,
+                                        params.noc_byte_pj * (bytes * tr.hops.max(1)) as f64,
+                                        Attribution::Layer(l),
+                                        end,
+                                        fin,
+                                    );
+                                }
                                 if cfg.trace {
                                     noc_deltas.push((end, 1));
                                     noc_deltas.push((fin, -1));
@@ -417,6 +497,15 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
                             params.buffer_byte_pj * bytes as f64,
                             bytes as u64,
                         );
+                        if let Some(p) = power.as_mut() {
+                            p.charge_component(
+                                Component::Buffer,
+                                params.buffer_byte_pj * bytes as f64,
+                                Attribution::Program,
+                                ev.t_ns,
+                                ev.t_ns + delay,
+                            );
+                        }
                         if let Some(p) = program_track {
                             tracks[p].free_at = ev.t_ns + delay;
                             tracks[p].occupy(ev.t_ns, ev.t_ns + delay);
@@ -464,6 +553,22 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
     // every track is FIFO-serial, so its busy time lower-bounds the makespan
     let lower_bound_ns = tracks.iter().map(|t| t.busy_ns).fold(0.0, f64::max);
 
+    // ---- power report (built before the trace flush so the VCD can
+    // carry the per-class windowed series) ----
+    let power_report = power.map(|p| {
+        let layer_ids: Vec<usize> = model.layers.iter().map(|s| s.layer_index).collect();
+        let rows: Vec<SparsityRow> = model
+            .layers
+            .iter()
+            .map(|s| SparsityRow {
+                layer: s.layer_index,
+                analytic: s.analytic_sparsity,
+                measured: s.gating,
+            })
+            .collect();
+        p.finish(cfg.power_window_ns, makespan, &layer_ids, rows)
+    });
+
     // ---- trace flush (registry order, then the NoC activity counter) ----
     let tracer = if cfg.trace {
         let mut t = Tracer::new(true);
@@ -494,6 +599,21 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
                     i += 1;
                 }
                 t.record(t_ns.round() as u64, "noc.active", active.max(0) as u128);
+            }
+        }
+        // analog power signals: one 32-bit µW value per class, stepped
+        // at each window boundary (only when --power is also on, so the
+        // power-off VCD stays golden-stable)
+        if let Some(pr) = &power_report {
+            for cp in &pr.classes {
+                t.declare(&format!("power.{}", cp.power.name), 32);
+            }
+            for cp in &pr.classes {
+                let name = format!("power.{}", cp.power.name);
+                for (w, &pj) in cp.power.bins_pj.iter().enumerate() {
+                    let uw = (pj / pr.window_ns * 1000.0).round().max(0.0) as u128;
+                    t.record((w as f64 * pr.window_ns).round() as u64, &name, uw);
+                }
             }
         }
         Some(t)
@@ -592,6 +712,7 @@ pub fn simulate(model: &TimelineModel, cfg: &TimelineCfg) -> TimelineReport {
         ledger,
         trace: tracer,
         spans,
+        power: power_report,
     }
 }
 
@@ -659,7 +780,7 @@ mod tests {
     #[test]
     fn makespan_between_bounds_and_pipelining_wins() {
         let m = model(None);
-        let rep = simulate(&m, &TimelineCfg { batch: 4, chunks: 8, trace: false });
+        let rep = simulate(&m, &TimelineCfg { batch: 4, ..TimelineCfg::default() });
         assert!(rep.makespan_ns > 0.0);
         assert!(
             rep.makespan_ns <= rep.serial_ns,
@@ -683,8 +804,8 @@ mod tests {
     #[test]
     fn batching_amortizes_into_higher_throughput() {
         let m = model(None);
-        let t1 = simulate(&m, &TimelineCfg { batch: 1, chunks: 8, trace: false });
-        let t16 = simulate(&m, &TimelineCfg { batch: 16, chunks: 8, trace: false });
+        let t1 = simulate(&m, &TimelineCfg { batch: 1, ..TimelineCfg::default() });
+        let t16 = simulate(&m, &TimelineCfg { batch: 16, ..TimelineCfg::default() });
         assert!(
             t16.throughput_ips > t1.throughput_ips,
             "batch 16 {} img/s must beat batch 1 {} img/s",
@@ -736,7 +857,7 @@ mod tests {
     #[test]
     fn schedule_is_deterministic_across_runs() {
         let m = model(None);
-        let cfg = TimelineCfg { batch: 4, chunks: 8, trace: false };
+        let cfg = TimelineCfg { batch: 4, ..TimelineCfg::default() };
         let a = simulate(&m, &cfg);
         let b = simulate(&m, &cfg);
         assert_eq!(a.makespan_ns.to_bits(), b.makespan_ns.to_bits());
@@ -746,9 +867,10 @@ mod tests {
     #[test]
     fn span_journal_follows_registry_order_and_tracing() {
         let m = model(None);
-        let untraced = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: false });
+        let base = TimelineCfg { batch: 2, chunks: 4, ..TimelineCfg::default() };
+        let untraced = simulate(&m, &base);
         assert!(untraced.spans.is_none());
-        let traced = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: true });
+        let traced = simulate(&m, &TimelineCfg { trace: true, ..base });
         let j = traced.spans.as_ref().unwrap();
         assert!(!j.is_empty());
         assert_eq!(j.tracks()[0], "offchip");
@@ -759,13 +881,55 @@ mod tests {
     }
 
     #[test]
+    fn power_report_reconciles_with_the_ledger() {
+        let m = model(None);
+        let rep = simulate(&m, &TimelineCfg { batch: 2, power: true, ..TimelineCfg::default() });
+        let pr = rep.power.as_ref().unwrap();
+        assert_eq!(pr.total_pj.to_bits(), rep.ledger.total_energy_pj().to_bits());
+        assert!(pr.peak_total_mw() > 0.0);
+        assert!(rep.to_json().get("power").is_some());
+        // power off → no report and no "power" key in the JSON
+        let off = simulate(&m, &TimelineCfg { batch: 2, ..TimelineCfg::default() });
+        assert!(off.power.is_none());
+        assert!(off.to_json().get("power").is_none());
+    }
+
+    #[test]
+    fn measured_gating_prices_the_model() {
+        let g = zoo::resnet20();
+        let arch = Arch::Hcim(HcimConfig::config_a());
+        let params = CalibParams::at_65nm().rescaled(TechNode::N32);
+        let table = SparsityTable::paper_default();
+        let m = TimelineModel::from_graph_opts(&g, &arch, &params, &table, None, true).unwrap();
+        for l in &m.layers {
+            let st = l.gating.expect("HCiM + measure_gating must measure every layer");
+            assert!(st.total_ops() > 0, "layer {} probe ran no ops", l.layer_index);
+        }
+        // measurement is deterministic: a rebuild prices identically
+        let m2 = TimelineModel::from_graph_opts(&g, &arch, &params, &table, None, true).unwrap();
+        for (a, b) in m.layers.iter().zip(&m2.layers) {
+            assert_eq!(a.gating, b.gating);
+            assert_eq!(
+                a.mvm_energy.total_energy_pj().to_bits(),
+                b.mvm_energy.total_energy_pj().to_bits()
+            );
+        }
+        // analytic build carries the table value and no measurement
+        let ma = TimelineModel::from_graph(&g, &arch, &params, &table, None).unwrap();
+        for l in &ma.layers {
+            assert!(l.gating.is_none());
+            assert!((0.0..=1.0).contains(&l.analytic_sparsity));
+        }
+    }
+
+    #[test]
     fn gather_traffic_reaches_the_mesh() {
         let m = model(None);
         assert!(
             m.layers.iter().any(|l| l.row_tiles > 1 && l.psum_bytes_per_src_mvm > 0),
             "resnet20 config A must have row-tiled layers"
         );
-        let rep = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, trace: false });
+        let rep = simulate(&m, &TimelineCfg { batch: 2, chunks: 4, ..TimelineCfg::default() });
         assert!(rep.noc.transfers > 0, "gathers must route through the mesh");
         assert!(rep.ledger.energy(Component::Interconnect) > 0.0);
         assert_eq!(

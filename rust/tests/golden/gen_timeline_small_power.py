@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Regenerate tests/golden/timeline_small_power.json (deliberately).
+
+Mirror of the power section for the hand-checkable two-layer
+injected-duration timeline spec of rust/tests/power_trace.rs
+(`golden_model`, batch 2, 2 chunks/layer, --power-window-ns 100).
+The schedule (see gen_timeline_small.py):
+
+  input:    img0 0-50, img1 50-100        (5 pJ off-chip each)
+  xbar.l00: 50-250, 250-450, 450-650, 650-850
+            (each chunk: 2 MVMs -> 20 pJ crossbar + 2 pJ buffer)
+  xbar.l01: 250-350, 450-550, 650-750, 850-950 -> makespan 950 ns
+            (each chunk: 20 pJ crossbar + 2 pJ buffer)
+
+Charges spread proportionally over the 100-ns windows they overlap
+(the last overlapping window takes the remainder), exactly as
+rust/src/obs/power.rs::spread bins them. Rounding mirrors the Rust
+num3 (3 decimals) + JSON integer printing.
+"""
+import json
+import math
+
+WINDOW = 100.0
+MAKESPAN = 950.0
+WINDOWS = 10  # ceil(950 / 100)
+
+L0 = [(50.0, 250.0), (250.0, 450.0), (450.0, 650.0), (650.0, 850.0)]
+L1 = [(250.0, 350.0), (450.0, 550.0), (650.0, 750.0), (850.0, 950.0)]
+XBAR = [(t0, t1, 20.0) for t0, t1 in L0 + L1]
+PERIPHERAL = [(0.0, 50.0, 5.0), (50.0, 100.0, 5.0)] + [
+    (t0, t1, 2.0) for t0, t1 in L0 + L1
+]
+
+
+def num3(x):
+    v = round(x * 1000.0) / 1000.0
+    return int(v) if float(v).is_integer() else v
+
+
+def spread(bins, t0, t1, pj):
+    """Mirror of rust/src/obs/power.rs::spread (same f64 operations)."""
+    last = len(bins) - 1
+    clamp = lambda w: min(max(int(w), 0), last)
+    if t1 <= t0:
+        bins[clamp(math.floor(t0 / WINDOW))] += pj
+        return
+    w0 = clamp(math.floor(t0 / WINDOW))
+    w1 = clamp(math.ceil(t1 / WINDOW) - 1)
+    if w0 >= w1:
+        bins[w0] += pj
+        return
+    dur = t1 - t0
+    assigned = 0.0
+    for w in range(w0, w1):
+        seg_start = t0 if w == w0 else w * WINDOW
+        seg_end = (w + 1) * WINDOW
+        part = pj * ((seg_end - seg_start) / dur)
+        bins[w] += part
+        assigned += part
+    bins[w1] += pj - assigned
+
+
+def channel(charges):
+    bins = [0.0] * WINDOWS
+    total = 0.0
+    for t0, t1, pj in charges:
+        total += pj
+        spread(bins, t0, t1, pj)
+    return bins, total
+
+
+def percentile_sorted(sorted_vals, pct):
+    """Mirror of rust/src/util/stats.rs::percentile_sorted."""
+    n = len(sorted_vals)
+    if n == 1:
+        return sorted_vals[0]
+    rank = pct / 100.0 * (n - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    frac = rank - lo
+    return sorted_vals[int(lo)] + (sorted_vals[int(hi)] - sorted_vals[int(lo)]) * frac
+
+
+def summary(bins, total):
+    series = [pj / WINDOW for pj in bins]
+    return {
+        "avg_mw": num3(total / MAKESPAN),
+        "p99_mw": num3(percentile_sorted(sorted(series), 99.0)),
+        "peak_mw": num3(max(series)),
+        "series_mw": [num3(v) for v in series],
+        "total_pj": num3(total),
+    }
+
+
+xbar_bins, xbar_total = channel(XBAR)
+peri_bins, peri_total = channel(PERIPHERAL)
+zero = [0.0] * WINDOWS
+classes = {
+    "xbar": summary(xbar_bins, xbar_total),
+    "dcim": summary(zero, 0.0),
+    "noc": summary(zero, 0.0),
+    "adc": summary(zero, 0.0),
+    "peripheral": summary(peri_bins, peri_total),
+}
+peak_total = max(
+    (xbar_bins[w] + peri_bins[w]) / WINDOW for w in range(WINDOWS)
+)
+
+doc = {
+    "classes": classes,
+    "input_pj": num3(10.0),  # 2 images x 5 pJ off-chip
+    "layers": [{"layer": 0, "pj": num3(88.0)}, {"layer": 1, "pj": num3(88.0)}],
+    "makespan_ns": num3(MAKESPAN),
+    "other_pj": num3(0.0),  # no reprogramming rounds
+    "peak_total_mw": num3(peak_total),
+    "sparsity": [{"analytic": 0, "layer": 0}, {"analytic": 0, "layer": 1}],
+    "total_pj": num3(186.0),
+    "window_ns": num3(WINDOW),
+    "windows": WINDOWS,
+}
+
+print(json.dumps(doc, sort_keys=True, separators=(",", ":")))

@@ -28,9 +28,14 @@ fn resnet20_model() -> TimelineModel {
     .unwrap()
 }
 
+/// Cfg shorthand: power stays off here (tests/power_trace.rs covers it).
+fn cfg(batch: usize, chunks: usize, trace: bool) -> TimelineCfg {
+    TimelineCfg { batch, chunks, trace, ..TimelineCfg::default() }
+}
+
 /// One traced run's span journal, serialized (virtual-time section only).
 fn resnet20_journal_json() -> String {
-    let rep = simulate(&resnet20_model(), &TimelineCfg { batch: 4, chunks: 8, trace: true });
+    let rep = simulate(&resnet20_model(), &cfg(4, 8, true));
     format!("{}\n", rep.spans.as_ref().expect("traced run").deterministic_json())
 }
 
@@ -103,6 +108,8 @@ fn golden_model() -> TimelineModel {
             weight_bytes: 16,
             mvm_energy,
             move_energy,
+            analytic_sparsity: 0.0,
+            gating: None,
         }
     };
     TimelineModel {
@@ -118,7 +125,7 @@ fn golden_model() -> TimelineModel {
 
 #[test]
 fn injected_spec_matches_golden_chrome_trace() {
-    let rep = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
+    let rep = simulate(&golden_model(), &cfg(2, 2, true));
     let got = format!("{}\n", rep.chrome_trace().unwrap().to_json());
     let golden = include_str!("golden/timeline_small.trace.json");
     assert_eq!(
@@ -130,8 +137,8 @@ fn injected_spec_matches_golden_chrome_trace() {
 
 #[test]
 fn tracing_does_not_perturb_the_deterministic_report() {
-    let traced = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
-    let untraced = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: false });
+    let traced = simulate(&golden_model(), &cfg(2, 2, true));
+    let untraced = simulate(&golden_model(), &cfg(2, 2, false));
     assert_eq!(traced.to_json().to_string(), untraced.to_json().to_string());
     assert!(untraced.chrome_trace().is_err(), "untraced run has no journal to export");
 }

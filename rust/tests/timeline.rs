@@ -28,8 +28,13 @@ fn resnet20_model() -> TimelineModel {
     .unwrap()
 }
 
+/// Cfg shorthand: power stays off here (tests/power_trace.rs covers it).
+fn cfg(batch: usize, chunks: usize, trace: bool) -> TimelineCfg {
+    TimelineCfg { batch, chunks, trace, ..TimelineCfg::default() }
+}
+
 fn resnet20_json() -> String {
-    let rep = simulate(&resnet20_model(), &TimelineCfg { batch: 4, chunks: 8, trace: false });
+    let rep = simulate(&resnet20_model(), &cfg(4, 8, false));
     format!("{}\n", rep.to_json())
 }
 
@@ -52,7 +57,7 @@ fn report_json_is_byte_identical_across_runs_and_pool_sizes() {
 #[test]
 fn resnet20_batch4_makespan_sits_between_the_bounds() {
     let model = resnet20_model();
-    let rep = simulate(&model, &TimelineCfg { batch: 4, chunks: 8, trace: false });
+    let rep = simulate(&model, &cfg(4, 8, false));
     assert!(
         rep.makespan_ns <= rep.serial_ns,
         "pipelined makespan {} must not exceed the serial reference {}",
@@ -115,6 +120,8 @@ fn golden_model() -> TimelineModel {
             weight_bytes: 16,
             mvm_energy,
             move_energy,
+            analytic_sparsity: 0.0,
+            gating: None,
         }
     };
     TimelineModel {
@@ -130,7 +137,7 @@ fn golden_model() -> TimelineModel {
 
 #[test]
 fn injected_spec_matches_golden_json() {
-    let rep = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: false });
+    let rep = simulate(&golden_model(), &cfg(2, 2, false));
     // the hand-derived schedule, before any serialization
     assert_eq!(rep.makespan_ns, 950.0);
     assert_eq!(rep.serial_ns, 1300.0);
@@ -161,7 +168,7 @@ fn injected_spec_matches_golden_json() {
 
 #[test]
 fn injected_spec_matches_golden_vcd() {
-    let rep = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
+    let rep = simulate(&golden_model(), &cfg(2, 2, true));
     let tracer = rep.trace.as_ref().expect("trace requested");
     let vcd = tracer.render_vcd(1.0);
     let golden = include_str!("golden/timeline_small.vcd");
@@ -170,14 +177,14 @@ fn injected_spec_matches_golden_vcd() {
         "timeline VCD drifted from tests/golden/timeline_small.vcd"
     );
     // tracing must not perturb the schedule itself
-    let untraced = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: false });
+    let untraced = simulate(&golden_model(), &cfg(2, 2, false));
     assert_eq!(rep.makespan_ns, untraced.makespan_ns);
     assert_eq!(rep.to_json().to_string(), untraced.to_json().to_string());
 }
 
 #[test]
 fn vcd_writes_through_the_report_helper() {
-    let rep = simulate(&golden_model(), &TimelineCfg { batch: 2, chunks: 2, trace: true });
+    let rep = simulate(&golden_model(), &cfg(2, 2, true));
     let path = std::env::temp_dir().join("hcim_timeline_golden_roundtrip.vcd");
     rep.write_vcd(&path).unwrap();
     let body = std::fs::read_to_string(&path).unwrap();
@@ -189,8 +196,8 @@ fn vcd_writes_through_the_report_helper() {
 fn chunk_granularity_trades_latency_not_work() {
     // more chunks → finer wavefront → equal-or-earlier makespan, same energy
     let model = resnet20_model();
-    let coarse = simulate(&model, &TimelineCfg { batch: 2, chunks: 1, trace: false });
-    let fine = simulate(&model, &TimelineCfg { batch: 2, chunks: 16, trace: false });
+    let coarse = simulate(&model, &cfg(2, 1, false));
+    let fine = simulate(&model, &cfg(2, 16, false));
     // FIFO + mesh queueing allows marginal scheduling anomalies, so the
     // comparison carries a small tolerance — finer chunks must never
     // materially slow the schedule
@@ -219,13 +226,13 @@ fn serving_style_budget_run_stays_deterministic() {
     let budget = (full.total_crossbars() / 2).max(peak);
     let run = || {
         let m = TimelineModel::from_graph(&g, &arch, &params, &sp, Some(budget)).unwrap();
-        simulate(&m, &TimelineCfg { batch: 1, chunks: 8, trace: false })
+        simulate(&m, &cfg(1, 8, false))
     };
     let a = run();
     let b = run();
     assert_eq!(a.to_json().to_string(), b.to_json().to_string());
     assert!(a.rounds > 1, "half the demand must force reprogramming rounds");
-    let unbudgeted = simulate(&full, &TimelineCfg { batch: 1, chunks: 8, trace: false });
+    let unbudgeted = simulate(&full, &cfg(1, 8, false));
     assert!(
         a.makespan_ns > unbudgeted.makespan_ns,
         "rounds must cost latency: {} vs {}",
